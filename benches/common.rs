@@ -1,0 +1,91 @@
+//! Shared helpers for the paper-table benches (`cargo bench`). Each bench
+//! is a `harness = false` binary that regenerates one table or figure of
+//! the paper and prints it in the paper's layout.
+//!
+//! Sample counts scale with `DDIM_BENCH_N` (default 128 per Table-1 cell);
+//! `DDIM_BENCH_QUICK=1` runs a smoke-sized sweep for CI.
+
+#![allow(dead_code)]
+
+use ddim_serve::eval::{fid_of_images, load_ref_stats};
+use ddim_serve::runtime::Runtime;
+use ddim_serve::sampler::BatchRunner;
+use ddim_serve::schedule::{NoiseMode, SamplePlan, TauKind};
+use ddim_serve::stats::GaussianFit;
+
+pub fn artifacts_root() -> String {
+    std::env::var("DDIM_ARTIFACTS").unwrap_or_else(|_| {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    })
+}
+
+pub fn require_artifacts() -> Option<Runtime> {
+    let root = artifacts_root();
+    if !std::path::Path::new(&root).join("manifest.json").exists() {
+        println!("SKIP: artifacts missing at {root} — run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::load(root).expect("artifact load"))
+}
+
+pub fn quick() -> bool {
+    std::env::var("DDIM_BENCH_QUICK").as_deref() == Ok("1")
+}
+
+/// Samples per FID cell.
+pub fn cell_n(default_n: usize) -> usize {
+    if quick() {
+        return 16;
+    }
+    std::env::var("DDIM_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default_n)
+}
+
+pub fn s_list() -> Vec<usize> {
+    if quick() {
+        vec![5, 10]
+    } else {
+        vec![5, 10, 20, 50, 100]
+    }
+}
+
+/// One Table-1/3 cell: generate `n` samples under (S, mode) and score
+/// proxy-FID against the dataset's reference stats.
+pub fn fid_cell(
+    rt: &mut Runtime,
+    runner: &mut BatchRunner,
+    reference: &GaussianFit,
+    tau: TauKind,
+    s: usize,
+    mode: NoiseMode,
+    n: usize,
+    seed: u64,
+) -> f64 {
+    let plan = SamplePlan::generate(rt.alphas(), tau, s, mode).expect("plan");
+    let images = runner.generate(rt, &plan, n, seed).expect("generate");
+    fid_of_images(&images, reference).expect("fid")
+}
+
+pub fn reference_for(rt: &Runtime, dataset: &str) -> GaussianFit {
+    load_ref_stats(rt.manifest(), dataset).expect("ref stats")
+}
+
+/// Print a row of f64 cells with a label, paper-table style.
+pub fn print_row(label: &str, cells: &[f64]) {
+    print!("{label:>10} |");
+    for c in cells {
+        print!(" {c:>8.2}");
+    }
+    println!();
+}
+
+pub fn print_header(first: &str, s_values: &[usize]) {
+    print!("{first:>10} |");
+    for s in s_values {
+        print!(" {s:>8}");
+    }
+    println!();
+    println!("{}", "-".repeat(12 + 9 * s_values.len()));
+}

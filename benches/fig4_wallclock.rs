@@ -1,0 +1,92 @@
+//! Fig. 4 reproduction (left panel): wall-clock time to produce samples is
+//! *linear* in dim(τ) — the paper plots hours/50k CIFAR images on a 2080
+//! Ti; we plot seconds/1k images on this CPU and fit a line, reporting R².
+//! Also prints the implied "time for 50k samples" column to mirror the
+//! paper's axis, and per-batch-bucket throughput (the serving knob).
+//!
+//!     cargo bench --bench fig4_wallclock
+
+#[path = "common.rs"]
+mod common;
+
+use ddim_serve::sampler::BatchRunner;
+use ddim_serve::schedule::{NoiseMode, SamplePlan, TauKind};
+use std::time::Instant;
+
+fn main() {
+    let Some(mut rt) = common::require_artifacts() else { return };
+    let ds = "sprites";
+    let n = if common::quick() { 8 } else { 32 };
+    let s_values: Vec<usize> =
+        if common::quick() { vec![5, 10] } else { vec![1, 2, 5, 10, 20, 50, 100] };
+
+    let mut runner = BatchRunner::new(&rt, ds, 16).expect("runner");
+    // warm up the executable cache so compile time doesn't pollute the fit
+    let warm = SamplePlan::generate(rt.alphas(), TauKind::Linear, 1, NoiseMode::Eta(0.0))
+        .expect("plan");
+    runner.generate(&mut rt, &warm, n, 1).expect("warmup");
+
+    println!("=== Fig. 4: sampling wall-clock vs dim(tau), {n} samples/point, bucket 16 ===");
+    println!(
+        "{:>6} | {:>12} | {:>14} | {:>16}",
+        "S", "seconds", "ms/sample", "scaled: h/50k"
+    );
+    println!("{}", "-".repeat(60));
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for &s in &s_values {
+        let plan = SamplePlan::generate(rt.alphas(), TauKind::Linear, s, NoiseMode::Eta(0.0))
+            .expect("plan");
+        let t0 = Instant::now();
+        runner.generate(&mut rt, &plan, n, 0xCAFE + s as u64).expect("generate");
+        let secs = t0.elapsed().as_secs_f64();
+        let per_sample = secs / n as f64;
+        println!(
+            "{s:>6} | {secs:>12.3} | {:>14.1} | {:>16.2}",
+            per_sample * 1e3,
+            per_sample * 50_000.0 / 3600.0
+        );
+        xs.push(s as f64);
+        ys.push(secs);
+    }
+
+    // least-squares fit y = a + b x and R^2
+    let nn = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / nn;
+    let my = ys.iter().sum::<f64>() / nn;
+    let sxy: f64 = xs.iter().zip(&ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    let b = sxy / sxx;
+    let a = my - b * mx;
+    let ss_res: f64 = xs
+        .iter()
+        .zip(&ys)
+        .map(|(x, y)| {
+            let e = y - (a + b * x);
+            e * e
+        })
+        .sum();
+    let ss_tot: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    let r2 = 1.0 - ss_res / ss_tot;
+    println!("\nlinear fit: t = {a:.3} + {b:.4}*S seconds, R^2 = {r2:.4}");
+    println!(
+        "[{}] wall-clock is linear in dim(tau) (paper Fig. 4: 'scales linearly')",
+        if r2 > 0.995 { "PASS" } else { "WARN" }
+    );
+
+    // batching leverage: ms/sample at S=10 across buckets
+    println!("\n--- per-bucket throughput (S=10, DDIM) ---");
+    println!("{:>8} | {:>12} | {:>12}", "bucket", "ms/sample", "samples/s");
+    let plan = SamplePlan::generate(rt.alphas(), TauKind::Linear, 10, NoiseMode::Eta(0.0))
+        .expect("plan");
+    for &bucket in rt.manifest().buckets.clone().iter() {
+        let mut r = BatchRunner::new(&rt, ds, bucket).expect("runner");
+        // warm: compile this bucket's executable outside the timed region
+        r.generate(&mut rt, &warm, bucket, 2).expect("warm");
+        let count = bucket * 2;
+        let t0 = Instant::now();
+        r.generate(&mut rt, &plan, count, 3).expect("generate");
+        let per = t0.elapsed().as_secs_f64() / count as f64;
+        println!("{bucket:>8} | {:>12.1} | {:>12.1}", per * 1e3, 1.0 / per);
+    }
+}

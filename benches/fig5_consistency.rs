@@ -1,0 +1,58 @@
+//! Fig. 5 reproduction, quantitative: decode the same x_T with S ∈
+//! {5,10,20,50,100}; report the same-x_T vs cross-x_T feature-distance
+//! ratio (0 = perfectly consistent, 1 = x_T carries nothing) for DDIM and
+//! the DDPM control. Paper's claim: DDIM ratios are small — "most
+//! high-level features are similar, regardless of the generative
+//! trajectory" — while DDPM's are near 1.
+//!
+//!     cargo bench --bench fig5_consistency
+
+#[path = "common.rs"]
+mod common;
+
+use ddim_serve::eval::consistency_score;
+use ddim_serve::rng::GaussianSource;
+use ddim_serve::sampler::BatchRunner;
+use ddim_serve::schedule::{NoiseMode, SamplePlan, TauKind};
+
+fn main() {
+    let Some(mut rt) = common::require_artifacts() else { return };
+    let n = if common::quick() { 6 } else { 24 };
+    let s_values: Vec<usize> =
+        if common::quick() { vec![5, 10, 20] } else { vec![5, 10, 20, 50, 100] };
+    let dim = rt.manifest().sample_dim();
+
+    println!("=== Fig. 5: same-x_T consistency ratio vs S (reference: S={}) ===", s_values.last().unwrap());
+    for ds in ["sprites", "blobs"] {
+        let mut runner = BatchRunner::new(&rt, ds, 4).expect("runner");
+        let mut g = GaussianSource::seeded(0x515);
+        let latents: Vec<Vec<f32>> = (0..n).map(|_| g.vec(dim)).collect();
+        println!("\n--- {ds} ({n} shared latents) ---");
+        println!("{:>6} | {:>12} | {:>12}", "S", "DDIM ratio", "DDPM ratio");
+        println!("{}", "-".repeat(38));
+        let mut ddim_rows = Vec::new();
+        let mut ddpm_rows = Vec::new();
+        for (rows, mode) in
+            [(&mut ddim_rows, NoiseMode::Eta(0.0)), (&mut ddpm_rows, NoiseMode::Eta(1.0))]
+        {
+            for &s in &s_values {
+                let plan = SamplePlan::generate(rt.alphas(), TauKind::Linear, s, mode)
+                    .expect("plan");
+                rows.push(runner.run_from(&mut rt, &plan, latents.clone(), 7).expect("run"));
+            }
+        }
+        let mut ddim_max: f64 = 0.0;
+        let mut ddpm_min = f64::INFINITY;
+        for (i, &s) in s_values.iter().enumerate().take(s_values.len() - 1) {
+            let (_, _, r_ddim) = consistency_score(&ddim_rows[i], ddim_rows.last().unwrap());
+            let (_, _, r_ddpm) = consistency_score(&ddpm_rows[i], ddpm_rows.last().unwrap());
+            println!("{s:>6} | {r_ddim:>12.3} | {r_ddpm:>12.3}");
+            ddim_max = ddim_max.max(r_ddim);
+            ddpm_min = ddpm_min.min(r_ddpm);
+        }
+        println!(
+            "[{}] {ds}: DDIM consistently below DDPM (max DDIM {ddim_max:.3} < min DDPM {ddpm_min:.3})",
+            if ddim_max < ddpm_min { "PASS" } else { "WARN" }
+        );
+    }
+}

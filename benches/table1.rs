@@ -1,0 +1,98 @@
+//! Table 1 reproduction: proxy-FID vs dim(τ) × η on the CIFAR10/CelebA
+//! analogues (sprites: quadratic τ, like the paper's CIFAR10; blobs:
+//! linear τ, like CelebA). Rows η ∈ {0.0, 0.2, 0.5, 1.0, σ̂}; the paper's
+//! shape to reproduce: η=0 (DDIM) best at small S, σ̂ catastrophic at
+//! small S, everything converging as S grows.
+//!
+//!     cargo bench --bench table1           # full (~128 samples/cell)
+//!     DDIM_BENCH_QUICK=1 cargo bench --bench table1
+
+#[path = "common.rs"]
+mod common;
+
+use ddim_serve::sampler::BatchRunner;
+use ddim_serve::schedule::{NoiseMode, TauKind};
+use std::time::Instant;
+
+fn main() {
+    let Some(mut rt) = common::require_artifacts() else { return };
+    let n = common::cell_n(128);
+    let s_values = common::s_list();
+    let modes: Vec<(String, NoiseMode)> = vec![
+        ("eta=0.0".into(), NoiseMode::Eta(0.0)),
+        ("eta=0.2".into(), NoiseMode::Eta(0.2)),
+        ("eta=0.5".into(), NoiseMode::Eta(0.5)),
+        ("eta=1.0".into(), NoiseMode::Eta(1.0)),
+        ("sigma_hat".into(), NoiseMode::SigmaHat),
+    ];
+    let datasets = [("sprites", TauKind::Quadratic), ("blobs", TauKind::Linear)];
+
+    println!("=== Table 1: proxy-FID, {n} samples/cell (paper: CIFAR10 + CelebA, Inception-FID) ===");
+    let t0 = Instant::now();
+    let mut summary: Vec<(String, Vec<f64>)> = Vec::new();
+    for (ds, tau) in datasets {
+        println!("\n--- {ds} ({tau:?} tau, paper analogue) ---");
+        let reference = common::reference_for(&rt, ds);
+        let mut runner = BatchRunner::new(&rt, ds, 4).expect("runner");
+        common::print_header("S", &s_values);
+        for (label, mode) in &modes {
+            let cells: Vec<f64> = s_values
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| {
+                    common::fid_cell(
+                        &mut rt,
+                        &mut runner,
+                        &reference,
+                        tau,
+                        s,
+                        *mode,
+                        n,
+                        0xF1D0 + i as u64,
+                    )
+                })
+                .collect();
+            common::print_row(label, &cells);
+            summary.push((format!("{ds}/{label}"), cells));
+        }
+    }
+
+    // paper-shape checks printed as PASS/WARN (not hard assertions: n is
+    // small and this is a bench, but the reader should see the claim)
+    println!("\n=== shape checks (paper Sec. 5.1) ===");
+    for (ds, _) in datasets {
+        let row = |m: &str| {
+            summary
+                .iter()
+                .find(|(k, _)| k == &format!("{ds}/{m}"))
+                .map(|(_, v)| v.clone())
+                .unwrap()
+        };
+        let ddim = row("eta=0.0");
+        let ddpm = row("eta=1.0");
+        let hat = row("sigma_hat");
+        let check = |name: &str, ok: bool| {
+            println!("[{}] {ds}: {name}", if ok { "PASS" } else { "WARN" });
+        };
+        check("DDIM beats DDPM at smallest S", ddim[0] < ddpm[0]);
+        check("sigma_hat collapses at smallest S (worst row)", hat[0] > ddim[0] && hat[0] > ddpm[0]);
+        check(
+            "DDIM quality improves with S",
+            ddim.last().unwrap() < &ddim[0],
+        );
+        let s_values_f: Vec<usize> = common::s_list();
+        // speedup estimate: first S where DDIM is within 20% of its best
+        let best = ddim.iter().cloned().fold(f64::INFINITY, f64::min);
+        let s_at = s_values_f
+            .iter()
+            .zip(&ddim)
+            .find(|(_, f)| **f <= best * 1.2)
+            .map(|(s, _)| *s)
+            .unwrap_or(*s_values_f.last().unwrap());
+        println!(
+            "       {ds}: DDIM within 20% of best FID at S={s_at} -> {}x fewer steps than T=1000",
+            1000 / s_at
+        );
+    }
+    println!("\ntable1 done in {:.1}s", t0.elapsed().as_secs_f64());
+}

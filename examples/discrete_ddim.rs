@@ -1,0 +1,50 @@
+//! Appendix A, evaluated: the categorical (multinomial) DDIM that the paper
+//! defines but leaves as future work. A tabular Bayes predictor plays f_θ
+//! (zero model error), so what's measured is purely the *sampler*: total
+//! variation to the true data distribution vs number of steps S, for the
+//! DDIM-like (η=0, σ=σ_max) and fully-stochastic (η=1, σ=0) families.
+//!
+//!     cargo run --release --example discrete_ddim
+
+use ddim_serve::discrete::{DiscreteSampler, DiscreteSchedule, TabularModel};
+use ddim_serve::discrete::total_variation;
+
+fn main() -> anyhow::Result<()> {
+    let t_max = 200usize;
+    let k = 8usize;
+    // a lumpy data distribution over 8 symbols
+    let p0 = vec![0.30, 0.22, 0.16, 0.12, 0.09, 0.06, 0.03, 0.02];
+    let sched = DiscreteSchedule::linear(t_max, k)?;
+    let sampler = DiscreteSampler::new(sched, TabularModel::new(p0.clone())?)?;
+
+    let n = 40_000usize;
+    println!("=== Appendix A: categorical DDIM, K={k}, T={t_max}, {n} samples/cell ===");
+    println!("{:>6} | {:>14} | {:>14}", "S", "TV (eta=0 DDIM)", "TV (eta=1 stoch)");
+    println!("{}", "-".repeat(42));
+    for s in [2usize, 3, 5, 10, 25, 50, 200] {
+        let tau: Vec<usize> = (1..=s).map(|i| i * t_max / s).collect();
+        let tv0 = total_variation(&sampler.empirical(&tau, 0.0, n, 42)?, &p0);
+        let tv1 = total_variation(&sampler.empirical(&tau, 1.0, n, 42)?, &p0);
+        println!("{s:>6} | {tv0:>14.4} | {tv1:>14.4}");
+    }
+    println!("\nwith the exact predictor both families are consistent (the discrete");
+    println!("Theorem-1 analogue); the sigma family controls HOW the chain spends");
+    println!("its stochasticity — the DDIM-like chain carries x_t across hops:");
+
+    // per-hop carryover weight sigma_t along a 10-step trajectory
+    let s = 10usize;
+    let tau: Vec<usize> = (1..=s).map(|i| i * t_max / s).collect();
+    let sched = sampler.schedule();
+    for (label, eta) in [("eta=0 (DDIM-like)", 0.0), ("eta=1 (stochastic)", 1.0)] {
+        let mean_sigma: f64 = (0..tau.len())
+            .map(|i| {
+                let t = tau[i];
+                let t_prev = if i == 0 { 0 } else { tau[i - 1] };
+                sched.sigma(t, t_prev, eta)
+            })
+            .sum::<f64>()
+            / tau.len() as f64;
+        println!("  {label}: mean per-hop x_t-carryover weight sigma = {mean_sigma:.3}");
+    }
+    Ok(())
+}

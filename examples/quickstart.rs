@@ -1,0 +1,57 @@
+//! Quickstart: load the artifacts, generate a 4×4 grid of DDIM samples in
+//! 20 steps, and write it to `out/quickstart.pgm`.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Flags: --artifacts DIR --dataset NAME --steps S --eta E --seed K
+
+use ddim_serve::cli::Args;
+use ddim_serve::config::ServeConfig;
+use ddim_serve::coordinator::request::{Request, RequestBody};
+use ddim_serve::coordinator::{Engine, ResponseBody};
+use ddim_serve::schedule::{NoiseMode, TauKind};
+use ddim_serve::tensor::{save_pgm, tile_grid};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let dataset = args.get_or("dataset", "sprites").to_string();
+    let steps = args.get_usize("steps", 20)?;
+    let mode = NoiseMode::parse(args.get_or("eta", "0.0"))?;
+    let seed = args.get_u64("seed", 7)?;
+
+    let cfg = ServeConfig {
+        artifact_root: args.get_or("artifacts", "artifacts").to_string(),
+        dataset: dataset.clone(),
+        ..Default::default()
+    };
+    println!("loading artifacts from {} ...", cfg.artifact_root);
+    let mut engine = Engine::new(cfg)?;
+
+    let t0 = std::time::Instant::now();
+    let id = engine.submit(Request {
+        dataset,
+        steps,
+        mode,
+        tau: TauKind::Quadratic,
+        body: RequestBody::Generate { count: 16, seed },
+        return_images: true,
+    })?;
+    let responses = engine.run_until_idle()?;
+    let resp = responses.iter().find(|r| r.id == id).unwrap();
+    let images = match &resp.body {
+        ResponseBody::Ok { outputs } => outputs,
+        ResponseBody::Error { message } => anyhow::bail!("generation failed: {message}"),
+    };
+
+    let img = engine.runtime().manifest().img;
+    let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+    let grid = tile_grid(&refs, 4, 4, img, img)?;
+    save_pgm("out/quickstart.pgm", &grid)?;
+    println!(
+        "16 samples (S={steps}, {}) in {:.2}s -> out/quickstart.pgm",
+        mode.label(),
+        t0.elapsed().as_secs_f64()
+    );
+    println!("engine: {}", engine.metrics().summary());
+    Ok(())
+}

@@ -1,0 +1,148 @@
+//! End-to-end serving driver (the DESIGN.md §4 validation run): start the
+//! full stack — TCP server, engine thread, continuous batcher, AOT
+//! executables — and fire an open-loop Poisson workload of mixed requests
+//! at it from concurrent client connections. Reports client-side latency
+//! percentiles, server-side metrics, and batch occupancy.
+//!
+//!     cargo run --release --example serve_e2e -- --requests 60 --rate 4
+//!
+//! Flags: --artifacts DIR --dataset NAME --requests N --rate HZ --seed K
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use ddim_serve::cli::Args;
+use ddim_serve::config::ServeConfig;
+use ddim_serve::coordinator::server::Client;
+use ddim_serve::coordinator::{Histogram, Server};
+use ddim_serve::jobj;
+use ddim_serve::schedule::NoiseMode;
+use ddim_serve::workload::Workload;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let dataset = args.get_or("dataset", "sprites").to_string();
+    let n_requests = args.get_usize("requests", 60)?;
+    let rate = args.get_f64("rate", 4.0)?;
+    let seed = args.get_u64("seed", 1)?;
+
+    let cfg = ServeConfig {
+        artifact_root: args.get_or("artifacts", "artifacts").to_string(),
+        dataset: dataset.clone(),
+        listen: "127.0.0.1:0".into(),
+        max_batch: 16,
+        max_lanes: 64,
+        queue_capacity: 256,
+        ..Default::default()
+    };
+    println!("starting server (compiling executables)...");
+    let t_start = Instant::now();
+    let server = Server::start(cfg)?;
+    let addr = server.addr();
+    println!("server up on {addr} in {:.1}s", t_start.elapsed().as_secs_f64());
+
+    // Build the open-loop workload: mixed S/eta/count classes at `rate` Hz.
+    let workload = Workload::standard(&dataset, rate);
+    let plan = workload.generate(n_requests, seed);
+    println!(
+        "workload: {n_requests} requests over {:.1}s ({} classes, open loop)",
+        plan.last().map(|(t, _)| *t).unwrap_or(0.0),
+        workload.classes.len()
+    );
+
+    // Replay: one thread per request (arrival-time-faithful), results back
+    // over a channel.
+    let (tx, rx) = mpsc::channel::<(usize, f64, bool, usize)>();
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for (i, (arrival, req)) in plan.into_iter().enumerate() {
+        let tx = tx.clone();
+        let mode_s = match req.mode {
+            NoiseMode::Eta(e) => format!("{e}"),
+            NoiseMode::SigmaHat => "hat".into(),
+        };
+        let (count, rseed) = match req.body {
+            ddim_serve::coordinator::RequestBody::Generate { count, seed } => (count, seed),
+            _ => unreachable!(),
+        };
+        let steps = req.steps;
+        let ds = req.dataset.clone();
+        handles.push(std::thread::spawn(move || {
+            // open loop: wait until this request's arrival time
+            let now = t0.elapsed().as_secs_f64();
+            if arrival > now {
+                std::thread::sleep(Duration::from_secs_f64(arrival - now));
+            }
+            let sent = Instant::now();
+            let ok = (|| -> anyhow::Result<bool> {
+                let mut c = Client::connect(addr)?;
+                let resp = c.roundtrip(&jobj![
+                    ("op", "generate"),
+                    ("dataset", ds.as_str()),
+                    ("steps", steps),
+                    ("eta", mode_s.as_str()),
+                    ("count", count),
+                    ("seed", rseed),
+                ])?;
+                Ok(resp.get("ok").ok().and_then(|v| v.as_bool().ok()).unwrap_or(false))
+            })()
+            .unwrap_or(false);
+            let _ = tx.send((i, sent.elapsed().as_secs_f64(), ok, steps * count));
+        }));
+    }
+    drop(tx);
+
+    let mut hist = Histogram::new();
+    let mut failures = 0usize;
+    let mut total_steps = 0usize;
+    let mut done = 0usize;
+    for (_, latency, ok, steps) in rx {
+        if ok {
+            hist.record(latency);
+            total_steps += steps;
+        } else {
+            failures += 1;
+        }
+        done += 1;
+        if done % 20 == 0 {
+            println!("  {done}/{n_requests} done");
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n=== serve_e2e results ===");
+    println!("requests     : {n_requests} ({failures} failed)");
+    println!("wall time    : {wall:.2}s");
+    println!("throughput   : {:.2} req/s, {:.1} model-steps/s", (n_requests - failures) as f64 / wall, total_steps as f64 / wall);
+    println!(
+        "client latency: p50 {:.0}ms  p95 {:.0}ms  p99 {:.0}ms  mean {:.0}ms  max {:.0}ms",
+        hist.quantile(0.5) * 1e3,
+        hist.quantile(0.95) * 1e3,
+        hist.quantile(0.99) * 1e3,
+        hist.mean() * 1e3,
+        hist.max() * 1e3,
+    );
+
+    // server-side view
+    let mut c = Client::connect(addr)?;
+    let m = c.roundtrip(&jobj![("op", "metrics")])?;
+    let get = |k: &str| m.get(k).ok().and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+    println!(
+        "server metrics: calls={} steps={} occupancy={:.2} p50={:.0}ms p95={:.0}ms rejected={}",
+        get("executable_calls"),
+        get("steps_executed"),
+        get("occupancy"),
+        get("latency_p50_s") * 1e3,
+        get("latency_p95_s") * 1e3,
+        get("requests_rejected"),
+    );
+    server.shutdown();
+    println!("server shut down cleanly");
+    if failures > 0 {
+        anyhow::bail!("{failures} requests failed");
+    }
+    Ok(())
+}

@@ -1,0 +1,182 @@
+"""The AOT pipeline: python runs ONCE here (``make artifacts``), then never
+again — the rust binary is self-contained against ``artifacts/``.
+
+Per dataset:
+  1. train epsilon_theta (or load the cached weights.npz),
+  2. lower the fused ``denoise_step`` (Pallas kernels inside) to HLO *text*
+     for every batch bucket B in {1,2,4,8,16},
+  3. dump reference feature statistics (proxy-FID target) from 4096 fresh
+     procedural images,
+  4. dump golden input/output pairs for the rust integration tests.
+Plus globally: alphas.json (the schedule table) and manifest.json.
+
+HLO TEXT, not ``.serialize()``: jax>=0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import features as feat_mod
+from . import model as model_mod
+from . import train as train_mod
+from .schedule import T_DEFAULT, dump_alphas_json
+from .tensorfile import write_tensor
+
+BUCKETS = (1, 2, 4, 8, 16)
+DATASETS_STEPS = {"sprites": 3000, "blobs": 3000, "checker": 1400, "rings": 1400}
+REF_N = 4096
+GOLDEN_BUCKETS = (1, 4)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the trained weights are closed over as HLO
+    # constants and MUST survive the text round trip (default elides them).
+    return comp.as_hlo_text(True)
+
+
+def example_args(B: int):
+    img = jax.ShapeDtypeStruct((B, 1, model_mod.IMG, model_mod.IMG), jnp.float32)
+    vec = jax.ShapeDtypeStruct((B,), jnp.float32)
+    return img, vec, vec, vec, vec, img  # x, t, alpha_t, alpha_prev, sigma, noise
+
+
+def get_params(ds: str, out_dir: str, steps: int, fast: bool):
+    """Train (or load cached) EMA weights for ``ds``; returns params tree.
+    If the cache holds fewer trained steps than requested, training resumes
+    from the cached weights for the difference."""
+    cache = os.path.join(out_dir, ds, "weights.npz")
+    meta_path = os.path.join(out_dir, ds, "train_meta.json")
+    losses_path = os.path.join(out_dir, ds, "train_losses.json")
+    if fast:
+        steps = 5
+    done, init, losses = 0, None, []
+    if os.path.exists(cache):
+        init = train_mod.unflatten_params(dict(np.load(cache)))
+        losses = json.load(open(losses_path)) if os.path.exists(losses_path) else []
+        done = json.load(open(meta_path))["steps"] if os.path.exists(meta_path) else steps
+        if done >= steps:
+            print(f"[aot:{ds}] cached weights cover {done} >= {steps} steps")
+            return init, losses
+        print(f"[aot:{ds}] resuming from {done} cached steps -> {steps}")
+    params, new_losses = train_mod.train(ds, steps - done, init=init)
+    losses = losses + new_losses
+    os.makedirs(os.path.dirname(cache), exist_ok=True)
+    np.savez(cache, **train_mod.flatten_params(params))
+    with open(losses_path, "w") as f:
+        json.dump(losses, f)
+    with open(meta_path, "w") as f:
+        json.dump({"steps": steps}, f)
+    return params, losses
+
+
+def lower_buckets(ds: str, params, out_dir: str) -> list[str]:
+    fn = model_mod.make_denoise_step_fn(params, use_pallas=True)
+    files = []
+    for B in BUCKETS:
+        t0 = time.time()
+        hlo = to_hlo_text(jax.jit(fn).lower(*example_args(B)))
+        rel = f"{ds}/denoise_step_b{B}.hlo.txt"
+        path = os.path.join(out_dir, rel)
+        with open(path, "w") as f:
+            f.write(hlo)
+        files.append(rel)
+        print(f"[aot:{ds}] b{B}: {len(hlo) / 1e6:.1f} MB HLO in {time.time() - t0:.1f}s")
+    return files
+
+
+def dump_ref_stats(ds: str, out_dir: str, n: int) -> None:
+    imgs = data_mod.generate(ds, n, seed=1234)
+    feats = feat_mod.extract_features(imgs)
+    mu, cov = feat_mod.fit_gaussian(feats)
+    write_tensor(os.path.join(out_dir, ds, "ref_mu.bin"), mu)
+    write_tensor(os.path.join(out_dir, ds, "ref_cov.bin"), cov)
+
+
+def dump_goldens(ds: str, params, out_dir: str) -> None:
+    """Fixed inputs -> outputs of the *pallas* serving graph, for the rust
+    integration tests, plus a feature-extractor golden."""
+    fn = model_mod.make_denoise_step_fn(params, use_pallas=True)
+    gdir = os.path.join(out_dir, ds, "goldens")
+    for B in GOLDEN_BUCKETS:
+        key = jax.random.PRNGKey(9000 + B)
+        ks = jax.random.split(key, 3)
+        x = jax.random.normal(ks[0], (B, 1, model_mod.IMG, model_mod.IMG), jnp.float32)
+        noise = jax.random.normal(ks[1], x.shape, jnp.float32)
+        t = jnp.linspace(100.0, 900.0, B)
+        a_t = jnp.linspace(0.05, 0.6, B)
+        a_p = jnp.sqrt(a_t)  # anything larger than a_t works
+        sigma = jnp.linspace(0.0, 0.2, B)
+        x_prev, eps, x0 = fn(x, t, a_t, a_p, sigma, noise)
+        for name, arr in [
+            ("x", x), ("t", t), ("alpha_t", a_t), ("alpha_prev", a_p),
+            ("sigma", sigma), ("noise", noise),
+            ("x_prev", x_prev), ("eps", eps), ("x0", x0),
+        ]:
+            write_tensor(os.path.join(gdir, f"b{B}_{name}.bin"), np.asarray(arr))
+    # feature golden: 8 procedural images + their features
+    imgs = data_mod.generate(ds, 8, seed=4321)
+    write_tensor(os.path.join(gdir, "feat_imgs.bin"), imgs)
+    write_tensor(os.path.join(gdir, "feat_out.bin"), feat_mod.extract_features(imgs))
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="artifacts directory")
+    p.add_argument("--datasets", default=",".join(DATASETS_STEPS))
+    p.add_argument("--fast", action="store_true", help="5 train steps (CI smoke)")
+    p.add_argument("--ref-n", type=int, default=REF_N)
+    args = p.parse_args()
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+    fast = args.fast or os.environ.get("DDIM_FAST") == "1"
+
+    dump_alphas_json(os.path.join(out, "alphas.json"))
+    datasets = [d for d in args.datasets.split(",") if d]
+    manifest: dict = {
+        "img": model_mod.IMG,
+        "channels": 1,
+        "T": T_DEFAULT,
+        "buckets": list(BUCKETS),
+        "feat_dim": feat_mod.FEAT_DIM,
+        "model": {
+            "ch": model_mod.CH, "ch_mid": model_mod.CH_MID,
+            "temb": model_mod.TEMB, "groups": model_mod.GROUPS,
+            "heads": model_mod.HEADS,
+        },
+        "datasets": {},
+    }
+    for ds in datasets:
+        params, losses = get_params(ds, out, DATASETS_STEPS[ds], fast)
+        files = lower_buckets(ds, params, out)
+        dump_ref_stats(ds, out, 64 if fast else args.ref_n)
+        dump_goldens(ds, params, out)
+        manifest["datasets"][ds] = {
+            "hlo": files,
+            "params": model_mod.param_count(params),
+            "final_loss": losses[-1],
+            "ref_n": 64 if fast else args.ref_n,
+        }
+        with open(os.path.join(out, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote manifest with {len(datasets)} datasets to {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Procedural 16x16 grayscale datasets (the paper's CIFAR10 / CelebA / LSUN
+substitutes — see DESIGN.md section 2).
+
+Every generator is a pure function of (seed, n): deterministic, unlimited,
+and exactly reproducible, which is what lets the rust side hold *reference*
+feature statistics that are honestly i.i.d. from the target distribution.
+Images are float32 in [-1, 1], shape [n, 1, H, W].
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+IMG = 16
+DATASETS = ("sprites", "blobs", "checker", "rings")
+
+
+def _grid(n: int) -> tuple[np.ndarray, np.ndarray]:
+    c = (np.arange(IMG, dtype=np.float64) + 0.5) / IMG  # cell centers in (0,1)
+    y, x = np.meshgrid(c, c, indexing="ij")
+    return (
+        np.broadcast_to(x, (n, IMG, IMG)).copy(),
+        np.broadcast_to(y, (n, IMG, IMG)).copy(),
+    )
+
+
+def _soft(d: np.ndarray, k: float = 24.0) -> np.ndarray:
+    """Smooth inside/outside indicator from a signed distance (antialiasing)."""
+    return 1.0 / (1.0 + np.exp(np.clip(k * d, -30, 30)))
+
+
+def sprites(n: int, seed: int) -> np.ndarray:
+    """CIFAR analogue: one random antialiased sprite (disc / square / cross)
+    at a random position, scale and intensity, on a random flat background."""
+    rng = np.random.default_rng(seed)
+    x, y = _grid(n)
+    cx = rng.uniform(0.3, 0.7, (n, 1, 1))
+    cy = rng.uniform(0.3, 0.7, (n, 1, 1))
+    r = rng.uniform(0.12, 0.3, (n, 1, 1))
+    kind = rng.integers(0, 3, (n, 1, 1))
+    fg = rng.uniform(0.5, 1.0, (n, 1, 1)) * rng.choice([-1.0, 1.0], (n, 1, 1))
+    bg = rng.uniform(-0.25, 0.25, (n, 1, 1))
+
+    dx, dy = np.abs(x - cx), np.abs(y - cy)
+    d_disc = np.sqrt((x - cx) ** 2 + (y - cy) ** 2) - r
+    d_square = np.maximum(dx, dy) - r
+    w = r * 0.38
+    d_cross = np.minimum(np.maximum(dx - r, dy - w), np.maximum(dx - w, dy - r))
+    d = np.where(kind == 0, d_disc, np.where(kind == 1, d_square, d_cross))
+    img = bg + (fg - bg) * _soft(d)
+    return np.clip(img, -1, 1).astype(np.float32)[:, None]
+
+
+def blobs(n: int, seed: int) -> np.ndarray:
+    """CelebA analogue: a mirror-symmetric pair of gaussian bumps plus a lower
+    central bump — crude 'two eyes + mouth' structure, so the model has real
+    global correlations to learn (like face layout)."""
+    rng = np.random.default_rng(seed)
+    x, y = _grid(n)
+    ex = rng.uniform(0.18, 0.32, (n, 1, 1))  # eye offset from center
+    ey = rng.uniform(0.3, 0.45, (n, 1, 1))
+    es = rng.uniform(0.05, 0.1, (n, 1, 1))
+    ea = rng.uniform(0.6, 1.0, (n, 1, 1))
+    my = rng.uniform(0.6, 0.78, (n, 1, 1))
+    ms = rng.uniform(0.06, 0.14, (n, 1, 1))
+    ma = rng.uniform(0.4, 0.9, (n, 1, 1))
+    bg = rng.uniform(-0.6, -0.2, (n, 1, 1))
+
+    def bump(cx, cy, s, a):
+        return a * np.exp(-(((x - cx) ** 2 + (y - cy) ** 2) / (2 * s * s)))
+
+    img = bg + bump(0.5 - ex, ey, es, ea) + bump(0.5 + ex, ey, es, ea)
+    img = img + bump(0.5, my, ms, ma)
+    return np.clip(img, -1, 1).astype(np.float32)[:, None]
+
+
+def checker(n: int, seed: int) -> np.ndarray:
+    """LSUN-Bedroom analogue: smooth checkerboard with random period, phase,
+    orientation jitter and contrast (repetitive man-made texture)."""
+    rng = np.random.default_rng(seed)
+    x, y = _grid(n)
+    fx = rng.uniform(2.0, 4.5, (n, 1, 1))
+    fy = rng.uniform(2.0, 4.5, (n, 1, 1))
+    px = rng.uniform(0, 2 * np.pi, (n, 1, 1))
+    py = rng.uniform(0, 2 * np.pi, (n, 1, 1))
+    rot = rng.uniform(-0.3, 0.3, (n, 1, 1))
+    amp = rng.uniform(0.5, 1.0, (n, 1, 1))
+    xr = x * np.cos(rot) - y * np.sin(rot)
+    yr = x * np.sin(rot) + y * np.cos(rot)
+    img = amp * np.sin(2 * np.pi * fx * xr + px) * np.sin(2 * np.pi * fy * yr + py)
+    return np.clip(img, -1, 1).astype(np.float32)[:, None]
+
+
+def rings(n: int, seed: int) -> np.ndarray:
+    """LSUN-Church analogue: concentric rings with random center, spatial
+    frequency, phase and radial decay (strong long-range radial structure)."""
+    rng = np.random.default_rng(seed)
+    x, y = _grid(n)
+    cx = rng.uniform(0.35, 0.65, (n, 1, 1))
+    cy = rng.uniform(0.35, 0.65, (n, 1, 1))
+    freq = rng.uniform(3.0, 7.0, (n, 1, 1))
+    ph = rng.uniform(0, 2 * np.pi, (n, 1, 1))
+    decay = rng.uniform(1.0, 3.5, (n, 1, 1))
+    amp = rng.uniform(0.6, 1.0, (n, 1, 1))
+    rr = np.sqrt((x - cx) ** 2 + (y - cy) ** 2)
+    img = amp * np.cos(2 * np.pi * freq * rr + ph) * np.exp(-decay * rr)
+    return np.clip(img, -1, 1).astype(np.float32)[:, None]
+
+
+_GENS = {"sprites": sprites, "blobs": blobs, "checker": checker, "rings": rings}
+
+
+def generate(name: str, n: int, seed: int) -> np.ndarray:
+    """Generate ``n`` images from dataset ``name`` with the given seed."""
+    return _GENS[name](n, seed)

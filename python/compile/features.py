@@ -1,0 +1,65 @@
+"""The proxy-FID feature map (24 dims), mirrored EXACTLY in
+``rust/src/stats/features.rs`` — both sides are covered by golden tests.
+
+FID's job in the paper's Table 1 is to be a distributional distance that is
+sensitive both to blur (missing detail at small S) and to additive noise
+(the sigma-hat failure mode). The feature map below sees both:
+  dims  0..15  4x4 average-pooled intensities   (layout / low-freq content)
+  dim   16     global mean
+  dim   17     global std
+  dim   18     mean |horizontal gradient|       (edge energy -> blur)
+  dim   19     mean |vertical gradient|
+  dim   20     mean |4-neighbour laplacian|     (noise energy -> sigma-hat)
+  dim   21     high-band energy (x - 3x3 box blur), std
+  dim   22     std of row means                 (global structure)
+  dim   23     std of column means
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+FEAT_DIM = 24
+
+
+def extract_features(imgs: np.ndarray) -> np.ndarray:
+    """imgs: [N, 1, 16, 16] float32 -> [N, 24] float64 features."""
+    x = imgs[:, 0].astype(np.float64)  # [N,16,16]
+    n = x.shape[0]
+    f = np.zeros((n, FEAT_DIM), np.float64)
+
+    # 4x4 average pooling -> 16 dims
+    pooled = x.reshape(n, 4, 4, 4, 4).mean(axis=(2, 4))
+    f[:, :16] = pooled.reshape(n, 16)
+
+    f[:, 16] = x.mean(axis=(1, 2))
+    f[:, 17] = x.std(axis=(1, 2))
+
+    gx = np.abs(np.diff(x, axis=2))  # [N,16,15]
+    gy = np.abs(np.diff(x, axis=1))  # [N,15,16]
+    f[:, 18] = gx.mean(axis=(1, 2))
+    f[:, 19] = gy.mean(axis=(1, 2))
+
+    lap = np.abs(
+        4 * x[:, 1:-1, 1:-1] - x[:, :-2, 1:-1] - x[:, 2:, 1:-1] - x[:, 1:-1, :-2] - x[:, 1:-1, 2:]
+    )
+    f[:, 20] = lap.mean(axis=(1, 2))
+
+    # 3x3 box blur with edge clamping (same as rust impl: clamp indices)
+    pad = np.pad(x, ((0, 0), (1, 1), (1, 1)), mode="edge")
+    blur = sum(
+        pad[:, i : i + 16, j : j + 16] for i in range(3) for j in range(3)
+    ) / 9.0
+    f[:, 21] = (x - blur).std(axis=(1, 2))
+
+    f[:, 22] = x.mean(axis=2).std(axis=1)
+    f[:, 23] = x.mean(axis=1).std(axis=1)
+    return f
+
+
+def fit_gaussian(feats: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Return (mean [24], covariance [24,24]) with 1/(n-1) normalisation."""
+    mu = feats.mean(axis=0)
+    d = feats - mu
+    cov = d.T @ d / (feats.shape[0] - 1)
+    return mu, cov

@@ -1,0 +1,46 @@
+"""L1 Pallas kernel: single-tile softmax attention for the U-Net's 8x8
+self-attention block.
+
+Hardware adaptation (DESIGN.md section 3): the CUDA original stages K/V tiles
+through shared memory per threadblock; at our sizes (S=64 tokens, Dh<=64) the
+entire (Q,K,V) for one batch*head fits in VMEM at once, so the BlockSpec
+simply maps one (S,Dh) tile per program — one MXU-shaped q@k^T, a numerically
+stable softmax on the VPU, and one p@v. Footprint per program:
+3*S*Dh*4 + S*S*4 bytes = 64 KiB at S=64, Dh=64 — comfortably in VMEM, so no
+FlashAttention-style streaming/rescaling pass is needed (that machinery buys
+nothing below the VMEM cliff and costs extra VPU work).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref):
+    q = q_ref[0]  # [S, Dh]
+    k = k_ref[0]
+    v = v_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    # f32 accumulation for the logits regardless of input dtype
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p.astype(q.dtype), v, preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+@jax.jit
+def attention(q, k, v):
+    """Pallas version of kernels.ref.attention_ref. q,k,v: [B, S, Dh]."""
+    B, S, Dh = q.shape
+    tile = pl.BlockSpec((1, S, Dh), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=(B,),
+        in_specs=[tile, tile, tile],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((B, S, Dh), q.dtype),
+        interpret=True,
+    )(q, k, v)

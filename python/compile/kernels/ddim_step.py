@@ -1,0 +1,55 @@
+"""L1 Pallas kernel: the fused generalized DDIM update (paper Eq. 12) with
+*per-sample* schedule scalars.
+
+TPU mapping (DESIGN.md section 3): pure elementwise VPU work, zero MXU. Grid
+over the batch; each program holds one D-length row of x/eps/noise in VMEM
+(D = 256 floats = 1 KiB/row — three input rows + two output rows ~ 5 KiB of
+VMEM per program, far under budget) and its three schedule scalars in (1,1)
+blocks. Bandwidth-bound: 5*B*D*4 bytes per call.
+
+interpret=True everywhere — the CPU PJRT client cannot run Mosaic
+custom-calls; correctness vs kernels.ref is enforced by pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, eps_ref, noise_ref, at_ref, ap_ref, s_ref, xp_ref, x0_ref):
+    x = x_ref[...]
+    eps = eps_ref[...]
+    noise = noise_ref[...]
+    a_t = at_ref[0, 0]
+    a_p = ap_ref[0, 0]
+    s = s_ref[0, 0]
+
+    x0 = (x - jnp.sqrt(1.0 - a_t) * eps) * jax.lax.rsqrt(a_t)
+    dir_coef = jnp.sqrt(jnp.maximum(1.0 - a_p - s * s, 0.0))
+    x0_ref[...] = x0
+    xp_ref[...] = jnp.sqrt(a_p) * x0 + dir_coef * eps + s * noise
+
+
+@functools.partial(jax.jit, static_argnames=())
+def ddim_update(x, eps, noise, alpha_t, alpha_prev, sigma):
+    """Pallas version of kernels.ref.ddim_update_ref.
+
+    x, eps, noise: [B, D]; alpha_t, alpha_prev, sigma: [B].
+    Returns (x_prev [B, D], x0_pred [B, D]).
+    """
+    B, D = x.shape
+    row = pl.BlockSpec((1, D), lambda i: (i, 0))
+    scalar = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    out = jax.ShapeDtypeStruct((B, D), x.dtype)
+    return pl.pallas_call(
+        _kernel,
+        grid=(B,),
+        in_specs=[row, row, row, scalar, scalar, scalar],
+        out_specs=[row, row],
+        out_shape=[out, out],
+        interpret=True,
+    )(x, eps, noise, alpha_t[:, None], alpha_prev[:, None], sigma[:, None])

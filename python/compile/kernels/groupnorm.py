@@ -1,0 +1,51 @@
+"""L1 Pallas kernel: fused GroupNorm + SiLU (the U-Net's most frequent
+normalization pattern — every ResBlock applies it twice).
+
+TPU mapping: grid over (batch, group); each program reduces one
+(C/groups, N) tile in VMEM (mean/variance on the VPU), then applies the
+affine + SiLU in the same pass — one HBM read and one write per element
+instead of the three passes (norm stats / affine / activation) an unfused
+graph would do.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[0, 0]  # [Cg, N]
+    mean = jnp.mean(x)
+    var = jnp.mean((x - mean) ** 2)
+    xhat = (x - mean) * jax.lax.rsqrt(var + eps)
+    y = xhat * g_ref[0, 0][:, None] + b_ref[0, 0][:, None]
+    o_ref[0, 0] = y / (1.0 + jnp.exp(-y))
+
+
+@functools.partial(jax.jit, static_argnames=("groups",))
+def groupnorm_silu(x, gamma, beta, groups: int, eps: float = 1e-5):
+    """Pallas version of kernels.ref.groupnorm_silu_ref.
+
+    x: [B, C, N] (N = H*W), gamma/beta: [C]. C must be divisible by groups.
+    """
+    B, C, N = x.shape
+    assert C % groups == 0, (C, groups)
+    Cg = C // groups
+    xg = x.reshape(B, groups, Cg, N)
+    gg = gamma.reshape(1, groups, Cg)
+    bg = beta.reshape(1, groups, Cg)
+    tile = pl.BlockSpec((1, 1, Cg, N), lambda b, g: (b, g, 0, 0))
+    aff = pl.BlockSpec((1, 1, Cg), lambda b, g: (0, g, 0))
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(B, groups),
+        in_specs=[tile, aff, aff],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((B, groups, Cg, N), x.dtype),
+        interpret=True,
+    )(xg, gg, bg)
+    return out.reshape(B, C, N)

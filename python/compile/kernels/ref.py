@@ -1,0 +1,48 @@
+# Pure-jnp correctness oracles for every Pallas kernel in this package.
+# pytest (python/tests/) asserts kernel == ref to tight tolerances via
+# hypothesis sweeps — this is the CORE L1 correctness signal, and these
+# same functions are what the training loop uses (trace-time-cheap), while
+# the AOT serving graph uses the Pallas versions.
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ddim_update_ref(x, eps, noise, alpha_t, alpha_prev, sigma):
+    """Generalized DDIM/DDPM update, Eq. (12) of the paper, vectorised over a
+    batch with *per-sample* schedule scalars.
+
+    x, eps, noise: [B, D] (D = C*H*W flattened)
+    alpha_t, alpha_prev, sigma: [B]  (alpha are the paper's cumulative alphas)
+    Returns (x_prev [B, D], x0_pred [B, D]).
+    """
+    a_t = alpha_t[:, None]
+    a_p = alpha_prev[:, None]
+    s = sigma[:, None]
+    x0 = (x - jnp.sqrt(1.0 - a_t) * eps) / jnp.sqrt(a_t)
+    # guard: 1 - a_p - s^2 can go epsilon-negative at eta=1 endpoints
+    dir_coef = jnp.sqrt(jnp.maximum(1.0 - a_p - s * s, 0.0))
+    x_prev = jnp.sqrt(a_p) * x0 + dir_coef * eps + s * noise
+    return x_prev, x0
+
+
+def attention_ref(q, k, v):
+    """Plain softmax attention. q,k,v: [B, S, Dh] -> [B, S, Dh]."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    logits = jnp.einsum("bsd,btd->bst", q, k) * scale
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bst,btd->bsd", p, v)
+
+
+def groupnorm_silu_ref(x, gamma, beta, groups: int, eps: float = 1e-5):
+    """Fused GroupNorm + SiLU. x: [B, C, N] (N = H*W), gamma/beta: [C]."""
+    B, C, N = x.shape
+    g = x.reshape(B, groups, (C // groups) * N)
+    mean = jnp.mean(g, axis=-1, keepdims=True)
+    var = jnp.mean((g - mean) ** 2, axis=-1, keepdims=True)
+    xhat = ((g - mean) / jnp.sqrt(var + eps)).reshape(B, C, N)
+    y = xhat * gamma[None, :, None] + beta[None, :, None]
+    return y * jnp.asarray(1.0, x.dtype) / (1.0 + jnp.exp(-y))

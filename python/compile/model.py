@@ -1,0 +1,224 @@
+"""L2: the epsilon-model (a small U-Net, Ho et al.-style) and the fused
+``denoise_step`` graph that the rust coordinator serves.
+
+The network follows the paper's architecture recipe scaled to 16x16x1
+(DESIGN.md section 2): sinusoidal time embedding -> MLP; ResBlocks with
+GroupNorm+SiLU and a time-embedding shift; self-attention at the 8x8
+resolution; skip connections across the down/up path. ~120k parameters.
+
+``use_pallas`` switches the GroupNorm/attention/update inner ops between the
+L1 Pallas kernels (AOT serving graph) and the pure-jnp references (training,
+where interpret-mode trace overhead would dominate). pytest proves the two
+are numerically interchangeable.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.attention import attention as attention_pallas
+from .kernels.ddim_step import ddim_update as ddim_update_pallas
+from .kernels.groupnorm import groupnorm_silu as groupnorm_silu_pallas
+
+IMG = 16
+CH = 24  # base channels
+CH_MID = 48  # channels at the 8x8 level
+TEMB = 48  # time-embedding dim
+GROUPS = 8
+HEADS = 2
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------- init utils
+def _conv_init(key, cout, cin, kh, kw, scale=1.0):
+    fan_in = cin * kh * kw
+    std = scale / np.sqrt(fan_in)
+    return {
+        "w": jax.random.normal(key, (cout, cin, kh, kw), jnp.float32) * std,
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+def _dense_init(key, cout, cin, scale=1.0):
+    std = scale / np.sqrt(cin)
+    return {
+        "w": jax.random.normal(key, (cin, cout), jnp.float32) * std,
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+def _gn_init(c):
+    return {"gamma": jnp.ones((c,), jnp.float32), "beta": jnp.zeros((c,), jnp.float32)}
+
+
+def _resblock_init(key, cin, cout):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "gn1": _gn_init(cin),
+        "conv1": _conv_init(k1, cout, cin, 3, 3),
+        "temb": _dense_init(k2, cout, TEMB),
+        "gn2": _gn_init(cout),
+        # zero-ish init on the last conv so each block starts near identity
+        "conv2": _conv_init(k3, cout, cout, 3, 3, scale=1e-4),
+    }
+    if cin != cout:
+        p["skip"] = _conv_init(k4, cout, cin, 1, 1)
+    return p
+
+
+def _attn_init(key, c):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "gn": _gn_init(c),
+        "q": _conv_init(k1, c, c, 1, 1),
+        "k": _conv_init(k2, c, c, 1, 1),
+        "v": _conv_init(k3, c, c, 1, 1),
+        "o": _conv_init(k4, c, c, 1, 1, scale=1e-4),
+    }
+
+
+def init_params(seed: int = 0) -> Params:
+    """Initialise all U-Net parameters."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), 16)
+    return {
+        "temb1": _dense_init(keys[0], TEMB, TEMB // 2),
+        "temb2": _dense_init(keys[1], TEMB, TEMB),
+        "conv_in": _conv_init(keys[2], CH, 1, 3, 3),
+        "down1": _resblock_init(keys[3], CH, CH),
+        "down_conv": _conv_init(keys[4], CH, CH, 3, 3),  # stride-2 16->8
+        "down2": _resblock_init(keys[5], CH, CH_MID),
+        "down2_attn": _attn_init(keys[6], CH_MID),
+        "mid1": _resblock_init(keys[7], CH_MID, CH_MID),
+        "mid_attn": _attn_init(keys[8], CH_MID),
+        "mid2": _resblock_init(keys[9], CH_MID, CH_MID),
+        "up2": _resblock_init(keys[10], CH_MID + CH_MID, CH_MID),
+        "up2_attn": _attn_init(keys[11], CH_MID),
+        "up1": _resblock_init(keys[12], CH_MID + CH, CH),
+        "gn_out": _gn_init(CH),
+        "conv_out": _conv_init(keys[13], 1, CH, 3, 3, scale=1e-4),
+    }
+
+
+def param_count(params: Params) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params))
+
+
+# ------------------------------------------------------------------- forward
+def _conv(p, x, stride=1):
+    return (
+        jax.lax.conv_general_dilated(
+            x, p["w"], (stride, stride), "SAME", dimension_numbers=("NCHW", "OIHW", "NCHW")
+        )
+        + p["b"][None, :, None, None]
+    )
+
+
+def _dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def _gn_silu(p, x, use_pallas):
+    B, C, H, W = x.shape
+    fn = groupnorm_silu_pallas if use_pallas else ref.groupnorm_silu_ref
+    return fn(x.reshape(B, C, H * W), p["gamma"], p["beta"], GROUPS).reshape(B, C, H, W)
+
+
+def _gn(p, x, eps=1e-5):
+    # plain GroupNorm (no SiLU) for the attention block's pre-norm
+    B, C, H, W = x.shape
+    g = x.reshape(B, GROUPS, (C // GROUPS) * H * W)
+    mean = jnp.mean(g, axis=-1, keepdims=True)
+    var = jnp.mean((g - mean) ** 2, axis=-1, keepdims=True)
+    xhat = ((g - mean) / jnp.sqrt(var + eps)).reshape(B, C, H, W)
+    return xhat * p["gamma"][None, :, None, None] + p["beta"][None, :, None, None]
+
+
+def _resblock(p, x, temb, use_pallas):
+    h = _gn_silu(p["gn1"], x, use_pallas)
+    h = _conv(p["conv1"], h)
+    h = h + _dense(p["temb"], jax.nn.silu(temb))[:, :, None, None]
+    h = _gn_silu(p["gn2"], h, use_pallas)
+    h = _conv(p["conv2"], h)
+    skip = _conv(p["skip"], x) if "skip" in p else x
+    return h + skip
+
+
+def _attnblock(p, x, use_pallas):
+    B, C, H, W = x.shape
+    Dh = C // HEADS
+    hn = _gn(p["gn"], x)
+    q, k, v = _conv(p["q"], hn), _conv(p["k"], hn), _conv(p["v"], hn)
+
+    def heads(t):  # [B,C,H,W] -> [B*HEADS, H*W, Dh]
+        return t.reshape(B, HEADS, Dh, H * W).transpose(0, 1, 3, 2).reshape(B * HEADS, H * W, Dh)
+
+    fn = attention_pallas if use_pallas else ref.attention_ref
+    o = fn(heads(q), heads(k), heads(v))
+    o = o.reshape(B, HEADS, H * W, Dh).transpose(0, 1, 3, 2).reshape(B, C, H, W)
+    return x + _conv(p["o"], o)
+
+
+def time_embedding(t):
+    """Sinusoidal embedding of a timestep t in [0, T]. [B] -> [B, TEMB//2]."""
+    half = TEMB // 4
+    freqs = jnp.exp(-np.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = t[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def eps_model(params: Params, x, t, use_pallas: bool = False):
+    """epsilon_theta(x_t, t): x [B,1,16,16], t [B] float -> eps [B,1,16,16]."""
+    temb = _dense(params["temb2"], jax.nn.silu(_dense(params["temb1"], time_embedding(t))))
+
+    h = _conv(params["conv_in"], x)
+    h1 = _resblock(params["down1"], h, temb, use_pallas)  # [B,CH,16,16]
+    h = _conv(params["down_conv"], h1, stride=2)  # [B,CH,8,8]
+    h2 = _resblock(params["down2"], h, temb, use_pallas)  # [B,CH_MID,8,8]
+    h2 = _attnblock(params["down2_attn"], h2, use_pallas)
+
+    m = _resblock(params["mid1"], h2, temb, use_pallas)
+    m = _attnblock(params["mid_attn"], m, use_pallas)
+    m = _resblock(params["mid2"], m, temb, use_pallas)
+
+    u = _resblock(params["up2"], jnp.concatenate([m, h2], axis=1), temb, use_pallas)
+    u = _attnblock(params["up2_attn"], u, use_pallas)
+    u = jax.image.resize(u, (u.shape[0], u.shape[1], IMG, IMG), "nearest")
+    u = _resblock(params["up1"], jnp.concatenate([u, h1], axis=1), temb, use_pallas)
+
+    out = _gn_silu(params["gn_out"], u, use_pallas)
+    return _conv(params["conv_out"], out)
+
+
+def denoise_step(params: Params, x, t, alpha_t, alpha_prev, sigma, noise, use_pallas: bool = True):
+    """The fused serving graph (one executable per batch bucket):
+    eps-prediction + generalized DDIM update (Eq. 12), with per-sample
+    schedule vectors so heterogeneous trajectories batch together.
+
+    x, noise: [B,1,16,16]; t, alpha_t, alpha_prev, sigma: [B].
+    Returns (x_prev, eps, x0_pred), each [B,1,16,16].
+    """
+    B = x.shape[0]
+    eps = eps_model(params, x, t, use_pallas)
+    fn = ddim_update_pallas if use_pallas else ref.ddim_update_ref
+    x_prev, x0 = fn(
+        x.reshape(B, -1), eps.reshape(B, -1), noise.reshape(B, -1), alpha_t, alpha_prev, sigma
+    )
+    return x_prev.reshape(x.shape), eps, x0.reshape(x.shape)
+
+
+def make_denoise_step_fn(params: Params, use_pallas: bool = True):
+    """Close over trained params -> jit-able fn of runtime inputs only (the
+    weights become HLO constants; rust passes only the 6 runtime tensors)."""
+
+    @functools.partial(jax.jit)
+    def fn(x, t, alpha_t, alpha_prev, sigma, noise):
+        return denoise_step(params, x, t, alpha_t, alpha_prev, sigma, noise, use_pallas)
+
+    return fn

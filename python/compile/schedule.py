@@ -1,0 +1,68 @@
+"""Diffusion schedule math shared between the build path and (via
+``artifacts/alphas.json``) the rust coordinator.
+
+Notation follows the DDIM paper (Song et al., 2021): ``alpha_bar[t]`` is the
+paper's alpha_t (the *cumulative* product — what Ho et al. call alpha-bar),
+indexed t = 1..T with the convention alpha_bar[0] = 1 (paper's alpha_0 := 1).
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+T_DEFAULT = 1000
+BETA_START = 1e-4
+BETA_END = 0.02
+
+
+def alpha_bar_table(T: int = T_DEFAULT) -> np.ndarray:
+    """Return alpha_bar[0..T] (length T+1) for the Ho et al. linear-beta
+    schedule. Index 0 is the convention alpha_0 = 1."""
+    betas = np.linspace(BETA_START, BETA_END, T, dtype=np.float64)
+    abar = np.concatenate([[1.0], np.cumprod(1.0 - betas)])
+    return abar.astype(np.float64)
+
+
+def tau_linear(S: int, T: int = T_DEFAULT) -> np.ndarray:
+    """Linear sub-sequence tau_i = floor(c*i), i=1..S, with tau_S close to T
+    (paper App. D.2)."""
+    c = T / S
+    tau = np.floor(c * np.arange(1, S + 1)).astype(np.int64)
+    return np.clip(tau, 1, T)
+
+
+def tau_quadratic(S: int, T: int = T_DEFAULT) -> np.ndarray:
+    """Quadratic sub-sequence tau_i = floor(c*i^2) with tau_S close to T."""
+    c = T / (S * S)
+    tau = np.floor(c * np.arange(1, S + 1) ** 2).astype(np.int64)
+    return np.clip(tau, 1, T)
+
+
+def sigma_eta(abar: np.ndarray, tau: np.ndarray, eta: float) -> np.ndarray:
+    """Eq. (16): sigma_{tau_i}(eta) for i=1..S, with tau_0 := 0 (alpha_bar=1)."""
+    a_cur = abar[tau]
+    a_prev = abar[np.concatenate([[0], tau[:-1]])]
+    return eta * np.sqrt((1 - a_prev) / (1 - a_cur)) * np.sqrt(1 - a_cur / a_prev)
+
+
+def sigma_hat(abar: np.ndarray, tau: np.ndarray) -> np.ndarray:
+    """App. D.3: the larger DDPM variance sigma-hat = sqrt(1 - a_t/a_{t-1})."""
+    a_cur = abar[tau]
+    a_prev = abar[np.concatenate([[0], tau[:-1]])]
+    return np.sqrt(1 - a_cur / a_prev)
+
+
+def dump_alphas_json(path: str, T: int = T_DEFAULT) -> None:
+    abar = alpha_bar_table(T)
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "T": T,
+                "beta_start": BETA_START,
+                "beta_end": BETA_END,
+                "alpha_bar": [float(a) for a in abar],
+            },
+            f,
+        )

@@ -1,0 +1,37 @@
+"""Tensorfile: the dumb-as-possible binary interchange format between the
+python build path and the rust runtime (mirrored in rust/src/artifacts/).
+
+``<name>.bin``       raw little-endian f32 (or f64), row-major
+``<name>.bin.json``  {"shape": [...], "dtype": "f32"|"f64"}
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+_DTYPES = {"f32": np.float32, "f64": np.float64}
+
+
+def write_tensor(path: str, arr: np.ndarray) -> None:
+    """Write ``arr`` to ``path`` (must end in .bin) + its .json sidecar."""
+    assert path.endswith(".bin"), path
+    arr = np.ascontiguousarray(arr)
+    dtype = {np.dtype(np.float32): "f32", np.dtype(np.float64): "f64"}[arr.dtype]
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(arr.astype("<" + arr.dtype.str[1:]).tobytes())
+    with open(path + ".json", "w") as f:
+        json.dump({"shape": list(arr.shape), "dtype": dtype}, f)
+
+
+def read_tensor(path: str) -> np.ndarray:
+    """Read a tensorfile back (used by the python-side golden self-checks)."""
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    dt = _DTYPES[meta["dtype"]]
+    with open(path, "rb") as f:
+        arr = np.frombuffer(f.read(), dtype=np.dtype(dt).newbyteorder("<"))
+    return arr.reshape(meta["shape"]).astype(dt)

@@ -1,0 +1,118 @@
+"""Build-time training of epsilon_theta with the paper's objective:
+Eq. (5) with gamma = 1 (the Ho et al. L_simple / the paper's L_1), T = 1000.
+
+Theorem 1 is the whole point: this single model, trained once per dataset,
+serves *every* (tau, sigma) generative process the rust coordinator builds.
+Optimiser is a hand-rolled Adam (no optax in the image) with an EMA copy of
+the weights (Ho et al. practice) — the EMA weights are what get AOT-lowered.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+from .schedule import alpha_bar_table
+
+LR = 2e-3
+BETA1, BETA2, EPS = 0.9, 0.999, 1e-8
+EMA_DECAY = 0.995
+BATCH = 64
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "step": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr):
+    step = state["step"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: BETA1 * m + (1 - BETA1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: BETA2 * v + (1 - BETA2) * g * g, state["v"], grads)
+    bc1 = 1 - BETA1 ** step.astype(jnp.float32)
+    bc2 = 1 - BETA2 ** step.astype(jnp.float32)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m, v: p - lr * (m / bc1) / (jnp.sqrt(v / bc2) + EPS), params, m, v
+    )
+    return new_params, {"m": m, "v": v, "step": step}
+
+
+def loss_fn(params, x0, t, eps):
+    """Eq. (5), gamma=1: || eps_theta(sqrt(a) x0 + sqrt(1-a) eps, t) - eps ||^2."""
+    abar = jnp.asarray(alpha_bar_table(), jnp.float32)
+    a = abar[t][:, None, None, None]
+    xt = jnp.sqrt(a) * x0 + jnp.sqrt(1 - a) * eps
+    pred = model_mod.eps_model(params, xt, t.astype(jnp.float32), use_pallas=False)
+    return jnp.mean((pred - eps) ** 2)
+
+
+@jax.jit
+def train_step(params, opt, ema, key, x0):
+    kt, ke = jax.random.split(key)
+    t = jax.random.randint(kt, (x0.shape[0],), 1, 1001)
+    eps = jax.random.normal(ke, x0.shape, jnp.float32)
+    loss, grads = jax.value_and_grad(loss_fn)(params, x0, t, eps)
+    params, opt = adam_update(params, grads, opt, LR)
+    ema = jax.tree_util.tree_map(lambda e, p: EMA_DECAY * e + (1 - EMA_DECAY) * p, ema, params)
+    return params, opt, ema, loss
+
+
+def train(
+    dataset: str,
+    steps: int,
+    seed: int = 0,
+    log_every: int = 200,
+    init: Any = None,
+) -> tuple[Any, list[float]]:
+    """Train on ``dataset`` for ``steps`` Adam steps; returns (ema_params,
+    losses). Pass ``init`` (a params tree) to resume from cached weights —
+    the optimiser state restarts, which is fine for Adam after warmup."""
+    params = init if init is not None else model_mod.init_params(seed)
+    print(f"[train:{dataset}] {model_mod.param_count(params)} params, {steps} steps, batch {BATCH}"
+          + (" (resume)" if init is not None else ""))
+    opt = adam_init(params)
+    ema = params
+    key = jax.random.PRNGKey(seed + 1)
+    # one big procedural pool, sliced per step (cheap, exactly reproducible)
+    pool = data_mod.generate(dataset, 8192, seed=seed + 77)
+    losses: list[float] = []
+    t0 = time.time()
+    rng = np.random.default_rng(seed + 3)
+    for i in range(steps):
+        idx = rng.integers(0, pool.shape[0], BATCH)
+        key, sub = jax.random.split(key)
+        params, opt, ema, loss = train_step(params, opt, ema, sub, jnp.asarray(pool[idx]))
+        if i % log_every == 0 or i == steps - 1:
+            l = float(loss)
+            losses.append(l)
+            print(f"[train:{dataset}] step {i:5d} loss {l:.4f} ({time.time() - t0:.1f}s)")
+    return ema, losses
+
+
+def flatten_params(params, prefix=""):
+    """dict tree -> {dotted.name: np.ndarray} for npz caching."""
+    out = {}
+    for k, v in params.items():
+        name = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(flatten_params(v, name + "."))
+        else:
+            out[name] = np.asarray(v)
+    return out
+
+
+def unflatten_params(flat):
+    out: dict[str, Any] = {}
+    for name, v in flat.items():
+        parts = name.split(".")
+        d = out
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = jnp.asarray(v)
+    return out

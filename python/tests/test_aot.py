@@ -1,0 +1,62 @@
+"""AOT pipeline regression tests — most importantly the constant-elision
+guard: jax's default ``as_hlo_text()`` silently drops large constants
+(``constant({...``), which once cost us a debugging session of a rust
+runtime executing garbage weights."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import example_args, to_hlo_text, BUCKETS, GOLDEN_BUCKETS
+
+
+def test_hlo_text_keeps_large_constants():
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)).astype(np.float32))
+
+    def fn(x):
+        return (x @ w,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((2, 64), jnp.float32))
+    text = to_hlo_text(lowered)
+    assert "{..." not in text, "large constants were elided from the HLO text"
+    assert "f32[64,64]" in text
+
+
+def test_example_args_shapes():
+    for b in BUCKETS:
+        x, t, a_t, a_p, sig, noise = example_args(b)
+        assert x.shape == (b, 1, 16, 16) and noise.shape == x.shape
+        for v in (t, a_t, a_p, sig):
+            assert v.shape == (b,)
+    assert set(GOLDEN_BUCKETS) <= set(BUCKETS)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built",
+)
+def test_built_artifacts_are_complete():
+    """If `make artifacts` has run, every manifest entry must resolve to
+    files with full (non-elided) constants."""
+    import json
+
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(root, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["T"] == 1000
+    assert manifest["buckets"] == list(BUCKETS)
+    for ds, info in manifest["datasets"].items():
+        assert info["final_loss"] < 0.2, f"{ds} undertrained: {info['final_loss']}"
+        for rel in info["hlo"]:
+            path = os.path.join(root, rel)
+            assert os.path.exists(path), path
+            # spot-check the head of the file for elision markers
+            with open(path) as f:
+                head = f.read(200_000)
+            assert "{..." not in head, f"{rel} has elided constants"
+        for name in ("ref_mu.bin", "ref_cov.bin"):
+            assert os.path.exists(os.path.join(root, ds, name))
+        assert os.path.exists(os.path.join(root, ds, "goldens", "b1_x.bin"))

@@ -1,0 +1,71 @@
+"""Datasets and the proxy-FID feature map (the python halves of the
+cross-language contracts)."""
+
+import numpy as np
+import pytest
+
+from compile import data, features
+from compile.tensorfile import read_tensor, write_tensor
+
+
+@pytest.mark.parametrize("name", data.DATASETS)
+def test_datasets_shapes_and_range(name):
+    imgs = data.generate(name, 32, seed=5)
+    assert imgs.shape == (32, 1, 16, 16)
+    assert imgs.dtype == np.float32
+    assert imgs.min() >= -1.0 and imgs.max() <= 1.0
+    # non-degenerate: images differ from each other
+    assert np.std(imgs.reshape(32, -1).mean(axis=1)) > 0 or np.std(imgs) > 0.01
+
+
+@pytest.mark.parametrize("name", data.DATASETS)
+def test_datasets_deterministic_per_seed(name):
+    a = data.generate(name, 8, seed=1)
+    b = data.generate(name, 8, seed=1)
+    c = data.generate(name, 8, seed=2)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_features_shape_and_determinism():
+    imgs = data.generate("sprites", 16, seed=0)
+    f = features.extract_features(imgs)
+    assert f.shape == (16, features.FEAT_DIM)
+    np.testing.assert_array_equal(f, features.extract_features(imgs))
+
+
+def test_features_constant_image():
+    imgs = np.full((1, 1, 16, 16), 0.25, np.float32)
+    f = features.extract_features(imgs)[0]
+    np.testing.assert_allclose(f[:17], 0.25, atol=1e-7)
+    np.testing.assert_allclose(f[17:], 0.0, atol=1e-7)
+
+
+def test_features_separate_clean_from_noisy():
+    clean = data.generate("sprites", 64, seed=1)
+    rng = np.random.default_rng(0)
+    noisy = clean + 0.3 * rng.standard_normal(clean.shape).astype(np.float32)
+    fc = features.extract_features(clean).mean(axis=0)
+    fn = features.extract_features(noisy).mean(axis=0)
+    assert fn[20] > fc[20] * 1.5  # laplacian energy jumps under noise
+    assert fn[21] > fc[21] * 1.5  # high band too
+
+
+def test_fit_gaussian_matches_numpy():
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((500, features.FEAT_DIM))
+    mu, cov = features.fit_gaussian(x)
+    np.testing.assert_allclose(mu, x.mean(axis=0), atol=1e-12)
+    np.testing.assert_allclose(cov, np.cov(x, rowvar=False), atol=1e-10)
+
+
+def test_tensorfile_round_trip(tmp_path):
+    arr = np.arange(24, dtype=np.float32).reshape(2, 3, 4)
+    p = str(tmp_path / "x.bin")
+    write_tensor(p, arr)
+    back = read_tensor(p)
+    np.testing.assert_array_equal(arr, back)
+    arr64 = np.linspace(0, 1, 10)
+    p2 = str(tmp_path / "y.bin")
+    write_tensor(p2, arr64)
+    np.testing.assert_array_equal(arr64, read_tensor(p2))

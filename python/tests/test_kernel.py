@@ -1,0 +1,153 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, swept over
+shapes / values with hypothesis. This is THE gate on the serving graph's
+numerics — the AOT HLO embeds the Pallas versions."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import attention
+from compile.kernels.ddim_step import ddim_update
+from compile.kernels.groupnorm import groupnorm_silu
+
+
+# ------------------------------------------------------------- ddim_update
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 16),
+    d=st.sampled_from([1, 8, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ddim_update_matches_ref(b, d, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    x = jax.random.normal(ks[0], (b, d), jnp.float32)
+    eps = jax.random.normal(ks[1], (b, d), jnp.float32)
+    noise = jax.random.normal(ks[2], (b, d), jnp.float32)
+    a_t = jax.random.uniform(ks[3], (b,), jnp.float32, 1e-3, 0.999)
+    a_p = jnp.minimum(a_t + jax.random.uniform(ks[4], (b,), jnp.float32, 0.0, 0.5), 1.0)
+    sigma = jax.random.uniform(ks[5], (b,), jnp.float32, 0.0, 0.3)
+    got = ddim_update(x, eps, noise, a_t, a_p, sigma)
+    want = ref.ddim_update_ref(x, eps, noise, a_t, a_p, sigma)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=2e-5, atol=2e-5)
+
+
+def rand(key, shape, lo=-3.0, hi=3.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, jnp.float32, lo, hi)
+
+
+def test_ddim_update_eta0_is_deterministic_in_noise():
+    """At sigma=0 the noise input must not influence the output (DDIM)."""
+    x = rand(0, (4, 256))
+    eps = rand(1, (4, 256))
+    a_t = jnp.full((4,), 0.3)
+    a_p = jnp.full((4,), 0.7)
+    sigma = jnp.zeros((4,))
+    out1, _ = ddim_update(x, eps, rand(2, (4, 256)), a_t, a_p, sigma)
+    out2, _ = ddim_update(x, eps, rand(3, (4, 256)), a_t, a_p, sigma)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_ddim_update_identity_when_alphas_equal():
+    """alpha_in == alpha_out and sigma=0 should (nearly) return x: the
+    x0-prediction and re-noising cancel."""
+    x = rand(0, (2, 64))
+    eps = rand(1, (2, 64))
+    a = jnp.full((2,), 0.5)
+    out, _ = ddim_update(x, eps, jnp.zeros_like(x), a, a, jnp.zeros((2,)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), rtol=1e-4, atol=1e-4)
+
+
+def test_ddim_update_final_step_returns_x0():
+    """alpha_out = 1 (the final step): output must equal predicted x0."""
+    x = rand(0, (3, 32))
+    eps = rand(1, (3, 32))
+    a_t = jnp.full((3,), 0.1)
+    out, x0 = ddim_update(x, eps, jnp.zeros_like(x), a_t, jnp.ones((3,)), jnp.zeros((3,)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x0), rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------- attention
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    s=st.sampled_from([4, 16, 64]),
+    dh=st.sampled_from([8, 24, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(b, s, dh, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, dh), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(attention(q, k, v)),
+        np.asarray(ref.attention_ref(q, k, v)),
+        rtol=2e-5,
+        atol=2e-5,
+    )
+
+
+def test_attention_rows_are_convex_combinations():
+    """Attention output lies in the convex hull of V rows: bounded by
+    min/max of V per feature."""
+    q = rand(0, (2, 16, 8), -5, 5)
+    k = rand(1, (2, 16, 8), -5, 5)
+    v = rand(2, (2, 16, 8))
+    out = np.asarray(attention(q, k, v))
+    vmin = np.asarray(v).min(axis=1, keepdims=True) - 1e-5
+    vmax = np.asarray(v).max(axis=1, keepdims=True) + 1e-5
+    assert (out >= vmin).all() and (out <= vmax).all()
+
+
+def test_attention_large_logits_stable():
+    """Softmax stability: huge logits must not produce NaN/inf."""
+    q = rand(0, (1, 8, 16), 50.0, 100.0)
+    k = rand(1, (1, 8, 16), 50.0, 100.0)
+    v = rand(2, (1, 8, 16))
+    out = np.asarray(attention(q, k, v))
+    assert np.isfinite(out).all()
+
+
+# ------------------------------------------------------------ groupnorm_silu
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    groups=st.sampled_from([1, 2, 8]),
+    cg=st.sampled_from([1, 3, 8]),
+    n=st.sampled_from([4, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_groupnorm_matches_ref(b, groups, cg, n, seed):
+    c = groups * cg
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(ks[0], (b, c, n), jnp.float32) * 2.0
+    gamma = jax.random.normal(ks[1], (c,), jnp.float32)
+    beta = jax.random.normal(ks[2], (c,), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(groupnorm_silu(x, gamma, beta, groups)),
+        np.asarray(ref.groupnorm_silu_ref(x, gamma, beta, groups)),
+        rtol=3e-5,
+        atol=3e-5,
+    )
+
+
+def test_groupnorm_normalizes():
+    """With gamma=1, beta=0 the pre-SiLU activations are standardized."""
+    x = rand(0, (2, 8, 128), -10, 10)
+    gamma = jnp.ones((8,))
+    beta = jnp.zeros((8,))
+    out = np.asarray(groupnorm_silu(x, gamma, beta, 2))
+    xh = np.asarray(x).reshape(2, 2, 4 * 128)
+    xh = (xh - xh.mean(-1, keepdims=True)) / np.sqrt(xh.var(-1, keepdims=True) + 1e-5)
+    xh = xh.reshape(2, 8, 128)
+    want = xh / (1.0 + np.exp(-xh))
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+def test_groupnorm_rejects_bad_groups():
+    with pytest.raises(AssertionError):
+        groupnorm_silu(jnp.zeros((1, 6, 4)), jnp.zeros((6,)), jnp.zeros((6,)), 4)

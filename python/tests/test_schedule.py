@@ -1,0 +1,71 @@
+"""Schedule math: the alpha-bar table, tau selection, sigma(eta)/sigma-hat —
+including the DDIM<->DDPM special cases the paper calls out (Sec. 4.1)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.schedule import (
+    alpha_bar_table,
+    sigma_eta,
+    sigma_hat,
+    tau_linear,
+    tau_quadratic,
+)
+
+
+def test_alpha_bar_invariants():
+    a = alpha_bar_table(1000)
+    assert a[0] == 1.0
+    assert np.all(np.diff(a) < 0)
+    assert 0 < a[-1] < 1e-4  # prior is essentially N(0, I)
+
+
+def test_alpha_bar_first_step():
+    a = alpha_bar_table(1000)
+    assert abs(a[1] - (1 - 1e-4)) < 1e-12
+
+
+@settings(max_examples=50, deadline=None)
+@given(s=st.integers(1, 1000))
+def test_tau_shapes(s):
+    for tau in (tau_linear(s), tau_quadratic(s)):
+        assert len(tau) == s
+        assert tau[0] >= 1 and tau[-1] <= 1000
+        # linear taus are strictly increasing by construction; quadratic can
+        # collide only at tiny s*T corners which the rust side dedups —
+        # python only ever uses the documented (S << T) regime
+        assert np.all(np.diff(tau_linear(s)) >= 1) or s == 1
+
+
+def test_tau_full_is_identity():
+    assert np.array_equal(tau_linear(1000), np.arange(1, 1001))
+
+
+def test_sigma_eta1_equals_ddpm_posterior():
+    """Eq. 16 at eta=1 must reproduce the DDPM posterior variance
+    beta-tilde (paper Sec. 4.1: 'the generative process becomes a DDPM')."""
+    abar = alpha_bar_table()
+    tau = tau_linear(1000)  # consecutive steps = Markovian case
+    s1 = sigma_eta(abar, tau, 1.0)
+    a_cur = abar[tau]
+    a_prev = abar[np.concatenate([[0], tau[:-1]])]
+    beta_tilde = (1 - a_prev) / (1 - a_cur) * (1 - a_cur / a_prev)
+    np.testing.assert_allclose(s1**2, beta_tilde, rtol=1e-10)
+
+
+def test_sigma_zero_and_monotone():
+    abar = alpha_bar_table()
+    tau = tau_quadratic(20)
+    assert np.all(sigma_eta(abar, tau, 0.0) == 0.0)
+    last = sigma_eta(abar, tau, 0.0)
+    for eta in (0.2, 0.5, 1.0):
+        cur = sigma_eta(abar, tau, eta)
+        assert np.all(cur >= last)
+        last = cur
+
+
+def test_sigma_hat_dominates():
+    abar = alpha_bar_table()
+    for s in (10, 50, 100):
+        tau = tau_linear(s)
+        assert np.all(sigma_hat(abar, tau) >= sigma_eta(abar, tau, 1.0) - 1e-12)

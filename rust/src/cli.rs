@@ -1,0 +1,133 @@
+//! Tiny `--flag value` argument parser (the offline build has no `clap`).
+//! Subcommand + flags; every consumer documents its own flags in `--help`.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line: a subcommand plus `--key value` flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    flags: BTreeMap<String, String>,
+    /// flags that appeared without a value (`--verbose`)
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.command = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| Error::Request(format!("expected --flag, got '{a}'")))?
+                .to_string();
+            if key.is_empty() {
+                return Err(Error::Request("empty flag name".into()));
+            }
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    out.flags.insert(key, it.next().unwrap());
+                }
+                _ => out.switches.push(key),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Request(format!("--{key} wants an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Request(format!("--{key} wants a number, got '{v}'"))),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Request(format!("--{key} wants an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn command_and_flags() {
+        let a = parse("serve --dataset blobs --steps 50 --verbose");
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.get("dataset"), Some("blobs"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 50);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+        assert_eq!(a.get_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn no_command() {
+        let a = parse("--x 1");
+        assert!(a.command.is_none());
+        assert_eq!(a.get_usize("x", 0).unwrap(), 1);
+    }
+
+    #[test]
+    fn type_errors() {
+        let a = parse("run --n abc");
+        assert!(a.get_usize("n", 0).is_err());
+        assert!(a.get_f64("n", 0.0).is_err());
+    }
+
+    #[test]
+    fn rejects_stray_positional() {
+        assert!(Args::parse(vec!["cmd".into(), "stray".into()]).is_err());
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("bench --quick");
+        assert!(a.has("quick"));
+    }
+}

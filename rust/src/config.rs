@@ -1,0 +1,84 @@
+//! Serving configuration: one plain struct, parsed from CLI flags (and
+//! defaulted sensibly) — no config-file indirection needed at this scale,
+//! but everything the paper's experiments vary is a field here.
+
+use crate::error::{Error, Result};
+
+/// Coordinator / server configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Artifact directory produced by `make artifacts`.
+    pub artifact_root: String,
+    /// Dataset whose executables serve this process.
+    pub dataset: String,
+    /// Largest batch bucket the engine may use (≤ largest compiled bucket).
+    pub max_batch: usize,
+    /// Admission queue capacity (requests) — beyond this, reject (backpressure).
+    pub queue_capacity: usize,
+    /// Max lanes (in-flight samples) resident in the engine at once.
+    pub max_lanes: usize,
+    /// TCP listen address for `serve`.
+    pub listen: String,
+    /// Default number of sampling steps when a request omits it.
+    pub default_steps: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            artifact_root: "artifacts".into(),
+            dataset: "sprites".into(),
+            max_batch: 16,
+            queue_capacity: 256,
+            max_lanes: 64,
+            listen: "127.0.0.1:7878".into(),
+            default_steps: 20,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Validate cross-field invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch == 0 {
+            return Err(Error::Coordinator("max_batch must be > 0".into()));
+        }
+        if self.max_lanes < self.max_batch {
+            return Err(Error::Coordinator(format!(
+                "max_lanes ({}) must be >= max_batch ({})",
+                self.max_lanes, self.max_batch
+            )));
+        }
+        if self.queue_capacity == 0 {
+            return Err(Error::Coordinator("queue_capacity must be > 0".into()));
+        }
+        if self.default_steps == 0 {
+            return Err(Error::Coordinator("default_steps must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ServeConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_combinations() {
+        let mut c = ServeConfig::default();
+        c.max_batch = 0;
+        assert!(c.validate().is_err());
+        let mut c = ServeConfig::default();
+        c.max_lanes = 4;
+        c.max_batch = 16;
+        assert!(c.validate().is_err());
+        let mut c = ServeConfig::default();
+        c.queue_capacity = 0;
+        assert!(c.validate().is_err());
+    }
+}

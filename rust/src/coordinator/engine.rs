@@ -1,0 +1,373 @@
+//! The engine: lanes, admission, bucket selection, and the tick loop —
+//! continuous step-level batching over the AOT `denoise_step` executables.
+//!
+//! Scheduling policy (deliberately simple, measured in §Perf):
+//! - admission: FIFO from the bounded queue while lane capacity allows,
+//!   whole requests at a time (no partial admission);
+//! - selection: round-robin over active lanes, up to `max_batch` per tick —
+//!   no lane can starve (tested by property below);
+//! - bucket: smallest compiled bucket that fits the selected lanes (pads
+//!   dead lanes; padding never leaks — also tested).
+//!
+//! One engine serves one dataset (executables are per dataset); run several
+//! engines for multi-model serving.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::config::ServeConfig;
+use crate::coordinator::metrics::{Histogram, MetricsSnapshot};
+use crate::coordinator::queue::BoundedQueue;
+use crate::coordinator::request::{Request, RequestBody, RequestId, Response, ResponseBody};
+use crate::error::{Error, Result};
+use crate::runtime::{Runtime, StepOutput};
+use crate::sampler::Trajectory;
+use crate::schedule::{Direction, SamplePlan};
+
+struct Lane {
+    req: RequestId,
+    lane_idx: usize,
+    traj: Trajectory,
+}
+
+struct Inflight {
+    submitted: Instant,
+    remaining_lanes: usize,
+    outputs: Vec<Option<Vec<f32>>>,
+    return_images: bool,
+    steps_total: usize,
+}
+
+struct Pending {
+    id: RequestId,
+    request: Request,
+    plan: SamplePlan,
+    submitted: Instant,
+}
+
+/// The coordinator engine. Synchronous API: `submit` + `tick`/`run_until_idle`;
+/// the TCP server wraps it in a thread (see [`super::server`]).
+pub struct Engine {
+    rt: Runtime,
+    cfg: ServeConfig,
+    queue: BoundedQueue<Pending>,
+    lanes: Vec<Lane>,
+    inflight: HashMap<RequestId, Inflight>,
+    completed: Vec<Response>,
+    next_id: RequestId,
+    rr_cursor: usize,
+    dim: usize,
+    // packing buffers (max bucket), reused every tick
+    buf_x: Vec<f32>,
+    buf_t: Vec<f32>,
+    buf_ain: Vec<f32>,
+    buf_aout: Vec<f32>,
+    buf_sigma: Vec<f32>,
+    buf_noise: Vec<f32>,
+    out: StepOutput,
+    sel: Vec<usize>,
+    // metrics
+    latency: Histogram,
+    started: Instant,
+    calls: u64,
+    steps: u64,
+    lanes_done: u64,
+    requests_done: u64,
+    occupancy_sum: f64,
+}
+
+impl Engine {
+    /// Build an engine over `artifact_root` for `cfg.dataset`.
+    pub fn new(cfg: ServeConfig) -> Result<Self> {
+        cfg.validate()?;
+        let rt = Runtime::load(&cfg.artifact_root)?;
+        Self::with_runtime(rt, cfg)
+    }
+
+    /// Build from an existing runtime (tests / benches).
+    pub fn with_runtime(rt: Runtime, cfg: ServeConfig) -> Result<Self> {
+        cfg.validate()?;
+        rt.manifest().dataset(&cfg.dataset)?;
+        let max_bucket = rt.manifest().bucket_for(cfg.max_batch);
+        let dim = rt.manifest().sample_dim();
+        Ok(Self {
+            rt,
+            queue: BoundedQueue::new(cfg.queue_capacity),
+            lanes: Vec::new(),
+            inflight: HashMap::new(),
+            completed: Vec::new(),
+            next_id: 1,
+            rr_cursor: 0,
+            dim,
+            buf_x: vec![0.0; max_bucket * dim],
+            buf_t: vec![0.0; max_bucket],
+            buf_ain: vec![0.0; max_bucket],
+            buf_aout: vec![0.0; max_bucket],
+            buf_sigma: vec![0.0; max_bucket],
+            buf_noise: vec![0.0; max_bucket * dim],
+            out: StepOutput::zeros(max_bucket * dim),
+            sel: Vec::with_capacity(max_bucket),
+            latency: Histogram::new(),
+            started: Instant::now(),
+            calls: 0,
+            steps: 0,
+            lanes_done: 0,
+            requests_done: 0,
+            occupancy_sum: 0.0,
+            cfg,
+        })
+    }
+
+    /// Pre-compile every bucket (avoids first-request latency spikes).
+    pub fn warmup(&mut self) -> Result<()> {
+        let ds = self.cfg.dataset.clone();
+        self.rt.warmup(&ds)
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Validate + enqueue a request. Errors are immediate (backpressure,
+    /// unknown dataset, bad schedule) — nothing is silently dropped.
+    pub fn submit(&mut self, request: Request) -> Result<RequestId> {
+        if request.dataset != self.cfg.dataset {
+            return Err(Error::Coordinator(format!(
+                "engine serves '{}', request wants '{}'",
+                self.cfg.dataset, request.dataset
+            )));
+        }
+        if request.lane_count() > self.cfg.max_lanes {
+            return Err(Error::Coordinator(format!(
+                "request wants {} lanes, engine max is {}",
+                request.lane_count(),
+                self.cfg.max_lanes
+            )));
+        }
+        let abar = self.rt.alphas();
+        let plan = match &request.body {
+            RequestBody::Encode { .. } => SamplePlan::encode(abar, request.tau, request.steps)?,
+            _ => SamplePlan::generate(abar, request.tau, request.steps, request.mode)?,
+        };
+        // validate provided states' dimensionality up front
+        let check_dims = |rows: &[Vec<f32>]| -> Result<()> {
+            for r in rows {
+                if r.len() != self.dim {
+                    return Err(Error::Request(format!(
+                        "state has {} elements, model wants {}",
+                        r.len(),
+                        self.dim
+                    )));
+                }
+            }
+            Ok(())
+        };
+        match &request.body {
+            RequestBody::Decode { latents } => check_dims(latents)?,
+            RequestBody::Encode { images } => check_dims(images)?,
+            RequestBody::Generate { .. } => {}
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push(Pending { id, request, plan, submitted: Instant::now() })?;
+        Ok(id)
+    }
+
+    /// Number of requests waiting for admission.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Number of lanes currently resident.
+    pub fn active_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Take all responses completed since the last call.
+    pub fn take_completed(&mut self) -> Vec<Response> {
+        std::mem::take(&mut self.completed)
+    }
+
+    /// Admit queued requests while lane capacity allows (FIFO, whole
+    /// requests). Returns how many requests were admitted.
+    fn admit(&mut self) -> usize {
+        let mut admitted = 0;
+        while let Some(p) = self.queue.peek() {
+            let want = p.request.lane_count();
+            if self.lanes.len() + want > self.cfg.max_lanes {
+                break;
+            }
+            let p = self.queue.pop().unwrap();
+            let Pending { id, request, plan, submitted } = p;
+            let steps_total = plan.len() * request.lane_count();
+            let n = request.lane_count();
+            match request.body {
+                RequestBody::Generate { count, seed } => {
+                    for i in 0..count {
+                        let traj =
+                            Trajectory::from_prior(plan.clone(), self.dim, seed + i as u64);
+                        self.lanes.push(Lane { req: id, lane_idx: i, traj });
+                    }
+                }
+                RequestBody::Decode { latents } => {
+                    for (i, x) in latents.into_iter().enumerate() {
+                        let traj =
+                            Trajectory::from_state(plan.clone(), x, id * 7919 + i as u64);
+                        self.lanes.push(Lane { req: id, lane_idx: i, traj });
+                    }
+                }
+                RequestBody::Encode { images } => {
+                    debug_assert_eq!(plan.direction, Direction::Encode);
+                    for (i, x) in images.into_iter().enumerate() {
+                        let traj =
+                            Trajectory::from_state(plan.clone(), x, id * 7919 + i as u64);
+                        self.lanes.push(Lane { req: id, lane_idx: i, traj });
+                    }
+                }
+            }
+            self.inflight.insert(
+                id,
+                Inflight {
+                    submitted,
+                    remaining_lanes: n,
+                    outputs: (0..n).map(|_| None).collect(),
+                    return_images: request.return_images,
+                    steps_total,
+                },
+            );
+            admitted += 1;
+        }
+        admitted
+    }
+
+    /// One scheduling tick: admit, select up to `max_batch` lanes
+    /// round-robin, run one fused step, retire finished lanes/requests.
+    /// Returns `true` if any work was done.
+    pub fn tick(&mut self) -> Result<bool> {
+        self.admit();
+        if self.lanes.is_empty() {
+            return Ok(false);
+        }
+        // --- select lanes round-robin
+        let n_active = self.lanes.len();
+        let n_sel = n_active.min(self.cfg.max_batch);
+        let bucket = self.rt.manifest().bucket_for(n_sel);
+        self.sel.clear();
+        for k in 0..n_sel {
+            self.sel.push((self.rr_cursor + k) % n_active);
+        }
+        self.rr_cursor = (self.rr_cursor + n_sel) % n_active.max(1);
+
+        // --- pack
+        let dim = self.dim;
+        for (lane_slot, &li) in self.sel.iter().enumerate() {
+            let lane = &mut self.lanes[li];
+            let p = lane.traj.next_params()?;
+            self.buf_x[lane_slot * dim..(lane_slot + 1) * dim]
+                .copy_from_slice(lane.traj.state());
+            self.buf_t[lane_slot] = p.t_model as f32;
+            self.buf_ain[lane_slot] = p.alpha_in as f32;
+            self.buf_aout[lane_slot] = p.alpha_out as f32;
+            self.buf_sigma[lane_slot] = p.sigma_dir as f32;
+            lane.traj
+                .fill_noise(&mut self.buf_noise[lane_slot * dim..(lane_slot + 1) * dim])?;
+        }
+        for lane_slot in n_sel..bucket {
+            // padding lanes: inert inputs (alpha values must stay valid)
+            self.buf_x[lane_slot * dim..(lane_slot + 1) * dim].fill(0.0);
+            self.buf_t[lane_slot] = self.buf_t[0];
+            self.buf_ain[lane_slot] = self.buf_ain[0].max(1e-4);
+            self.buf_aout[lane_slot] = self.buf_aout[0].max(1e-4);
+            self.buf_sigma[lane_slot] = 0.0;
+            self.buf_noise[lane_slot * dim..(lane_slot + 1) * dim].fill(0.0);
+        }
+
+        // --- run
+        let exe = self.rt.executable(&self.cfg.dataset, bucket)?;
+        exe.run(
+            &self.buf_x[..bucket * dim],
+            &self.buf_t[..bucket],
+            &self.buf_ain[..bucket],
+            &self.buf_aout[..bucket],
+            &self.buf_sigma[..bucket],
+            &self.buf_noise[..bucket * dim],
+            &mut self.out,
+        )?;
+        self.calls += 1;
+        self.steps += n_sel as u64;
+        self.occupancy_sum += n_sel as f64 / bucket as f64;
+
+        // --- advance + retire
+        let mut finished: Vec<usize> = Vec::new();
+        for (lane_slot, &li) in self.sel.iter().enumerate() {
+            let lane = &mut self.lanes[li];
+            lane.traj
+                .advance(&self.out.x_prev[lane_slot * dim..(lane_slot + 1) * dim])?;
+            if lane.traj.is_done() {
+                finished.push(li);
+            }
+        }
+        // remove finished lanes (highest index first so swap_remove is safe)
+        finished.sort_unstable_by(|a, b| b.cmp(a));
+        for li in finished {
+            let lane = self.lanes.swap_remove(li);
+            self.lanes_done += 1;
+            let inf = self
+                .inflight
+                .get_mut(&lane.req)
+                .ok_or_else(|| Error::Coordinator("lane without inflight record".into()))?;
+            inf.outputs[lane.lane_idx] = Some(lane.traj.into_state());
+            inf.remaining_lanes -= 1;
+            if inf.remaining_lanes == 0 {
+                let inf = self.inflight.remove(&lane.req).unwrap();
+                let latency = inf.submitted.elapsed().as_secs_f64();
+                self.latency.record(latency);
+                self.requests_done += 1;
+                let outputs = if inf.return_images {
+                    inf.outputs.into_iter().map(Option::unwrap).collect()
+                } else {
+                    Vec::new()
+                };
+                self.completed.push(Response {
+                    id: lane.req,
+                    body: ResponseBody::Ok { outputs },
+                    latency_s: latency,
+                    steps_executed: inf.steps_total,
+                });
+            }
+        }
+        if self.lanes.is_empty() {
+            self.rr_cursor = 0;
+        } else {
+            self.rr_cursor %= self.lanes.len();
+        }
+        Ok(true)
+    }
+
+    /// Tick until queue and lanes drain; returns everything completed.
+    pub fn run_until_idle(&mut self) -> Result<Vec<Response>> {
+        while self.tick()? {}
+        Ok(self.take_completed())
+    }
+
+    /// Metrics snapshot.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests_completed: self.requests_done,
+            requests_rejected: self.queue.rejected,
+            lanes_completed: self.lanes_done,
+            executable_calls: self.calls,
+            steps_executed: self.steps,
+            occupancy_sum: self.occupancy_sum,
+            latency_p50_s: self.latency.quantile(0.5),
+            latency_p95_s: self.latency.quantile(0.95),
+            latency_p99_s: self.latency.quantile(0.99),
+            latency_mean_s: self.latency.mean(),
+            wall_s: self.started.elapsed().as_secs_f64(),
+        }
+    }
+}

@@ -1,0 +1,181 @@
+//! Serving metrics: log-bucketed latency histograms (p50/p95/p99 without
+//! storing samples), throughput counters, and batch-occupancy tracking —
+//! the numbers `serve_e2e` and Fig. 4 report.
+
+/// Log-bucketed histogram over (0, ~17 min] with ~4% resolution.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    // bucket i covers [MIN * GROWTH^i, MIN * GROWTH^(i+1))
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    max: f64,
+}
+
+const MIN_S: f64 = 1e-6;
+const GROWTH: f64 = 1.04;
+const NBUCKETS: usize = 530; // MIN_S * GROWTH^530 ≈ 1080 s
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self { counts: vec![0; NBUCKETS], total: 0, sum: 0.0, max: 0.0 }
+    }
+
+    fn bucket(v: f64) -> usize {
+        if v <= MIN_S {
+            return 0;
+        }
+        let i = (v / MIN_S).ln() / GROWTH.ln();
+        (i as usize).min(NBUCKETS - 1)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.counts[Self::bucket(v)] += 1;
+        self.total += 1;
+        self.sum += v;
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Quantile estimate (upper edge of the containing bucket).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return MIN_S * GROWTH.powi(i as i32 + 1);
+            }
+        }
+        self.max
+    }
+}
+
+/// Point-in-time snapshot of engine counters.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    pub requests_completed: u64,
+    pub requests_rejected: u64,
+    pub lanes_completed: u64,
+    pub executable_calls: u64,
+    pub steps_executed: u64,
+    /// sum over calls of (occupied lanes / bucket) — occupancy = this / calls
+    pub occupancy_sum: f64,
+    pub latency_p50_s: f64,
+    pub latency_p95_s: f64,
+    pub latency_p99_s: f64,
+    pub latency_mean_s: f64,
+    pub wall_s: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn occupancy(&self) -> f64 {
+        if self.executable_calls == 0 {
+            0.0
+        } else {
+            self.occupancy_sum / self.executable_calls as f64
+        }
+    }
+
+    pub fn steps_per_second(&self) -> f64 {
+        if self.wall_s == 0.0 {
+            0.0
+        } else {
+            self.steps_executed as f64 / self.wall_s
+        }
+    }
+
+    /// One-line human summary for examples/benches.
+    pub fn summary(&self) -> String {
+        format!(
+            "req={} rej={} lanes={} calls={} steps={} occ={:.2} p50={:.1}ms p95={:.1}ms p99={:.1}ms thr={:.1} steps/s",
+            self.requests_completed,
+            self.requests_rejected,
+            self.lanes_completed,
+            self.executable_calls,
+            self.steps_executed,
+            self.occupancy(),
+            self.latency_p50_s * 1e3,
+            self.latency_p95_s * 1e3,
+            self.latency_p99_s * 1e3,
+            self.steps_per_second(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn quantiles_bracket_true_values() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-3); // 1ms .. 1s uniform
+        }
+        let p50 = h.quantile(0.5);
+        assert!((0.45..0.60).contains(&p50), "p50 {p50}");
+        let p99 = h.quantile(0.99);
+        assert!((0.9..1.1).contains(&p99), "p99 {p99}");
+        assert!((h.mean() - 0.5005).abs() < 0.01);
+        assert!(h.quantile(1.0) >= h.quantile(0.5));
+    }
+
+    #[test]
+    fn extreme_values_clamp() {
+        let mut h = Histogram::new();
+        h.record(0.0);
+        h.record(1e9);
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(0.01) > 0.0);
+        assert_eq!(h.max(), 1e9);
+    }
+
+    #[test]
+    fn snapshot_derived_metrics() {
+        let s = MetricsSnapshot {
+            executable_calls: 10,
+            occupancy_sum: 7.5,
+            steps_executed: 100,
+            wall_s: 2.0,
+            ..Default::default()
+        };
+        assert!((s.occupancy() - 0.75).abs() < 1e-12);
+        assert!((s.steps_per_second() - 50.0).abs() < 1e-12);
+        assert!(!s.summary().is_empty());
+    }
+}

@@ -1,0 +1,32 @@
+//! The paper's system contribution at L3: a diffusion-serving coordinator
+//! with **continuous step-level batching**.
+//!
+//! DDIM turns sampling into S independent executable calls per request,
+//! where S (and η, and the τ shape) is *per request* — a quality/latency
+//! knob the client holds (paper Sec. 5.1's trade-off). The serving insight
+//! (DESIGN.md §1) is that Eq. 12 is elementwise in the schedule scalars, so
+//! the AOT graph takes per-sample vectors `alpha_t[B] / alpha_prev[B] /
+//! sigma[B]` — one call can advance B lanes that belong to *different*
+//! requests at *different* timesteps on *different* schedules. Requests
+//! join the running batch as soon as a lane frees: no generation barrier,
+//! exactly the Orca/vLLM iteration-level scheduling argument transplanted
+//! to diffusion.
+//!
+//! Pieces:
+//! - [`request`]: wire-level request/response types
+//! - [`queue`]:   bounded admission queue (backpressure)
+//! - [`engine`]:  lanes + tick loop + bucket selection (the batcher)
+//! - [`metrics`]: latency histograms, occupancy, throughput counters
+//! - [`server`]:  std::net JSON-line front end over an engine thread
+
+pub mod engine;
+pub mod metrics;
+pub mod queue;
+pub mod request;
+pub mod server;
+
+pub use engine::Engine;
+pub use metrics::{Histogram, MetricsSnapshot};
+pub use queue::BoundedQueue;
+pub use request::{Request, RequestBody, RequestId, Response, ResponseBody};
+pub use server::Server;

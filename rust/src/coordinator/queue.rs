@@ -1,0 +1,109 @@
+//! Bounded FIFO admission queue. Full queue = immediate rejection — the
+//! backpressure signal a latency-SLO serving system wants (queueing deeper
+//! only converts rejects into timeouts).
+
+use std::collections::VecDeque;
+
+use crate::error::{Error, Result};
+
+/// FIFO with a hard capacity.
+#[derive(Debug)]
+pub struct BoundedQueue<T> {
+    items: VecDeque<T>,
+    capacity: usize,
+    /// total accepted / rejected (metrics)
+    pub accepted: u64,
+    pub rejected: u64,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        Self { items: VecDeque::with_capacity(capacity), capacity, accepted: 0, rejected: 0 }
+    }
+
+    /// Admit or reject.
+    pub fn push(&mut self, item: T) -> Result<()> {
+        if self.items.len() >= self.capacity {
+            self.rejected += 1;
+            return Err(Error::Coordinator(format!(
+                "queue full (capacity {})",
+                self.capacity
+            )));
+        }
+        self.items.push_back(item);
+        self.accepted += 1;
+        Ok(())
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        self.items.pop_front()
+    }
+
+    pub fn peek(&self) -> Option<&T> {
+        self.items.front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let mut q = BoundedQueue::new(3);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.push(3).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        q.push(4).unwrap();
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), Some(4));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn rejects_when_full_and_counts() {
+        let mut q = BoundedQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert!(q.push(3).is_err());
+        assert_eq!(q.accepted, 2);
+        assert_eq!(q.rejected, 1);
+        q.pop();
+        q.push(3).unwrap();
+        assert_eq!(q.accepted, 3);
+    }
+
+    #[test]
+    fn property_never_exceeds_capacity() {
+        crate::testing::check("queue_capacity", 100, |g| {
+            let cap = g.int_in(1, 16);
+            let mut q = BoundedQueue::new(cap);
+            let ops = g.int_in(1, 200);
+            for _ in 0..ops {
+                if g.bool() {
+                    let _ = q.push(0u8);
+                } else {
+                    q.pop();
+                }
+                if q.len() > cap {
+                    return Err(format!("len {} > cap {cap}", q.len()));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,234 @@
+//! Request/response types and their JSON wire forms.
+//!
+//! A request asks for `count` samples (lanes) under one sampling
+//! configuration. Three kinds map onto the paper's experiments:
+//! - `Generate`: x_T ~ N(0,I) -> x_0 (Tables 1/3, Figs. 3-5)
+//! - `Decode`:   caller-supplied latents x_T -> x_0 (Fig. 6 interpolation)
+//! - `Encode`:   caller-supplied images x_0 -> x_T (Table 2 reconstruction)
+
+use crate::error::{Error, Result};
+use crate::jobj;
+use crate::json::{self, Value};
+use crate::schedule::{NoiseMode, TauKind};
+
+/// Monotonically increasing request identifier (assigned by the engine).
+pub type RequestId = u64;
+
+/// What the request wants done.
+#[derive(Debug, Clone)]
+pub enum RequestBody {
+    /// Sample `count` fresh images from the prior.
+    Generate { count: usize, seed: u64 },
+    /// Deterministically decode the provided latents (η forced to the
+    /// request's mode; Fig. 6 uses η=0).
+    Decode { latents: Vec<Vec<f32>> },
+    /// Encode the provided images to latents (always deterministic).
+    Encode { images: Vec<Vec<f32>> },
+}
+
+/// A fully-specified client request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub dataset: String,
+    /// dim(τ) — sampling steps.
+    pub steps: usize,
+    pub mode: NoiseMode,
+    pub tau: TauKind,
+    pub body: RequestBody,
+    /// Return pixel data in the response (else just stats).
+    pub return_images: bool,
+}
+
+impl Request {
+    /// Number of lanes this request expands to.
+    pub fn lane_count(&self) -> usize {
+        match &self.body {
+            RequestBody::Generate { count, .. } => *count,
+            RequestBody::Decode { latents } => latents.len(),
+            RequestBody::Encode { images } => images.len(),
+        }
+    }
+
+    /// Parse the JSON-line wire form. Minimal example:
+    /// `{"op":"generate","dataset":"sprites","steps":20,"eta":"0.0","count":4,"seed":7}`
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let op = v.get("op")?.as_str()?.to_string();
+        let dataset = v.get("dataset")?.as_str()?.to_string();
+        let steps = v.get("steps")?.as_usize()?;
+        let mode = match v.get_opt("eta") {
+            Some(Value::Str(s)) => NoiseMode::parse(s)?,
+            Some(Value::Num(n)) => NoiseMode::Eta(*n),
+            Some(other) => return Err(Error::Request(format!("bad eta {other:?}"))),
+            None => NoiseMode::Eta(0.0),
+        };
+        let tau = match v.get_opt("tau") {
+            Some(t) => TauKind::parse(t.as_str()?)?,
+            None => TauKind::Linear,
+        };
+        let return_images = match v.get_opt("return_images") {
+            Some(b) => b.as_bool()?,
+            None => false,
+        };
+        let parse_matrix = |key: &str| -> Result<Vec<Vec<f32>>> {
+            v.get(key)?
+                .as_arr()?
+                .iter()
+                .map(|row| {
+                    Ok(row
+                        .as_f64_vec()?
+                        .into_iter()
+                        .map(|x| x as f32)
+                        .collect::<Vec<f32>>())
+                })
+                .collect()
+        };
+        let body = match op.as_str() {
+            "generate" => RequestBody::Generate {
+                count: v.get("count")?.as_usize()?,
+                seed: v.get("seed")?.as_f64()? as u64,
+            },
+            "decode" => RequestBody::Decode { latents: parse_matrix("latents")? },
+            "encode" => RequestBody::Encode { images: parse_matrix("images")? },
+            other => return Err(Error::Request(format!("unknown op '{other}'"))),
+        };
+        let req = Request { dataset, steps, mode, tau, body, return_images };
+        if req.lane_count() == 0 {
+            return Err(Error::Request("request has zero lanes".into()));
+        }
+        Ok(req)
+    }
+}
+
+/// Per-request completion record.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: RequestId,
+    pub body: ResponseBody,
+    /// queue-to-completion latency, seconds.
+    pub latency_s: f64,
+    /// executable steps consumed by this request (count × dim(τ)).
+    pub steps_executed: usize,
+}
+
+/// Result payload.
+#[derive(Debug, Clone)]
+pub enum ResponseBody {
+    /// Final states (x_0 for generate/decode, x_T for encode); empty when
+    /// `return_images` was false.
+    Ok { outputs: Vec<Vec<f32>> },
+    Error { message: String },
+}
+
+impl Response {
+    /// JSON wire form.
+    pub fn to_json(&self) -> Value {
+        match &self.body {
+            ResponseBody::Ok { outputs } => {
+                let imgs: Vec<Value> = outputs
+                    .iter()
+                    .map(|img| {
+                        Value::Arr(img.iter().map(|&x| Value::Num(x as f64)).collect())
+                    })
+                    .collect();
+                jobj![
+                    ("id", self.id),
+                    ("ok", true),
+                    ("latency_s", self.latency_s),
+                    ("steps_executed", self.steps_executed),
+                    ("outputs", Value::Arr(imgs)),
+                ]
+            }
+            ResponseBody::Error { message } => jobj![
+                ("id", self.id),
+                ("ok", false),
+                ("error", message.as_str()),
+            ],
+        }
+    }
+
+    pub fn to_json_line(&self) -> String {
+        json::to_string(&self.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_generate() {
+        let v = json::parse(
+            r#"{"op":"generate","dataset":"sprites","steps":20,"eta":0.5,
+                "tau":"quadratic","count":4,"seed":7,"return_images":true}"#,
+        )
+        .unwrap();
+        let r = Request::from_json(&v).unwrap();
+        assert_eq!(r.steps, 20);
+        assert_eq!(r.mode, NoiseMode::Eta(0.5));
+        assert_eq!(r.tau, TauKind::Quadratic);
+        assert_eq!(r.lane_count(), 4);
+        assert!(r.return_images);
+    }
+
+    #[test]
+    fn parse_sigma_hat_and_defaults() {
+        let v = json::parse(
+            r#"{"op":"generate","dataset":"d","steps":10,"eta":"hat","count":1,"seed":0}"#,
+        )
+        .unwrap();
+        let r = Request::from_json(&v).unwrap();
+        assert_eq!(r.mode, NoiseMode::SigmaHat);
+        assert_eq!(r.tau, TauKind::Linear);
+        assert!(!r.return_images);
+    }
+
+    #[test]
+    fn parse_encode_decode() {
+        let v = json::parse(
+            r#"{"op":"encode","dataset":"d","steps":5,"images":[[0.0,1.0],[0.5,-0.5]]}"#,
+        )
+        .unwrap();
+        let r = Request::from_json(&v).unwrap();
+        assert_eq!(r.lane_count(), 2);
+        let v = json::parse(r#"{"op":"decode","dataset":"d","steps":5,"latents":[[0.1]]}"#)
+            .unwrap();
+        assert_eq!(Request::from_json(&v).unwrap().lane_count(), 1);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for s in [
+            r#"{"op":"nope","dataset":"d","steps":5,"count":1,"seed":0}"#,
+            r#"{"op":"generate","dataset":"d","steps":5,"count":0,"seed":0}"#,
+            r#"{"op":"generate","dataset":"d","count":1,"seed":0}"#,
+            r#"{"op":"generate","dataset":"d","steps":5,"count":1,"seed":0,"eta":true}"#,
+            r#"{"op":"encode","dataset":"d","steps":5,"images":[]}"#,
+        ] {
+            let v = json::parse(s).unwrap();
+            assert!(Request::from_json(&v).is_err(), "{s}");
+        }
+    }
+
+    #[test]
+    fn response_round_trip() {
+        let r = Response {
+            id: 3,
+            body: ResponseBody::Ok { outputs: vec![vec![0.5, -0.25]] },
+            latency_s: 0.125,
+            steps_executed: 20,
+        };
+        let v = json::parse(&r.to_json_line()).unwrap();
+        assert!(v.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(v.get("id").unwrap().as_usize().unwrap(), 3);
+        let outs = v.get("outputs").unwrap().as_arr().unwrap();
+        assert_eq!(outs[0].as_f64_vec().unwrap(), vec![0.5, -0.25]);
+        let e = Response {
+            id: 4,
+            body: ResponseBody::Error { message: "queue full".into() },
+            latency_s: 0.0,
+            steps_executed: 0,
+        };
+        let v = json::parse(&e.to_json_line()).unwrap();
+        assert!(!v.get("ok").unwrap().as_bool().unwrap());
+    }
+}

@@ -1,0 +1,23 @@
+//! Appendix A: the non-Markovian forward process for *discrete* (categorical)
+//! data, and its DDIM-style reverse process — the paper defines it (Eqs.
+//! 17–21) but "leaves empirical evaluations as future work"; this module
+//! does that evaluation on a toy distribution where the optimal denoiser is
+//! available in closed form (a tabular Bayes predictor), so the sampler is
+//! exercised exactly as the theory intends, with no learned-model error in
+//! the way.
+//!
+//! Summary of the appendix: for one-hot x₀ over K values,
+//!   q(x_t | x₀)          = Cat(α_t x₀ + (1−α_t) 1_K)                  (17)
+//!   q(x_{t−1}|x_t, x₀)   = Cat(σ_t x_t + (α_{t−1} − σ_t α_t) x₀
+//!                            + ((1−α_{t−1}) − (1−α_t)σ_t) 1_K)        (19)
+//!   p_θ(x_{t−1}|x_t)     = same with x₀ → f_θ(x_t)                    (20)
+//! with 1_K the uniform vector. σ_t interpolates stochasticity exactly like
+//! the Gaussian σ: the *DDIM-like* extreme maximises σ_t subject to the
+//! mixture weights staying non-negative, which pins x_{t−1} to x_t / x̂₀
+//! with as little fresh uniform noise as possible.
+
+mod process;
+mod sampler;
+
+pub use process::{DiscreteSchedule, Posterior};
+pub use sampler::{total_variation, DiscreteSampler, TabularModel};

@@ -1,0 +1,217 @@
+//! The categorical forward/reverse process of Appendix A: schedule, the
+//! Eq.-19 posterior mixture, and the σ_t families (DDPM-like vs DDIM-like).
+
+use crate::error::{Error, Result};
+
+/// α_{0..T} for the categorical process: α decreasing 1 → 0 (the appendix's
+/// convention — unlike the Gaussian table, α_T = 0 exactly, making
+/// q(x_T | x₀) uniform).
+#[derive(Debug, Clone)]
+pub struct DiscreteSchedule {
+    alpha: Vec<f64>,
+    k: usize,
+}
+
+impl DiscreteSchedule {
+    /// Linear α_t = 1 − t/T (simple, satisfies α₀=1, α_T=0, decreasing).
+    pub fn linear(t_max: usize, k: usize) -> Result<Self> {
+        if t_max == 0 || k < 2 {
+            return Err(Error::Schedule(format!("bad discrete schedule T={t_max}, K={k}")));
+        }
+        let alpha = (0..=t_max).map(|t| 1.0 - t as f64 / t_max as f64).collect();
+        Ok(Self { alpha, k })
+    }
+
+    /// Cosine-ish α (slower early destruction) — used by the ablation.
+    pub fn cosine(t_max: usize, k: usize) -> Result<Self> {
+        if t_max == 0 || k < 2 {
+            return Err(Error::Schedule("bad discrete schedule".into()));
+        }
+        let alpha = (0..=t_max)
+            .map(|t| {
+                let x = t as f64 / t_max as f64;
+                (0.5 * (1.0 + (std::f64::consts::PI * x).cos())).max(0.0)
+            })
+            .collect();
+        Ok(Self { alpha, k })
+    }
+
+    pub fn t_max(&self) -> usize {
+        self.alpha.len() - 1
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn alpha(&self, t: usize) -> f64 {
+        self.alpha[t]
+    }
+
+    /// Marginal q(x_t | x₀ = j): Eq. (17) as a probability vector.
+    pub fn marginal(&self, t: usize, x0: usize) -> Vec<f64> {
+        let a = self.alpha[t];
+        let mut p = vec![(1.0 - a) / self.k as f64; self.k];
+        p[x0] += a;
+        p
+    }
+
+    /// Largest admissible σ_t for the (t → t_prev) transition: the Eq.-18
+    /// mixture weights must all be ≥ 0, i.e.
+    ///   σ_t ≤ α_prev/α_t (x₀-weight)  and  σ_t ≤ (1−α_prev)/(1−α_t).
+    /// At this maximum the uniform-noise weight hits 0 where possible — the
+    /// "DDIM-like" deterministic-ish extreme the appendix describes.
+    pub fn sigma_max(&self, t: usize, t_prev: usize) -> f64 {
+        let a_t = self.alpha[t];
+        let a_p = self.alpha[t_prev];
+        let c1 = if a_t > 0.0 { a_p / a_t } else { f64::INFINITY };
+        let c2 = if a_t < 1.0 { (1.0 - a_p) / (1.0 - a_t) } else { f64::INFINITY };
+        c1.min(c2).min(1.0)
+    }
+
+    /// σ_t(η) = (1−η) · σ_max, matching the Gaussian convention: **η=0 is
+    /// the DDIM-like extreme** (σ maximal, x_{t−1} pinned to x_t/x̂₀ with
+    /// minimal fresh uniform noise — the appendix's "less stochastic"
+    /// limit), η=1 the fully-stochastic independent-resample process.
+    pub fn sigma(&self, t: usize, t_prev: usize, eta: f64) -> f64 {
+        (1.0 - eta.clamp(0.0, 1.0)) * self.sigma_max(t, t_prev)
+    }
+}
+
+/// The Eq.-19 posterior mixture weights for q_σ(x_{t_prev} | x_t, x₀):
+/// `w_xt·δ(x_t) + w_x0·δ(x₀) + w_u·1_K`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Posterior {
+    pub w_xt: f64,
+    pub w_x0: f64,
+    pub w_uniform: f64,
+}
+
+impl Posterior {
+    /// Build the mixture for a (t → t_prev) transition at noise scale σ.
+    pub fn new(sched: &DiscreteSchedule, t: usize, t_prev: usize, sigma: f64) -> Result<Self> {
+        if t_prev >= t || t > sched.t_max() {
+            return Err(Error::Schedule(format!("bad transition {t} -> {t_prev}")));
+        }
+        let a_t = sched.alpha(t);
+        let a_p = sched.alpha(t_prev);
+        let w_xt = sigma;
+        let w_x0 = a_p - sigma * a_t;
+        let w_uniform = (1.0 - a_p) - (1.0 - a_t) * sigma;
+        if w_x0 < -1e-12 || w_uniform < -1e-12 {
+            return Err(Error::Schedule(format!(
+                "sigma {sigma} infeasible for {t}->{t_prev}: weights {w_x0}, {w_uniform}"
+            )));
+        }
+        Ok(Self { w_xt, w_x0: w_x0.max(0.0), w_uniform: w_uniform.max(0.0) })
+    }
+
+    /// Probability vector over K classes given concrete x_t and x₀.
+    pub fn probs(&self, k: usize, xt: usize, x0: usize) -> Vec<f64> {
+        let mut p = vec![self.w_uniform / k as f64; k];
+        p[xt] += self.w_xt;
+        p[x0] += self.w_x0;
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() < 1e-12
+    }
+
+    #[test]
+    fn schedule_endpoints() {
+        for sched in [
+            DiscreteSchedule::linear(100, 5).unwrap(),
+            DiscreteSchedule::cosine(100, 5).unwrap(),
+        ] {
+            assert!(close(sched.alpha(0), 1.0));
+            assert!(sched.alpha(sched.t_max()).abs() < 1e-12);
+            for t in 1..=sched.t_max() {
+                assert!(sched.alpha(t) <= sched.alpha(t - 1) + 1e-15);
+            }
+        }
+        assert!(DiscreteSchedule::linear(0, 5).is_err());
+        assert!(DiscreteSchedule::linear(10, 1).is_err());
+    }
+
+    #[test]
+    fn marginal_is_distribution() {
+        let s = DiscreteSchedule::linear(50, 7).unwrap();
+        for t in [0, 10, 25, 50] {
+            let p = s.marginal(t, 3);
+            assert!(close(p.iter().sum::<f64>(), 1.0));
+            assert!(p.iter().all(|&x| x >= 0.0));
+        }
+        // t=0 is a point mass; t=T is uniform
+        assert!(close(s.marginal(0, 3)[3], 1.0));
+        let u = s.marginal(50, 3);
+        assert!(u.iter().all(|&x| close(x, 1.0 / 7.0)));
+    }
+
+    #[test]
+    fn posterior_weights_sum_to_one() {
+        let s = DiscreteSchedule::linear(100, 4).unwrap();
+        for (t, tp) in [(100, 50), (60, 59), (10, 0)] {
+            for eta in [0.0, 0.5, 1.0] {
+                let sig = s.sigma(t, tp, eta);
+                let post = Posterior::new(&s, t, tp, sig).unwrap();
+                let sum = post.w_xt + post.w_x0 + post.w_uniform;
+                assert!(close(sum, 1.0), "weights sum {sum}");
+                let p = post.probs(4, 1, 2);
+                assert!(close(p.iter().sum::<f64>(), 1.0));
+            }
+        }
+    }
+
+    /// The appendix's consistency requirement: composing q(x_t|x0) with the
+    /// posterior must reproduce q(x_{t_prev}|x0) — the discrete Lemma 1.
+    #[test]
+    fn marginals_preserved_under_posterior() {
+        let s = DiscreteSchedule::cosine(80, 6).unwrap();
+        let x0 = 2usize;
+        for (t, tp) in [(80, 40), (40, 20), (20, 0), (80, 79)] {
+            for eta in [0.0, 0.3, 1.0] {
+                let sig = s.sigma(t, tp, eta);
+                let post = Posterior::new(&s, t, tp, sig).unwrap();
+                let pt = s.marginal(t, x0);
+                // sum_{x_t} q(x_t|x0) * q(x_prev | x_t, x0)
+                let mut composed = vec![0.0f64; 6];
+                for (xt, &pxt) in pt.iter().enumerate() {
+                    for (j, pj) in post.probs(6, xt, x0).into_iter().enumerate() {
+                        composed[j] += pxt * pj;
+                    }
+                }
+                let want = s.marginal(tp, x0);
+                for (a, b) in composed.iter().zip(&want) {
+                    assert!((a - b).abs() < 1e-10, "eta {eta}: {composed:?} vs {want:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sigma_max_hits_zero_uniform_weight_when_feasible() {
+        let s = DiscreteSchedule::linear(100, 4).unwrap();
+        let (t, tp) = (60, 30);
+        let smax = s.sigma_max(t, tp);
+        let post = Posterior::new(&s, t, tp, smax).unwrap();
+        // at sigma_max one of the two constraints is tight
+        assert!(
+            post.w_uniform < 1e-12 || post.w_x0 < 1e-12,
+            "no tight constraint at sigma_max: {post:?}"
+        );
+    }
+
+    #[test]
+    fn infeasible_sigma_rejected() {
+        let s = DiscreteSchedule::linear(100, 4).unwrap();
+        let smax = s.sigma_max(70, 30);
+        assert!(Posterior::new(&s, 70, 30, smax + 0.05).is_err());
+        assert!(Posterior::new(&s, 30, 70, 0.1).is_err()); // wrong direction
+    }
+}

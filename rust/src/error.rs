@@ -1,0 +1,54 @@
+//! Crate-wide error type. One enum, `thiserror`-derived, so every layer
+//! (artifact loading, JSON, PJRT, coordinator) reports through a single
+//! `Result` alias.
+
+use thiserror::Error;
+
+/// All the ways the serving stack can fail.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// I/O errors from artifact / image / socket handling.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// JSON syntax or type errors from [`crate::json`].
+    #[error("json: {0}")]
+    Json(String),
+
+    /// Malformed or missing artifacts (manifest, tensorfiles, HLO).
+    #[error("artifact: {0}")]
+    Artifact(String),
+
+    /// PJRT / XLA failures surfaced by the `xla` crate.
+    #[error("xla: {0}")]
+    Xla(String),
+
+    /// Shape or dtype mismatches in tensor plumbing.
+    #[error("shape: {0}")]
+    Shape(String),
+
+    /// Invalid schedule parameters (τ, η, S out of range).
+    #[error("schedule: {0}")]
+    Schedule(String),
+
+    /// Coordinator-level rejections (queue full, unknown dataset, ...).
+    #[error("coordinator: {0}")]
+    Coordinator(String),
+
+    /// Linear-algebra failures (non-convergence, non-SPD input).
+    #[error("linalg: {0}")]
+    Linalg(String),
+
+    /// Malformed client requests on the wire protocol.
+    #[error("request: {0}")]
+    Request(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

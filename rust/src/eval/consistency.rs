@@ -1,0 +1,86 @@
+//! Fig. 5: sample *consistency* — with the same x_T, DDIM trajectories of
+//! different lengths land on images sharing high-level features, while DDPM
+//! trajectories diverge. Quantified as the ratio between same-x_T feature
+//! distance and different-x_T feature distance (lower = more consistent;
+//! 1.0 = x_T carries no information).
+
+use crate::stats::{extract_features, FEAT_DIM};
+
+/// Euclidean distance in proxy-feature space ("high-level features" proxy).
+pub fn feature_distance(a: &[f32], b: &[f32]) -> f64 {
+    let fa = extract_features(a);
+    let fb = extract_features(b);
+    fa.iter()
+        .zip(&fb)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Mean feature distance over pairs `(a[i], b[i])`.
+fn mean_pair_distance(a: &[Vec<f32>], b: &[Vec<f32>]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    assert!(!a.is_empty());
+    let s: f64 = a.iter().zip(b).map(|(x, y)| feature_distance(x, y)).sum();
+    s / a.len() as f64
+}
+
+/// Consistency score: distance between matched same-x_T samples divided by
+/// the mean distance between mismatched (shuffled) pairs. `short[i]` and
+/// `long[i]` must come from the same x_T.
+pub fn consistency_score(short: &[Vec<f32>], long: &[Vec<f32>]) -> (f64, f64, f64) {
+    let same = mean_pair_distance(short, long);
+    // mismatched baseline: rotate `long` by one
+    let n = long.len();
+    let rotated: Vec<Vec<f32>> = (0..n).map(|i| long[(i + 1) % n].clone()).collect();
+    let cross = mean_pair_distance(short, &rotated);
+    let _ = FEAT_DIM;
+    (same, cross, same / cross.max(1e-12))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::GaussianSource;
+
+    fn imgs(seed: u64, n: usize) -> Vec<Vec<f32>> {
+        let mut g = GaussianSource::seeded(seed);
+        (0..n).map(|_| (0..256).map(|_| g.next() as f32 * 0.5).collect()).collect()
+    }
+
+    #[test]
+    fn identical_sets_score_zero_ratio() {
+        let a = imgs(1, 8);
+        let (same, cross, ratio) = consistency_score(&a, &a);
+        assert_eq!(same, 0.0);
+        assert!(cross > 0.0);
+        assert_eq!(ratio, 0.0);
+    }
+
+    #[test]
+    fn perturbed_pairs_score_below_one() {
+        let a = imgs(2, 16);
+        let mut g = GaussianSource::seeded(3);
+        let b: Vec<Vec<f32>> = a
+            .iter()
+            .map(|img| img.iter().map(|&v| v + 0.05 * g.next() as f32).collect())
+            .collect();
+        let (_, _, ratio) = consistency_score(&a, &b);
+        assert!(ratio < 0.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn unrelated_pairs_score_near_one() {
+        let a = imgs(4, 16);
+        let b = imgs(5, 16);
+        let (_, _, ratio) = consistency_score(&a, &b);
+        assert!(ratio > 0.7, "ratio {ratio}");
+    }
+
+    #[test]
+    fn feature_distance_symmetry() {
+        let a = imgs(6, 2);
+        assert!((feature_distance(&a[0], &a[1]) - feature_distance(&a[1], &a[0])).abs() < 1e-12);
+        assert_eq!(feature_distance(&a[0], &a[0]), 0.0);
+    }
+}

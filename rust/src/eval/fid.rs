@@ -1,0 +1,111 @@
+//! Proxy-FID: Fréchet distance between the reference gaussian (fitted by
+//! the python build on 4096 true procedural images, shipped as tensorfiles)
+//! and a gaussian fitted on generated samples. See DESIGN.md §2 for why
+//! this preserves Table 1/3's phenomena.
+
+use crate::artifacts::Manifest;
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+use crate::stats::{extract_features, frechet_distance, GaussianFit, FEAT_DIM};
+
+/// Load a dataset's reference feature statistics from the artifact tree.
+pub fn load_ref_stats(manifest: &Manifest, dataset: &str) -> Result<GaussianFit> {
+    let ds = manifest.dataset(dataset)?;
+    let (mu_path, cov_path) = manifest.ref_stats_paths(dataset);
+    let (mu_shape, mu) = crate::artifacts::read_tensor_f64(&mu_path)?;
+    let (cov_shape, cov) = crate::artifacts::read_tensor_f64(&cov_path)?;
+    if mu_shape != vec![FEAT_DIM] || cov_shape != vec![FEAT_DIM, FEAT_DIM] {
+        return Err(Error::Artifact(format!(
+            "ref stats shapes {mu_shape:?} / {cov_shape:?} (want [{FEAT_DIM}], [{FEAT_DIM},{FEAT_DIM}])"
+        )));
+    }
+    GaussianFit::from_moments(mu, Mat::from_vec(FEAT_DIM, FEAT_DIM, cov)?, ds.ref_n)
+}
+
+/// Proxy-FID of a set of generated images against the reference fit.
+pub fn fid_of_images(images: &[Vec<f32>], reference: &GaussianFit) -> Result<f64> {
+    if images.len() < 2 {
+        return Err(Error::Coordinator(format!(
+            "FID needs >= 2 images, got {}",
+            images.len()
+        )));
+    }
+    let mut fit = GaussianFit::new();
+    for img in images {
+        fit.push(&extract_features(img));
+    }
+    frechet_distance(&fit, reference)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{GaussianSource, Pcg64};
+
+    /// Synthetic "dataset": smooth blobs; FID should separate matched from
+    /// mismatched distributions even without real artifacts on disk.
+    fn blobby(seed: u64, n: usize) -> Vec<Vec<f32>> {
+        let mut rng = Pcg64::seeded(seed);
+        (0..n)
+            .map(|_| {
+                let cx = rng.uniform(0.3, 0.7);
+                let cy = rng.uniform(0.3, 0.7);
+                let s = rng.uniform(0.05, 0.15);
+                (0..256)
+                    .map(|i| {
+                        let x = (i % 16) as f64 / 16.0;
+                        let y = (i / 16) as f64 / 16.0;
+                        let d = ((x - cx).powi(2) + (y - cy).powi(2)) / (2.0 * s * s);
+                        ((-d).exp() * 2.0 - 1.0) as f32
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn noise_images(seed: u64, n: usize) -> Vec<Vec<f32>> {
+        let mut g = GaussianSource::seeded(seed);
+        (0..n).map(|_| (0..256).map(|_| 0.5 * g.next() as f32).collect()).collect()
+    }
+
+    fn fit_of(images: &[Vec<f32>]) -> GaussianFit {
+        let mut fit = GaussianFit::new();
+        for img in images {
+            fit.push(&extract_features(img));
+        }
+        fit
+    }
+
+    #[test]
+    fn matched_distribution_scores_low_mismatched_high() {
+        let reference = fit_of(&blobby(1, 400));
+        let same = fid_of_images(&blobby(2, 200), &reference).unwrap();
+        let diff = fid_of_images(&noise_images(3, 200), &reference).unwrap();
+        assert!(same < diff * 0.05, "same {same} vs diff {diff}");
+    }
+
+    #[test]
+    fn noisier_samples_score_worse_monotonically() {
+        // mimics the sigma-hat failure mode: blobs + increasing additive noise
+        let reference = fit_of(&blobby(1, 400));
+        let mut last = -1.0;
+        for (i, amp) in [0.0f32, 0.1, 0.3, 0.6].iter().enumerate() {
+            let mut imgs = blobby(50 + i as u64, 200);
+            let mut g = GaussianSource::seeded(99 + i as u64);
+            for img in &mut imgs {
+                for v in img.iter_mut() {
+                    *v += amp * g.next() as f32;
+                }
+            }
+            let fid = fid_of_images(&imgs, &reference).unwrap();
+            assert!(fid > last, "amp {amp}: {fid} <= {last}");
+            last = fid;
+        }
+    }
+
+    #[test]
+    fn needs_two_images() {
+        let reference = fit_of(&blobby(1, 50));
+        assert!(fid_of_images(&blobby(2, 1), &reference).is_err());
+    }
+}

@@ -1,0 +1,52 @@
+//! Fig. 6: latent interpolation quality. The paper shows slerp in x_T gives
+//! *semantically smooth* morphs under DDIM. We quantify smoothness of a
+//! decoded path x_0(α_0), ..., x_0(α_k) as the max adjacent feature jump
+//! normalised by the endpoint distance — 1/k for a perfectly even morph,
+//! ≈1 for an abrupt jump, and ill-behaved (>1) for a non-monotone path.
+
+use crate::eval::consistency::feature_distance;
+
+/// (max adjacent jump / endpoint distance, mean adjacent jump / endpoint).
+pub fn path_smoothness(path: &[Vec<f32>]) -> (f64, f64) {
+    assert!(path.len() >= 2, "path needs at least 2 points");
+    let endpoint = feature_distance(&path[0], &path[path.len() - 1]).max(1e-9);
+    let jumps: Vec<f64> = path
+        .windows(2)
+        .map(|w| feature_distance(&w[0], &w[1]))
+        .collect();
+    let max = jumps.iter().cloned().fold(0.0, f64::max);
+    let mean = jumps.iter().sum::<f64>() / jumps.len() as f64;
+    (max / endpoint, mean / endpoint)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn constant_img(v: f32) -> Vec<f32> {
+        vec![v; 256]
+    }
+
+    #[test]
+    fn linear_path_is_even() {
+        let path: Vec<Vec<f32>> =
+            (0..=10).map(|i| constant_img(i as f32 / 10.0)).collect();
+        let (max, mean) = path_smoothness(&path);
+        assert!((max - 0.1).abs() < 1e-6, "max {max}");
+        assert!((mean - 0.1).abs() < 1e-6, "mean {mean}");
+    }
+
+    #[test]
+    fn abrupt_jump_detected() {
+        let mut path: Vec<Vec<f32>> = (0..=10).map(|_| constant_img(0.0)).collect();
+        path[10] = constant_img(1.0); // all change in the last hop
+        let (max, _) = path_smoothness(&path);
+        assert!((max - 1.0).abs() < 1e-6, "max {max}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn short_path_panics() {
+        path_smoothness(&[constant_img(0.0)]);
+    }
+}

@@ -1,0 +1,18 @@
+//! Evaluation pipeline: the paper's metrics over generated samples.
+//!
+//! - [`fid`]: proxy-FID against the python-dumped reference statistics
+//!   (Tables 1 and 3)
+//! - [`recon`]: per-dimension reconstruction MSE (Table 2)
+//! - [`consistency`]: same-x_T feature similarity across trajectory lengths
+//!   (Fig. 5) and cross-x_T baselines
+//! - [`interp`]: interpolation path smoothness (Fig. 6)
+
+pub mod consistency;
+pub mod fid;
+pub mod interp;
+pub mod recon;
+
+pub use consistency::{consistency_score, feature_distance};
+pub use fid::{fid_of_images, load_ref_stats};
+pub use interp::path_smoothness;
+pub use recon::per_dim_mse;

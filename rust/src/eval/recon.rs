@@ -1,0 +1,59 @@
+//! Table 2: per-dimension reconstruction error of the encode→decode round
+//! trip, pixels scaled from [-1,1] to [0,1] to match the paper's convention
+//! ("per-dimension mean squared error (scaled to [0,1])").
+
+use crate::error::{Error, Result};
+
+/// Mean over images of the per-dimension MSE between original and
+/// reconstruction, after mapping both from [-1,1] to [0,1].
+pub fn per_dim_mse(originals: &[Vec<f32>], recons: &[Vec<f32>]) -> Result<f64> {
+    if originals.len() != recons.len() || originals.is_empty() {
+        return Err(Error::Coordinator(format!(
+            "per_dim_mse: {} originals vs {} recons",
+            originals.len(),
+            recons.len()
+        )));
+    }
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for (o, r) in originals.iter().zip(recons) {
+        if o.len() != r.len() {
+            return Err(Error::Shape("per_dim_mse length mismatch".into()));
+        }
+        for (&a, &b) in o.iter().zip(r) {
+            // [-1,1] -> [0,1]
+            let d = ((a as f64 + 1.0) * 0.5) - ((b as f64 + 1.0) * 0.5);
+            total += d * d;
+        }
+        count += o.len();
+    }
+    Ok(total / count as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_for_identical() {
+        let a = vec![vec![0.5f32, -0.5, 1.0]];
+        assert_eq!(per_dim_mse(&a, &a).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn known_value_with_scaling() {
+        // diff of 1.0 in [-1,1] space = 0.5 in [0,1] space -> mse 0.25
+        let a = vec![vec![1.0f32]];
+        let b = vec![vec![0.0f32]];
+        assert!((per_dim_mse(&a, &b).unwrap() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_mismatch() {
+        let a = vec![vec![0.0f32]];
+        let b: Vec<Vec<f32>> = vec![];
+        assert!(per_dim_mse(&a, &b).is_err());
+        let c = vec![vec![0.0f32, 1.0]];
+        assert!(per_dim_mse(&a, &c).is_err());
+    }
+}

@@ -1,0 +1,186 @@
+//! Minimal JSON substrate (the offline build has no `serde_json`): a
+//! recursive-descent parser and a serializer over a single [`Value`] enum.
+//!
+//! Used for the artifact manifest, tensorfile sidecars, the wire protocol of
+//! the coordinator server, and bench result dumps. Supports the full JSON
+//! grammar except `\u` surrogate pairs beyond the BMP (not needed by any of
+//! our producers, which are ASCII).
+
+mod parse;
+mod ser;
+
+pub use parse::parse;
+pub use ser::to_string;
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed JSON value. Objects use `BTreeMap` so serialization is
+/// deterministic (stable golden files, diffable bench dumps).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    /// Object field access; errors mention the key for debuggability.
+    pub fn get(&self, key: &str) -> Result<&Value> {
+        match self {
+            Value::Obj(m) => m
+                .get(key)
+                .ok_or_else(|| Error::Json(format!("missing key '{key}'"))),
+            _ => Err(Error::Json(format!("expected object looking up '{key}'"))),
+        }
+    }
+
+    /// Optional object field access.
+    pub fn get_opt(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            _ => Err(Error::Json(format!("expected number, got {self:?}"))),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let n = self.as_f64()?;
+        if n < 0.0 || n.fract() != 0.0 {
+            return Err(Error::Json(format!("expected non-negative integer, got {n}")));
+        }
+        Ok(n as usize)
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => Err(Error::Json(format!("expected string, got {self:?}"))),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => Err(Error::Json(format!("expected bool, got {self:?}"))),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Value]> {
+        match self {
+            Value::Arr(v) => Ok(v),
+            _ => Err(Error::Json(format!("expected array, got {self:?}"))),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Value>> {
+        match self {
+            Value::Obj(m) => Ok(m),
+            _ => Err(Error::Json(format!("expected object, got {self:?}"))),
+        }
+    }
+
+    /// Convenience: an array of numbers -> `Vec<f64>`.
+    pub fn as_f64_vec(&self) -> Result<Vec<f64>> {
+        self.as_arr()?.iter().map(|v| v.as_f64()).collect()
+    }
+
+    /// Convenience: an array of numbers -> `Vec<usize>`.
+    pub fn as_usize_vec(&self) -> Result<Vec<usize>> {
+        self.as_arr()?.iter().map(|v| v.as_usize()).collect()
+    }
+}
+
+impl From<f64> for Value {
+    fn from(v: f64) -> Self {
+        Value::Num(v)
+    }
+}
+impl From<usize> for Value {
+    fn from(v: usize) -> Self {
+        Value::Num(v as f64)
+    }
+}
+impl From<u64> for Value {
+    fn from(v: u64) -> Self {
+        Value::Num(v as f64)
+    }
+}
+impl From<bool> for Value {
+    fn from(v: bool) -> Self {
+        Value::Bool(v)
+    }
+}
+impl From<&str> for Value {
+    fn from(v: &str) -> Self {
+        Value::Str(v.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(v: String) -> Self {
+        Value::Str(v)
+    }
+}
+impl<T: Into<Value>> From<Vec<T>> for Value {
+    fn from(v: Vec<T>) -> Self {
+        Value::Arr(v.into_iter().map(Into::into).collect())
+    }
+}
+
+/// Build an object literal: `obj![("k", 1.0), ("s", "x")]`-style helper.
+#[macro_export]
+macro_rules! jobj {
+    ($(($k:expr, $v:expr)),* $(,)?) => {{
+        let mut m = std::collections::BTreeMap::new();
+        $( m.insert($k.to_string(), $crate::json::Value::from($v)); )*
+        $crate::json::Value::Obj(m)
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_scalars() {
+        for src in ["null", "true", "false", "0", "-1.5", "1e3", "\"hi\""] {
+            let v = parse(src).unwrap();
+            let back = parse(&to_string(&v)).unwrap();
+            assert_eq!(v, back, "round trip of {src}");
+        }
+    }
+
+    #[test]
+    fn accessors() {
+        let v = parse(r#"{"a": [1, 2, 3], "b": {"c": "x"}, "n": null}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().as_f64_vec().unwrap(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(v.get("b").unwrap().get("c").unwrap().as_str().unwrap(), "x");
+        assert!(matches!(v.get("n").unwrap(), Value::Null));
+        assert!(v.get("zz").is_err());
+        assert!(v.get("a").unwrap().as_str().is_err());
+    }
+
+    #[test]
+    fn as_usize_rejects_fractional_and_negative() {
+        assert!(parse("1.5").unwrap().as_usize().is_err());
+        assert!(parse("-2").unwrap().as_usize().is_err());
+        assert_eq!(parse("42").unwrap().as_usize().unwrap(), 42);
+    }
+
+    #[test]
+    fn jobj_macro() {
+        let v = jobj![("x", 1.0), ("name", "ddim")];
+        assert_eq!(v.get("x").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(v.get("name").unwrap().as_str().unwrap(), "ddim");
+    }
+}

@@ -1,0 +1,115 @@
+//! JSON serializer half of the [`crate::json`] substrate. Deterministic
+//! (objects are `BTreeMap`s), round-trip safe for every finite f64, and
+//! integral numbers print without a fractional part (so usize counters in
+//! manifests and wire messages stay readable).
+
+use super::Value;
+
+/// Serialize a [`Value`] to a compact JSON string.
+pub fn to_string(v: &Value) -> String {
+    let mut out = String::new();
+    write_value(v, &mut out);
+    out
+}
+
+fn write_value(v: &Value, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(true) => out.push_str("true"),
+        Value::Bool(false) => out.push_str("false"),
+        Value::Num(n) => write_num(*n, out),
+        Value::Str(s) => write_str(s, out),
+        Value::Arr(items) => {
+            out.push('[');
+            for (i, it) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_value(it, out);
+            }
+            out.push(']');
+        }
+        Value::Obj(m) => {
+            out.push('{');
+            for (i, (k, val)) in m.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_str(k, out);
+                out.push(':');
+                write_value(val, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn write_num(n: f64, out: &mut String) {
+    if !n.is_finite() {
+        // JSON has no NaN/Inf; null is the conventional degradation.
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        // {:?} on f64 is the shortest representation that round-trips.
+        out.push_str(&format!("{n:?}"));
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse;
+    use super::*;
+    use crate::jobj;
+
+    #[test]
+    fn integral_numbers_have_no_fraction() {
+        assert_eq!(to_string(&Value::Num(42.0)), "42");
+        assert_eq!(to_string(&Value::Num(-3.0)), "-3");
+    }
+
+    #[test]
+    fn floats_round_trip() {
+        for x in [0.1, 1.0 / 3.0, 1e-300, std::f64::consts::PI, -2.5e17] {
+            let s = to_string(&Value::Num(x));
+            assert_eq!(parse(&s).unwrap().as_f64().unwrap(), x, "{s}");
+        }
+    }
+
+    #[test]
+    fn nan_degrades_to_null() {
+        assert_eq!(to_string(&Value::Num(f64::NAN)), "null");
+    }
+
+    #[test]
+    fn escapes() {
+        let v = Value::Str("a\"b\\c\nd\u{1}".into());
+        let s = to_string(&v);
+        assert_eq!(parse(&s).unwrap(), v);
+    }
+
+    #[test]
+    fn object_round_trip_is_deterministic() {
+        let v = jobj![("b", 1.0), ("a", "x"), ("c", vec![1.0, 2.0])];
+        let s1 = to_string(&v);
+        let s2 = to_string(&parse(&s1).unwrap());
+        assert_eq!(s1, s2);
+        assert!(s1.starts_with(r#"{"a":"#)); // BTreeMap ordering
+    }
+}

@@ -1,0 +1,44 @@
+//! `ddim-serve` — Denoising Diffusion Implicit Models (Song, Meng & Ermon,
+//! ICLR 2021) as a production-shaped diffusion *serving* stack.
+//!
+//! Three layers (see `DESIGN.md`):
+//! - **L1** (build-time Pallas kernels) and **L2** (build-time JAX U-Net +
+//!   fused Eq.-12 update) live under `python/compile/` and are AOT-lowered
+//!   to HLO text in `artifacts/` by `make artifacts`.
+//! - **L3** (this crate) is the runtime: a request coordinator that performs
+//!   *continuous step-level batching* over the compiled `denoise_step`
+//!   executables — the diffusion analogue of vLLM/Orca iteration-level
+//!   batching. Per-sample schedule vectors (`alpha_t[B]`, `alpha_prev[B]`,
+//!   `sigma[B]`) mean one executable call can advance B trajectories that
+//!   are at *different* timesteps on *different* (τ, η) schedules.
+//!
+//! Python never runs on the request path; the binary is self-contained
+//! against `artifacts/`.
+//!
+//! Module map:
+//! - substrates: [`json`], [`tensor`], [`rng`], [`linalg`], [`stats`],
+//!   [`schedule`], [`artifacts`], [`testing`]
+//! - runtime: [`runtime`] (PJRT executables), [`sampler`] (trajectories)
+//! - the serving contribution: [`coordinator`]
+//! - evaluation: [`eval`] (proxy-FID, consistency, reconstruction),
+//!   [`workload`] (request generators for benches/examples)
+
+pub mod artifacts;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod discrete;
+pub mod error;
+pub mod eval;
+pub mod json;
+pub mod linalg;
+pub mod rng;
+pub mod runtime;
+pub mod sampler;
+pub mod schedule;
+pub mod stats;
+pub mod tensor;
+pub mod testing;
+pub mod workload;
+
+pub use error::{Error, Result};

@@ -1,0 +1,85 @@
+//! Cholesky factorisation (lower-triangular). Used to sample correlated
+//! gaussians in the workload generator and as an independent SPD check in
+//! the FID pipeline's tests.
+
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+
+/// Return lower-triangular `L` with `L Lᵀ = A` for SPD `A`.
+pub fn cholesky(a: &Mat) -> Result<Mat> {
+    if a.rows() != a.cols() {
+        return Err(Error::Linalg("cholesky wants square".into()));
+    }
+    let n = a.rows();
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)];
+            for k in 0..j {
+                sum -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(Error::Linalg(format!(
+                        "cholesky: not positive definite at pivot {i} ({sum})"
+                    )));
+                }
+                l[(i, j)] = sum.sqrt();
+            } else {
+                l[(i, j)] = sum / l[(j, j)];
+            }
+        }
+    }
+    Ok(l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn known_3x3() {
+        let a = Mat::from_rows(&[
+            vec![4.0, 12.0, -16.0],
+            vec![12.0, 37.0, -43.0],
+            vec![-16.0, -43.0, 98.0],
+        ])
+        .unwrap();
+        let l = cholesky(&a).unwrap();
+        let want = Mat::from_rows(&[
+            vec![2.0, 0.0, 0.0],
+            vec![6.0, 1.0, 0.0],
+            vec![-8.0, 5.0, 3.0],
+        ])
+        .unwrap();
+        assert!(l.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn reconstructs_random_spd() {
+        let mut rng = Pcg64::seeded(17);
+        let n = 10;
+        let mut b = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                b[(i, j)] = rng.uniform(-1.0, 1.0);
+            }
+        }
+        let a = b
+            .matmul(&b.transpose())
+            .unwrap()
+            .add(&Mat::identity(n).scale(0.5))
+            .unwrap();
+        let l = cholesky(&a).unwrap();
+        let back = l.matmul(&l.transpose()).unwrap();
+        assert!(back.max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]).unwrap();
+        assert!(cholesky(&a).is_err()); // eigenvalues 3, -1
+        assert!(cholesky(&Mat::zeros(2, 3)).is_err());
+    }
+}

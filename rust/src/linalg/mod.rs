@@ -1,0 +1,17 @@
+//! Dense linear algebra substrate for the proxy-FID metric (DESIGN.md §2):
+//! a small f64 matrix type, a Jacobi eigensolver for symmetric matrices,
+//! the SPD matrix square root built on it, and Cholesky (used by tests and
+//! by the workload generator's correlated-arrival model).
+//!
+//! The paper's FID needs `Tr((Σ₁Σ₂)^{1/2})`; we compute it through the
+//! symmetric form `sqrtm(√Σ₁ Σ₂ √Σ₁)` so every eigen-decomposition stays on
+//! a symmetric matrix, where Jacobi is simple, robust, and — at 24×24 —
+//! plenty fast.
+
+mod cholesky;
+mod jacobi;
+mod matrix;
+
+pub use cholesky::cholesky;
+pub use jacobi::{eigh, sqrtm_spd};
+pub use matrix::Mat;

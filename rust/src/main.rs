@@ -1,0 +1,169 @@
+//! `ddim-serve` — leader binary: CLI over the coordinator.
+//!
+//! Subcommands:
+//!   serve     start the JSON-line TCP server
+//!   generate  sample images offline and write a PGM grid
+//!   encode    round-trip an image through encode→decode, print the MSE
+//!   info      print manifest / schedule / artifact summary
+
+use ddim_serve::cli::Args;
+use ddim_serve::config::ServeConfig;
+use ddim_serve::coordinator::request::{Request, RequestBody};
+use ddim_serve::coordinator::{Engine, Server};
+use ddim_serve::error::Result;
+use ddim_serve::runtime::Runtime;
+use ddim_serve::sampler::BatchRunner;
+use ddim_serve::schedule::{NoiseMode, SamplePlan, TauKind};
+use ddim_serve::tensor::{save_pgm, tile_grid};
+
+const HELP: &str = "\
+ddim-serve — DDIM (Song et al., ICLR 2021) as a rust+JAX+Pallas serving stack
+
+USAGE: ddim-serve <command> [--flag value]...
+
+COMMANDS
+  serve       --artifacts D --dataset NAME --listen ADDR --max-batch N
+              --queue-cap N --max-lanes N
+  generate    --artifacts D --dataset NAME --steps S --eta E|hat --tau linear|quadratic
+              --count N --seed K --out FILE.pgm
+  encode      --artifacts D --dataset NAME --steps S --seed K
+  info        --artifacts D
+";
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.command.as_deref() {
+        Some("serve") => run(cmd_serve(&args)),
+        Some("generate") => run(cmd_generate(&args)),
+        Some("encode") => run(cmd_encode(&args)),
+        Some("info") => run(cmd_info(&args)),
+        _ => {
+            println!("{HELP}");
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(r: Result<()>) -> i32 {
+    match r {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn config_from(args: &Args) -> Result<ServeConfig> {
+    let mut cfg = ServeConfig::default();
+    cfg.artifact_root = args.get_or("artifacts", "artifacts").to_string();
+    cfg.dataset = args.get_or("dataset", "sprites").to_string();
+    cfg.max_batch = args.get_usize("max-batch", cfg.max_batch)?;
+    cfg.queue_capacity = args.get_usize("queue-cap", cfg.queue_capacity)?;
+    cfg.max_lanes = args.get_usize("max-lanes", cfg.max_lanes)?;
+    cfg.listen = args.get_or("listen", &cfg.listen).to_string();
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    println!(
+        "starting ddim-serve: dataset={} artifacts={} listen={}",
+        cfg.dataset, cfg.artifact_root, cfg.listen
+    );
+    let server = Server::start(cfg)?;
+    println!("listening on {} (ctrl-c to stop)", server.addr());
+    // Block forever; the engine thread does the work.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let steps = args.get_usize("steps", 20)?;
+    let mode = NoiseMode::parse(args.get_or("eta", "0.0"))?;
+    let tau = TauKind::parse(args.get_or("tau", "linear"))?;
+    let count = args.get_usize("count", 16)?;
+    let seed = args.get_u64("seed", 0)?;
+    let out = args.get_or("out", "out/generate.pgm").to_string();
+
+    let mut engine = Engine::new(cfg.clone())?;
+    let id = engine.submit(Request {
+        dataset: cfg.dataset.clone(),
+        steps,
+        mode,
+        tau,
+        body: RequestBody::Generate { count, seed },
+        return_images: true,
+    })?;
+    let t0 = std::time::Instant::now();
+    let responses = engine.run_until_idle()?;
+    let resp = responses.into_iter().find(|r| r.id == id).unwrap();
+    let images = match resp.body {
+        ddim_serve::coordinator::ResponseBody::Ok { outputs } => outputs,
+        ddim_serve::coordinator::ResponseBody::Error { message } => {
+            return Err(ddim_serve::Error::Coordinator(message))
+        }
+    };
+    let img = engine.runtime().manifest().img;
+    let cols = (count as f64).sqrt().ceil() as usize;
+    let rows = count.div_ceil(cols);
+    let mut padded: Vec<Vec<f32>> = images;
+    while padded.len() < rows * cols {
+        padded.push(vec![0.0; img * img]);
+    }
+    let refs: Vec<&[f32]> = padded.iter().map(|v| v.as_slice()).collect();
+    let grid = tile_grid(&refs, rows, cols, img, img)?;
+    save_pgm(&out, &grid)?;
+    println!(
+        "wrote {count} samples (S={steps}, {}) to {out} in {:.2}s  [{}]",
+        mode.label(),
+        t0.elapsed().as_secs_f64(),
+        engine.metrics().summary()
+    );
+    Ok(())
+}
+
+fn cmd_encode(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let steps = args.get_usize("steps", 100)?;
+    let seed = args.get_u64("seed", 0)?;
+    let mut rt = Runtime::load(&cfg.artifact_root)?;
+    // generate a sample first, then encode and decode it back
+    let gen_plan = SamplePlan::generate(rt.alphas(), TauKind::Linear, steps, NoiseMode::Eta(0.0))?;
+    let enc_plan = SamplePlan::encode(rt.alphas(), TauKind::Linear, steps)?;
+    let mut runner = BatchRunner::new(&rt, &cfg.dataset, 1)?;
+    let x0 = runner.generate(&mut rt, &gen_plan, 1, seed)?;
+    let latent = runner.run_from(&mut rt, &enc_plan, x0.clone(), 0)?;
+    let recon = runner.run_from(&mut rt, &gen_plan, latent, 0)?;
+    let mse = ddim_serve::eval::per_dim_mse(&x0, &recon)?;
+    println!("encode/decode round trip (S={steps}): per-dim MSE = {mse:.6}");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let root = args.get_or("artifacts", "artifacts");
+    let rt = Runtime::load(root)?;
+    let m = rt.manifest();
+    println!("artifact root : {}", m.root.display());
+    println!("image         : {}x{} x{} ch", m.img, m.img, m.channels);
+    println!("T             : {}", m.t_max);
+    println!("buckets       : {:?}", m.buckets);
+    println!("alpha_bar(T)  : {:.3e}", rt.alphas().abar(m.t_max));
+    for (name, ds) in &m.datasets {
+        println!(
+            "dataset {name:10}: {} params, final train loss {:.4}, ref_n {}",
+            ds.params, ds.final_loss, ds.ref_n
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Standard-normal sampling (Box–Muller with caching) on top of [`Pcg64`].
+//! This is the source of the prior x_T ~ N(0, I) and the per-step DDPM
+//! noise ε_t in Eq. (12)'s third term.
+
+use super::Pcg64;
+
+/// A gaussian stream over a PCG64 generator.
+#[derive(Debug, Clone)]
+pub struct GaussianSource {
+    rng: Pcg64,
+    spare: Option<f64>,
+}
+
+impl GaussianSource {
+    pub fn new(rng: Pcg64) -> Self {
+        Self { rng, spare: None }
+    }
+
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(Pcg64::seeded(seed))
+    }
+
+    /// One standard-normal draw.
+    pub fn next(&mut self) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        // Box–Muller: u in (0,1] to avoid ln(0)
+        let u = 1.0 - self.rng.next_f64();
+        let v = self.rng.next_f64();
+        let r = (-2.0 * u.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * v;
+        self.spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Fill an f32 buffer with iid standard normals.
+    pub fn fill(&mut self, out: &mut [f32]) {
+        for v in out {
+            *v = self.next() as f32;
+        }
+    }
+
+    /// Allocate-and-fill convenience.
+    pub fn vec(&mut self, n: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        self.fill(&mut v);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments() {
+        let mut g = GaussianSource::seeded(3);
+        let n = 50_000;
+        let (mut s1, mut s2, mut s3, mut s4) = (0.0, 0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let z = g.next();
+            s1 += z;
+            s2 += z * z;
+            s3 += z * z * z;
+            s4 += z * z * z * z;
+        }
+        let m = s1 / n as f64;
+        let var = s2 / n as f64 - m * m;
+        let skew = s3 / n as f64;
+        let kurt = s4 / n as f64;
+        assert!(m.abs() < 0.02, "mean {m}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+        assert!(skew.abs() < 0.05, "skew {skew}");
+        assert!((kurt - 3.0).abs() < 0.15, "kurtosis {kurt}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut a = GaussianSource::seeded(11);
+        let mut b = GaussianSource::seeded(11);
+        for _ in 0..100 {
+            assert_eq!(a.next(), b.next());
+        }
+    }
+
+    #[test]
+    fn fill_matches_next() {
+        let mut a = GaussianSource::seeded(5);
+        let mut b = GaussianSource::seeded(5);
+        let v = a.vec(9);
+        for x in v {
+            assert_eq!(x, b.next() as f32);
+        }
+    }
+}

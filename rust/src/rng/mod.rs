@@ -1,0 +1,13 @@
+//! RNG substrate. All stochasticity on the request path (x_T priors, the
+//! per-step DDPM noise, workload arrival processes) flows through a
+//! deterministic, seedable PCG64 so that (a) η=0 trajectories are bitwise
+//! reproducible and (b) every experiment in EXPERIMENTS.md can be re-run
+//! exactly.
+
+mod gaussian;
+mod pcg;
+mod slerp;
+
+pub use gaussian::GaussianSource;
+pub use pcg::Pcg64;
+pub use slerp::slerp;

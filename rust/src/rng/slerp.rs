@@ -1,0 +1,80 @@
+//! Spherical linear interpolation in latent space — Eq. (67) of the paper
+//! (Shoemake 1985), used for the Fig. 6 interpolation experiment: gaussian
+//! latents concentrate near a sphere, so slerp (not lerp) keeps interpolants
+//! on-distribution for the deterministic DDIM decoder.
+
+/// slerp(a, b; alpha) with the paper's convention: alpha=0 -> a, alpha=1 -> b.
+/// Falls back to lerp when the vectors are (anti)parallel enough that the
+/// spherical formula loses precision.
+pub fn slerp(a: &[f32], b: &[f32], alpha: f64) -> Vec<f32> {
+    assert_eq!(a.len(), b.len(), "slerp length mismatch");
+    let dot: f64 = a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum();
+    let na: f64 = a.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+    let cos = (dot / (na * nb)).clamp(-1.0, 1.0);
+    let theta = cos.acos();
+    if theta.sin().abs() < 1e-6 {
+        // nearly collinear: lerp is exact to fp precision here
+        return a
+            .iter()
+            .zip(b)
+            .map(|(x, y)| ((1.0 - alpha) * *x as f64 + alpha * *y as f64) as f32)
+            .collect();
+    }
+    let wa = ((1.0 - alpha) * theta).sin() / theta.sin();
+    let wb = (alpha * theta).sin() / theta.sin();
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (wa * *x as f64 + wb * *y as f64) as f32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::GaussianSource;
+
+    #[test]
+    fn endpoints() {
+        let mut g = GaussianSource::seeded(1);
+        let a = g.vec(64);
+        let b = g.vec(64);
+        assert_eq!(slerp(&a, &b, 0.0), a);
+        let s1 = slerp(&a, &b, 1.0);
+        for (x, y) in s1.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn preserves_norm_for_equal_norm_inputs() {
+        // For |a| == |b|, slerp stays on the sphere of that radius.
+        let mut g = GaussianSource::seeded(2);
+        let mut a = g.vec(256);
+        let mut b = g.vec(256);
+        let norm = |v: &[f32]| v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        let (na, nb) = (norm(&a), norm(&b));
+        a.iter_mut().for_each(|x| *x /= na as f32);
+        b.iter_mut().for_each(|x| *x /= nb as f32);
+        for alpha in [0.1, 0.3, 0.5, 0.7, 0.9] {
+            let s = slerp(&a, &b, alpha);
+            assert!((norm(&s) - 1.0).abs() < 1e-4, "alpha={alpha}: {}", norm(&s));
+        }
+    }
+
+    #[test]
+    fn collinear_falls_back_to_lerp() {
+        let a = vec![1.0f32, 0.0, 0.0];
+        let s = slerp(&a, &a, 0.5);
+        assert_eq!(s, a);
+        let b = vec![2.0f32, 0.0, 0.0];
+        let s = slerp(&a, &b, 0.5);
+        assert!((s[0] - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn length_mismatch_panics() {
+        slerp(&[1.0], &[1.0, 2.0], 0.5);
+    }
+}

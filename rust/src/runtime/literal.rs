@@ -1,0 +1,56 @@
+//! Literal marshalling between host `f32` buffers and `xla::Literal`s.
+//! The hot path avoids intermediate `Vec`s: literals are created with the
+//! target shape directly and read back with `copy_raw_to`.
+
+use crate::error::{Error, Result};
+use crate::Result as CrateResult;
+
+/// Build an f32 literal of the given shape from a host slice.
+pub fn vec_to_literal(data: &[f32], dims: &[usize]) -> CrateResult<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        return Err(Error::Shape(format!(
+            "literal shape {dims:?} wants {n} elems, got {}",
+            data.len()
+        )));
+    }
+    let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::F32, dims);
+    lit.copy_raw_from(data)?;
+    Ok(lit)
+}
+
+/// Copy a literal's f32 payload into a host slice (must match in length).
+pub fn literal_to_slice(lit: &xla::Literal, out: &mut [f32]) -> Result<()> {
+    let n = lit.element_count();
+    if n != out.len() {
+        return Err(Error::Shape(format!(
+            "literal has {n} elements, destination {}",
+            out.len()
+        )));
+    }
+    lit.copy_raw_to(out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let data: Vec<f32> = (0..12).map(|x| x as f32 * 0.5).collect();
+        let lit = vec_to_literal(&data, &[3, 4]).unwrap();
+        assert_eq!(lit.element_count(), 12);
+        let mut back = vec![0.0f32; 12];
+        literal_to_slice(&lit, &mut back).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(vec_to_literal(&[1.0, 2.0], &[3]).is_err());
+        let lit = vec_to_literal(&[1.0, 2.0], &[2]).unwrap();
+        let mut out = vec![0.0f32; 3];
+        assert!(literal_to_slice(&lit, &mut out).is_err());
+    }
+}

@@ -1,0 +1,80 @@
+//! Runtime layer: wraps the `xla` crate's PJRT CPU client to load the
+//! AOT-compiled `denoise_step` HLO-text modules and execute them from the
+//! coordinator's hot loop.
+//!
+//! One [`StepExecutable`] per (dataset × batch bucket); the [`Runtime`]
+//! compiles them lazily and caches them. Interchange is HLO *text* (see
+//! `python/compile/aot.py` for why not serialized protos).
+
+mod executable;
+mod literal;
+
+pub use executable::{StepExecutable, StepOutput};
+pub use literal::{literal_to_slice, vec_to_literal};
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::artifacts::Manifest;
+use crate::error::Result;
+use crate::schedule::AlphaTable;
+
+/// Loaded artifact bundle + PJRT client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    alphas: AlphaTable,
+    // (dataset, bucket) -> compiled executable
+    cache: HashMap<(String, usize), StepExecutable>,
+    /// cumulative time spent in `client.compile` (startup cost accounting)
+    pub compile_seconds: f64,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifact directory (`artifacts/` by default).
+    pub fn load(artifact_root: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(&artifact_root)?;
+        let alphas = AlphaTable::from_artifact(artifact_root.as_ref().join("alphas.json"))?;
+        alphas.validate()?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, manifest, alphas, cache: HashMap::new(), compile_seconds: 0.0 })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn alphas(&self) -> &AlphaTable {
+        &self.alphas
+    }
+
+    /// Get (compiling if needed) the executable for `dataset` at `bucket`.
+    pub fn executable(&mut self, dataset: &str, bucket: usize) -> Result<&StepExecutable> {
+        let key = (dataset.to_string(), bucket);
+        if !self.cache.contains_key(&key) {
+            let ds = self.manifest.dataset(dataset)?;
+            let idx = self.manifest.bucket_index(bucket)?;
+            let path = self.manifest.hlo_path(ds, idx);
+            let t0 = Instant::now();
+            let exe =
+                StepExecutable::load(&self.client, &path, bucket, self.manifest.sample_dim())?;
+            self.compile_seconds += t0.elapsed().as_secs_f64();
+            self.cache.insert(key.clone(), exe);
+        }
+        Ok(self.cache.get(&key).unwrap())
+    }
+
+    /// Eagerly compile every bucket for `dataset` (benches / server startup).
+    pub fn warmup(&mut self, dataset: &str) -> Result<()> {
+        for b in self.manifest.buckets.clone() {
+            self.executable(dataset, b)?;
+        }
+        Ok(())
+    }
+
+    /// Number of executables compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+}

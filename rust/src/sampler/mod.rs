@@ -1,0 +1,17 @@
+//! Sampler layer: per-request trajectory state ([`Trajectory`]) and a
+//! direct batch driver ([`BatchRunner`]) used by the evaluation harnesses.
+//!
+//! The coordinator (continuous batching across *heterogeneous* requests)
+//! builds on the same [`Trajectory`] type; `BatchRunner` is the simpler
+//! homogeneous case — N lanes marching through one shared [`SamplePlan`] —
+//! which is exactly the shape of the paper's Table-1/2/3 sweeps.
+
+mod multistep;
+mod pf_ode;
+mod runner;
+mod trajectory;
+
+pub use multistep::Ab2State;
+pub use pf_ode::{ddim_update_host, pf_euler_update};
+pub use runner::BatchRunner;
+pub use trajectory::{Trajectory, TrajectoryKind};

@@ -1,0 +1,88 @@
+//! Sec. 4.3 ablation: the probability-flow-ODE Euler update (Eq. 15,
+//! Song et al. 2020's discretisation) as an alternative to the DDIM update
+//! (Eq. 13). The paper notes the two coincide as Δt→0 but "in fewer
+//! sampling steps these choices will make a difference" — the
+//! `ablation_pf_ode` bench quantifies exactly that.
+//!
+//! Because the fused executable returns ε alongside x_prev, this update is
+//! computed host-side from the same model call — no extra executable.
+
+/// One PF-Euler step (Eq. 15):
+/// x̄(t−Δt) = x̄(t) + ½ ((1−ᾱ_p)/ᾱ_p − (1−ᾱ_t)/ᾱ_t) · sqrt(ᾱ_t/(1−ᾱ_t)) · ε
+/// with x̄ = x/√ᾱ; returns x(t−Δt) in un-rescaled coordinates.
+pub fn pf_euler_update(x: &[f32], eps: &[f32], alpha_t: f64, alpha_prev: f64) -> Vec<f32> {
+    assert_eq!(x.len(), eps.len());
+    let lam = 0.5
+        * ((1.0 - alpha_prev) / alpha_prev - (1.0 - alpha_t) / alpha_t)
+        * (alpha_t / (1.0 - alpha_t)).sqrt();
+    let scale_in = 1.0 / alpha_t.sqrt();
+    let scale_out = alpha_prev.sqrt();
+    x.iter()
+        .zip(eps)
+        .map(|(&xv, &ev)| ((xv as f64 * scale_in + lam * ev as f64) * scale_out) as f32)
+        .collect()
+}
+
+/// The DDIM update (Eq. 13 / Eq. 12 with σ=0), host-side, for apples-to-
+/// apples comparison in the ablation (identical to the kernel's arithmetic).
+pub fn ddim_update_host(x: &[f32], eps: &[f32], alpha_t: f64, alpha_prev: f64) -> Vec<f32> {
+    assert_eq!(x.len(), eps.len());
+    let c_x0 = (alpha_prev / alpha_t).sqrt();
+    let c_eps = (1.0 - alpha_prev).sqrt() - (alpha_prev * (1.0 - alpha_t) / alpha_t).sqrt();
+    x.iter()
+        .zip(eps)
+        .map(|(&xv, &ev)| (xv as f64 * c_x0 + ev as f64 * c_eps) as f32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn updates_agree_in_small_step_limit() {
+        // adjacent timesteps on a fine schedule: Eq. 13 ≈ Eq. 15
+        let abar = crate::schedule::AlphaTable::linear(1000);
+        let x: Vec<f32> = (0..64).map(|i| (i as f32 * 0.1).sin()).collect();
+        let eps: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).cos()).collect();
+        let (a_t, a_p) = (abar.abar(500), abar.abar(499));
+        let d = ddim_update_host(&x, &eps, a_t, a_p);
+        let p = pf_euler_update(&x, &eps, a_t, a_p);
+        let max: f32 = d
+            .iter()
+            .zip(&p)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(max < 2e-4, "small-step disagreement {max}");
+    }
+
+    #[test]
+    fn updates_differ_for_large_jumps() {
+        // S=10-style jump: the discretisations genuinely differ (Sec. 4.3)
+        let abar = crate::schedule::AlphaTable::linear(1000);
+        let x: Vec<f32> = (0..64).map(|i| (i as f32 * 0.1).sin()).collect();
+        let eps: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).cos()).collect();
+        let (a_t, a_p) = (abar.abar(1000), abar.abar(900));
+        let d = ddim_update_host(&x, &eps, a_t, a_p);
+        let p = pf_euler_update(&x, &eps, a_t, a_p);
+        let max: f32 = d
+            .iter()
+            .zip(&p)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(max > 1e-2, "large-step updates should differ, max {max}");
+    }
+
+    #[test]
+    fn ddim_host_matches_eq12_form() {
+        // cross-check the rearranged Eq. 13 form against the explicit
+        // predicted-x0 composition of Eq. 12
+        let (a_t, a_p) = (0.25f64, 0.81f64);
+        let x = vec![1.0f32];
+        let eps = vec![0.5f32];
+        let got = ddim_update_host(&x, &eps, a_t, a_p)[0] as f64;
+        let x0 = (1.0 - (1.0 - a_t).sqrt() * 0.5) / a_t.sqrt();
+        let want = a_p.sqrt() * x0 + (1.0 - a_p).sqrt() * 0.5;
+        assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+    }
+}

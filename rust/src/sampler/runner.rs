@@ -1,0 +1,145 @@
+//! Homogeneous batch driver: N trajectories sharing one [`SamplePlan`]
+//! marched bucket-by-bucket through the runtime. This is the evaluation
+//! harness's workhorse (Table 1/2/3, Figs. 3–6) — every lane is at the same
+//! step index, so it pads only the final partial chunk.
+//!
+//! (The coordinator generalises this to *heterogeneous* lanes; see
+//! `coordinator::engine`.)
+
+use crate::error::Result;
+use crate::runtime::{Runtime, StepOutput};
+use crate::sampler::Trajectory;
+use crate::schedule::SamplePlan;
+
+/// Reusable buffers + batch loop for same-plan sampling.
+pub struct BatchRunner {
+    dataset: String,
+    bucket: usize,
+    dim: usize,
+    // reused across calls: zero steady-state allocation
+    x: Vec<f32>,
+    t: Vec<f32>,
+    a_in: Vec<f32>,
+    a_out: Vec<f32>,
+    sigma: Vec<f32>,
+    noise: Vec<f32>,
+    out: StepOutput,
+    /// executable calls issued (for Fig. 4 accounting)
+    pub calls: u64,
+}
+
+impl BatchRunner {
+    /// Build a runner for `dataset` using the largest bucket ≤ preferred
+    /// (or the best bucket for the workload size).
+    pub fn new(rt: &Runtime, dataset: &str, preferred_bucket: usize) -> Result<Self> {
+        let bucket = rt.manifest().bucket_for(preferred_bucket);
+        let dim = rt.manifest().sample_dim();
+        Ok(Self {
+            dataset: dataset.to_string(),
+            bucket,
+            dim,
+            x: vec![0.0; bucket * dim],
+            t: vec![0.0; bucket],
+            a_in: vec![0.0; bucket],
+            a_out: vec![0.0; bucket],
+            sigma: vec![0.0; bucket],
+            noise: vec![0.0; bucket * dim],
+            out: StepOutput::zeros(bucket * dim),
+            calls: 0,
+        })
+    }
+
+    pub fn bucket(&self) -> usize {
+        self.bucket
+    }
+
+    /// Drive a set of same-plan trajectories to completion; returns the
+    /// final states in input order.
+    pub fn run_all(
+        &mut self,
+        rt: &mut Runtime,
+        mut trajs: Vec<Trajectory>,
+    ) -> Result<Vec<Vec<f32>>> {
+        let total_steps = trajs.first().map_or(0, |t| t.plan().len());
+        for t in &trajs {
+            debug_assert_eq!(t.plan().len(), total_steps, "BatchRunner wants same-length plans");
+        }
+        for _ in 0..total_steps {
+            for chunk in (0..trajs.len()).collect::<Vec<_>>().chunks(self.bucket) {
+                self.step_chunk(rt, &mut trajs, chunk)?;
+            }
+        }
+        Ok(trajs.into_iter().map(Trajectory::into_state).collect())
+    }
+
+    /// Advance the listed lanes (≤ bucket of them) one step.
+    fn step_chunk(
+        &mut self,
+        rt: &mut Runtime,
+        trajs: &mut [Trajectory],
+        idxs: &[usize],
+    ) -> Result<()> {
+        let b = self.bucket;
+        let dim = self.dim;
+        assert!(idxs.len() <= b);
+        // pack lanes; pad dead lanes by repeating lane 0's params (harmless:
+        // outputs of padding lanes are never read back)
+        for (lane, &i) in idxs.iter().enumerate() {
+            let tr = &mut trajs[i];
+            let p = tr.next_params()?;
+            self.x[lane * dim..(lane + 1) * dim].copy_from_slice(tr.state());
+            self.t[lane] = p.t_model as f32;
+            self.a_in[lane] = p.alpha_in as f32;
+            self.a_out[lane] = p.alpha_out as f32;
+            self.sigma[lane] = p.sigma_dir as f32;
+            tr.fill_noise(&mut self.noise[lane * dim..(lane + 1) * dim])?;
+        }
+        for lane in idxs.len()..b {
+            self.x[lane * dim..(lane + 1) * dim].fill(0.0);
+            self.t[lane] = self.t[0];
+            self.a_in[lane] = self.a_in[0].max(1e-4);
+            self.a_out[lane] = self.a_out[0].max(1e-4);
+            self.sigma[lane] = 0.0;
+            self.noise[lane * dim..(lane + 1) * dim].fill(0.0);
+        }
+        let exe = rt.executable(&self.dataset, b)?;
+        exe.run(&self.x, &self.t, &self.a_in, &self.a_out, &self.sigma, &self.noise, &mut self.out)?;
+        self.calls += 1;
+        for (lane, &i) in idxs.iter().enumerate() {
+            trajs[i].advance(&self.out.x_prev[lane * dim..(lane + 1) * dim])?;
+        }
+        Ok(())
+    }
+
+    /// Generate `n` samples from the prior under `plan`, seeds
+    /// `seed_base..seed_base+n`. Returns final x_0 images.
+    pub fn generate(
+        &mut self,
+        rt: &mut Runtime,
+        plan: &SamplePlan,
+        n: usize,
+        seed_base: u64,
+    ) -> Result<Vec<Vec<f32>>> {
+        let trajs: Vec<Trajectory> = (0..n)
+            .map(|i| Trajectory::from_prior(plan.clone(), self.dim, seed_base + i as u64))
+            .collect();
+        self.run_all(rt, trajs)
+    }
+
+    /// Run caller-provided start states through `plan` (encode, or decode of
+    /// given latents). Deterministic plans ignore the seeds.
+    pub fn run_from(
+        &mut self,
+        rt: &mut Runtime,
+        plan: &SamplePlan,
+        states: Vec<Vec<f32>>,
+        seed_base: u64,
+    ) -> Result<Vec<Vec<f32>>> {
+        let trajs: Vec<Trajectory> = states
+            .into_iter()
+            .enumerate()
+            .map(|(i, x)| Trajectory::from_state(plan.clone(), x, seed_base + i as u64))
+            .collect();
+        self.run_all(rt, trajs)
+    }
+}

@@ -1,0 +1,185 @@
+//! One diffusion trajectory: the current iterate x, its position in a
+//! [`SamplePlan`], and its private noise stream. This is the unit the
+//! coordinator schedules — a *lane* in a batched executable call.
+
+use crate::error::{Error, Result};
+use crate::rng::{GaussianSource, Pcg64};
+use crate::schedule::{SamplePlan, StepParams};
+
+/// What the trajectory starts from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrajectoryKind {
+    /// x_T ~ N(0, I) (generation) — prior drawn from the seed.
+    FromPrior,
+    /// caller-provided start (encoding x_0, or interpolation latents x_T).
+    FromState,
+}
+
+/// A single sample's walk through its plan.
+#[derive(Debug)]
+pub struct Trajectory {
+    plan: SamplePlan,
+    x: Vec<f32>,
+    step: usize,
+    noise: GaussianSource,
+    kind: TrajectoryKind,
+}
+
+impl Trajectory {
+    /// Generation from the prior: x_T filled from `seed`'s stream.
+    pub fn from_prior(plan: SamplePlan, dim: usize, seed: u64) -> Self {
+        let mut root = Pcg64::seeded(seed);
+        let mut prior = GaussianSource::new(root.fork(0));
+        let noise = GaussianSource::new(root.fork(1));
+        let x = prior.vec(dim);
+        Self { plan, x, step: 0, noise, kind: TrajectoryKind::FromPrior }
+    }
+
+    /// Start from caller-provided state (encode / interpolation).
+    pub fn from_state(plan: SamplePlan, x: Vec<f32>, seed: u64) -> Self {
+        let mut root = Pcg64::seeded(seed);
+        let noise = GaussianSource::new(root.fork(1));
+        Self { plan, x, step: 0, noise, kind: TrajectoryKind::FromState }
+    }
+
+    pub fn kind(&self) -> TrajectoryKind {
+        self.kind
+    }
+
+    pub fn plan(&self) -> &SamplePlan {
+        &self.plan
+    }
+
+    /// Steps completed so far.
+    pub fn steps_done(&self) -> usize {
+        self.step
+    }
+
+    /// Steps remaining.
+    pub fn steps_left(&self) -> usize {
+        self.plan.len() - self.step
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.step >= self.plan.len()
+    }
+
+    /// Current iterate (x_t during sampling; the final x_0 / x_T when done).
+    pub fn state(&self) -> &[f32] {
+        &self.x
+    }
+
+    pub fn into_state(self) -> Vec<f32> {
+        self.x
+    }
+
+    /// Schedule parameters for the *next* step.
+    pub fn next_params(&self) -> Result<StepParams> {
+        self.plan
+            .steps()
+            .get(self.step)
+            .copied()
+            .ok_or_else(|| Error::Coordinator("next_params on finished trajectory".into()))
+    }
+
+    /// Fill this lane's noise buffer for the next step: N(0,1) scaled by the
+    /// step's `noise_scale` (σ̂ handling — see [`StepParams`]), or zeros for
+    /// deterministic steps.
+    pub fn fill_noise(&mut self, out: &mut [f32]) -> Result<()> {
+        let p = self.next_params()?;
+        if p.is_stochastic() {
+            let scale = p.noise_scale() as f32;
+            for v in out.iter_mut() {
+                *v = self.noise.next() as f32 * scale;
+            }
+        } else {
+            out.fill(0.0);
+        }
+        Ok(())
+    }
+
+    /// Commit the executable's output for this lane and advance.
+    pub fn advance(&mut self, x_next: &[f32]) -> Result<()> {
+        if self.is_done() {
+            return Err(Error::Coordinator("advance on finished trajectory".into()));
+        }
+        if x_next.len() != self.x.len() {
+            return Err(Error::Shape(format!(
+                "advance: {} vs {}",
+                x_next.len(),
+                self.x.len()
+            )));
+        }
+        self.x.copy_from_slice(x_next);
+        self.step += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{AlphaTable, NoiseMode, SamplePlan, TauKind};
+
+    fn plan(s: usize, mode: NoiseMode) -> SamplePlan {
+        let t = AlphaTable::linear(1000);
+        SamplePlan::generate(&t, TauKind::Linear, s, mode).unwrap()
+    }
+
+    #[test]
+    fn prior_is_seed_deterministic() {
+        let a = Trajectory::from_prior(plan(5, NoiseMode::Eta(0.0)), 16, 42);
+        let b = Trajectory::from_prior(plan(5, NoiseMode::Eta(0.0)), 16, 42);
+        let c = Trajectory::from_prior(plan(5, NoiseMode::Eta(0.0)), 16, 43);
+        assert_eq!(a.state(), b.state());
+        assert_ne!(a.state(), c.state());
+    }
+
+    #[test]
+    fn lifecycle() {
+        let mut t = Trajectory::from_prior(plan(3, NoiseMode::Eta(0.0)), 4, 1);
+        assert_eq!(t.steps_left(), 3);
+        assert!(!t.is_done());
+        for i in 0..3 {
+            let p = t.next_params().unwrap();
+            assert!(p.alpha_out > p.alpha_in);
+            t.advance(&[i as f32; 4]).unwrap();
+        }
+        assert!(t.is_done());
+        assert_eq!(t.state(), &[2.0; 4]);
+        assert!(t.next_params().is_err());
+        assert!(t.advance(&[0.0; 4]).is_err());
+    }
+
+    #[test]
+    fn deterministic_plan_noise_is_zero() {
+        let mut t = Trajectory::from_prior(plan(3, NoiseMode::Eta(0.0)), 4, 1);
+        let mut buf = [1.0f32; 4];
+        t.fill_noise(&mut buf).unwrap();
+        assert_eq!(buf, [0.0; 4]);
+    }
+
+    #[test]
+    fn stochastic_noise_streams_differ_from_prior() {
+        let mut t = Trajectory::from_prior(plan(3, NoiseMode::Eta(1.0)), 4, 7);
+        let prior = t.state().to_vec();
+        let mut buf = [0.0f32; 4];
+        t.fill_noise(&mut buf).unwrap();
+        assert!(buf.iter().any(|&v| v != 0.0));
+        assert_ne!(&prior[..], &buf[..], "prior and step noise use forked streams");
+    }
+
+    #[test]
+    fn advance_checks_len() {
+        let mut t = Trajectory::from_prior(plan(2, NoiseMode::Eta(0.0)), 4, 1);
+        assert!(t.advance(&[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn from_state_keeps_input() {
+        let x = vec![0.5f32; 8];
+        let t = Trajectory::from_state(plan(2, NoiseMode::Eta(0.0)), x.clone(), 0);
+        assert_eq!(t.state(), &x[..]);
+        assert_eq!(t.kind(), TrajectoryKind::FromState);
+    }
+}

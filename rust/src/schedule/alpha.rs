@@ -1,0 +1,141 @@
+//! The cumulative ᾱ table. Paper notation (Sec. 2 / App. C.2): we store the
+//! paper's `alpha_t` — Ho et al.'s ᾱ_t — for t = 0..T with ᾱ_0 := 1.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::json;
+
+/// Default diffusion length (paper: T = 1000 for every dataset).
+pub const T_DEFAULT: usize = 1000;
+const BETA_START: f64 = 1e-4;
+const BETA_END: f64 = 0.02;
+
+/// ᾱ_{0..T} with ᾱ_0 = 1, strictly decreasing into (0, 1).
+#[derive(Debug, Clone)]
+pub struct AlphaTable {
+    abar: Vec<f64>,
+}
+
+impl AlphaTable {
+    /// Ho et al. linear-β schedule, the one used for every paper dataset.
+    pub fn linear(t_max: usize) -> Self {
+        let mut abar = Vec::with_capacity(t_max + 1);
+        abar.push(1.0);
+        let mut prod = 1.0f64;
+        for i in 0..t_max {
+            // beta_t linearly spaced over [BETA_START, BETA_END]
+            let beta = if t_max == 1 {
+                BETA_START
+            } else {
+                BETA_START + (BETA_END - BETA_START) * i as f64 / (t_max - 1) as f64
+            };
+            prod *= 1.0 - beta;
+            abar.push(prod);
+        }
+        Self { abar }
+    }
+
+    /// Load `alphas.json` produced by the python build and verify it matches
+    /// the native computation (guards against schedule drift between layers).
+    pub fn from_artifact(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        let v = json::parse(&text)?;
+        let t_max = v.get("T")?.as_usize()?;
+        let abar = v.get("alpha_bar")?.as_f64_vec()?;
+        if abar.len() != t_max + 1 {
+            return Err(Error::Artifact(format!(
+                "alphas.json: expected {} entries, got {}",
+                t_max + 1,
+                abar.len()
+            )));
+        }
+        let native = Self::linear(t_max);
+        for (i, (a, b)) in abar.iter().zip(&native.abar).enumerate() {
+            if (a - b).abs() > 1e-9 {
+                return Err(Error::Artifact(format!(
+                    "alphas.json disagrees with native schedule at t={i}: {a} vs {b}"
+                )));
+            }
+        }
+        Ok(Self { abar })
+    }
+
+    /// Number of diffusion steps T.
+    pub fn t_max(&self) -> usize {
+        self.abar.len() - 1
+    }
+
+    /// ᾱ_t for t in 0..=T.
+    pub fn abar(&self, t: usize) -> f64 {
+        self.abar[t]
+    }
+
+    /// Validate the table's defining invariants (also exercised by tests).
+    pub fn validate(&self) -> Result<()> {
+        if self.abar.first() != Some(&1.0) {
+            return Err(Error::Schedule("alpha_bar[0] != 1".into()));
+        }
+        for w in self.abar.windows(2) {
+            if !(w[1] > 0.0 && w[1] < w[0]) {
+                return Err(Error::Schedule(format!(
+                    "alpha_bar not strictly decreasing in (0,1): {} -> {}",
+                    w[0], w[1]
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn invariants() {
+        let t = AlphaTable::linear(T_DEFAULT);
+        t.validate().unwrap();
+        assert_eq!(t.t_max(), 1000);
+        assert_eq!(t.abar(0), 1.0);
+        // alpha_bar(T) should be near zero (prior ~ N(0, I)); Ho et al.
+        // report ~4e-5 for this schedule.
+        assert!(t.abar(1000) < 1e-4, "{}", t.abar(1000));
+        assert!(t.abar(1000) > 0.0);
+    }
+
+    #[test]
+    fn first_step_matches_beta_start() {
+        let t = AlphaTable::linear(1000);
+        assert!((t.abar(1) - (1.0 - 1e-4)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_artifact_rejects_mismatch() {
+        let dir = std::env::temp_dir().join("ddim_alpha_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("alphas.json");
+        // wrong values
+        std::fs::write(&path, r#"{"T": 2, "alpha_bar": [1.0, 0.9, 0.5]}"#).unwrap();
+        assert!(AlphaTable::from_artifact(&path).is_err());
+        // wrong length
+        std::fs::write(&path, r#"{"T": 3, "alpha_bar": [1.0, 0.9]}"#).unwrap();
+        assert!(AlphaTable::from_artifact(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn from_artifact_accepts_native_dump() {
+        // serialize the native table the way python does and read it back
+        let t = AlphaTable::linear(50);
+        let vals: Vec<String> = t.abar.iter().map(|a| format!("{a:?}")).collect();
+        let text = format!("{{\"T\": 50, \"alpha_bar\": [{}]}}", vals.join(","));
+        let dir = std::env::temp_dir().join("ddim_alpha_test_ok");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("alphas.json");
+        std::fs::write(&path, text).unwrap();
+        let loaded = AlphaTable::from_artifact(&path).unwrap();
+        assert_eq!(loaded.t_max(), 50);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,15 @@
+//! Schedule substrate: everything the paper parameterises sampling with —
+//! the cumulative-alpha table ᾱ (Sec. 2), the sub-sequence τ (Sec. 4.2 /
+//! App. D.2), and the noise scale σ(η) / σ̂ (Eq. 16 / App. D.3).
+//!
+//! The table is computed natively (Ho et al. linear-β) *and* cross-checked
+//! against the python-dumped `artifacts/alphas.json` at load time, so a
+//! drifting constant can never silently skew an experiment.
+
+mod alpha;
+mod plan;
+mod tau;
+
+pub use alpha::{AlphaTable, T_DEFAULT};
+pub use plan::{Direction, NoiseMode, SamplePlan, StepParams};
+pub use tau::{sigma_eta, sigma_hat, tau_subsequence, TauKind};

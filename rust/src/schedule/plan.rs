@@ -1,0 +1,266 @@
+//! A [`SamplePlan`] is the fully materialised per-request schedule: for each
+//! executable call it records the timestep fed to the ε-model, the two
+//! cumulative alphas of Eq. (12), and the noise scales. Plans cover both
+//! directions of the ODE view (Sec. 4.3): *generation* walks reversed(τ),
+//! *encoding* walks τ forward with σ = 0 (Eq. 12 is direction-agnostic — the
+//! same fused executable serves both).
+
+use crate::error::{Error, Result};
+use crate::schedule::{sigma_eta, sigma_hat, tau_subsequence, AlphaTable, TauKind};
+
+/// How much stochasticity the generative process injects (paper Table 1's
+/// rows): `Eta(0.0)` is DDIM, `Eta(1.0)` is DDPM, `SigmaHat` is the larger
+/// variance of App. D.3 (Ho et al.'s CIFAR10 setting).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NoiseMode {
+    Eta(f64),
+    SigmaHat,
+}
+
+impl NoiseMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        if s == "hat" || s == "sigma_hat" {
+            return Ok(NoiseMode::SigmaHat);
+        }
+        let eta: f64 = s
+            .parse()
+            .map_err(|_| Error::Schedule(format!("bad noise mode '{s}'")))?;
+        if !(0.0..=2.0).contains(&eta) {
+            return Err(Error::Schedule(format!("eta {eta} out of [0, 2]")));
+        }
+        Ok(NoiseMode::Eta(eta))
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            NoiseMode::Eta(e) => format!("eta={e:.1}"),
+            NoiseMode::SigmaHat => "sigma_hat".into(),
+        }
+    }
+
+    /// Deterministic processes need no per-step noise and yield the paper's
+    /// consistency / interpolation / encoding properties (Secs. 5.2–5.4).
+    pub fn is_deterministic(&self) -> bool {
+        matches!(self, NoiseMode::Eta(e) if *e == 0.0)
+    }
+}
+
+/// Parameters of one `denoise_step` executable call for one lane.
+///
+/// The fused kernel computes (per sample):
+///   x0   = (x - sqrt(1 - alpha_in) ε) / sqrt(alpha_in)
+///   out  = sqrt(alpha_out) x0 + sqrt(max(1 - alpha_out - σ_dir², 0)) ε
+///          + σ_dir · noise
+/// σ̂ mode wants a *larger* noise coefficient than the direction term uses
+/// (App. D.3), so the plan carries both: the engine passes `sigma_dir` to
+/// the kernel and pre-scales the noise lane by `sigma_noise / sigma_dir`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepParams {
+    /// Timestep fed to the ε-model's time embedding.
+    pub t_model: f64,
+    /// ᾱ at the point where ε is evaluated (the "from" end).
+    pub alpha_in: f64,
+    /// ᾱ at the target point (the "to" end).
+    pub alpha_out: f64,
+    /// σ used inside the kernel (direction coefficient *and* noise).
+    pub sigma_dir: f64,
+    /// Effective noise std; equals `sigma_dir` except in σ̂ mode.
+    pub sigma_noise: f64,
+}
+
+impl StepParams {
+    /// Multiplier the engine applies to the raw N(0,1) noise lane.
+    pub fn noise_scale(&self) -> f64 {
+        if self.sigma_noise == 0.0 {
+            0.0
+        } else if self.sigma_dir > 0.0 {
+            self.sigma_noise / self.sigma_dir
+        } else {
+            // only reachable when alpha_out == 1 (final σ̂ step), where the
+            // direction coefficient is clamped to 0 regardless of σ_dir —
+            // the engine passes σ_noise straight through as σ_dir.
+            1.0
+        }
+    }
+
+    /// Does this step consume random noise at all?
+    pub fn is_stochastic(&self) -> bool {
+        self.sigma_noise > 0.0
+    }
+}
+
+/// Direction of a plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// noise -> data, reversed(τ) (the paper's sampling trajectory)
+    Generate,
+    /// data -> noise, forward τ with σ=0 (Sec. 5.4 reconstruction)
+    Encode,
+}
+
+/// The materialised schedule for one request.
+#[derive(Debug, Clone)]
+pub struct SamplePlan {
+    pub direction: Direction,
+    pub tau: Vec<usize>,
+    pub mode: NoiseMode,
+    steps: Vec<StepParams>,
+}
+
+impl SamplePlan {
+    /// Build a generation plan: S steps walking reversed(τ) down to ᾱ_0 = 1.
+    pub fn generate(
+        abar: &AlphaTable,
+        kind: TauKind,
+        s: usize,
+        mode: NoiseMode,
+    ) -> Result<Self> {
+        let tau = tau_subsequence(kind, s, abar.t_max())?;
+        let mut steps = Vec::with_capacity(s);
+        // walk pairs (τ_i, τ_{i-1}) from i = S down to 1, τ_0 := 0
+        for i in (0..s).rev() {
+            let t_cur = tau[i];
+            let t_prev = if i == 0 { 0 } else { tau[i - 1] };
+            let (sigma_dir, sigma_noise) = match mode {
+                NoiseMode::Eta(eta) => {
+                    let sg = sigma_eta(abar, t_cur, t_prev, eta);
+                    (sg, sg)
+                }
+                NoiseMode::SigmaHat => {
+                    let s1 = sigma_eta(abar, t_cur, t_prev, 1.0);
+                    let sh = sigma_hat(abar, t_cur, t_prev);
+                    if t_prev == 0 {
+                        // ᾱ_out = 1 ⇒ direction coefficient is 0 anyway;
+                        // pass σ̂ straight through as the kernel sigma.
+                        (sh, sh)
+                    } else {
+                        (s1, sh)
+                    }
+                }
+            };
+            steps.push(StepParams {
+                t_model: t_cur as f64,
+                alpha_in: abar.abar(t_cur),
+                alpha_out: abar.abar(t_prev),
+                sigma_dir,
+                sigma_noise,
+            });
+        }
+        Ok(Self { direction: Direction::Generate, tau, mode, steps })
+    }
+
+    /// Build an encoding plan (deterministic, σ = 0): walk τ forward,
+    /// evaluating ε at the left end of each interval (Euler on Eq. 14's
+    /// reverse). `x_0 -> x_{τ_1} -> ... -> x_{τ_S}`.
+    pub fn encode(abar: &AlphaTable, kind: TauKind, s: usize) -> Result<Self> {
+        let tau = tau_subsequence(kind, s, abar.t_max())?;
+        let mut steps = Vec::with_capacity(s);
+        let mut t_prev = 0usize;
+        for &t_next in &tau {
+            steps.push(StepParams {
+                // model trained on t ∈ [1, T]; clamp the t=0 start
+                t_model: t_prev.max(1) as f64,
+                alpha_in: abar.abar(t_prev),
+                alpha_out: abar.abar(t_next),
+                sigma_dir: 0.0,
+                sigma_noise: 0.0,
+            });
+            t_prev = t_next;
+        }
+        Ok(Self { direction: Direction::Encode, tau, mode: NoiseMode::Eta(0.0), steps })
+    }
+
+    pub fn steps(&self) -> &[StepParams] {
+        &self.steps
+    }
+
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn abar() -> AlphaTable {
+        AlphaTable::linear(1000)
+    }
+
+    #[test]
+    fn generate_plan_shape() {
+        let t = abar();
+        let p = SamplePlan::generate(&t, TauKind::Linear, 10, NoiseMode::Eta(0.0)).unwrap();
+        assert_eq!(p.len(), 10);
+        // first step starts at tau_S (largest t), last step ends at abar=1
+        assert_eq!(p.steps()[0].t_model, *p.tau.last().unwrap() as f64);
+        assert_eq!(p.steps().last().unwrap().alpha_out, 1.0);
+        // alpha_in decreasing across steps, alpha_out > alpha_in everywhere
+        for st in p.steps() {
+            assert!(st.alpha_out > st.alpha_in);
+            assert_eq!(st.sigma_dir, 0.0);
+            assert!(!st.is_stochastic());
+        }
+    }
+
+    #[test]
+    fn ddpm_plan_is_stochastic_except_final_step() {
+        let t = abar();
+        let p = SamplePlan::generate(&t, TauKind::Linear, 10, NoiseMode::Eta(1.0)).unwrap();
+        let (last, rest) = p.steps().split_last().unwrap();
+        for st in rest {
+            assert!(st.is_stochastic());
+            assert!((st.noise_scale() - 1.0).abs() < 1e-12);
+        }
+        // final step lands on alpha_bar_0 = 1, where Eq. 16 gives sigma = 0:
+        // even DDPM's last hop (t=tau_1 -> 0) is deterministic.
+        assert_eq!(last.alpha_out, 1.0);
+        assert!(!last.is_stochastic());
+    }
+
+    #[test]
+    fn sigma_hat_noise_dominates_direction_sigma() {
+        let t = abar();
+        let p = SamplePlan::generate(&t, TauKind::Linear, 10, NoiseMode::SigmaHat).unwrap();
+        for st in &p.steps()[..p.len() - 1] {
+            assert!(st.sigma_noise > st.sigma_dir, "{st:?}");
+            assert!(st.noise_scale() > 1.0);
+        }
+        // final step: alpha_out = 1, sigma passes through
+        let last = p.steps().last().unwrap();
+        assert_eq!(last.alpha_out, 1.0);
+        assert_eq!(last.sigma_dir, last.sigma_noise);
+    }
+
+    #[test]
+    fn encode_plan_is_generation_reversed() {
+        let t = abar();
+        let g = SamplePlan::generate(&t, TauKind::Quadratic, 20, NoiseMode::Eta(0.0)).unwrap();
+        let e = SamplePlan::encode(&t, TauKind::Quadratic, 20).unwrap();
+        assert_eq!(g.tau, e.tau);
+        // encode alpha endpoints mirror generate's, reversed
+        let g_pairs: Vec<(f64, f64)> =
+            g.steps().iter().map(|s| (s.alpha_out, s.alpha_in)).collect();
+        let e_pairs: Vec<(f64, f64)> =
+            e.steps().iter().rev().map(|s| (s.alpha_in, s.alpha_out)).collect();
+        for (a, b) in g_pairs.iter().zip(&e_pairs) {
+            assert!((a.0 - b.0).abs() < 1e-15 && (a.1 - b.1).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(NoiseMode::parse("0").unwrap(), NoiseMode::Eta(0.0));
+        assert_eq!(NoiseMode::parse("0.5").unwrap(), NoiseMode::Eta(0.5));
+        assert_eq!(NoiseMode::parse("hat").unwrap(), NoiseMode::SigmaHat);
+        assert!(NoiseMode::parse("nope").is_err());
+        assert!(NoiseMode::parse("-1").is_err());
+        assert!(NoiseMode::Eta(0.0).is_deterministic());
+        assert!(!NoiseMode::Eta(0.2).is_deterministic());
+        assert!(!NoiseMode::SigmaHat.is_deterministic());
+    }
+}

@@ -1,0 +1,160 @@
+//! The sampling trajectory τ (Sec. 4.2) and noise scales σ(η), σ̂
+//! (Eq. 16, App. D.3).
+
+use crate::error::{Error, Result};
+use crate::schedule::AlphaTable;
+
+/// τ selection procedure (App. D.2). The paper uses quadratic for CIFAR10
+/// and linear elsewhere; our manifest picks per dataset the same way.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TauKind {
+    Linear,
+    Quadratic,
+}
+
+impl TauKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "linear" => Ok(TauKind::Linear),
+            "quadratic" => Ok(TauKind::Quadratic),
+            _ => Err(Error::Schedule(format!("unknown tau kind '{s}'"))),
+        }
+    }
+}
+
+/// Build the increasing sub-sequence τ ⊂ [1, T] of length S.
+/// `tau_i = floor(c·i)` (linear) or `floor(c·i²)` (quadratic), i = 1..S,
+/// with c chosen so τ_S lands near T, then clamped into [1, T] and
+/// deduplicated upward to stay strictly increasing for small S/T corners.
+pub fn tau_subsequence(kind: TauKind, s: usize, t_max: usize) -> Result<Vec<usize>> {
+    if s == 0 || s > t_max {
+        return Err(Error::Schedule(format!("dim(tau)={s} out of range for T={t_max}")));
+    }
+    let mut tau = Vec::with_capacity(s);
+    for i in 1..=s {
+        let v = match kind {
+            TauKind::Linear => (t_max as f64 / s as f64) * i as f64,
+            TauKind::Quadratic => (t_max as f64 / (s * s) as f64) * (i * i) as f64,
+        };
+        tau.push((v.floor() as usize).clamp(1, t_max));
+    }
+    // enforce strict monotonicity (quadratic floors can collide at tiny i)
+    for i in 1..tau.len() {
+        if tau[i] <= tau[i - 1] {
+            tau[i] = tau[i - 1] + 1;
+        }
+    }
+    if *tau.last().unwrap() > t_max {
+        return Err(Error::Schedule(format!(
+            "tau exceeded T after dedup: S={s} too dense for T={t_max}"
+        )));
+    }
+    Ok(tau)
+}
+
+/// Eq. (16): σ_{τ_i}(η) for one step τ_{i-1} -> τ_i boundary, where
+/// `a_cur = ᾱ_{τ_i}`, `a_prev = ᾱ_{τ_{i-1}}` (τ_0 := 0 so ᾱ = 1).
+pub fn sigma_eta(abar: &AlphaTable, t_cur: usize, t_prev: usize, eta: f64) -> f64 {
+    let a_cur = abar.abar(t_cur);
+    let a_prev = abar.abar(t_prev);
+    eta * ((1.0 - a_prev) / (1.0 - a_cur)).sqrt() * (1.0 - a_cur / a_prev).sqrt()
+}
+
+/// App. D.3: the *larger* DDPM variance σ̂ = sqrt(1 - ᾱ_{τ_i}/ᾱ_{τ_{i-1}})
+/// (the CIFAR10 setting of Ho et al.; the paper's Table-1 bottom row).
+pub fn sigma_hat(abar: &AlphaTable, t_cur: usize, t_prev: usize) -> f64 {
+    (1.0 - abar.abar(t_cur) / abar.abar(t_prev)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> AlphaTable {
+        AlphaTable::linear(1000)
+    }
+
+    #[test]
+    fn tau_is_strictly_increasing_in_range() {
+        for kind in [TauKind::Linear, TauKind::Quadratic] {
+            for s in [1, 2, 5, 10, 20, 50, 100, 500, 1000] {
+                let tau = tau_subsequence(kind, s, 1000).unwrap();
+                assert_eq!(tau.len(), s);
+                assert!(*tau.first().unwrap() >= 1);
+                assert!(*tau.last().unwrap() <= 1000);
+                assert!(tau.windows(2).all(|w| w[1] > w[0]), "{kind:?} S={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn tau_last_lands_near_t() {
+        for kind in [TauKind::Linear, TauKind::Quadratic] {
+            for s in [10, 50, 100] {
+                let tau = tau_subsequence(kind, s, 1000).unwrap();
+                assert!(
+                    *tau.last().unwrap() >= 990,
+                    "{kind:?} S={s}: tau_S = {}",
+                    tau.last().unwrap()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tau_full_length_is_identity() {
+        let tau = tau_subsequence(TauKind::Linear, 1000, 1000).unwrap();
+        assert_eq!(tau, (1..=1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn tau_rejects_invalid() {
+        assert!(tau_subsequence(TauKind::Linear, 0, 1000).is_err());
+        assert!(tau_subsequence(TauKind::Linear, 1001, 1000).is_err());
+    }
+
+    #[test]
+    fn sigma_eta_zero_is_zero() {
+        let t = table();
+        for (cur, prev) in [(100, 50), (1000, 900), (10, 0)] {
+            assert_eq!(sigma_eta(&t, cur, prev, 0.0), 0.0);
+        }
+    }
+
+    #[test]
+    fn sigma_eta_one_equals_ddpm_posterior_std() {
+        // eta=1 must reproduce the DDPM posterior sqrt((1-ā_prev)/(1-ā_t) β̃)
+        let t = table();
+        for (cur, prev) in [(500usize, 499usize), (100, 99), (1000, 999)] {
+            let s = sigma_eta(&t, cur, prev, 1.0);
+            let beta_tilde = (1.0 - t.abar(prev)) / (1.0 - t.abar(cur))
+                * (1.0 - t.abar(cur) / t.abar(prev));
+            assert!((s * s - beta_tilde).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sigma_hat_dominates_sigma_one() {
+        let t = table();
+        let tau = tau_subsequence(TauKind::Linear, 20, 1000).unwrap();
+        let mut prev = 0;
+        for &cur in &tau {
+            let s1 = sigma_eta(&t, cur, prev, 1.0);
+            let sh = sigma_hat(&t, cur, prev);
+            assert!(sh >= s1 - 1e-12, "t={cur}: sigma_hat {sh} < sigma(1) {s1}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn sigma_monotone_in_eta() {
+        let t = table();
+        let (cur, prev) = (400, 350);
+        let mut last = -1.0;
+        for eta in [0.0, 0.2, 0.5, 1.0] {
+            let s = sigma_eta(&t, cur, prev, eta);
+            assert!(s > last);
+            last = s;
+        }
+    }
+}

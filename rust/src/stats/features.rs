@@ -1,0 +1,157 @@
+//! The 24-dim proxy-FID feature map. EXACT mirror of
+//! `python/compile/features.py` (see that file for the rationale per dim);
+//! the cross-language agreement is enforced by the `feat_imgs/feat_out`
+//! golden pair in every dataset's artifact directory.
+
+/// Feature dimensionality (must match `features.FEAT_DIM` in python).
+pub const FEAT_DIM: usize = 24;
+
+const H: usize = 16;
+const W: usize = 16;
+
+/// Extract features from one 16×16 image (flattened, row-major, [-1,1]).
+pub fn extract_features(img: &[f32]) -> [f64; FEAT_DIM] {
+    assert_eq!(img.len(), H * W, "feature extractor wants 16x16");
+    let x: Vec<f64> = img.iter().map(|&v| v as f64).collect();
+    let at = |r: usize, c: usize| x[r * W + c];
+    let mut f = [0.0f64; FEAT_DIM];
+
+    // dims 0..16: 4x4 average pooling
+    for br in 0..4 {
+        for bc in 0..4 {
+            let mut s = 0.0;
+            for r in 0..4 {
+                for c in 0..4 {
+                    s += at(br * 4 + r, bc * 4 + c);
+                }
+            }
+            f[br * 4 + bc] = s / 16.0;
+        }
+    }
+
+    // 16: global mean, 17: global std (population, like numpy's default)
+    let n = (H * W) as f64;
+    let mean = x.iter().sum::<f64>() / n;
+    let var = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n;
+    f[16] = mean;
+    f[17] = var.sqrt();
+
+    // 18: mean |horizontal gradient| (np.diff axis=2 -> 16x15 values)
+    let mut gx = 0.0;
+    for r in 0..H {
+        for c in 0..W - 1 {
+            gx += (at(r, c + 1) - at(r, c)).abs();
+        }
+    }
+    f[18] = gx / (H * (W - 1)) as f64;
+
+    // 19: mean |vertical gradient| (15x16 values)
+    let mut gy = 0.0;
+    for r in 0..H - 1 {
+        for c in 0..W {
+            gy += (at(r + 1, c) - at(r, c)).abs();
+        }
+    }
+    f[19] = gy / ((H - 1) * W) as f64;
+
+    // 20: mean |4-neighbour laplacian| over the 14x14 interior
+    let mut lap = 0.0;
+    for r in 1..H - 1 {
+        for c in 1..W - 1 {
+            lap += (4.0 * at(r, c) - at(r - 1, c) - at(r + 1, c) - at(r, c - 1) - at(r, c + 1))
+                .abs();
+        }
+    }
+    f[20] = lap / ((H - 2) * (W - 2)) as f64;
+
+    // 21: std of the high band (x - 3x3 box blur with edge clamping)
+    let clamp_at = |r: isize, c: isize| {
+        let rr = r.clamp(0, (H - 1) as isize) as usize;
+        let cc = c.clamp(0, (W - 1) as isize) as usize;
+        at(rr, cc)
+    };
+    let mut hb = Vec::with_capacity(H * W);
+    for r in 0..H as isize {
+        for c in 0..W as isize {
+            let mut s = 0.0;
+            for dr in -1..=1 {
+                for dc in -1..=1 {
+                    s += clamp_at(r + dr, c + dc);
+                }
+            }
+            hb.push(at(r as usize, c as usize) - s / 9.0);
+        }
+    }
+    let hm = hb.iter().sum::<f64>() / n;
+    f[21] = (hb.iter().map(|v| (v - hm) * (v - hm)).sum::<f64>() / n).sqrt();
+
+    // 22: std of row means, 23: std of column means
+    let mut row_means = [0.0f64; H];
+    let mut col_means = [0.0f64; W];
+    for r in 0..H {
+        for c in 0..W {
+            row_means[r] += at(r, c) / W as f64;
+            col_means[c] += at(r, c) / H as f64;
+        }
+    }
+    let std_of = |v: &[f64]| {
+        let m = v.iter().sum::<f64>() / v.len() as f64;
+        (v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64).sqrt()
+    };
+    f[22] = std_of(&row_means);
+    f[23] = std_of(&col_means);
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_image_features() {
+        let img = vec![0.5f32; 256];
+        let f = extract_features(&img);
+        for d in 0..16 {
+            assert!((f[d] - 0.5).abs() < 1e-12);
+        }
+        assert!((f[16] - 0.5).abs() < 1e-12);
+        for d in 17..24 {
+            assert!(f[d].abs() < 1e-12, "dim {d} = {}", f[d]);
+        }
+    }
+
+    #[test]
+    fn vertical_edge_has_horizontal_gradient_only() {
+        // left half -1, right half +1
+        let mut img = vec![-1.0f32; 256];
+        for r in 0..16 {
+            for c in 8..16 {
+                img[r * 16 + c] = 1.0;
+            }
+        }
+        let f = extract_features(&img);
+        assert!(f[18] > 0.0, "gx {}", f[18]);
+        assert!(f[19] == 0.0, "gy {}", f[19]);
+        assert!(f[23] > f[22], "col-structure should dominate");
+        // pooled: left blocks -1, right blocks +1
+        assert!((f[0] + 1.0).abs() < 1e-12 && (f[3] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noise_raises_laplacian_band() {
+        use crate::rng::GaussianSource;
+        let mut g = GaussianSource::seeded(8);
+        let clean = vec![0.0f32; 256];
+        let noisy: Vec<f32> = (0..256).map(|_| 0.3 * g.next() as f32).collect();
+        let fc = extract_features(&clean);
+        let fnz = extract_features(&noisy);
+        assert!(fnz[20] > fc[20] + 0.1);
+        assert!(fnz[21] > fc[21] + 0.1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_size_panics() {
+        extract_features(&[0.0; 100]);
+    }
+}

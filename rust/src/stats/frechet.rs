@@ -1,0 +1,126 @@
+//! Fréchet distance between two gaussians — the functional behind FID
+//! (Heusel et al. 2017, used throughout the paper's Table 1/3):
+//!
+//!   d² = |μ₁ − μ₂|² + Tr(Σ₁ + Σ₂ − 2 (Σ₁Σ₂)^{1/2})
+//!
+//! `(Σ₁Σ₂)^{1/2}` is evaluated through the symmetric form
+//! `√Σ₁ · sqrtm(√Σ₁ Σ₂ √Σ₁) · √Σ₁⁻¹`-free trace identity:
+//! `Tr((Σ₁Σ₂)^{1/2}) = Tr(sqrtm(√Σ₁ Σ₂ √Σ₁))`, keeping every
+//! decomposition on a symmetric PSD matrix.
+
+use crate::error::Result;
+use crate::linalg::{sqrtm_spd, Mat};
+use crate::stats::GaussianFit;
+
+/// Squared Fréchet distance between two fitted gaussians.
+pub fn frechet_distance(a: &GaussianFit, b: &GaussianFit) -> Result<f64> {
+    let mu_a = a.mean();
+    let mu_b = b.mean();
+    let cov_a = a.covariance()?;
+    let cov_b = b.covariance()?;
+
+    let mean_term: f64 = mu_a
+        .iter()
+        .zip(mu_b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum();
+
+    // tiny ridge: covariance estimates from finite samples can be
+    // rank-deficient (constant feature dims), same epsilon both sides so
+    // d(N, N) stays 0.
+    let eps = 1e-10;
+    let n = cov_a.rows();
+    let ridge = Mat::identity(n).scale(eps);
+    let ca = cov_a.add(&ridge)?;
+    let cb = cov_b.add(&ridge)?;
+
+    let sa = sqrtm_spd(&ca)?;
+    let inner = sa.matmul(&cb)?.matmul(&sa)?.symmetrize();
+    let cross = sqrtm_spd(&inner)?.trace();
+
+    let d2 = mean_term + ca.trace() + cb.trace() - 2.0 * cross;
+    // clamp fp negatives around zero
+    Ok(d2.max(0.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::GaussianSource;
+    use crate::stats::FEAT_DIM;
+
+    fn fit_from(seed: u64, n: usize, shift: f64, scale: f64) -> GaussianFit {
+        let mut g = GaussianSource::seeded(seed);
+        let mut fit = GaussianFit::new();
+        for _ in 0..n {
+            let mut x = [0.0f64; FEAT_DIM];
+            for v in &mut x {
+                *v = shift + scale * g.next();
+            }
+            fit.push(&x);
+        }
+        fit
+    }
+
+    #[test]
+    fn identical_fit_is_zero() {
+        let a = fit_from(1, 400, 0.0, 1.0);
+        let d = frechet_distance(&a, &a).unwrap();
+        assert!(d < 1e-9, "{d}");
+    }
+
+    #[test]
+    fn symmetry() {
+        let a = fit_from(1, 300, 0.0, 1.0);
+        let b = fit_from(2, 300, 0.5, 1.5);
+        let ab = frechet_distance(&a, &b).unwrap();
+        let ba = frechet_distance(&b, &a).unwrap();
+        assert!((ab - ba).abs() < 1e-6 * ab.max(1.0), "{ab} vs {ba}");
+        assert!(ab > 0.0);
+    }
+
+    #[test]
+    fn mean_shift_analytic() {
+        // For equal covariances, d² ≈ |Δμ|² = FEAT_DIM · shift²
+        let a = fit_from(3, 4000, 0.0, 1.0);
+        let b = fit_from(4, 4000, 1.0, 1.0);
+        let d = frechet_distance(&a, &b).unwrap();
+        let want = FEAT_DIM as f64;
+        assert!((d - want).abs() / want < 0.15, "d² = {d}, want ≈ {want}");
+    }
+
+    #[test]
+    fn scale_mismatch_analytic() {
+        // μ equal, Σ₁ = I, Σ₂ = s²I: d² = FEAT_DIM (s - 1)²
+        let a = fit_from(5, 6000, 0.0, 1.0);
+        let b = fit_from(6, 6000, 0.0, 2.0);
+        let d = frechet_distance(&a, &b).unwrap();
+        let want = FEAT_DIM as f64; // (2-1)^2 * 24
+        assert!((d - want).abs() / want < 0.2, "d² = {d}, want ≈ {want}");
+    }
+
+    #[test]
+    fn monotone_in_shift() {
+        let a = fit_from(7, 1000, 0.0, 1.0);
+        let mut last = -1.0;
+        for (i, shift) in [0.2, 0.5, 1.0, 2.0].iter().enumerate() {
+            let b = fit_from(100 + i as u64, 1000, *shift, 1.0);
+            let d = frechet_distance(&a, &b).unwrap();
+            assert!(d > last, "shift {shift}: {d} <= {last}");
+            last = d;
+        }
+    }
+
+    #[test]
+    fn degenerate_constant_dims_tolerated() {
+        // all-constant features: rank-0 covariance on both sides
+        let mut a = GaussianFit::new();
+        let mut b = GaussianFit::new();
+        for _ in 0..10 {
+            a.push(&[1.0; FEAT_DIM]);
+            b.push(&[2.0; FEAT_DIM]);
+        }
+        let d = frechet_distance(&a, &b).unwrap();
+        assert!((d - FEAT_DIM as f64).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,142 @@
+//! Streaming gaussian fit (mean + covariance) over feature vectors, using
+//! Welford/Chan-style accumulation so the Table-1 harness can stream
+//! thousands of generated samples without holding them.
+
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+use crate::stats::FEAT_DIM;
+
+/// Accumulates mean and covariance of FEAT_DIM-dim vectors.
+#[derive(Debug, Clone)]
+pub struct GaussianFit {
+    n: usize,
+    mean: Vec<f64>,
+    // sum of outer products of deviations (co-moment matrix M2)
+    m2: Mat,
+}
+
+impl Default for GaussianFit {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl GaussianFit {
+    pub fn new() -> Self {
+        Self { n: 0, mean: vec![0.0; FEAT_DIM], m2: Mat::zeros(FEAT_DIM, FEAT_DIM) }
+    }
+
+    /// Add one observation (Welford update generalised to covariance).
+    pub fn push(&mut self, x: &[f64; FEAT_DIM]) {
+        self.n += 1;
+        let nf = self.n as f64;
+        let mut delta = [0.0f64; FEAT_DIM];
+        for i in 0..FEAT_DIM {
+            delta[i] = x[i] - self.mean[i];
+            self.mean[i] += delta[i] / nf;
+        }
+        // M2 += delta ⊗ (x - new_mean)
+        for i in 0..FEAT_DIM {
+            let d2i = x[i] - self.mean[i];
+            for j in 0..FEAT_DIM {
+                self.m2[(i, j)] += delta[j] * d2i;
+            }
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    pub fn mean(&self) -> &[f64] {
+        &self.mean
+    }
+
+    /// Sample covariance (1/(n-1)), symmetrised against fp drift.
+    pub fn covariance(&self) -> Result<Mat> {
+        if self.n < 2 {
+            return Err(Error::Linalg(format!("covariance needs n >= 2, have {}", self.n)));
+        }
+        Ok(self.m2.scale(1.0 / (self.n as f64 - 1.0)).symmetrize())
+    }
+
+    /// Build directly from precomputed (mu, cov) — how the python-dumped
+    /// reference stats enter the pipeline.
+    pub fn from_moments(mean: Vec<f64>, cov: Mat, n: usize) -> Result<Self> {
+        if mean.len() != FEAT_DIM || cov.rows() != FEAT_DIM || cov.cols() != FEAT_DIM {
+            return Err(Error::Shape("from_moments dims".into()));
+        }
+        let m2 = cov.scale((n as f64 - 1.0).max(1.0));
+        Ok(Self { n, mean, m2 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::GaussianSource;
+
+    #[test]
+    fn matches_two_pass_computation() {
+        let mut g = GaussianSource::seeded(4);
+        let n = 500;
+        let data: Vec<[f64; FEAT_DIM]> = (0..n)
+            .map(|_| {
+                let mut x = [0.0; FEAT_DIM];
+                for v in &mut x {
+                    *v = g.next();
+                }
+                x
+            })
+            .collect();
+        let mut fit = GaussianFit::new();
+        for x in &data {
+            fit.push(x);
+        }
+        // two-pass reference
+        let mut mu = [0.0f64; FEAT_DIM];
+        for x in &data {
+            for i in 0..FEAT_DIM {
+                mu[i] += x[i] / n as f64;
+            }
+        }
+        let mut cov = Mat::zeros(FEAT_DIM, FEAT_DIM);
+        for x in &data {
+            for i in 0..FEAT_DIM {
+                for j in 0..FEAT_DIM {
+                    cov[(i, j)] += (x[i] - mu[i]) * (x[j] - mu[j]) / (n as f64 - 1.0);
+                }
+            }
+        }
+        for i in 0..FEAT_DIM {
+            assert!((fit.mean()[i] - mu[i]).abs() < 1e-12);
+        }
+        assert!(fit.covariance().unwrap().max_abs_diff(&cov) < 1e-10);
+    }
+
+    #[test]
+    fn needs_two_points() {
+        let mut fit = GaussianFit::new();
+        assert!(fit.covariance().is_err());
+        fit.push(&[0.0; FEAT_DIM]);
+        assert!(fit.covariance().is_err());
+        fit.push(&[1.0; FEAT_DIM]);
+        assert!(fit.covariance().is_ok());
+    }
+
+    #[test]
+    fn from_moments_round_trips() {
+        let mut g = GaussianSource::seeded(9);
+        let mut fit = GaussianFit::new();
+        for _ in 0..50 {
+            let mut x = [0.0; FEAT_DIM];
+            for v in &mut x {
+                *v = g.next();
+            }
+            fit.push(&x);
+        }
+        let cov = fit.covariance().unwrap();
+        let re = GaussianFit::from_moments(fit.mean().to_vec(), cov.clone(), fit.count()).unwrap();
+        assert!(re.covariance().unwrap().max_abs_diff(&cov) < 1e-12);
+    }
+}

@@ -1,0 +1,12 @@
+//! Statistics substrate for the evaluation pipeline: the fixed proxy-FID
+//! feature map (mirrors `python/compile/features.py` bit-for-bit in float64
+//! — enforced by a golden test against python-dumped features), a streaming
+//! gaussian fitter, and the Fréchet distance.
+
+mod features;
+mod frechet;
+mod gaussian;
+
+pub use features::{extract_features, FEAT_DIM};
+pub use frechet::frechet_distance;
+pub use gaussian::GaussianFit;

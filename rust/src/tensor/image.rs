@@ -1,0 +1,117 @@
+//! Image output for the paper's qualitative figures (Figs. 3, 5, 6):
+//! map [-1, 1] samples to 8-bit grayscale, tile them into grids, and write
+//! binary PGM (P5) — viewable everywhere, zero codec dependencies.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// Map a [-1, 1] image to u8 grayscale with clamping.
+pub fn to_u8_gray(img: &[f32]) -> Vec<u8> {
+    img.iter()
+        .map(|&v| {
+            let x = (v.clamp(-1.0, 1.0) + 1.0) * 0.5 * 255.0;
+            x.round() as u8
+        })
+        .collect()
+}
+
+/// Tile `n = rows*cols` images of `[1, h, w]` (flattened) into one
+/// `[rows*h + (rows-1)*pad, cols*w + (cols-1)*pad]` canvas with a mid-gray
+/// separator, matching the paper's sample-grid figures.
+pub fn tile_grid(images: &[&[f32]], rows: usize, cols: usize, h: usize, w: usize) -> Result<Tensor> {
+    if images.len() != rows * cols {
+        return Err(Error::Shape(format!(
+            "tile_grid wants {} images, got {}",
+            rows * cols,
+            images.len()
+        )));
+    }
+    for (i, im) in images.iter().enumerate() {
+        if im.len() != h * w {
+            return Err(Error::Shape(format!(
+                "image {i} has {} pixels, expected {}",
+                im.len(),
+                h * w
+            )));
+        }
+    }
+    let pad = 1usize;
+    let gh = rows * h + (rows - 1) * pad;
+    let gw = cols * w + (cols - 1) * pad;
+    let mut canvas = Tensor::full(vec![gh, gw], 0.0);
+    for r in 0..rows {
+        for c in 0..cols {
+            let img = images[r * cols + c];
+            let oy = r * (h + pad);
+            let ox = c * (w + pad);
+            for y in 0..h {
+                let dst = &mut canvas.data_mut()[(oy + y) * gw + ox..(oy + y) * gw + ox + w];
+                dst.copy_from_slice(&img[y * w..(y + 1) * w]);
+            }
+        }
+    }
+    Ok(canvas)
+}
+
+/// Write a 2-d tensor in [-1, 1] as a binary PGM file.
+pub fn save_pgm(path: impl AsRef<Path>, img: &Tensor) -> Result<()> {
+    let shape = img.shape();
+    if shape.len() != 2 {
+        return Err(Error::Shape(format!("save_pgm wants rank-2, got {shape:?}")));
+    }
+    let (h, w) = (shape[0], shape[1]);
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = File::create(path)?;
+    write!(f, "P5\n{w} {h}\n255\n")?;
+    f.write_all(&to_u8_gray(img.data()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u8_mapping_endpoints() {
+        assert_eq!(to_u8_gray(&[-1.0, 0.0, 1.0, -5.0, 5.0]), vec![0, 128, 255, 0, 255]);
+    }
+
+    #[test]
+    fn grid_layout() {
+        let a = vec![1.0f32; 4]; // 2x2 white
+        let b = vec![-1.0f32; 4]; // 2x2 black
+        let g = tile_grid(&[&a, &b, &b, &a], 2, 2, 2, 2).unwrap();
+        assert_eq!(g.shape(), &[5, 5]);
+        // top-left block is white, top-right black
+        assert_eq!(g.data()[0], 1.0);
+        assert_eq!(g.data()[3], -1.0);
+        // separator column is 0
+        assert_eq!(g.data()[2], 0.0);
+    }
+
+    #[test]
+    fn grid_validates() {
+        let a = vec![0.0f32; 4];
+        assert!(tile_grid(&[&a], 2, 2, 2, 2).is_err());
+        let bad = vec![0.0f32; 3];
+        assert!(tile_grid(&[&a, &bad, &a, &a], 2, 2, 2, 2).is_err());
+    }
+
+    #[test]
+    fn pgm_round_trip_header() {
+        let img = Tensor::zeros(vec![3, 4]);
+        let dir = std::env::temp_dir().join("ddim_serve_test_pgm");
+        let path = dir.join("t.pgm");
+        save_pgm(&path, &img).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.starts_with(b"P5\n4 3\n255\n"));
+        assert_eq!(bytes.len(), b"P5\n4 3\n255\n".len() + 12);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

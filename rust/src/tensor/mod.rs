@@ -1,0 +1,9 @@
+//! Tensor substrate: a deliberately small row-major `f32` n-d array used on
+//! the request path (sample buffers, literal marshalling) plus image
+//! utilities (grids, PGM/PPM writers) for the paper's qualitative figures.
+
+mod image;
+mod ndarray;
+
+pub use image::{save_pgm, tile_grid, to_u8_gray};
+pub use ndarray::Tensor;

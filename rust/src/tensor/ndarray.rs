@@ -1,0 +1,200 @@
+//! Row-major f32 n-d array. The request path only ever needs contiguous
+//! buffers with shape bookkeeping (PJRT literals are flat); anything fancier
+//! (views, strides, broadcasting) would be dead weight.
+
+use crate::error::{Error, Result};
+
+/// A contiguous row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Construct from shape + data; checks the element count.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Shape(format!(
+                "shape {shape:?} wants {n} elements, got {}",
+                data.len()
+            )));
+        }
+        Ok(Self { shape, data })
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    /// Fill with a constant.
+    pub fn full(shape: Vec<usize>, v: f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![v; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of the same element count.
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return Err(Error::Shape(format!(
+                "cannot reshape {:?} ({} elems) to {shape:?}",
+                self.shape,
+                self.data.len()
+            )));
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Row `i` of a 2-d (or higher: leading-axis slice) tensor.
+    pub fn slice_outer(&self, i: usize) -> Result<&[f32]> {
+        let outer = *self
+            .shape
+            .first()
+            .ok_or_else(|| Error::Shape("slice_outer on rank-0 tensor".into()))?;
+        if i >= outer {
+            return Err(Error::Shape(format!("index {i} out of bounds for axis 0 ({outer})")));
+        }
+        let stride = self.data.len() / outer;
+        Ok(&self.data[i * stride..(i + 1) * stride])
+    }
+
+    /// Mutable leading-axis slice.
+    pub fn slice_outer_mut(&mut self, i: usize) -> Result<&mut [f32]> {
+        let outer = *self
+            .shape
+            .first()
+            .ok_or_else(|| Error::Shape("slice_outer on rank-0 tensor".into()))?;
+        if i >= outer {
+            return Err(Error::Shape(format!("index {i} out of bounds for axis 0 ({outer})")));
+        }
+        let stride = self.data.len() / outer;
+        Ok(&mut self.data[i * stride..(i + 1) * stride])
+    }
+
+    /// Stack equal-shape tensors along a new leading axis.
+    pub fn stack(items: &[&Tensor]) -> Result<Tensor> {
+        let first = items
+            .first()
+            .ok_or_else(|| Error::Shape("stack of zero tensors".into()))?;
+        let mut data = Vec::with_capacity(first.len() * items.len());
+        for t in items {
+            if t.shape != first.shape {
+                return Err(Error::Shape(format!(
+                    "stack shape mismatch: {:?} vs {:?}",
+                    t.shape, first.shape
+                )));
+            }
+            data.extend_from_slice(&t.data);
+        }
+        let mut shape = vec![items.len()];
+        shape.extend_from_slice(&first.shape);
+        Ok(Tensor { shape, data })
+    }
+
+    /// Mean squared difference against another tensor of the same shape —
+    /// the paper's Table-2 per-dimension reconstruction error.
+    pub fn mse(&self, other: &Tensor) -> Result<f64> {
+        if self.shape != other.shape {
+            return Err(Error::Shape(format!(
+                "mse shape mismatch: {:?} vs {:?}",
+                self.shape, other.shape
+            )));
+        }
+        let s: f64 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum();
+        Ok(s / self.data.len() as f64)
+    }
+
+    /// Max absolute difference (golden-test comparator).
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        if self.shape != other.shape {
+            return Err(Error::Shape(format!(
+                "diff shape mismatch: {:?} vs {:?}",
+                self.shape, other.shape
+            )));
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_count() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn reshape_and_slice() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(t.slice_outer(1).unwrap(), &[3.0, 4.0, 5.0]);
+        assert!(t.slice_outer(2).is_err());
+        let r = t.clone().reshape(vec![3, 2]).unwrap();
+        assert_eq!(r.slice_outer(2).unwrap(), &[4.0, 5.0]);
+        assert!(t.reshape(vec![4, 2]).is_err());
+    }
+
+    #[test]
+    fn stack_and_mse() {
+        let a = Tensor::full(vec![4], 1.0);
+        let b = Tensor::full(vec![4], 3.0);
+        let s = Tensor::stack(&[&a, &b]).unwrap();
+        assert_eq!(s.shape(), &[2, 4]);
+        assert_eq!(a.mse(&b).unwrap(), 4.0);
+        assert_eq!(a.max_abs_diff(&b).unwrap(), 2.0);
+        let c = Tensor::full(vec![5], 0.0);
+        assert!(Tensor::stack(&[&a, &c]).is_err());
+        assert!(a.mse(&c).is_err());
+    }
+
+    #[test]
+    fn slice_outer_mut_writes_through() {
+        let mut t = Tensor::zeros(vec![2, 2]);
+        t.slice_outer_mut(1).unwrap().copy_from_slice(&[7.0, 8.0]);
+        assert_eq!(t.data(), &[0.0, 0.0, 7.0, 8.0]);
+    }
+}

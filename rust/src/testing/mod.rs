@@ -1,0 +1,143 @@
+//! Mini property-testing harness (the offline build has no `proptest`).
+//!
+//! [`check`] runs a property over `n` seeded random cases; on failure it
+//! retries the failing case with progressively "smaller" generator budgets
+//! (a crude shrink) and reports the seed so the case is replayable:
+//! `CASE_SEED=<seed> cargo test <name>`.
+
+use crate::rng::Pcg64;
+
+/// Context handed to each property case: a seeded RNG plus size helpers.
+pub struct Gen {
+    pub rng: Pcg64,
+    /// Size budget for this case (grows across cases, shrinks on failure).
+    pub size: usize,
+}
+
+impl Gen {
+    /// Uniform usize in [lo, hi] scaled by the current size budget:
+    /// the effective upper bound interpolates from lo toward hi as the
+    /// case index grows — small cases first, like proptest.
+    pub fn int_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        let span = hi - lo;
+        let eff = lo + (span * self.size.min(100)) / 100;
+        let eff = eff.max(lo);
+        lo + self.rng.next_below((eff - lo + 1) as u64) as usize
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    /// Random f32 vector with entries in [lo, hi).
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n)
+            .map(|_| self.rng.uniform(lo as f64, hi as f64) as f32)
+            .collect()
+    }
+
+    /// Pick one of the provided items.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.next_below(items.len() as u64) as usize]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+}
+
+/// Run `prop` over `n` random cases. Panics with the failing seed (and
+/// honours `CASE_SEED` to replay one exact case).
+pub fn check<F>(name: &str, n: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    if let Ok(seed_s) = std::env::var("CASE_SEED") {
+        let seed: u64 = seed_s.parse().expect("CASE_SEED must be u64");
+        let mut g = Gen { rng: Pcg64::seeded(seed), size: 100 };
+        if let Err(msg) = prop(&mut g) {
+            panic!("property '{name}' failed on CASE_SEED={seed}: {msg}");
+        }
+        return;
+    }
+    for case in 0..n {
+        // derive a per-case seed deterministically from the property name
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in name.bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+        let seed = h.wrapping_add((case as u64).wrapping_mul(0x9e3779b97f4a7c15));
+        let size = 1 + (case * 100) / n.max(1);
+        let mut g = Gen { rng: Pcg64::seeded(seed), size };
+        if let Err(msg) = prop(&mut g) {
+            // crude shrink: retry the same seed at smaller size budgets and
+            // report the smallest still-failing configuration
+            let mut best = (size, msg.clone());
+            for s in [1usize, 5, 10, 25, 50] {
+                if s >= size {
+                    break;
+                }
+                let mut g2 = Gen { rng: Pcg64::seeded(seed), size: s };
+                if let Err(m2) = prop(&mut g2) {
+                    best = (s, m2);
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, size {}, replay with CASE_SEED={seed}): {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("always_ok", 50, |g| {
+            count += 1;
+            let v = g.int_in(0, 10);
+            if v <= 10 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_bad' failed")]
+    fn failing_property_reports_seed() {
+        check("always_bad", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn sizes_grow_across_cases() {
+        let mut sizes = Vec::new();
+        check("size_probe", 20, |g| {
+            sizes.push(g.size);
+            Ok(())
+        });
+        assert!(sizes[0] < *sizes.last().unwrap());
+    }
+
+    #[test]
+    fn int_in_bounds_hold() {
+        check("int_in_bounds", 200, |g| {
+            let lo = g.int_in(0, 5);
+            let hi = lo + g.int_in(0, 20);
+            let v = g.int_in(lo, hi);
+            if v < lo || v > hi {
+                return Err(format!("{v} outside [{lo}, {hi}]"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,120 @@
+//! Workload generation for `serve_e2e` and the coordinator benches: a
+//! Poisson (exponential inter-arrival) open-loop generator over a mix of
+//! request classes — the standard serving-evaluation setup.
+
+use crate::coordinator::request::{Request, RequestBody};
+use crate::rng::Pcg64;
+use crate::schedule::{NoiseMode, TauKind};
+
+/// One request class in the mix.
+#[derive(Debug, Clone)]
+pub struct RequestClass {
+    /// relative weight within the mix
+    pub weight: f64,
+    pub steps: usize,
+    pub mode: NoiseMode,
+    pub count: usize,
+}
+
+/// Open-loop Poisson workload over a class mix.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub dataset: String,
+    pub classes: Vec<RequestClass>,
+    /// mean arrivals per second
+    pub rate_hz: f64,
+}
+
+impl Workload {
+    /// The default mixed workload used in EXPERIMENTS.md: interactive
+    /// low-step DDIM requests, batch high-quality requests, and a few
+    /// stochastic DDPM ones.
+    pub fn standard(dataset: &str, rate_hz: f64) -> Self {
+        Self {
+            dataset: dataset.to_string(),
+            rate_hz,
+            classes: vec![
+                RequestClass { weight: 0.5, steps: 10, mode: NoiseMode::Eta(0.0), count: 1 },
+                RequestClass { weight: 0.25, steps: 20, mode: NoiseMode::Eta(0.0), count: 4 },
+                RequestClass { weight: 0.15, steps: 50, mode: NoiseMode::Eta(0.0), count: 1 },
+                RequestClass { weight: 0.1, steps: 20, mode: NoiseMode::Eta(1.0), count: 1 },
+            ],
+        }
+    }
+
+    /// Generate `n` (arrival_offset_seconds, request) pairs.
+    pub fn generate(&self, n: usize, seed: u64) -> Vec<(f64, Request)> {
+        let mut rng = Pcg64::seeded(seed);
+        let total_w: f64 = self.classes.iter().map(|c| c.weight).sum();
+        let mut t = 0.0f64;
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            // exponential inter-arrival
+            let u = 1.0 - rng.next_f64();
+            t += -u.ln() / self.rate_hz;
+            // pick a class by weight
+            let mut pick = rng.next_f64() * total_w;
+            let mut class = &self.classes[0];
+            for c in &self.classes {
+                pick -= c.weight;
+                if pick <= 0.0 {
+                    class = c;
+                    break;
+                }
+            }
+            out.push((
+                t,
+                Request {
+                    dataset: self.dataset.clone(),
+                    steps: class.steps,
+                    mode: class.mode,
+                    tau: TauKind::Linear,
+                    body: RequestBody::Generate { count: class.count, seed: seed * 1000 + i as u64 },
+                    return_images: false,
+                },
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_are_increasing_and_rate_is_right() {
+        let w = Workload::standard("sprites", 100.0);
+        let reqs = w.generate(2000, 7);
+        assert_eq!(reqs.len(), 2000);
+        assert!(reqs.windows(2).all(|p| p[1].0 > p[0].0));
+        let span = reqs.last().unwrap().0;
+        let rate = 2000.0 / span;
+        assert!((rate - 100.0).abs() < 10.0, "measured rate {rate}");
+    }
+
+    #[test]
+    fn mix_respects_weights() {
+        let w = Workload::standard("sprites", 10.0);
+        let reqs = w.generate(4000, 3);
+        let s10 = reqs.iter().filter(|(_, r)| r.steps == 10).count() as f64 / 4000.0;
+        assert!((s10 - 0.5).abs() < 0.05, "class-1 fraction {s10}");
+        let stoch = reqs
+            .iter()
+            .filter(|(_, r)| !r.mode.is_deterministic())
+            .count() as f64
+            / 4000.0;
+        assert!((stoch - 0.1).abs() < 0.03, "stochastic fraction {stoch}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let w = Workload::standard("sprites", 10.0);
+        let a = w.generate(50, 1);
+        let b = w.generate(50, 1);
+        for ((ta, ra), (tb, rb)) in a.iter().zip(&b) {
+            assert_eq!(ta, tb);
+            assert_eq!(ra.steps, rb.steps);
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Cross-language golden tests: the rust-loaded HLO executable must
+//! reproduce the outputs the python (jax + Pallas) build computed for fixed
+//! inputs, and the rust feature extractor must match the python one.
+//!
+//! These are the tests that pin the whole L1→L2→L3 stack together. They
+//! need `make artifacts` to have run; they skip (with a loud message) when
+//! the artifact tree is absent so `cargo test` works on a fresh checkout.
+
+use ddim_serve::artifacts::{read_tensor, read_tensor_f64};
+use ddim_serve::runtime::{Runtime, StepOutput};
+use ddim_serve::stats::{extract_features, FEAT_DIM};
+
+const ROOT: &str = env!("CARGO_MANIFEST_DIR");
+
+fn artifacts_root() -> String {
+    format!("{ROOT}/artifacts")
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&artifacts_root()).join("manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+#[test]
+fn golden_denoise_step_matches_python() {
+    require_artifacts!();
+    let mut rt = Runtime::load(artifacts_root()).unwrap();
+    let datasets: Vec<String> = rt.manifest().datasets.keys().cloned().collect();
+    for ds in datasets {
+        for bucket in [1usize, 4] {
+            let g = |name: &str| {
+                read_tensor(rt.manifest().golden_path(&ds, &format!("b{bucket}_{name}")))
+                    .unwrap_or_else(|e| panic!("golden {ds}/b{bucket}_{name}: {e}"))
+            };
+            let x = g("x");
+            let t = g("t");
+            let a_t = g("alpha_t");
+            let a_p = g("alpha_prev");
+            let sigma = g("sigma");
+            let noise = g("noise");
+            let want_x_prev = g("x_prev");
+            let want_eps = g("eps");
+            let want_x0 = g("x0");
+
+            let dim = rt.manifest().sample_dim();
+            let mut out = StepOutput::zeros(bucket * dim);
+            let exe = rt.executable(&ds, bucket).unwrap();
+            exe.run(
+                x.data(),
+                t.data(),
+                a_t.data(),
+                a_p.data(),
+                sigma.data(),
+                noise.data(),
+                &mut out,
+            )
+            .unwrap();
+
+            let check = |name: &str, got: &[f32], want: &[f32]| {
+                let max = got
+                    .iter()
+                    .zip(want)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(
+                    max < 2e-4,
+                    "{ds} b{bucket} {name}: max abs diff {max} exceeds tolerance"
+                );
+            };
+            check("x_prev", &out.x_prev, want_x_prev.data());
+            check("eps", &out.eps, want_eps.data());
+            check("x0", &out.x0, want_x0.data());
+        }
+    }
+}
+
+#[test]
+fn golden_features_match_python() {
+    require_artifacts!();
+    let rt = Runtime::load(artifacts_root()).unwrap();
+    let datasets: Vec<String> = rt.manifest().datasets.keys().cloned().collect();
+    for ds in datasets {
+        let imgs = read_tensor(rt.manifest().golden_path(&ds, "feat_imgs")).unwrap();
+        let (shape, want) =
+            read_tensor_f64(rt.manifest().golden_path(&ds, "feat_out")).unwrap();
+        assert_eq!(shape[1], FEAT_DIM);
+        let n = shape[0];
+        let dim = rt.manifest().sample_dim();
+        for i in 0..n {
+            let img = &imgs.data()[i * dim..(i + 1) * dim];
+            let got = extract_features(img);
+            for d in 0..FEAT_DIM {
+                let w = want[i * FEAT_DIM + d];
+                // imgs pass through f32, python features computed in f64 on
+                // the same values: agreement should be ~1e-7
+                assert!(
+                    (got[d] - w).abs() < 1e-6,
+                    "{ds} img {i} feature {d}: rust {} vs python {w}",
+                    got[d]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn ref_stats_load_and_are_sane() {
+    require_artifacts!();
+    let rt = Runtime::load(artifacts_root()).unwrap();
+    for ds in rt.manifest().datasets.keys() {
+        let fit = ddim_serve::eval::load_ref_stats(rt.manifest(), ds).unwrap();
+        let cov = fit.covariance().unwrap();
+        assert!(cov.is_symmetric(1e-9), "{ds} ref cov not symmetric");
+        // the reference distribution should score ~0 against itself
+        let d = ddim_serve::stats::frechet_distance(&fit, &fit).unwrap();
+        assert!(d < 1e-9, "{ds}: self-FID {d}");
+    }
+}

@@ -1,0 +1,172 @@
+//! Property tests over the schedule/sampler layers that don't need PJRT
+//! (fast, run with the mini-proptest harness) plus BatchRunner-vs-Engine
+//! agreement on the real artifacts.
+
+use ddim_serve::schedule::{
+    sigma_eta, sigma_hat, tau_subsequence, AlphaTable, NoiseMode, SamplePlan, TauKind,
+};
+use ddim_serve::testing::check;
+
+#[test]
+fn prop_tau_valid_for_all_s() {
+    let t_max = 1000;
+    check("tau_valid", 300, |g| {
+        let s = g.int_in(1, t_max);
+        let kind = *g.choose(&[TauKind::Linear, TauKind::Quadratic]);
+        let tau = tau_subsequence(kind, s, t_max).map_err(|e| e.to_string())?;
+        if tau.len() != s {
+            return Err(format!("len {} != {s}", tau.len()));
+        }
+        if !tau.windows(2).all(|w| w[1] > w[0]) {
+            return Err("not strictly increasing".into());
+        }
+        if *tau.first().unwrap() < 1 || *tau.last().unwrap() > t_max {
+            return Err("out of range".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sigma_ordering_and_interpolation() {
+    let abar = AlphaTable::linear(1000);
+    check("sigma_ordering", 200, |g| {
+        let prev = g.int_in(0, 998);
+        let cur = prev + g.int_in(1, 999 - prev.min(998)).min(1000 - prev - 1) + 0;
+        let cur = cur.min(1000).max(prev + 1);
+        let e1 = g.f64_in(0.0, 1.0);
+        let e2 = e1 + g.f64_in(0.0, 1.0 - e1);
+        let s1 = sigma_eta(&abar, cur, prev, e1);
+        let s2 = sigma_eta(&abar, cur, prev, e2);
+        if s1 > s2 + 1e-15 {
+            return Err(format!("sigma not monotone in eta: {s1} > {s2}"));
+        }
+        let sh = sigma_hat(&abar, cur, prev);
+        let s_ddpm = sigma_eta(&abar, cur, prev, 1.0);
+        if sh + 1e-12 < s_ddpm {
+            return Err(format!("sigma_hat {sh} < sigma(1) {s_ddpm}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_generate_plan_invariants() {
+    let abar = AlphaTable::linear(1000);
+    check("plan_invariants", 200, |g| {
+        let s = g.int_in(1, 400);
+        let eta = g.f64_in(0.0, 1.0);
+        let kind = *g.choose(&[TauKind::Linear, TauKind::Quadratic]);
+        let mode = if g.bool() { NoiseMode::Eta(eta) } else { NoiseMode::SigmaHat };
+        let plan =
+            SamplePlan::generate(&abar, kind, s, mode).map_err(|e| e.to_string())?;
+        if plan.len() != s {
+            return Err("plan length".into());
+        }
+        let steps = plan.steps();
+        // alpha_out of step i == alpha_in of step i+1 (chained trajectory)
+        for w in steps.windows(2) {
+            if (w[0].alpha_out - w[1].alpha_in).abs() > 1e-15 {
+                return Err("alpha chain broken".into());
+            }
+        }
+        if steps.last().unwrap().alpha_out != 1.0 {
+            return Err("final step must land on alpha_bar=1".into());
+        }
+        for st in steps {
+            if st.alpha_out <= st.alpha_in {
+                return Err("alpha_out <= alpha_in".into());
+            }
+            // direction coefficient stays real — except the final sigma-hat
+            // step (alpha_out = 1), where the kernel's max(.., 0) clamp IS
+            // the defined behaviour (App. D.3 / plan.rs docs).
+            if st.alpha_out < 1.0
+                && 1.0 - st.alpha_out - st.sigma_dir * st.sigma_dir < -1e-9
+            {
+                return Err(format!(
+                    "dir coef imaginary: a_out={} sigma={}",
+                    st.alpha_out, st.sigma_dir
+                ));
+            }
+            if st.sigma_noise < st.sigma_dir - 1e-15 {
+                return Err("noise sigma below dir sigma".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_encode_plan_mirrors_generate() {
+    let abar = AlphaTable::linear(1000);
+    check("encode_mirror", 100, |g| {
+        let s = g.int_in(1, 300);
+        let kind = *g.choose(&[TauKind::Linear, TauKind::Quadratic]);
+        let gen =
+            SamplePlan::generate(&abar, kind, s, NoiseMode::Eta(0.0)).map_err(|e| e.to_string())?;
+        let enc = SamplePlan::encode(&abar, kind, s).map_err(|e| e.to_string())?;
+        if gen.tau != enc.tau {
+            return Err("tau mismatch".into());
+        }
+        for (gstep, estep) in gen.steps().iter().rev().zip(enc.steps()) {
+            if (gstep.alpha_in - estep.alpha_out).abs() > 1e-15
+                || (gstep.alpha_out - estep.alpha_in).abs() > 1e-15
+            {
+                return Err("encode endpoints don't mirror generate".into());
+            }
+            if estep.sigma_noise != 0.0 {
+                return Err("encode must be deterministic".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-backed agreement test: BatchRunner (homogeneous harness) and the
+// Engine (continuous batcher) must produce identical eta=0 samples.
+const ROOT: &str = env!("CARGO_MANIFEST_DIR");
+
+#[test]
+fn runner_and_engine_agree() {
+    let root = format!("{ROOT}/artifacts");
+    if !std::path::Path::new(&root).join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing");
+        return;
+    }
+    use ddim_serve::config::ServeConfig;
+    use ddim_serve::coordinator::request::{Request, RequestBody};
+    use ddim_serve::coordinator::{Engine, ResponseBody};
+    use ddim_serve::runtime::Runtime;
+    use ddim_serve::sampler::BatchRunner;
+
+    let mut rt = Runtime::load(&root).unwrap();
+    let plan =
+        SamplePlan::generate(rt.alphas(), TauKind::Quadratic, 7, NoiseMode::Eta(0.0)).unwrap();
+    let mut runner = BatchRunner::new(&rt, "sprites", 4).unwrap();
+    let direct = runner.generate(&mut rt, &plan, 3, 555).unwrap();
+
+    let cfg = ServeConfig {
+        artifact_root: root,
+        dataset: "sprites".into(),
+        max_batch: 4,
+        ..Default::default()
+    };
+    let mut engine = Engine::new(cfg).unwrap();
+    let id = engine
+        .submit(Request {
+            dataset: "sprites".into(),
+            steps: 7,
+            mode: NoiseMode::Eta(0.0),
+            tau: TauKind::Quadratic,
+            body: RequestBody::Generate { count: 3, seed: 555 },
+            return_images: true,
+        })
+        .unwrap();
+    let resp = engine.run_until_idle().unwrap();
+    let via_engine = match &resp.iter().find(|r| r.id == id).unwrap().body {
+        ResponseBody::Ok { outputs } => outputs.clone(),
+        ResponseBody::Error { message } => panic!("{message}"),
+    };
+    assert_eq!(direct, via_engine, "two independent drivers disagree");
+}

@@ -1,0 +1,136 @@
+//! End-to-end server test: real TCP, real engine, real artifacts. One
+//! process, ephemeral port, concurrent clients.
+
+use ddim_serve::config::ServeConfig;
+use ddim_serve::coordinator::server::Client;
+use ddim_serve::coordinator::Server;
+use ddim_serve::jobj;
+use ddim_serve::json::Value;
+
+const ROOT: &str = env!("CARGO_MANIFEST_DIR");
+
+#[test]
+fn server_serves_generate_metrics_and_rejects_garbage() {
+    let root = format!("{ROOT}/artifacts");
+    if !std::path::Path::new(&root).join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing");
+        return;
+    }
+    let cfg = ServeConfig {
+        artifact_root: root,
+        dataset: "sprites".into(),
+        listen: "127.0.0.1:0".into(),
+        max_batch: 8,
+        ..Default::default()
+    };
+    let server = Server::start(cfg).unwrap();
+    let addr = server.addr();
+
+    // ping
+    let mut c = Client::connect(addr).unwrap();
+    let pong = c.roundtrip(&jobj![("op", "ping")]).unwrap();
+    assert!(pong.get("ok").unwrap().as_bool().unwrap());
+
+    // two concurrent generate clients with different configs
+    let h1 = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        c.roundtrip(&jobj![
+            ("op", "generate"),
+            ("dataset", "sprites"),
+            ("steps", 5.0),
+            ("eta", 0.0),
+            ("count", 2.0),
+            ("seed", 1.0),
+            ("return_images", true),
+        ])
+        .unwrap()
+    });
+    let h2 = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        c.roundtrip(&jobj![
+            ("op", "generate"),
+            ("dataset", "sprites"),
+            ("steps", 9.0),
+            ("eta", "hat"),
+            ("count", 1.0),
+            ("seed", 2.0),
+        ])
+        .unwrap()
+    });
+    let r1 = h1.join().unwrap();
+    let r2 = h2.join().unwrap();
+    assert!(r1.get("ok").unwrap().as_bool().unwrap(), "{r1:?}");
+    assert!(r2.get("ok").unwrap().as_bool().unwrap(), "{r2:?}");
+    let imgs = r1.get("outputs").unwrap().as_arr().unwrap();
+    assert_eq!(imgs.len(), 2);
+    assert_eq!(imgs[0].as_arr().unwrap().len(), 256);
+    // stats-only response has empty outputs
+    assert_eq!(r2.get("outputs").unwrap().as_arr().unwrap().len(), 0);
+
+    // same request repeated must be byte-identical (eta=0 determinism over
+    // the full wire path)
+    let mut c3 = Client::connect(addr).unwrap();
+    let req = jobj![
+        ("op", "generate"),
+        ("dataset", "sprites"),
+        ("steps", 5.0),
+        ("eta", 0.0),
+        ("count", 1.0),
+        ("seed", 42.0),
+        ("return_images", true),
+    ];
+    let a = c3.roundtrip(&req).unwrap();
+    let b = c3.roundtrip(&req).unwrap();
+    assert_eq!(
+        a.get("outputs").unwrap(),
+        b.get("outputs").unwrap(),
+        "wire-level determinism"
+    );
+
+    // malformed lines produce JSON errors, not disconnects
+    let mut c4 = Client::connect(addr).unwrap();
+    let e = c4.roundtrip(&jobj![("op", "generate"), ("dataset", "nope")]).unwrap();
+    assert!(!e.get("ok").unwrap().as_bool().unwrap());
+    let e = c4.roundtrip(&Value::Str("not even an object".into())).unwrap();
+    assert!(!e.get("ok").unwrap().as_bool().unwrap());
+    // connection still alive after errors
+    let pong = c4.roundtrip(&jobj![("op", "ping")]).unwrap();
+    assert!(pong.get("ok").unwrap().as_bool().unwrap());
+
+    // metrics reflect the work
+    let m = c4.roundtrip(&jobj![("op", "metrics")]).unwrap();
+    assert!(m.get("ok").unwrap().as_bool().unwrap());
+    assert!(m.get("requests_completed").unwrap().as_usize().unwrap() >= 4);
+    assert!(m.get("steps_executed").unwrap().as_usize().unwrap() >= 5 * 2 + 9);
+
+    // multi-model routing: a request for a *different* dataset spins up a
+    // second engine lazily and serves it
+    let mut c5 = Client::connect(addr).unwrap();
+    let r = c5
+        .roundtrip(&jobj![
+            ("op", "generate"),
+            ("dataset", "blobs"),
+            ("steps", 4.0),
+            ("eta", 0.0),
+            ("count", 1.0),
+            ("seed", 5.0),
+            ("return_images", true),
+        ])
+        .unwrap();
+    assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
+    let m = c5.roundtrip(&jobj![("op", "metrics")]).unwrap();
+    assert_eq!(m.get("engines").unwrap().as_usize().unwrap(), 2);
+    // a dataset that doesn't exist is rejected with an error, not a hang
+    let r = c5
+        .roundtrip(&jobj![
+            ("op", "generate"),
+            ("dataset", "not_a_dataset"),
+            ("steps", 4.0),
+            ("count", 1.0),
+            ("seed", 0.0),
+        ])
+        .unwrap();
+    assert!(!r.get("ok").unwrap().as_bool().unwrap());
+
+    server.shutdown();
+}

@@ -1,0 +1,224 @@
+//! Property tests over the pure substrates (no artifacts / PJRT needed):
+//! JSON round-trips under fuzzing, histogram quantile laws, slerp geometry,
+//! feature-map structure, linalg identities, workload statistics.
+
+use ddim_serve::coordinator::Histogram;
+use ddim_serve::json::{self, Value};
+use ddim_serve::linalg::{cholesky, eigh, sqrtm_spd, Mat};
+use ddim_serve::rng::{slerp, GaussianSource, Pcg64};
+use ddim_serve::stats::extract_features;
+use ddim_serve::testing::{check, Gen};
+
+fn random_value(g: &mut Gen, depth: usize) -> Value {
+    let pick = if depth == 0 { g.rng.next_below(4) } else { g.rng.next_below(6) };
+    match pick {
+        0 => Value::Null,
+        1 => Value::Bool(g.bool()),
+        2 => {
+            // mix of integral, fractional, large, tiny
+            let v = match g.rng.next_below(4) {
+                0 => g.rng.uniform(-1e6, 1e6).round(),
+                1 => g.rng.uniform(-1.0, 1.0),
+                2 => g.rng.uniform(-1e18, 1e18),
+                _ => g.rng.uniform(-1e-9, 1e-9),
+            };
+            Value::Num(v)
+        }
+        3 => {
+            let n = g.int_in(0, 12);
+            let s: String = (0..n)
+                .map(|_| {
+                    let c = g.rng.next_below(96) as u8 + 32;
+                    c as char
+                })
+                .collect();
+            Value::Str(format!("{s}\"\\\n\tπ"))
+        }
+        4 => {
+            let n = g.int_in(0, 4);
+            Value::Arr((0..n).map(|_| random_value(g, depth - 1)).collect())
+        }
+        _ => {
+            let n = g.int_in(0, 4);
+            let mut m = std::collections::BTreeMap::new();
+            for i in 0..n {
+                m.insert(format!("k{i}"), random_value(g, depth - 1));
+            }
+            Value::Obj(m)
+        }
+    }
+}
+
+#[test]
+fn prop_json_round_trip() {
+    check("json_round_trip", 300, |g| {
+        let v = random_value(g, 3);
+        let s = json::to_string(&v);
+        let back = json::parse(&s).map_err(|e| format!("{e} on {s}"))?;
+        // floats round-trip exactly ({:?} shortest representation); so the
+        // whole tree must compare equal
+        if back != v {
+            return Err(format!("round trip changed value: {s}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_parser_never_panics_on_garbage() {
+    check("json_no_panic", 500, |g| {
+        let n = g.int_in(0, 64);
+        let bytes: Vec<u8> = (0..n).map(|_| (g.rng.next_below(94) + 32) as u8).collect();
+        let s = String::from_utf8_lossy(&bytes);
+        let _ = json::parse(&s); // must not panic; result irrelevant
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_histogram_quantiles_monotone_and_bracketing() {
+    check("hist_quantiles", 100, |g| {
+        let mut h = Histogram::new();
+        let n = g.int_in(2, 500);
+        let mut max = 0.0f64;
+        let mut min = f64::INFINITY;
+        for _ in 0..n {
+            let v = g.f64_in(1e-6, 10.0);
+            h.record(v);
+            max = max.max(v);
+            min = min.min(v);
+        }
+        let mut last = 0.0;
+        for q in [0.1, 0.5, 0.9, 0.99, 1.0] {
+            let qv = h.quantile(q);
+            if qv + 1e-12 < last {
+                return Err(format!("quantile not monotone at q={q}"));
+            }
+            last = qv;
+        }
+        // p100 must bracket the true max within one bucket width (4%)
+        let p100 = h.quantile(1.0);
+        if p100 < max * 0.9 || h.quantile(0.0) > min * 1.1 + 1e-6 {
+            return Err(format!("bracketing broken: p100 {p100} vs max {max}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_slerp_sweeps_angle_monotonically() {
+    // the defining slerp property: the angle from `a` to slerp(a,b;α)
+    // grows monotonically in α, reaching angle(a,b) at α=1
+    check("slerp_angle", 200, |g| {
+        let n = g.int_in(2, 256).max(2);
+        let mut gs = GaussianSource::new(Pcg64::seeded(g.rng.next_u64()));
+        let a = gs.vec(n);
+        let b = gs.vec(n);
+        let angle = |u: &[f32], v: &[f32]| {
+            let dot: f64 = u.iter().zip(v).map(|(x, y)| *x as f64 * *y as f64).sum();
+            let nu: f64 = u.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+            let nv: f64 = v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+            (dot / (nu * nv)).clamp(-1.0, 1.0).acos()
+        };
+        let total = angle(&a, &b);
+        if total < 1e-3 || total > std::f64::consts::PI - 1e-3 {
+            return Ok(()); // degenerate: lerp fallback regime
+        }
+        let mut last = -1e-9;
+        for k in 0..=10 {
+            let s = slerp(&a, &b, k as f64 / 10.0);
+            let th = angle(&a, &s);
+            if th + 1e-7 < last {
+                return Err(format!("angle not monotone at k={k}: {th} < {last}"));
+            }
+            last = th;
+        }
+        if (last - total).abs() > 1e-5 {
+            return Err(format!("endpoint angle {last} != {total}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_feature_map_is_shift_equivariant_in_mean() {
+    // adding a constant c shifts pooled/mean dims by exactly c and leaves
+    // all contrast dims untouched — a structural property of the map
+    check("feature_shift", 100, |g| {
+        let base = g.vec_f32(256, -0.5, 0.5);
+        let c = g.f64_in(-0.4, 0.4) as f32;
+        let shifted: Vec<f32> = base.iter().map(|v| v + c).collect();
+        let fa = extract_features(&base);
+        let fb = extract_features(&shifted);
+        for d in 0..17 {
+            if (fb[d] - fa[d] - c as f64).abs() > 1e-5 {
+                return Err(format!("dim {d} not shifted by c"));
+            }
+        }
+        for d in 17..24 {
+            if (fb[d] - fa[d]).abs() > 1e-6 {
+                return Err(format!("contrast dim {d} changed under shift"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sqrtm_and_cholesky_agree_on_trace() {
+    // for SPD A: Tr(A) == Tr(L Lᵀ) == Tr(sqrtm(A)²)
+    check("spd_traces", 60, |g| {
+        let n = g.int_in(2, 10);
+        let mut b = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                b[(i, j)] = g.f64_in(-1.0, 1.0);
+            }
+        }
+        let a = b
+            .matmul(&b.transpose())
+            .unwrap()
+            .add(&Mat::identity(n).scale(0.2))
+            .unwrap()
+            .symmetrize();
+        let l = cholesky(&a).map_err(|e| e.to_string())?;
+        let r = sqrtm_spd(&a).map_err(|e| e.to_string())?;
+        let t1 = a.trace();
+        let t2 = l.matmul(&l.transpose()).unwrap().trace();
+        let t3 = r.matmul(&r).unwrap().trace();
+        if (t1 - t2).abs() > 1e-8 * t1.abs() || (t1 - t3).abs() > 1e-7 * t1.abs().max(1.0) {
+            return Err(format!("traces disagree: {t1} {t2} {t3}"));
+        }
+        // eigenvalues of sqrtm are sqrt of eigenvalues of A
+        let (wa, _) = eigh(&a, 1e-12, 64).unwrap();
+        let (wr, _) = eigh(&r, 1e-12, 64).unwrap();
+        for (x, y) in wa.iter().zip(&wr) {
+            if (x.sqrt() - y).abs() > 1e-6 {
+                return Err(format!("eig mismatch {} vs {}", x.sqrt(), y));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gaussian_source_tail_fraction() {
+    // |z| > 2 should happen ~4.55% of the time; catch badly-scaled output
+    let mut g = GaussianSource::seeded(0xAA);
+    let n = 40_000;
+    let tails = (0..n).filter(|_| g.next().abs() > 2.0).count() as f64 / n as f64;
+    assert!((tails - 0.0455).abs() < 0.006, "2-sigma tail fraction {tails}");
+}
+
+#[test]
+fn prop_workload_arrivals_exponential() {
+    // inter-arrival CV ≈ 1 for a Poisson process
+    use ddim_serve::workload::Workload;
+    let w = Workload::standard("sprites", 50.0);
+    let plan = w.generate(5000, 9);
+    let gaps: Vec<f64> = plan.windows(2).map(|p| p[1].0 - p[0].0).collect();
+    let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+    let var = gaps.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / gaps.len() as f64;
+    let cv = var.sqrt() / mean;
+    assert!((cv - 1.0).abs() < 0.08, "CV {cv} (exponential gaps have CV 1)");
+}
