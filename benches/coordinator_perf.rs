@@ -2,8 +2,12 @@
 //!
 //! Measures (a) raw executable step latency per bucket, (b) engine
 //! steps/s through the full tick path at the same buckets, so the
-//! coordinator's overhead is the gap; and (c) end-to-end mixed-workload
-//! throughput vs max_batch — the continuous-batching payoff curve.
+//! coordinator's overhead is the gap; (c) end-to-end mixed-workload
+//! throughput vs max_batch — the continuous-batching payoff curve; and
+//! (d) router shard scaling: aggregate steps/s for the same multi-dataset
+//! workload at 1/2/4 shards per dataset — the speedup the sharded
+//! coordinator is supposed to buy on a multi-core host, measured rather
+//! than asserted.
 //!
 //!     cargo bench --bench coordinator_perf
 
@@ -14,7 +18,7 @@ use std::time::Instant;
 
 use ddim_serve::config::ServeConfig;
 use ddim_serve::coordinator::request::{Request, RequestBody};
-use ddim_serve::coordinator::Engine;
+use ddim_serve::coordinator::{Engine, Router};
 use ddim_serve::runtime::{Runtime, StepOutput};
 use ddim_serve::schedule::{NoiseMode, TauKind};
 
@@ -148,5 +152,69 @@ fn main() {
             m.latency_p95_s * 1e3
         );
     }
-    println!("\ninterpretation: overhead column (b) is the coordinator tax (§Perf target < 5%);\ncurve (c) shows continuous batching converting batch capacity into steps/s at near-constant p95.");
+    println!("\n=== coordinator_perf (d): router shard scaling (multi-dataset workload) ===");
+    // 4 logical request streams cycling over every dataset the artifact
+    // bundle ships; each sweep re-runs the identical workload with more
+    // shards per dataset. On a 4-core host 1 -> 4 shards should exceed
+    // 1.5x aggregate steps/s (acceptance criterion for the refactor).
+    let datasets: Vec<String> = rt.manifest().datasets.keys().cloned().collect();
+    let streams: Vec<String> =
+        (0..4).map(|i| datasets[i % datasets.len()].clone()).collect();
+    let n_req = if common::quick() { 8 } else { 32 };
+    let steps = if common::quick() { 5 } else { 20 };
+    println!(
+        "{:>8} | {:>8} | {:>10} | {:>12} | {:>10} | {:>10}",
+        "shards", "total", "wall s", "steps/s", "p95 ms", "speedup"
+    );
+    let mut base_sps = 0.0f64;
+    for &shards in &[1usize, 2, 4] {
+        let cfg = ServeConfig {
+            artifact_root: common::artifacts_root(),
+            dataset: streams[0].clone(),
+            max_batch: 8,
+            max_lanes: 32,
+            queue_capacity: 1024,
+            shards,
+            ..Default::default()
+        };
+        let router = Router::start(cfg).expect("router");
+        // prewarm every pool so bring-up + executable compilation (both
+        // scale with shard count) stay out of the timed region
+        for ds in datasets.iter() {
+            router.prewarm(ds).expect("prewarm");
+        }
+        let t0 = Instant::now();
+        let mut pending = Vec::with_capacity(n_req);
+        for k in 0..n_req {
+            pending.push(router.submit(Request {
+                dataset: streams[k % streams.len()].clone(),
+                steps,
+                mode: if k % 4 == 3 { NoiseMode::Eta(1.0) } else { NoiseMode::Eta(0.0) },
+                tau: TauKind::Linear,
+                body: RequestBody::Generate { count: 2 + (k % 3), seed: k as u64 },
+                return_images: false,
+            }));
+        }
+        for rx in pending {
+            let resp = rx.recv().expect("response");
+            if let ddim_serve::coordinator::ResponseBody::Error { message } = &resp.body {
+                panic!("request failed: {message}");
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let (agg, per_shard) = router.aggregate();
+        let sps = agg.steps_executed as f64 / wall;
+        if shards == 1 {
+            base_sps = sps;
+        }
+        println!(
+            "{shards:>8} | {:>8} | {wall:>10.2} | {sps:>12.0} | {:>10.0} | {:>9.2}x",
+            per_shard.len(),
+            agg.latency_p95_s * 1e3,
+            if base_sps > 0.0 { sps / base_sps } else { 1.0 }
+        );
+        router.shutdown();
+    }
+
+    println!("\ninterpretation: overhead column (b) is the coordinator tax (§Perf target < 5%);\ncurve (c) shows continuous batching converting batch capacity into steps/s at near-constant p95;\nsweep (d) is the sharding payoff — aggregate steps/s should scale with shards until cores saturate.");
 }

@@ -87,6 +87,34 @@ impl Args {
     }
 }
 
+/// Parse a `--placement` value: `dataset=shards[,dataset=shards...]`,
+/// e.g. `sprites=4,blobs=2`. Duplicate datasets are rejected here (and
+/// again by `ServeConfig::validate`, for placements built in code).
+pub fn parse_placement(s: &str) -> Result<Vec<(String, usize)>> {
+    let mut out: Vec<(String, usize)> = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (ds, n) = part
+            .split_once('=')
+            .ok_or_else(|| Error::Request(format!("placement '{part}' wants dataset=shards")))?;
+        let ds = ds.trim();
+        if ds.is_empty() {
+            return Err(Error::Request(format!("placement '{part}' has an empty dataset")));
+        }
+        let n: usize = n.trim().parse().map_err(|_| {
+            Error::Request(format!("placement '{part}' wants an integer shard count"))
+        })?;
+        if out.iter().any(|(d, _)| d == ds) {
+            return Err(Error::Request(format!("placement lists '{ds}' twice")));
+        }
+        out.push((ds.to_string(), n));
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,5 +157,22 @@ mod tests {
     fn trailing_switch() {
         let a = parse("bench --quick");
         assert!(a.has("quick"));
+    }
+
+    #[test]
+    fn placement_parses_pairs() {
+        assert_eq!(
+            parse_placement("sprites=4,blobs=2").unwrap(),
+            vec![("sprites".to_string(), 4), ("blobs".to_string(), 2)]
+        );
+        assert_eq!(parse_placement(" a = 1 ").unwrap(), vec![("a".to_string(), 1)]);
+        assert!(parse_placement("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn placement_rejects_malformed() {
+        for s in ["sprites", "=3", "a=x", "a=1,a=2"] {
+            assert!(parse_placement(s).is_err(), "{s}");
+        }
     }
 }

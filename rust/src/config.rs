@@ -21,6 +21,15 @@ pub struct ServeConfig {
     pub listen: String,
     /// Default number of sampling steps when a request omits it.
     pub default_steps: usize,
+    /// Engine shards (worker threads, each with its own runtime) per
+    /// dataset, unless overridden by `placement`.
+    pub shards: usize,
+    /// Per-dataset shard-count overrides: `(dataset, shards)`. Datasets
+    /// not listed use `shards`.
+    pub placement: Vec<(String, usize)>,
+    /// On shutdown, in-flight lanes get this long to finish before the
+    /// remaining waiters are answered with a "shutting down" error.
+    pub drain_timeout_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -33,6 +42,9 @@ impl Default for ServeConfig {
             max_lanes: 64,
             listen: "127.0.0.1:7878".into(),
             default_steps: 20,
+            shards: 1,
+            placement: Vec::new(),
+            drain_timeout_ms: 2000,
         }
     }
 }
@@ -55,7 +67,35 @@ impl ServeConfig {
         if self.default_steps == 0 {
             return Err(Error::Coordinator("default_steps must be > 0".into()));
         }
+        if self.shards == 0 {
+            return Err(Error::Coordinator("shards must be > 0".into()));
+        }
+        for (i, (ds, n)) in self.placement.iter().enumerate() {
+            if ds.is_empty() {
+                return Err(Error::Coordinator("placement has an empty dataset name".into()));
+            }
+            if *n == 0 {
+                return Err(Error::Coordinator(format!(
+                    "placement '{ds}' wants 0 shards"
+                )));
+            }
+            if self.placement[..i].iter().any(|(d, _)| d == ds) {
+                return Err(Error::Coordinator(format!(
+                    "placement lists dataset '{ds}' twice"
+                )));
+            }
+        }
         Ok(())
+    }
+
+    /// How many shards serve `dataset`: the `placement` override if one
+    /// exists, else the global `shards` default.
+    pub fn shards_for(&self, dataset: &str) -> usize {
+        self.placement
+            .iter()
+            .find(|(ds, _)| ds == dataset)
+            .map(|&(_, n)| n)
+            .unwrap_or(self.shards)
     }
 }
 
@@ -70,15 +110,31 @@ mod tests {
 
     #[test]
     fn rejects_bad_combinations() {
-        let mut c = ServeConfig::default();
-        c.max_batch = 0;
-        assert!(c.validate().is_err());
-        let mut c = ServeConfig::default();
-        c.max_lanes = 4;
-        c.max_batch = 16;
-        assert!(c.validate().is_err());
-        let mut c = ServeConfig::default();
-        c.queue_capacity = 0;
-        assert!(c.validate().is_err());
+        let bad = [
+            ServeConfig { max_batch: 0, ..Default::default() },
+            ServeConfig { max_lanes: 4, max_batch: 16, ..Default::default() },
+            ServeConfig { queue_capacity: 0, ..Default::default() },
+            ServeConfig { shards: 0, ..Default::default() },
+            ServeConfig { placement: vec![("sprites".into(), 0)], ..Default::default() },
+            ServeConfig {
+                placement: vec![("a".into(), 1), ("a".into(), 2)],
+                ..Default::default()
+            },
+        ];
+        for c in bad {
+            assert!(c.validate().is_err(), "{c:?}");
+        }
+    }
+
+    #[test]
+    fn placement_overrides_shard_default() {
+        let c = ServeConfig {
+            shards: 2,
+            placement: vec![("blobs".into(), 4)],
+            ..Default::default()
+        };
+        c.validate().unwrap();
+        assert_eq!(c.shards_for("blobs"), 4);
+        assert_eq!(c.shards_for("sprites"), 2);
     }
 }

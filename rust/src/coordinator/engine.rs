@@ -354,6 +354,50 @@ impl Engine {
         Ok(self.take_completed())
     }
 
+    /// Whether any request is queued or resident.
+    pub fn is_busy(&self) -> bool {
+        !self.lanes.is_empty() || !self.queue.is_empty()
+    }
+
+    /// Graceful-shutdown path: tick until idle or `deadline`, whichever
+    /// comes first, and return everything that completed. Work still
+    /// resident after the deadline is left in place for [`Engine::abort_pending`].
+    pub fn drain(&mut self, deadline: Instant) -> Result<Vec<Response>> {
+        while self.is_busy() && Instant::now() < deadline {
+            self.tick()?;
+        }
+        Ok(self.take_completed())
+    }
+
+    /// Answer every queued and in-flight request with an error response
+    /// (pushed onto the completed list) and drop their lanes. Returns how
+    /// many requests were aborted. Used when a drain deadline expires —
+    /// nothing may be left blocked on a response channel.
+    pub fn abort_pending(&mut self, message: &str) -> usize {
+        let mut aborted = 0;
+        while let Some(p) = self.queue.pop() {
+            self.completed.push(Response {
+                id: p.id,
+                body: ResponseBody::Error { message: message.to_string() },
+                latency_s: p.submitted.elapsed().as_secs_f64(),
+                steps_executed: 0,
+            });
+            aborted += 1;
+        }
+        self.lanes.clear();
+        self.rr_cursor = 0;
+        for (id, inf) in std::mem::take(&mut self.inflight) {
+            self.completed.push(Response {
+                id,
+                body: ResponseBody::Error { message: message.to_string() },
+                latency_s: inf.submitted.elapsed().as_secs_f64(),
+                steps_executed: 0,
+            });
+            aborted += 1;
+        }
+        aborted
+    }
+
     /// Metrics snapshot.
     pub fn metrics(&self) -> MetricsSnapshot {
         MetricsSnapshot {
@@ -368,6 +412,15 @@ impl Engine {
             latency_p99_s: self.latency.quantile(0.99),
             latency_mean_s: self.latency.mean(),
             wall_s: self.started.elapsed().as_secs_f64(),
+            queue_accepted: self.queue.accepted,
+            queue_depth: self.queue.len(),
+            active_lanes: self.lanes.len(),
         }
+    }
+
+    /// The raw latency histogram, for cross-shard [`Histogram::merge`]
+    /// aggregation (quantiles of quantiles are not quantiles).
+    pub fn latency_histogram(&self) -> Histogram {
+        self.latency.clone()
     }
 }

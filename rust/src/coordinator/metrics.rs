@@ -60,6 +60,22 @@ impl Histogram {
         self.max
     }
 
+    /// Bucket-wise merge: after `a.merge(&b)`, `a`'s quantiles are exactly
+    /// those of a histogram that recorded every sample `a` and `b` saw.
+    /// This is the correct way to aggregate latency across shards — taking
+    /// the max (or mean) of per-shard quantiles is not (a shard with 3
+    /// requests would weigh as much as one with 3 million).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+
     /// Quantile estimate (upper edge of the containing bucket).
     pub fn quantile(&self, q: f64) -> f64 {
         if self.total == 0 {
@@ -92,6 +108,12 @@ pub struct MetricsSnapshot {
     pub latency_p99_s: f64,
     pub latency_mean_s: f64,
     pub wall_s: f64,
+    /// Total requests the admission queue ever accepted.
+    pub queue_accepted: u64,
+    /// Requests sitting in the admission queue right now.
+    pub queue_depth: usize,
+    /// Lanes resident in the engine right now.
+    pub active_lanes: usize,
 }
 
 impl MetricsSnapshot {
@@ -163,6 +185,51 @@ mod tests {
         assert_eq!(h.count(), 2);
         assert!(h.quantile(0.01) > 0.0);
         assert_eq!(h.max(), 1e9);
+    }
+
+    #[test]
+    fn merge_matches_recording_into_one_histogram() {
+        // two shards with very different latency profiles + counts
+        let mut fast = Histogram::new();
+        let mut slow = Histogram::new();
+        let mut all = Histogram::new();
+        for i in 1..=900 {
+            let v = i as f64 * 1e-4; // 0.1ms .. 90ms
+            fast.record(v);
+            all.record(v);
+        }
+        for i in 1..=100 {
+            let v = 0.5 + i as f64 * 1e-2; // 510ms .. 1.5s
+            slow.record(v);
+            all.record(v);
+        }
+        let mut merged = fast.clone();
+        merged.merge(&slow);
+        assert_eq!(merged.count(), all.count());
+        for q in [0.5, 0.9, 0.95, 0.99, 1.0] {
+            assert_eq!(merged.quantile(q), all.quantile(q), "q={q}");
+        }
+        assert!((merged.mean() - all.mean()).abs() < 1e-12);
+        assert_eq!(merged.max(), all.max());
+        // and the max-of-quantiles the old server used really is wrong:
+        // 90% of traffic is fast, so the true p50 is fast, but the per-shard
+        // max picks the slow shard's p50.
+        let wrong_p50 = fast.quantile(0.5).max(slow.quantile(0.5));
+        assert!(wrong_p50 > 2.0 * all.quantile(0.5));
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let mut h = Histogram::new();
+        h.record(0.25);
+        h.record(0.75);
+        let before = (h.count(), h.quantile(0.5), h.mean(), h.max());
+        h.merge(&Histogram::new());
+        assert_eq!(before, (h.count(), h.quantile(0.5), h.mean(), h.max()));
+        let mut empty = Histogram::new();
+        empty.merge(&h);
+        assert_eq!(empty.quantile(0.95), h.quantile(0.95));
+        assert_eq!(empty.count(), 2);
     }
 
     #[test]

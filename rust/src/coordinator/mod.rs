@@ -16,17 +16,24 @@
 //! - [`request`]: wire-level request/response types
 //! - [`queue`]:   bounded admission queue (backpressure)
 //! - [`engine`]:  lanes + tick loop + bucket selection (the batcher)
-//! - [`metrics`]: latency histograms, occupancy, throughput counters
-//! - [`server`]:  std::net JSON-line front end over an engine thread
+//! - [`shard`]:   one worker thread owning one engine + its tick loop
+//! - [`router`]:  per-dataset shard pools, least-loaded dispatch, merged
+//!   metrics, drain-on-shutdown
+//! - [`metrics`]: latency histograms (mergeable), occupancy, counters
+//! - [`server`]:  std::net JSON-line transport over the router
 
 pub mod engine;
 pub mod metrics;
 pub mod queue;
 pub mod request;
+pub mod router;
 pub mod server;
+pub mod shard;
 
 pub use engine::Engine;
 pub use metrics::{Histogram, MetricsSnapshot};
 pub use queue::BoundedQueue;
 pub use request::{Request, RequestBody, RequestId, Response, ResponseBody};
+pub use router::Router;
 pub use server::Server;
+pub use shard::{EngineShard, ShardStats};

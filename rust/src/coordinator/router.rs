@@ -1,0 +1,388 @@
+//! The router: owns every [`EngineShard`] and is the coordinator's whole
+//! public surface. The TCP server is a dumb JSON-line transport over this
+//! API; tests and benches drive the router directly.
+//!
+//! Placement: shards are grouped by dataset (`ServeConfig::shards_for`
+//! decides how many per dataset — the `--shards` default plus
+//! `--placement ds=N` overrides). The default dataset's pool is built
+//! eagerly with warmup so startup failures surface before the server
+//! reports ready; other datasets come up lazily on first request, exactly
+//! like the old single-threaded pool — except bring-up no longer blocks
+//! serving traffic on *other* datasets for long, because each shard ticks
+//! on its own thread.
+//!
+//! Dispatch: least-loaded over the dataset's pool, load = active lanes +
+//! queued (+ dispatched-not-yet-admitted), with a rotating-cursor scan for
+//! ties so equal shards are used round-robin. Starvation-freedom of the
+//! tie-break is property-tested below: a shard that stays in the minimum-
+//! load set over `n` consecutive dispatches is picked at least once.
+//!
+//! Metrics: counters are summed across shards and latency histograms are
+//! **bucket-merged** ([`Histogram::merge`]) before quantiles are read —
+//! the old server reported the max of per-engine p50/p95/p99, which
+//! over-weights a cold shard with three slow requests.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver};
+use std::sync::RwLock;
+use std::time::Duration;
+
+use crate::config::ServeConfig;
+use crate::coordinator::metrics::{Histogram, MetricsSnapshot};
+use crate::coordinator::request::{Request, Response, ResponseBody};
+use crate::coordinator::shard::{EngineShard, ShardStats};
+use crate::error::{Error, Result};
+use crate::jobj;
+use crate::json::{self, Value};
+
+/// How long a metrics poll waits on one shard before skipping it.
+const STATS_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// One dataset's shards plus its dispatch cursor. The cursor is
+/// per-pool on purpose: the starvation-freedom guarantee of
+/// [`pick_shard`] needs the cursor to advance by exactly 1 per dispatch
+/// *to this pool* — a router-global cursor strided by other datasets'
+/// traffic could park on the same residue forever.
+struct Pool {
+    shards: Vec<EngineShard>,
+    cursor: AtomicUsize,
+}
+
+impl Pool {
+    fn new(shards: Vec<EngineShard>) -> Pool {
+        Pool { shards, cursor: AtomicUsize::new(0) }
+    }
+}
+
+/// Routes requests to per-dataset shard pools. All methods take `&self`;
+/// the router is shared across connection threads behind an `Arc`.
+pub struct Router {
+    cfg: ServeConfig,
+    pools: RwLock<BTreeMap<String, Pool>>,
+    /// Monotonic shard id across all pools (stable in metrics output).
+    next_shard_id: AtomicUsize,
+    stopping: AtomicBool,
+}
+
+/// Least-loaded pick with a rotating-cursor tie-break: scan indices in
+/// cyclic order starting at `cursor % n` and take the first that carries
+/// the minimum load. Guarantees: (a) the result always has minimal load;
+/// (b) a shard that remains in the minimum set over `n` consecutive
+/// dispatches (cursor advances by 1 each time) is picked at least once —
+/// when the scan starts on it, it wins. No shard starves.
+pub fn pick_shard(loads: &[usize], cursor: usize) -> usize {
+    debug_assert!(!loads.is_empty());
+    let n = loads.len();
+    let min = *loads.iter().min().expect("non-empty pool");
+    for k in 0..n {
+        let i = (cursor + k) % n;
+        if loads[i] == min {
+            return i;
+        }
+    }
+    unreachable!("min element exists")
+}
+
+impl Router {
+    /// Validate config and bring up the default dataset's pool (with
+    /// warmup, so compile/load failures surface here).
+    pub fn start(cfg: ServeConfig) -> Result<Router> {
+        cfg.validate()?;
+        let router = Router {
+            pools: RwLock::new(BTreeMap::new()),
+            next_shard_id: AtomicUsize::new(0),
+            stopping: AtomicBool::new(false),
+            cfg,
+        };
+        let default = router.cfg.dataset.clone();
+        router.bring_up(&default, true)?;
+        Ok(router)
+    }
+
+    /// Serving configuration (base; per-shard configs differ only in dataset).
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Total shards across all pools.
+    pub fn shard_count(&self) -> usize {
+        self.pools.read().unwrap().values().map(|p| p.shards.len()).sum()
+    }
+
+    /// Datasets with a live pool.
+    pub fn datasets(&self) -> Vec<String> {
+        self.pools.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Spawn `cfg.shards_for(dataset)` shards for `dataset` if it has no
+    /// pool yet. Shards are built *outside* any lock — bring-up of a new
+    /// dataset (runtime load × n, plus warmup) must not stall serving
+    /// traffic on existing pools. Two concurrent first requests may both
+    /// build; the loser's pool is torn down.
+    fn bring_up(&self, dataset: &str, warmup: bool) -> Result<()> {
+        if self.pools.read().unwrap().contains_key(dataset) {
+            return Ok(());
+        }
+        let n = self.cfg.shards_for(dataset);
+        let mut shards = Vec::with_capacity(n);
+        for _ in 0..n {
+            let id = self.next_shard_id.fetch_add(1, Ordering::SeqCst);
+            let mut shard_cfg = self.cfg.clone();
+            shard_cfg.dataset = dataset.to_string();
+            match EngineShard::spawn(id, shard_cfg, warmup) {
+                Ok(s) => shards.push(s),
+                Err(e) => {
+                    // unwind the partial pool; the dataset stays absent so a
+                    // later request can retry bring-up
+                    teardown(&shards);
+                    return Err(e);
+                }
+            }
+        }
+        let mut pools = self.pools.write().unwrap();
+        if pools.contains_key(dataset) {
+            drop(pools);
+            teardown(&shards); // raced: someone else's pool won
+            return Ok(());
+        }
+        pools.insert(dataset.to_string(), Pool::new(shards));
+        Ok(())
+    }
+
+    /// Bring up `dataset`'s pool eagerly with warmed executables. The
+    /// request path brings pools up lazily *without* warmup (first
+    /// request pays compile latency); benches and latency-sensitive
+    /// deployments can prewarm instead. No-op if the pool exists.
+    pub fn prewarm(&self, dataset: &str) -> Result<()> {
+        self.bring_up(dataset, true)
+    }
+
+    /// Route one request. The returned channel yields exactly one
+    /// [`Response`] — success, rejection, or an explicit shutdown error.
+    pub fn submit(&self, req: Request) -> Receiver<Response> {
+        let (tx, rx) = mpsc::channel();
+        let error = |msg: String| Response {
+            id: 0,
+            body: ResponseBody::Error { message: msg },
+            latency_s: 0.0,
+            steps_executed: 0,
+        };
+        if self.stopping.load(Ordering::SeqCst) {
+            let _ = tx.send(error("shutting down".into()));
+            return rx;
+        }
+        if let Err(e) = self.bring_up(&req.dataset, false) {
+            let _ = tx.send(error(e.to_string()));
+            return rx;
+        }
+        let pools = self.pools.read().unwrap();
+        match pools.get(&req.dataset) {
+            Some(pool) if !pool.shards.is_empty() => {
+                let loads: Vec<usize> = pool.shards.iter().map(EngineShard::load).collect();
+                let idx = pick_shard(&loads, pool.cursor.fetch_add(1, Ordering::SeqCst));
+                pool.shards[idx].dispatch(req, tx);
+            }
+            _ => {
+                let _ = tx.send(error(format!("no shards for dataset '{}'", req.dataset)));
+            }
+        }
+        rx
+    }
+
+    /// Submit and block for the response (examples / benches).
+    pub fn call(&self, req: Request) -> Result<Response> {
+        self.submit(req)
+            .recv()
+            .map_err(|_| Error::Coordinator("request dropped during shutdown".into()))
+    }
+
+    /// Merged view across every shard: summed counters, bucket-merged
+    /// latency quantiles, plus the per-shard breakdown.
+    pub fn aggregate(&self) -> (MetricsSnapshot, Vec<ShardStats>) {
+        // fire every stats request under the read lock (non-blocking
+        // channel sends), then release it before waiting — one wedged
+        // shard must not hold the pools lock for STATS_TIMEOUT
+        let pending: Vec<_> = {
+            let pools = self.pools.read().unwrap();
+            pools
+                .values()
+                .flat_map(|p| p.shards.iter().filter_map(EngineShard::stats_request))
+                .collect()
+        };
+        let per_shard: Vec<ShardStats> = pending
+            .into_iter()
+            .filter_map(|rx| rx.recv_timeout(STATS_TIMEOUT).ok())
+            .collect();
+        let mut agg = MetricsSnapshot::default();
+        let mut latency = Histogram::new();
+        for s in &per_shard {
+            let m = &s.snapshot;
+            agg.requests_completed += m.requests_completed;
+            agg.requests_rejected += m.requests_rejected;
+            agg.lanes_completed += m.lanes_completed;
+            agg.executable_calls += m.executable_calls;
+            agg.steps_executed += m.steps_executed;
+            agg.occupancy_sum += m.occupancy_sum;
+            agg.queue_accepted += m.queue_accepted;
+            agg.queue_depth += m.queue_depth;
+            agg.active_lanes += m.active_lanes;
+            agg.wall_s = agg.wall_s.max(m.wall_s);
+            latency.merge(&s.latency);
+        }
+        agg.latency_p50_s = latency.quantile(0.5);
+        agg.latency_p95_s = latency.quantile(0.95);
+        agg.latency_p99_s = latency.quantile(0.99);
+        agg.latency_mean_s = latency.mean();
+        (agg, per_shard)
+    }
+
+    /// The `{"op":"metrics"}` reply: merged totals + `"shards": [...]`
+    /// breakdown.
+    pub fn metrics_json(&self) -> String {
+        let (agg, per_shard) = self.aggregate();
+        let shards: Vec<Value> = per_shard
+            .iter()
+            .map(|s| {
+                let m = &s.snapshot;
+                jobj![
+                    ("shard", s.shard_id),
+                    ("dataset", s.dataset.clone()),
+                    ("requests_completed", m.requests_completed),
+                    ("requests_rejected", m.requests_rejected),
+                    ("steps_executed", m.steps_executed),
+                    ("executable_calls", m.executable_calls),
+                    ("occupancy", m.occupancy()),
+                    ("latency_p50_s", m.latency_p50_s),
+                    ("latency_p95_s", m.latency_p95_s),
+                    ("latency_p99_s", m.latency_p99_s),
+                    ("active_lanes", m.active_lanes),
+                    ("queued", m.queue_depth),
+                    ("queue_accepted", m.queue_accepted),
+                ]
+            })
+            .collect();
+        json::to_string(&jobj![
+            ("ok", true),
+            ("engines", per_shard.len()),
+            ("datasets", self.datasets().len()),
+            ("requests_completed", agg.requests_completed),
+            ("requests_rejected", agg.requests_rejected),
+            ("lanes_completed", agg.lanes_completed),
+            ("executable_calls", agg.executable_calls),
+            ("steps_executed", agg.steps_executed),
+            ("occupancy", agg.occupancy()),
+            ("latency_p50_s", agg.latency_p50_s),
+            ("latency_p95_s", agg.latency_p95_s),
+            ("latency_p99_s", agg.latency_p99_s),
+            ("steps_per_second", agg.steps_per_second()),
+            ("active_lanes", agg.active_lanes),
+            ("queued", agg.queue_depth),
+            ("queue_accepted", agg.queue_accepted),
+            ("shards", Value::Arr(shards)),
+        ])
+    }
+
+    /// Graceful shutdown: refuse new submissions, signal every shard (so
+    /// they drain in parallel, each bounded by `drain_timeout_ms`), then
+    /// join them. Idempotent.
+    pub fn shutdown(&self) {
+        self.stopping.store(true, Ordering::SeqCst);
+        let pools = self.pools.read().unwrap();
+        for pool in pools.values() {
+            for shard in &pool.shards {
+                shard.signal_stop();
+            }
+        }
+        for pool in pools.values() {
+            for shard in &pool.shards {
+                shard.join();
+            }
+        }
+    }
+}
+
+/// Stop and join a set of shards (failed or raced bring-up).
+fn teardown(shards: &[EngineShard]) {
+    for s in shards {
+        s.signal_stop();
+    }
+    for s in shards {
+        s.join();
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_shard_returns_a_minimum() {
+        assert_eq!(pick_shard(&[3], 17), 0);
+        assert_eq!(pick_shard(&[2, 1, 5], 0), 1);
+        assert_eq!(pick_shard(&[0, 4, 0], 0), 0);
+        assert_eq!(pick_shard(&[0, 4, 0], 2), 2);
+        // cursor rotates ties round-robin
+        assert_eq!(pick_shard(&[1, 1, 1], 0), 0);
+        assert_eq!(pick_shard(&[1, 1, 1], 1), 1);
+        assert_eq!(pick_shard(&[1, 1, 1], 5), 2);
+    }
+
+    #[test]
+    fn equal_loads_dispatch_round_robin() {
+        // unit jobs that complete instantly: loads stay equal, so the
+        // cursor alone decides — hits must be perfectly balanced
+        let n = 4;
+        let loads = vec![0usize; n];
+        let mut hits = vec![0usize; n];
+        for cursor in 0..32 {
+            hits[pick_shard(&loads, cursor)] += 1;
+        }
+        assert!(hits.iter().all(|&h| h == 8), "{hits:?}");
+    }
+
+    #[test]
+    fn property_least_loaded_dispatch_never_starves() {
+        // Invariant (see pick_shard docs): a shard continuously in the
+        // minimum-load set is picked within n consecutive dispatches.
+        crate::testing::check("router_no_starvation", 100, |g| {
+            let n = g.int_in(2, 8).max(2);
+            let mut loads = vec![0usize; n];
+            let mut min_streak_skipped = vec![0usize; n];
+            let rounds = g.int_in(20, 300);
+            for cursor in 0..rounds {
+                let picked = pick_shard(&loads, cursor);
+                let min = *loads.iter().min().unwrap();
+                if loads[picked] != min {
+                    return Err(format!("picked load {} > min {min}", loads[picked]));
+                }
+                for i in 0..n {
+                    if i == picked || loads[i] != min {
+                        min_streak_skipped[i] = 0;
+                    } else {
+                        min_streak_skipped[i] += 1;
+                        if min_streak_skipped[i] >= n {
+                            return Err(format!(
+                                "shard {i} stayed minimal but was skipped {} times (n={n})",
+                                min_streak_skipped[i]
+                            ));
+                        }
+                    }
+                }
+                // picked shard takes on a request's worth of lanes...
+                loads[picked] += g.int_in(1, 4);
+                // ...and every shard makes random progress
+                for l in loads.iter_mut() {
+                    *l = l.saturating_sub(g.int_in(0, 2));
+                }
+            }
+            Ok(())
+        });
+    }
+}

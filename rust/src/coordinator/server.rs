@@ -1,46 +1,42 @@
 //! JSON-line TCP front end (std::net + threads; the offline build has no
-//! tokio — a thread-per-connection design is plenty for a single-node
-//! CPU-bound engine whose real concurrency lives in the batcher).
+//! tokio — a thread-per-connection design is plenty when the real
+//! concurrency lives in the shard pool).
 //!
 //! Protocol: one JSON request per line (see [`super::request`]), one JSON
-//! response per line, in order. `{"op":"metrics"}` returns a snapshot;
-//! `{"op":"ping"}` returns `{"ok":true}`.
+//! response per line, in order. `{"op":"metrics"}` returns a merged
+//! snapshot with a per-shard breakdown; `{"op":"ping"}` returns
+//! `{"ok":true}`. See `docs/serving.md` for the full wire format.
 //!
-//! Threading: the PJRT runtime is single-threaded by construction, so one
-//! *engine thread* owns it; connection threads only parse/serialise and
-//! exchange messages over channels.
+//! This module is *pure transport*: connection threads parse a line, hand
+//! the request to the [`Router`], and write the response line back. All
+//! scheduling — shard placement, least-loaded dispatch, tick loops,
+//! drain-on-shutdown — lives in [`super::router`] / [`super::shard`].
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::config::ServeConfig;
-use crate::coordinator::engine::Engine;
-use crate::coordinator::request::{Request, Response, ResponseBody};
+use crate::coordinator::request::Request;
+use crate::coordinator::router::Router;
 use crate::error::{Error, Result};
 use crate::jobj;
 use crate::json::{self, Value};
 
-enum Cmd {
-    Submit(Request, Sender<Response>),
-    Metrics(Sender<String>),
-}
-
-/// A running server: listener + engine threads.
+/// A running server: listener thread + router-owned shard threads.
 pub struct Server {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     accept_handle: Option<JoinHandle<()>>,
-    engine_handle: Option<JoinHandle<()>>,
+    router: Option<Arc<Router>>,
 }
 
 impl Server {
-    /// Bind `cfg.listen` (use port 0 for ephemeral), spin up the engine
-    /// thread (compiling executables), and start accepting.
+    /// Bind `cfg.listen` (use port 0 for ephemeral), bring up the default
+    /// dataset's shard pool (compiling executables), and start accepting.
     pub fn start(cfg: ServeConfig) -> Result<Server> {
         cfg.validate()?;
         let listener = TcpListener::bind(&cfg.listen)?;
@@ -48,28 +44,16 @@ impl Server {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
 
-        let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
-        let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
-        let engine_stop = stop.clone();
-        let engine_cfg = cfg.clone();
-        let engine_handle = std::thread::Builder::new()
-            .name("ddim-engine".into())
-            .spawn(move || engine_thread(engine_cfg, cmd_rx, ready_tx, engine_stop))
-            .map_err(Error::Io)?;
-        // wait for the engine (runtime load + warmup) before accepting
-        match ready_rx.recv() {
-            Ok(Ok(())) => {}
-            Ok(Err(e)) => return Err(Error::Coordinator(format!("engine failed: {e}"))),
-            Err(_) => return Err(Error::Coordinator("engine thread died".into())),
-        }
+        let router = Arc::new(Router::start(cfg)?);
 
         let accept_stop = stop.clone();
+        let accept_router = router.clone();
         let accept_handle = std::thread::Builder::new()
             .name("ddim-accept".into())
-            .spawn(move || accept_loop(listener, cmd_tx, accept_stop))
+            .spawn(move || accept_loop(listener, accept_router, accept_stop))
             .map_err(Error::Io)?;
 
-        Ok(Server { addr, stop, accept_handle: Some(accept_handle), engine_handle: Some(engine_handle) })
+        Ok(Server { addr, stop, accept_handle: Some(accept_handle), router: Some(router) })
     }
 
     /// Bound address (useful with ephemeral ports).
@@ -77,7 +61,15 @@ impl Server {
         self.addr
     }
 
-    /// Request shutdown and join the threads.
+    /// The router, for in-process callers (benches poke metrics directly).
+    pub fn router(&self) -> Option<&Arc<Router>> {
+        self.router.as_ref()
+    }
+
+    /// Graceful shutdown: stop accepting, then drain the shard pool —
+    /// in-flight lanes get up to `drain_timeout_ms` to finish and every
+    /// remaining waiter is answered with `Error { message: "shutting
+    /// down" }` before the threads are joined.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
         // poke accept loop
@@ -85,21 +77,21 @@ impl Server {
         if let Some(h) = self.accept_handle.take() {
             let _ = h.join();
         }
-        if let Some(h) = self.engine_handle.take() {
-            let _ = h.join();
+        if let Some(router) = self.router.take() {
+            router.shutdown();
         }
     }
 }
 
-fn accept_loop(listener: TcpListener, cmd_tx: Sender<Cmd>, stop: Arc<AtomicBool>) {
+fn accept_loop(listener: TcpListener, router: Arc<Router>, stop: Arc<AtomicBool>) {
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _)) => {
-                let tx = cmd_tx.clone();
+                let conn_router = router.clone();
                 let _ = std::thread::Builder::new()
                     .name("ddim-conn".into())
                     .spawn(move || {
-                        let _ = handle_conn(stream, tx);
+                        let _ = handle_conn(stream, conn_router);
                     });
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -110,7 +102,7 @@ fn accept_loop(listener: TcpListener, cmd_tx: Sender<Cmd>, stop: Arc<AtomicBool>
     }
 }
 
-fn handle_conn(stream: TcpStream, cmd_tx: Sender<Cmd>) -> Result<()> {
+fn handle_conn(stream: TcpStream, router: Arc<Router>) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut stream = stream;
@@ -124,14 +116,14 @@ fn handle_conn(stream: TcpStream, cmd_tx: Sender<Cmd>) -> Result<()> {
         if trimmed.is_empty() {
             continue;
         }
-        let reply = dispatch_line(trimmed, &cmd_tx);
+        let reply = dispatch_line(trimmed, &router);
         stream.write_all(reply.as_bytes())?;
         stream.write_all(b"\n")?;
         stream.flush()?;
     }
 }
 
-fn dispatch_line(line: &str, cmd_tx: &Sender<Cmd>) -> String {
+fn dispatch_line(line: &str, router: &Router) -> String {
     let err = |msg: String| json::to_string(&jobj![("ok", false), ("error", msg)]);
     let v = match json::parse(line) {
         Ok(v) => v,
@@ -139,164 +131,18 @@ fn dispatch_line(line: &str, cmd_tx: &Sender<Cmd>) -> String {
     };
     match v.get_opt("op").and_then(|o| o.as_str().ok().map(str::to_string)) {
         Some(op) if op == "ping" => json::to_string(&jobj![("ok", true), ("pong", true)]),
-        Some(op) if op == "metrics" => {
-            let (tx, rx) = mpsc::channel();
-            if cmd_tx.send(Cmd::Metrics(tx)).is_err() {
-                return err("engine gone".into());
-            }
-            rx.recv().unwrap_or_else(|_| err("engine gone".into()))
-        }
+        Some(op) if op == "metrics" => router.metrics_json(),
         Some(_) => {
             let req = match Request::from_json(&v) {
                 Ok(r) => r,
                 Err(e) => return err(e.to_string()),
             };
-            let (tx, rx) = mpsc::channel();
-            if cmd_tx.send(Cmd::Submit(req, tx)).is_err() {
-                return err("engine gone".into());
-            }
-            match rx.recv() {
+            match router.submit(req).recv() {
                 Ok(resp) => resp.to_json_line(),
-                Err(_) => err("engine dropped request".into()),
+                Err(_) => err("request dropped during shutdown".into()),
             }
         }
         None => err("missing op".into()),
-    }
-}
-
-/// Multi-model engine pool: one [`Engine`] per dataset, created lazily on
-/// first request (the default dataset eagerly, so startup failures surface
-/// before the server reports ready). Engines tick round-robin; request ids
-/// are disambiguated to waiters per engine.
-fn engine_thread(
-    cfg: ServeConfig,
-    cmd_rx: Receiver<Cmd>,
-    ready_tx: Sender<std::result::Result<(), String>>,
-    stop: Arc<AtomicBool>,
-) {
-    let mut engines: std::collections::BTreeMap<String, Engine> =
-        std::collections::BTreeMap::new();
-    let default = cfg.dataset.clone();
-    match Engine::new(cfg.clone()).and_then(|mut e| {
-        e.warmup()?;
-        Ok(e)
-    }) {
-        Ok(e) => {
-            engines.insert(default.clone(), e);
-            let _ = ready_tx.send(Ok(()));
-        }
-        Err(e) => {
-            let _ = ready_tx.send(Err(e.to_string()));
-            return;
-        }
-    }
-    // waiters keyed by (dataset, request id)
-    let mut waiters: std::collections::HashMap<(String, u64), Sender<Response>> =
-        std::collections::HashMap::new();
-    while !stop.load(Ordering::SeqCst) {
-        // drain pending commands; block briefly only when fully idle
-        loop {
-            let idle = engines.values().all(|e| e.active_lanes() == 0 && e.queued() == 0);
-            let cmd = if idle {
-                match cmd_rx.recv_timeout(Duration::from_millis(20)) {
-                    Ok(c) => Some(c),
-                    Err(mpsc::RecvTimeoutError::Timeout) => None,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => return,
-                }
-            } else {
-                match cmd_rx.try_recv() {
-                    Ok(c) => Some(c),
-                    Err(mpsc::TryRecvError::Empty) => None,
-                    Err(mpsc::TryRecvError::Disconnected) => return,
-                }
-            };
-            let Some(cmd) = cmd else { break };
-            match cmd {
-                Cmd::Submit(req, tx) => {
-                    let ds = req.dataset.clone();
-                    // lazily bring up an engine for a new dataset
-                    if !engines.contains_key(&ds) {
-                        let mut c = cfg.clone();
-                        c.dataset = ds.clone();
-                        match Engine::new(c) {
-                            Ok(e) => {
-                                engines.insert(ds.clone(), e);
-                            }
-                            Err(e) => {
-                                let _ = tx.send(Response {
-                                    id: 0,
-                                    body: ResponseBody::Error { message: e.to_string() },
-                                    latency_s: 0.0,
-                                    steps_executed: 0,
-                                });
-                                continue;
-                            }
-                        }
-                    }
-                    let engine = engines.get_mut(&ds).unwrap();
-                    match engine.submit(req) {
-                        Ok(id) => {
-                            waiters.insert((ds, id), tx);
-                        }
-                        Err(e) => {
-                            let _ = tx.send(Response {
-                                id: 0,
-                                body: ResponseBody::Error { message: e.to_string() },
-                                latency_s: 0.0,
-                                steps_executed: 0,
-                            });
-                        }
-                    }
-                }
-                Cmd::Metrics(tx) => {
-                    // aggregate across engines
-                    let mut agg = crate::coordinator::metrics::MetricsSnapshot::default();
-                    let mut active = 0usize;
-                    let mut queued = 0usize;
-                    for e in engines.values() {
-                        let m = e.metrics();
-                        agg.requests_completed += m.requests_completed;
-                        agg.requests_rejected += m.requests_rejected;
-                        agg.lanes_completed += m.lanes_completed;
-                        agg.executable_calls += m.executable_calls;
-                        agg.steps_executed += m.steps_executed;
-                        agg.occupancy_sum += m.occupancy_sum;
-                        agg.latency_p50_s = agg.latency_p50_s.max(m.latency_p50_s);
-                        agg.latency_p95_s = agg.latency_p95_s.max(m.latency_p95_s);
-                        agg.latency_p99_s = agg.latency_p99_s.max(m.latency_p99_s);
-                        agg.wall_s = agg.wall_s.max(m.wall_s);
-                        active += e.active_lanes();
-                        queued += e.queued();
-                    }
-                    let _ = tx.send(json::to_string(&jobj![
-                        ("ok", true),
-                        ("engines", engines.len()),
-                        ("requests_completed", agg.requests_completed),
-                        ("requests_rejected", agg.requests_rejected),
-                        ("lanes_completed", agg.lanes_completed),
-                        ("executable_calls", agg.executable_calls),
-                        ("steps_executed", agg.steps_executed),
-                        ("occupancy", agg.occupancy()),
-                        ("latency_p50_s", agg.latency_p50_s),
-                        ("latency_p95_s", agg.latency_p95_s),
-                        ("latency_p99_s", agg.latency_p99_s),
-                        ("steps_per_second", agg.steps_per_second()),
-                        ("active_lanes", active),
-                        ("queued", queued),
-                    ]));
-                }
-            }
-        }
-        for (ds, engine) in engines.iter_mut() {
-            if let Err(e) = engine.tick() {
-                eprintln!("[engine:{ds}] tick error: {e}");
-            }
-            for resp in engine.take_completed() {
-                if let Some(tx) = waiters.remove(&(ds.clone(), resp.id)) {
-                    let _ = tx.send(resp);
-                }
-            }
-        }
     }
 }
 

@@ -1,0 +1,329 @@
+//! A single engine shard: one worker thread owning its own [`Engine`]
+//! (and therefore its own `Runtime` — PJRT is single-threaded by
+//! construction, so nothing is shared) plus the tick loop that used to
+//! live inside the server. The router (see [`super::router`]) owns N of
+//! these and dispatches by dataset + load; shards never talk to each
+//! other.
+//!
+//! Lifecycle: [`EngineShard::spawn`] blocks until the engine is built (so
+//! unknown-dataset and artifact errors surface synchronously, exactly as
+//! the old inline bring-up did), then the worker loops: drain commands,
+//! tick, deliver completions, publish load. On stop it *drains* — keeps
+//! ticking until idle or `drain_timeout` — then answers every remaining
+//! waiter with `Error { message: "shutting down" }` so no connection
+//! thread is ever left blocked on its response channel.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::ServeConfig;
+use crate::coordinator::engine::Engine;
+use crate::coordinator::metrics::{Histogram, MetricsSnapshot};
+use crate::coordinator::request::{Request, RequestId, Response, ResponseBody};
+use crate::error::{Error, Result};
+
+/// Commands a shard worker understands.
+enum ShardCmd {
+    Submit(Request, Sender<Response>),
+    Stats(Sender<ShardStats>),
+}
+
+/// Point-in-time view of one shard, shipped to the router for merging.
+#[derive(Debug, Clone)]
+pub struct ShardStats {
+    pub shard_id: usize,
+    pub dataset: String,
+    pub snapshot: MetricsSnapshot,
+    /// Raw histogram so the router can bucket-merge instead of
+    /// max-ing per-shard quantiles.
+    pub latency: Histogram,
+}
+
+/// Handle to one shard worker thread. Cheap to share behind the router's
+/// lock; all cross-thread state is channels + atomics.
+pub struct EngineShard {
+    id: usize,
+    dataset: String,
+    cmd_tx: Mutex<Sender<ShardCmd>>,
+    /// Lanes active + queued inside the engine, stored by the worker
+    /// every loop iteration.
+    engine_load: Arc<AtomicUsize>,
+    /// Lanes dispatched but not yet received by the worker: incremented
+    /// by [`EngineShard::dispatch`], decremented by the worker when the
+    /// command is pulled off the channel. `load()` is the sum, so work
+    /// sitting in the channel while the worker is mid-tick still counts
+    /// toward least-loaded balancing.
+    pending: Arc<AtomicUsize>,
+    stop: Arc<AtomicBool>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl EngineShard {
+    /// Spawn a worker for `cfg.dataset`. Blocks until the engine inside is
+    /// built (+ optionally warmed), so failures are returned here rather
+    /// than discovered by the first request.
+    pub fn spawn(id: usize, cfg: ServeConfig, warmup: bool) -> Result<EngineShard> {
+        cfg.validate()?;
+        let dataset = cfg.dataset.clone();
+        let drain_timeout = Duration::from_millis(cfg.drain_timeout_ms);
+        let (cmd_tx, cmd_rx) = mpsc::channel::<ShardCmd>();
+        let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let engine_load = Arc::new(AtomicUsize::new(0));
+        let pending = Arc::new(AtomicUsize::new(0));
+        let worker_stop = stop.clone();
+        let worker_load = engine_load.clone();
+        let worker_pending = pending.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("ddim-shard-{id}-{dataset}"))
+            .spawn(move || {
+                worker(WorkerArgs {
+                    id,
+                    cfg,
+                    warmup,
+                    cmd_rx,
+                    ready_tx,
+                    stop: worker_stop,
+                    engine_load: worker_load,
+                    pending: worker_pending,
+                    drain_timeout,
+                })
+            })
+            .map_err(Error::Io)?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                let _ = handle.join();
+                return Err(Error::Coordinator(format!("shard {id} ({dataset}): {e}")));
+            }
+            Err(_) => {
+                let _ = handle.join();
+                return Err(Error::Coordinator(format!("shard {id} ({dataset}): worker died")));
+            }
+        }
+        Ok(EngineShard {
+            id,
+            dataset,
+            cmd_tx: Mutex::new(cmd_tx),
+            engine_load,
+            pending,
+            stop,
+            handle: Mutex::new(Some(handle)),
+        })
+    }
+
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    pub fn dataset(&self) -> &str {
+        &self.dataset
+    }
+
+    /// Current load estimate for least-loaded dispatch: lanes inside the
+    /// engine plus lanes dispatched but still in the command channel.
+    pub fn load(&self) -> usize {
+        self.engine_load.load(Ordering::SeqCst) + self.pending.load(Ordering::SeqCst)
+    }
+
+    /// Hand a request to the worker; `tx` receives exactly one [`Response`]
+    /// (success, rejection, or shutdown error) — never zero.
+    pub fn dispatch(&self, req: Request, tx: Sender<Response>) {
+        self.pending.fetch_add(lane_cost(&req), Ordering::SeqCst);
+        let sent = self.cmd_tx.lock().unwrap().send(ShardCmd::Submit(req, tx));
+        if let Err(mpsc::SendError(ShardCmd::Submit(_, tx))) = sent {
+            // worker gone: answer the waiter directly. The pending bump is
+            // deliberately NOT undone — the worker's exit-time store(0)
+            // may already have run, and an underflowing gauge is worse
+            // than a dead shard reading as loaded.
+            let _ = tx.send(shutdown_response());
+        }
+    }
+
+    /// Fire a stats request without blocking; pair with the returned
+    /// receiver. `None` if the worker is gone. Lets the router release
+    /// its locks before waiting on replies.
+    pub fn stats_request(&self) -> Option<Receiver<ShardStats>> {
+        let (tx, rx) = mpsc::channel();
+        self.cmd_tx.lock().unwrap().send(ShardCmd::Stats(tx)).ok()?;
+        Some(rx)
+    }
+
+    /// Ask the worker for a stats snapshot. `None` if the worker is gone
+    /// or does not answer within `timeout`.
+    pub fn stats(&self, timeout: Duration) -> Option<ShardStats> {
+        self.stats_request()?.recv_timeout(timeout).ok()
+    }
+
+    /// Flag the worker to begin its drain-then-exit sequence (non-blocking,
+    /// so the router can signal every shard before joining any — shards
+    /// drain in parallel).
+    pub fn signal_stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Join the worker thread (idempotent).
+    pub fn join(&self) {
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// What a request adds to the load gauge: its lane count (min 1, so even
+/// zero-lane rejects count until the worker answers them).
+fn lane_cost(req: &Request) -> usize {
+    req.lane_count().max(1)
+}
+
+fn shutdown_response() -> Response {
+    Response {
+        id: 0,
+        body: ResponseBody::Error { message: "shutting down".into() },
+        latency_s: 0.0,
+        steps_executed: 0,
+    }
+}
+
+fn deliver(waiters: &mut HashMap<RequestId, Sender<Response>>, resp: Response) {
+    if let Some(tx) = waiters.remove(&resp.id) {
+        let _ = tx.send(resp);
+    }
+}
+
+struct WorkerArgs {
+    id: usize,
+    cfg: ServeConfig,
+    warmup: bool,
+    cmd_rx: Receiver<ShardCmd>,
+    ready_tx: Sender<std::result::Result<(), String>>,
+    stop: Arc<AtomicBool>,
+    engine_load: Arc<AtomicUsize>,
+    pending: Arc<AtomicUsize>,
+    drain_timeout: Duration,
+}
+
+fn worker(args: WorkerArgs) {
+    let WorkerArgs { id, cfg, warmup, cmd_rx, ready_tx, stop, engine_load, pending, drain_timeout } =
+        args;
+    let dataset = cfg.dataset.clone();
+    let mut engine = match Engine::new(cfg).and_then(|mut e| {
+        if warmup {
+            e.warmup()?;
+        }
+        Ok(e)
+    }) {
+        Ok(e) => {
+            let _ = ready_tx.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e.to_string()));
+            return;
+        }
+    };
+    let mut waiters: HashMap<RequestId, Sender<Response>> = HashMap::new();
+
+    'run: while !stop.load(Ordering::SeqCst) {
+        // drain pending commands; block briefly only when fully idle
+        loop {
+            let cmd = if engine.is_busy() {
+                match cmd_rx.try_recv() {
+                    Ok(c) => Some(c),
+                    Err(TryRecvError::Empty) => None,
+                    Err(TryRecvError::Disconnected) => break 'run,
+                }
+            } else {
+                match cmd_rx.recv_timeout(Duration::from_millis(10)) {
+                    Ok(c) => Some(c),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => break 'run,
+                }
+            };
+            let Some(cmd) = cmd else { break };
+            if let ShardCmd::Submit(req, _) = &cmd {
+                // paired with the fetch_add in dispatch: this lane cost now
+                // moves from "pending" into the engine's own accounting
+                pending.fetch_sub(lane_cost(req), Ordering::SeqCst);
+            }
+            handle_cmd(cmd, id, &dataset, &mut engine, &mut waiters);
+        }
+        if let Err(e) = engine.tick() {
+            eprintln!("[shard {id}:{dataset}] tick error: {e}");
+        }
+        for resp in engine.take_completed() {
+            deliver(&mut waiters, resp);
+        }
+        engine_load.store(engine.active_lanes() + engine.queued(), Ordering::SeqCst);
+    }
+
+    // --- drain: finish in-flight work, bounded by drain_timeout
+    let deadline = Instant::now() + drain_timeout;
+    match engine.drain(deadline) {
+        Ok(responses) => {
+            for resp in responses {
+                deliver(&mut waiters, resp);
+            }
+        }
+        Err(e) => eprintln!("[shard {id}:{dataset}] drain error: {e}"),
+    }
+    // --- whatever outlived the deadline (or the error) gets an explicit
+    // error; no waiter may be left blocked
+    engine.abort_pending("shutting down");
+    for resp in engine.take_completed() {
+        deliver(&mut waiters, resp);
+    }
+    // commands still sitting in the channel never reached the engine
+    while let Ok(cmd) = cmd_rx.try_recv() {
+        match cmd {
+            ShardCmd::Submit(_, tx) => {
+                let _ = tx.send(shutdown_response());
+            }
+            ShardCmd::Stats(tx) => {
+                let _ = tx.send(stats_of(id, &dataset, &engine));
+            }
+        }
+    }
+    engine_load.store(0, Ordering::SeqCst);
+    pending.store(0, Ordering::SeqCst);
+}
+
+fn stats_of(id: usize, dataset: &str, engine: &Engine) -> ShardStats {
+    ShardStats {
+        shard_id: id,
+        dataset: dataset.to_string(),
+        snapshot: engine.metrics(),
+        latency: engine.latency_histogram(),
+    }
+}
+
+fn handle_cmd(
+    cmd: ShardCmd,
+    id: usize,
+    dataset: &str,
+    engine: &mut Engine,
+    waiters: &mut HashMap<RequestId, Sender<Response>>,
+) {
+    match cmd {
+        ShardCmd::Submit(req, tx) => match engine.submit(req) {
+            Ok(req_id) => {
+                waiters.insert(req_id, tx);
+            }
+            Err(e) => {
+                let _ = tx.send(Response {
+                    id: 0,
+                    body: ResponseBody::Error { message: e.to_string() },
+                    latency_s: 0.0,
+                    steps_executed: 0,
+                });
+            }
+        },
+        ShardCmd::Stats(tx) => {
+            let _ = tx.send(stats_of(id, dataset, engine));
+        }
+    }
+}

@@ -23,7 +23,8 @@ USAGE: ddim-serve <command> [--flag value]...
 
 COMMANDS
   serve       --artifacts D --dataset NAME --listen ADDR --max-batch N
-              --queue-cap N --max-lanes N
+              --queue-cap N --max-lanes N --shards N
+              --placement ds=N[,ds=N...] --drain-timeout-ms MS
   generate    --artifacts D --dataset NAME --steps S --eta E|hat --tau linear|quadratic
               --count N --seed K --out FILE.pgm
   encode      --artifacts D --dataset NAME --steps S --seed K
@@ -69,6 +70,11 @@ fn config_from(args: &Args) -> Result<ServeConfig> {
     cfg.queue_capacity = args.get_usize("queue-cap", cfg.queue_capacity)?;
     cfg.max_lanes = args.get_usize("max-lanes", cfg.max_lanes)?;
     cfg.listen = args.get_or("listen", &cfg.listen).to_string();
+    cfg.shards = args.get_usize("shards", cfg.shards)?;
+    if let Some(p) = args.get("placement") {
+        cfg.placement = ddim_serve::cli::parse_placement(p)?;
+    }
+    cfg.drain_timeout_ms = args.get_u64("drain-timeout-ms", cfg.drain_timeout_ms)?;
     cfg.validate()?;
     Ok(cfg)
 }
@@ -76,8 +82,11 @@ fn config_from(args: &Args) -> Result<ServeConfig> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = config_from(args)?;
     println!(
-        "starting ddim-serve: dataset={} artifacts={} listen={}",
-        cfg.dataset, cfg.artifact_root, cfg.listen
+        "starting ddim-serve: dataset={} artifacts={} listen={} shards/dataset={}",
+        cfg.dataset,
+        cfg.artifact_root,
+        cfg.listen,
+        cfg.shards_for(&cfg.dataset)
     );
     let server = Server::start(cfg)?;
     println!("listening on {} (ctrl-c to stop)", server.addr());

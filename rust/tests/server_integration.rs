@@ -97,11 +97,21 @@ fn server_serves_generate_metrics_and_rejects_garbage() {
     let pong = c4.roundtrip(&jobj![("op", "ping")]).unwrap();
     assert!(pong.get("ok").unwrap().as_bool().unwrap());
 
-    // metrics reflect the work
+    // metrics reflect the work, with histogram-merged quantiles and the
+    // queue counters the engine always had but never exposed
     let m = c4.roundtrip(&jobj![("op", "metrics")]).unwrap();
     assert!(m.get("ok").unwrap().as_bool().unwrap());
     assert!(m.get("requests_completed").unwrap().as_usize().unwrap() >= 4);
     assert!(m.get("steps_executed").unwrap().as_usize().unwrap() >= 5 * 2 + 9);
+    assert!(m.get("queue_accepted").unwrap().as_usize().unwrap() >= 4);
+    assert!(m.get("latency_p50_s").unwrap().as_f64().unwrap() > 0.0);
+    assert!(
+        m.get("latency_p95_s").unwrap().as_f64().unwrap()
+            >= m.get("latency_p50_s").unwrap().as_f64().unwrap()
+    );
+    let shards = m.get("shards").unwrap().as_arr().unwrap();
+    assert!(!shards.is_empty());
+    assert_eq!(shards[0].get("dataset").unwrap().as_str().unwrap(), "sprites");
 
     // multi-model routing: a request for a *different* dataset spins up a
     // second engine lazily and serves it
@@ -133,4 +143,118 @@ fn server_serves_generate_metrics_and_rejects_garbage() {
     assert!(!r.get("ok").unwrap().as_bool().unwrap());
 
     server.shutdown();
+}
+
+/// Lazy multi-dataset bring-up at shard granularity: a request for a
+/// second dataset spins up that dataset's whole pool (placement says 2
+/// shards each), both datasets answer, and the metrics breakdown lists
+/// every shard.
+#[test]
+fn lazy_bring_up_spawns_sharded_pools() {
+    let root = format!("{ROOT}/artifacts");
+    if !std::path::Path::new(&root).join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing");
+        return;
+    }
+    let cfg = ServeConfig {
+        artifact_root: root,
+        dataset: "sprites".into(),
+        listen: "127.0.0.1:0".into(),
+        max_batch: 8,
+        placement: vec![("sprites".into(), 2), ("blobs".into(), 2)],
+        ..Default::default()
+    };
+    let server = Server::start(cfg).unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+
+    // only the default dataset's pool exists at startup
+    let m = c.roundtrip(&jobj![("op", "metrics")]).unwrap();
+    assert_eq!(m.get("engines").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(m.get("datasets").unwrap().as_usize().unwrap(), 1);
+
+    // several requests across both datasets; blobs' pool comes up lazily
+    let mut replies = Vec::new();
+    for (i, ds) in ["sprites", "blobs", "sprites", "blobs"].iter().enumerate() {
+        replies.push(
+            c.roundtrip(&jobj![
+                ("op", "generate"),
+                ("dataset", *ds),
+                ("steps", 4.0),
+                ("eta", 0.0),
+                ("count", 2.0),
+                ("seed", i as f64),
+            ])
+            .unwrap(),
+        );
+    }
+    for r in &replies {
+        assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
+    }
+
+    let m = c.roundtrip(&jobj![("op", "metrics")]).unwrap();
+    assert_eq!(m.get("engines").unwrap().as_usize().unwrap(), 4);
+    assert_eq!(m.get("datasets").unwrap().as_usize().unwrap(), 2);
+    assert!(m.get("queue_accepted").unwrap().as_usize().unwrap() >= 4);
+    let shards = m.get("shards").unwrap().as_arr().unwrap();
+    assert_eq!(shards.len(), 4);
+    let blob_shards = shards
+        .iter()
+        .filter(|s| s.get("dataset").unwrap().as_str().unwrap() == "blobs")
+        .count();
+    assert_eq!(blob_shards, 2);
+    // merged totals equal the sum of the per-shard breakdown
+    let total: usize = shards
+        .iter()
+        .map(|s| s.get("requests_completed").unwrap().as_usize().unwrap())
+        .sum();
+    assert_eq!(m.get("requests_completed").unwrap().as_usize().unwrap(), total);
+    assert!(total >= 4);
+
+    server.shutdown();
+}
+
+/// Graceful shutdown: a request in flight when `shutdown` is called is
+/// either drained to completion (inside drain_timeout) or answered with
+/// an explicit "shutting down" error — the waiter is never abandoned.
+#[test]
+fn shutdown_answers_inflight_waiters() {
+    let root = format!("{ROOT}/artifacts");
+    if !std::path::Path::new(&root).join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing");
+        return;
+    }
+    let cfg = ServeConfig {
+        artifact_root: root,
+        dataset: "sprites".into(),
+        listen: "127.0.0.1:0".into(),
+        max_batch: 4,
+        drain_timeout_ms: 10_000,
+        ..Default::default()
+    };
+    let server = Server::start(cfg).unwrap();
+    let addr = server.addr();
+    let worker = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        c.roundtrip(&jobj![
+            ("op", "generate"),
+            ("dataset", "sprites"),
+            ("steps", 50.0),
+            ("eta", 0.0),
+            ("count", 4.0),
+            ("seed", 1.0),
+        ])
+        .unwrap()
+    });
+    // let the request reach the engine, then pull the plug
+    std::thread::sleep(std::time::Duration::from_millis(150));
+    server.shutdown();
+    let r = worker.join().unwrap();
+    let ok = r.get("ok").unwrap().as_bool().unwrap();
+    if ok {
+        // drained to completion before the deadline
+        assert!(r.get("steps_executed").unwrap().as_usize().unwrap() >= 1);
+    } else {
+        let msg = r.get("error").unwrap().as_str().unwrap().to_string();
+        assert!(msg.contains("shutting down"), "unexpected error: {msg}");
+    }
 }
