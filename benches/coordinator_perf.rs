@@ -3,11 +3,16 @@
 //! Measures (a) raw executable step latency per bucket, (b) engine
 //! steps/s through the full tick path at the same buckets, so the
 //! coordinator's overhead is the gap; (c) end-to-end mixed-workload
-//! throughput vs max_batch — the continuous-batching payoff curve; and
+//! throughput vs max_batch — the continuous-batching payoff curve;
 //! (d) router shard scaling: aggregate steps/s for the same multi-dataset
 //! workload at 1/2/4 shards per dataset — the speedup the sharded
 //! coordinator is supposed to buy on a multi-core host, measured rather
-//! than asserted.
+//! than asserted; and (e) per-update-kernel engine throughput (DDIM vs
+//! PF-ODE vs AB2 host integration) at a fixed batch.
+//!
+//! Besides the human-readable tables, every section is dumped to
+//! `BENCH_coordinator.json` so the perf trajectory is tracked across PRs
+//! instead of scraped from stdout.
 //!
 //!     cargo bench --bench coordinator_perf
 
@@ -19,8 +24,13 @@ use std::time::Instant;
 use ddim_serve::config::ServeConfig;
 use ddim_serve::coordinator::request::{Request, RequestBody};
 use ddim_serve::coordinator::{Engine, Router};
+use ddim_serve::jobj;
+use ddim_serve::json::{self, Value};
 use ddim_serve::runtime::{Runtime, StepOutput};
+use ddim_serve::sampler::SamplerKind;
 use ddim_serve::schedule::{NoiseMode, TauKind};
+
+const RESULT_PATH: &str = "BENCH_coordinator.json";
 
 fn raw_step_ms(rt: &mut Runtime, ds: &str, bucket: usize, iters: usize) -> f64 {
     let dim = rt.manifest().sample_dim();
@@ -45,6 +55,11 @@ fn main() {
     let Some(mut rt) = common::require_artifacts() else { return };
     let ds = "sprites";
     let iters = if common::quick() { 3 } else { 20 };
+    let mut sec_raw: Vec<Value> = Vec::new();
+    let mut sec_engine: Vec<Value> = Vec::new();
+    let mut sec_mixed: Vec<Value> = Vec::new();
+    let mut sec_shards: Vec<Value> = Vec::new();
+    let mut sec_kernels: Vec<Value> = Vec::new();
 
     println!("=== coordinator_perf (a): raw executable latency per bucket ===");
     println!(
@@ -60,6 +75,11 @@ fn main() {
             ms / b as f64,
             1e3 / ms * b as f64
         );
+        sec_raw.push(jobj![
+            ("bucket", b),
+            ("ms_per_call", ms),
+            ("steps_per_s", 1e3 / ms * b as f64),
+        ]);
         raw.push(ms);
     }
 
@@ -88,6 +108,7 @@ fn main() {
                     steps,
                     mode: NoiseMode::Eta(0.0),
                     tau: TauKind::Linear,
+                    sampler: SamplerKind::Ddim,
                     body: RequestBody::Generate { count: b, seed: k },
                     return_images: false,
                 })
@@ -103,6 +124,13 @@ fn main() {
             "{b:>10} | {engine_sps:>14.0} | {raw_sps:>14.0} | {:>9.1}%",
             (1.0 - engine_sps / raw_sps) * 100.0
         );
+        sec_engine.push(jobj![
+            ("max_batch", b),
+            ("engine_steps_per_s", engine_sps),
+            ("raw_steps_per_s", raw_sps),
+            ("overhead_frac", 1.0 - engine_sps / raw_sps),
+            ("occupancy", m.occupancy()),
+        ]);
     }
 
     println!("\n=== coordinator_perf (c): mixed heterogeneous workload vs max_batch ===");
@@ -136,6 +164,7 @@ fn main() {
                     steps,
                     mode,
                     tau: TauKind::Linear,
+                    sampler: SamplerKind::Ddim,
                     body: RequestBody::Generate { count, seed: k as u64 },
                     return_images: false,
                 })
@@ -151,6 +180,14 @@ fn main() {
             m.occupancy(),
             m.latency_p95_s * 1e3
         );
+        sec_mixed.push(jobj![
+            ("max_batch", b),
+            ("wall_s", wall),
+            ("steps_per_s", m.steps_executed as f64 / wall),
+            ("occupancy", m.occupancy()),
+            ("latency_p50_ms", m.latency_p50_s * 1e3),
+            ("latency_p95_ms", m.latency_p95_s * 1e3),
+        ]);
     }
     println!("\n=== coordinator_perf (d): router shard scaling (multi-dataset workload) ===");
     // 4 logical request streams cycling over every dataset the artifact
@@ -191,6 +228,7 @@ fn main() {
                 steps,
                 mode: if k % 4 == 3 { NoiseMode::Eta(1.0) } else { NoiseMode::Eta(0.0) },
                 tau: TauKind::Linear,
+                sampler: SamplerKind::Ddim,
                 body: RequestBody::Generate { count: 2 + (k % 3), seed: k as u64 },
                 return_images: false,
             }));
@@ -213,8 +251,90 @@ fn main() {
             agg.latency_p95_s * 1e3,
             if base_sps > 0.0 { sps / base_sps } else { 1.0 }
         );
+        sec_shards.push(jobj![
+            ("shards_per_dataset", shards),
+            ("total_shards", per_shard.len()),
+            ("wall_s", wall),
+            ("steps_per_s", sps),
+            ("latency_p50_ms", agg.latency_p50_s * 1e3),
+            ("latency_p95_ms", agg.latency_p95_s * 1e3),
+            ("occupancy", agg.occupancy()),
+            ("speedup_vs_1", if base_sps > 0.0 { sps / base_sps } else { 1.0 }),
+        ]);
         router.shutdown();
     }
 
-    println!("\ninterpretation: overhead column (b) is the coordinator tax (§Perf target < 5%);\ncurve (c) shows continuous batching converting batch capacity into steps/s at near-constant p95;\nsweep (d) is the sharding payoff — aggregate steps/s should scale with shards until cores saturate.");
+    println!("\n=== coordinator_perf (e): per-update-kernel engine throughput ===");
+    // same model, same executable calls; the delta is the host-side
+    // integration cost of PF-ODE / AB2 vs committing the fused x_prev
+    println!(
+        "{:>8} | {:>10} | {:>12} | {:>10}",
+        "kernel", "wall s", "steps/s", "p95 ms"
+    );
+    let steps = if common::quick() { 5 } else { 20 };
+    let n_req = if common::quick() { 4 } else { 12 };
+    for kernel in SamplerKind::ALL {
+        let cfg = ServeConfig {
+            artifact_root: common::artifacts_root(),
+            dataset: ds.into(),
+            max_batch: 8,
+            max_lanes: 64,
+            queue_capacity: 1024,
+            ..Default::default()
+        };
+        let mut engine = Engine::new(cfg).expect("engine");
+        engine.warmup().expect("warmup");
+        for k in 0..n_req {
+            engine
+                .submit(Request {
+                    dataset: ds.into(),
+                    steps,
+                    mode: NoiseMode::Eta(0.0),
+                    tau: TauKind::Linear,
+                    sampler: kernel,
+                    body: RequestBody::Generate { count: 2, seed: k },
+                    return_images: false,
+                })
+                .expect("submit");
+        }
+        let t0 = Instant::now();
+        engine.run_until_idle().expect("drain");
+        let wall = t0.elapsed().as_secs_f64();
+        let m = engine.metrics();
+        let sps = m.steps_executed as f64 / wall;
+        println!(
+            "{:>8} | {wall:>10.2} | {sps:>12.0} | {:>10.0}",
+            kernel.label(),
+            m.latency_p95_s * 1e3
+        );
+        assert_eq!(
+            m.kernel_steps[kernel.index()],
+            m.steps_executed,
+            "every step should be accounted to the requested kernel"
+        );
+        sec_kernels.push(jobj![
+            ("kernel", kernel.label()),
+            ("wall_s", wall),
+            ("steps_per_s", sps),
+            ("occupancy", m.occupancy()),
+            ("latency_p50_ms", m.latency_p50_s * 1e3),
+            ("latency_p95_ms", m.latency_p95_s * 1e3),
+        ]);
+    }
+
+    let dump = jobj![
+        ("bench", "coordinator_perf"),
+        ("quick", common::quick()),
+        ("raw_latency", Value::Arr(sec_raw)),
+        ("engine_vs_raw", Value::Arr(sec_engine)),
+        ("mixed_workload", Value::Arr(sec_mixed)),
+        ("shard_scaling", Value::Arr(sec_shards)),
+        ("update_kernels", Value::Arr(sec_kernels)),
+    ];
+    match std::fs::write(RESULT_PATH, json::to_string(&dump) + "\n") {
+        Ok(()) => println!("\nwrote machine-readable results to {RESULT_PATH}"),
+        Err(e) => eprintln!("\nWARN: could not write {RESULT_PATH}: {e}"),
+    }
+
+    println!("\ninterpretation: overhead column (b) is the coordinator tax (§Perf target < 5%);\ncurve (c) shows continuous batching converting batch capacity into steps/s at near-constant p95;\nsweep (d) is the sharding payoff — aggregate steps/s should scale with shards until cores saturate;\ntable (e) prices the host-side PF-ODE/AB2 integration against the fused DDIM commit.");
 }

@@ -9,6 +9,7 @@ use ddim_serve::cli::Args;
 use ddim_serve::config::ServeConfig;
 use ddim_serve::coordinator::request::{Request, RequestBody};
 use ddim_serve::coordinator::{Engine, ResponseBody};
+use ddim_serve::sampler::SamplerKind;
 use ddim_serve::schedule::{NoiseMode, TauKind};
 use ddim_serve::tensor::{save_pgm, tile_grid};
 
@@ -33,6 +34,7 @@ fn main() -> anyhow::Result<()> {
         steps,
         mode,
         tau: TauKind::Quadratic,
+        sampler: SamplerKind::parse(args.get_or("sampler", "ddim"))?,
         body: RequestBody::Generate { count: 16, seed },
         return_images: true,
     })?;

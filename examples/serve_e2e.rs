@@ -66,6 +66,7 @@ fn main() -> anyhow::Result<()> {
             _ => unreachable!(),
         };
         let steps = req.steps;
+        let sampler = req.sampler.label();
         let ds = req.dataset.clone();
         handles.push(std::thread::spawn(move || {
             // open loop: wait until this request's arrival time
@@ -81,6 +82,7 @@ fn main() -> anyhow::Result<()> {
                     ("dataset", ds.as_str()),
                     ("steps", steps),
                     ("eta", mode_s.as_str()),
+                    ("sampler", sampler),
                     ("count", count),
                     ("seed", rseed),
                 ])?;

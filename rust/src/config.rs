@@ -3,6 +3,7 @@
 //! but everything the paper's experiments vary is a field here.
 
 use crate::error::{Error, Result};
+use crate::sampler::SamplerKind;
 
 /// Coordinator / server configuration.
 #[derive(Debug, Clone)]
@@ -21,6 +22,9 @@ pub struct ServeConfig {
     pub listen: String,
     /// Default number of sampling steps when a request omits it.
     pub default_steps: usize,
+    /// Update kernel used when a wire request omits `"sampler"`
+    /// (`--default-sampler ddim|pf_ode|ab2`).
+    pub default_sampler: SamplerKind,
     /// Engine shards (worker threads, each with its own runtime) per
     /// dataset, unless overridden by `placement`.
     pub shards: usize,
@@ -42,6 +46,7 @@ impl Default for ServeConfig {
             max_lanes: 64,
             listen: "127.0.0.1:7878".into(),
             default_steps: 20,
+            default_sampler: SamplerKind::Ddim,
             shards: 1,
             placement: Vec::new(),
             drain_timeout_ms: 2000,

@@ -20,8 +20,8 @@ use crate::coordinator::metrics::{Histogram, MetricsSnapshot};
 use crate::coordinator::queue::BoundedQueue;
 use crate::coordinator::request::{Request, RequestBody, RequestId, Response, ResponseBody};
 use crate::error::{Error, Result};
-use crate::runtime::{Runtime, StepOutput};
-use crate::sampler::Trajectory;
+use crate::runtime::Runtime;
+use crate::sampler::{StepBatch, Trajectory};
 use crate::schedule::{Direction, SamplePlan};
 
 struct Lane {
@@ -57,20 +57,17 @@ pub struct Engine {
     next_id: RequestId,
     rr_cursor: usize,
     dim: usize,
-    // packing buffers (max bucket), reused every tick
-    buf_x: Vec<f32>,
-    buf_t: Vec<f32>,
-    buf_ain: Vec<f32>,
-    buf_aout: Vec<f32>,
-    buf_sigma: Vec<f32>,
-    buf_noise: Vec<f32>,
-    out: StepOutput,
+    // shared pack/pad/run path (max bucket capacity), reused every tick
+    batch: StepBatch,
     sel: Vec<usize>,
     // metrics
     latency: Histogram,
     started: Instant,
     calls: u64,
     steps: u64,
+    /// steps per update kernel, indexed by
+    /// [`crate::sampler::SamplerKind::index`]
+    kernel_steps: [u64; 3],
     lanes_done: u64,
     requests_done: u64,
     occupancy_sum: f64,
@@ -99,18 +96,13 @@ impl Engine {
             next_id: 1,
             rr_cursor: 0,
             dim,
-            buf_x: vec![0.0; max_bucket * dim],
-            buf_t: vec![0.0; max_bucket],
-            buf_ain: vec![0.0; max_bucket],
-            buf_aout: vec![0.0; max_bucket],
-            buf_sigma: vec![0.0; max_bucket],
-            buf_noise: vec![0.0; max_bucket * dim],
-            out: StepOutput::zeros(max_bucket * dim),
+            batch: StepBatch::new(max_bucket, dim),
             sel: Vec::with_capacity(max_bucket),
             latency: Histogram::new(),
             started: Instant::now(),
             calls: 0,
             steps: 0,
+            kernel_steps: [0; 3],
             lanes_done: 0,
             requests_done: 0,
             occupancy_sum: 0.0,
@@ -153,6 +145,16 @@ impl Engine {
             RequestBody::Encode { .. } => SamplePlan::encode(abar, request.tau, request.steps)?,
             _ => SamplePlan::generate(abar, request.tau, request.steps, request.mode)?,
         };
+        // host-integrated kernels re-derive x from ε and have no σ > 0 form:
+        // validated against the materialised plan's mode (encode plans are
+        // deterministic whatever `eta` the request carried)
+        if !request.sampler.supports(plan.mode) {
+            return Err(Error::Request(format!(
+                "sampler '{}' requires a deterministic plan: \
+                 stochastic plans (eta>0, sigma-hat) are DDIM-only",
+                request.sampler.label()
+            )));
+        }
         // validate provided states' dimensionality up front
         let check_dims = |rows: &[Vec<f32>]| -> Result<()> {
             for r in rows {
@@ -182,6 +184,13 @@ impl Engine {
         self.queue.len()
     }
 
+    /// Lanes represented by the requests still waiting for admission —
+    /// the unit the router's least-loaded dispatch balances in (a queued
+    /// count=8 generate is 8 lanes of backlog, not 1).
+    pub fn queued_lanes(&self) -> usize {
+        self.queue.iter().map(|p| p.request.lane_count()).sum()
+    }
+
     /// Number of lanes currently resident.
     pub fn active_lanes(&self) -> usize {
         self.lanes.len()
@@ -205,26 +214,39 @@ impl Engine {
             let Pending { id, request, plan, submitted } = p;
             let steps_total = plan.len() * request.lane_count();
             let n = request.lane_count();
+            let kernel = request.sampler;
             match request.body {
                 RequestBody::Generate { count, seed } => {
                     for i in 0..count {
-                        let traj =
-                            Trajectory::from_prior(plan.clone(), self.dim, seed + i as u64);
+                        let traj = Trajectory::from_prior_with(
+                            plan.clone(),
+                            self.dim,
+                            seed + i as u64,
+                            kernel,
+                        );
                         self.lanes.push(Lane { req: id, lane_idx: i, traj });
                     }
                 }
                 RequestBody::Decode { latents } => {
                     for (i, x) in latents.into_iter().enumerate() {
-                        let traj =
-                            Trajectory::from_state(plan.clone(), x, id * 7919 + i as u64);
+                        let traj = Trajectory::from_state_with(
+                            plan.clone(),
+                            x,
+                            id * 7919 + i as u64,
+                            kernel,
+                        );
                         self.lanes.push(Lane { req: id, lane_idx: i, traj });
                     }
                 }
                 RequestBody::Encode { images } => {
                     debug_assert_eq!(plan.direction, Direction::Encode);
                     for (i, x) in images.into_iter().enumerate() {
-                        let traj =
-                            Trajectory::from_state(plan.clone(), x, id * 7919 + i as u64);
+                        let traj = Trajectory::from_state_with(
+                            plan.clone(),
+                            x,
+                            id * 7919 + i as u64,
+                            kernel,
+                        );
                         self.lanes.push(Lane { req: id, lane_idx: i, traj });
                     }
                 }
@@ -262,51 +284,25 @@ impl Engine {
         }
         self.rr_cursor = (self.rr_cursor + n_sel) % n_active.max(1);
 
-        // --- pack
-        let dim = self.dim;
+        // --- pack + pad through the shared StepBatch path
         for (lane_slot, &li) in self.sel.iter().enumerate() {
-            let lane = &mut self.lanes[li];
-            let p = lane.traj.next_params()?;
-            self.buf_x[lane_slot * dim..(lane_slot + 1) * dim]
-                .copy_from_slice(lane.traj.state());
-            self.buf_t[lane_slot] = p.t_model as f32;
-            self.buf_ain[lane_slot] = p.alpha_in as f32;
-            self.buf_aout[lane_slot] = p.alpha_out as f32;
-            self.buf_sigma[lane_slot] = p.sigma_dir as f32;
-            lane.traj
-                .fill_noise(&mut self.buf_noise[lane_slot * dim..(lane_slot + 1) * dim])?;
+            self.batch.pack(lane_slot, &mut self.lanes[li].traj)?;
         }
-        for lane_slot in n_sel..bucket {
-            // padding lanes: inert inputs (alpha values must stay valid)
-            self.buf_x[lane_slot * dim..(lane_slot + 1) * dim].fill(0.0);
-            self.buf_t[lane_slot] = self.buf_t[0];
-            self.buf_ain[lane_slot] = self.buf_ain[0].max(1e-4);
-            self.buf_aout[lane_slot] = self.buf_aout[0].max(1e-4);
-            self.buf_sigma[lane_slot] = 0.0;
-            self.buf_noise[lane_slot * dim..(lane_slot + 1) * dim].fill(0.0);
-        }
+        self.batch.pad(n_sel, bucket);
 
         // --- run
         let exe = self.rt.executable(&self.cfg.dataset, bucket)?;
-        exe.run(
-            &self.buf_x[..bucket * dim],
-            &self.buf_t[..bucket],
-            &self.buf_ain[..bucket],
-            &self.buf_aout[..bucket],
-            &self.buf_sigma[..bucket],
-            &self.buf_noise[..bucket * dim],
-            &mut self.out,
-        )?;
+        self.batch.run(exe, bucket)?;
         self.calls += 1;
         self.steps += n_sel as u64;
         self.occupancy_sum += n_sel as f64 / bucket as f64;
 
-        // --- advance + retire
+        // --- advance + retire (each lane commits through its own kernel)
         let mut finished: Vec<usize> = Vec::new();
         for (lane_slot, &li) in self.sel.iter().enumerate() {
             let lane = &mut self.lanes[li];
-            lane.traj
-                .advance(&self.out.x_prev[lane_slot * dim..(lane_slot + 1) * dim])?;
+            self.kernel_steps[lane.traj.kernel_kind().index()] += 1;
+            lane.traj.advance(self.batch.lane(lane_slot))?;
             if lane.traj.is_done() {
                 finished.push(li);
             }
@@ -406,6 +402,7 @@ impl Engine {
             lanes_completed: self.lanes_done,
             executable_calls: self.calls,
             steps_executed: self.steps,
+            kernel_steps: self.kernel_steps,
             occupancy_sum: self.occupancy_sum,
             latency_p50_s: self.latency.quantile(0.5),
             latency_p95_s: self.latency.quantile(0.95),

@@ -101,6 +101,10 @@ pub struct MetricsSnapshot {
     pub lanes_completed: u64,
     pub executable_calls: u64,
     pub steps_executed: u64,
+    /// Steps broken down by update kernel, indexed by
+    /// [`crate::sampler::SamplerKind::index`] (ddim / pf_ode / ab2).
+    /// Sums to `steps_executed`.
+    pub kernel_steps: [u64; 3],
     /// sum over calls of (occupied lanes / bucket) — occupancy = this / calls
     pub occupancy_sum: f64,
     pub latency_p50_s: f64,
@@ -136,12 +140,15 @@ impl MetricsSnapshot {
     /// One-line human summary for examples/benches.
     pub fn summary(&self) -> String {
         format!(
-            "req={} rej={} lanes={} calls={} steps={} occ={:.2} p50={:.1}ms p95={:.1}ms p99={:.1}ms thr={:.1} steps/s",
+            "req={} rej={} lanes={} calls={} steps={} (ddim/pf/ab2={}/{}/{}) occ={:.2} p50={:.1}ms p95={:.1}ms p99={:.1}ms thr={:.1} steps/s",
             self.requests_completed,
             self.requests_rejected,
             self.lanes_completed,
             self.executable_calls,
             self.steps_executed,
+            self.kernel_steps[0],
+            self.kernel_steps[1],
+            self.kernel_steps[2],
             self.occupancy(),
             self.latency_p50_s * 1e3,
             self.latency_p95_s * 1e3,

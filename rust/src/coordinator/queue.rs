@@ -43,6 +43,11 @@ impl<T> BoundedQueue<T> {
         self.items.front()
     }
 
+    /// Iterate queued items front-to-back (metrics / load accounting).
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.items.iter()
+    }
+
     pub fn len(&self) -> usize {
         self.items.len()
     }
@@ -69,6 +74,7 @@ mod tests {
         assert_eq!(q.pop(), Some(1));
         assert_eq!(q.pop(), Some(2));
         q.push(4).unwrap();
+        assert_eq!(q.iter().copied().collect::<Vec<_>>(), vec![3, 4]);
         assert_eq!(q.pop(), Some(3));
         assert_eq!(q.pop(), Some(4));
         assert_eq!(q.pop(), None);

@@ -9,6 +9,7 @@
 use crate::error::{Error, Result};
 use crate::jobj;
 use crate::json::{self, Value};
+use crate::sampler::SamplerKind;
 use crate::schedule::{NoiseMode, TauKind};
 
 /// Monotonically increasing request identifier (assigned by the engine).
@@ -34,6 +35,10 @@ pub struct Request {
     pub steps: usize,
     pub mode: NoiseMode,
     pub tau: TauKind,
+    /// Update kernel: `ddim` (Eq. 13, the fused executable's `x_prev`),
+    /// `pf_ode` (Eq. 15 host Euler), or `ab2` (§7 multistep). The host
+    /// kernels are deterministic-only; stochastic plans are DDIM-only.
+    pub sampler: SamplerKind,
     pub body: RequestBody,
     /// Return pixel data in the response (else just stats).
     pub return_images: bool,
@@ -49,9 +54,17 @@ impl Request {
         }
     }
 
-    /// Parse the JSON-line wire form. Minimal example:
+    /// Parse the JSON-line wire form with the build-time default sampler.
+    /// Minimal example:
     /// `{"op":"generate","dataset":"sprites","steps":20,"eta":"0.0","count":4,"seed":7}`
     pub fn from_json(v: &Value) -> Result<Self> {
+        Self::from_json_with(v, SamplerKind::Ddim)
+    }
+
+    /// Parse the JSON-line wire form; a missing `"sampler"` field falls
+    /// back to `default_sampler` (the server passes its
+    /// `--default-sampler` here).
+    pub fn from_json_with(v: &Value, default_sampler: SamplerKind) -> Result<Self> {
         let op = v.get("op")?.as_str()?.to_string();
         let dataset = v.get("dataset")?.as_str()?.to_string();
         let steps = v.get("steps")?.as_usize()?;
@@ -69,6 +82,10 @@ impl Request {
             Some(b) => b.as_bool()?,
             None => false,
         };
+        let sampler = match v.get_opt("sampler") {
+            Some(s) => SamplerKind::parse(s.as_str()?)?,
+            None => default_sampler,
+        };
         let parse_matrix = |key: &str| -> Result<Vec<Vec<f32>>> {
             v.get(key)?
                 .as_arr()?
@@ -85,15 +102,29 @@ impl Request {
         let body = match op.as_str() {
             "generate" => RequestBody::Generate {
                 count: v.get("count")?.as_usize()?,
-                seed: v.get("seed")?.as_f64()? as u64,
+                // strict: negative / fractional / >=2^53 seeds are rejected
+                // instead of silently truncated through an f64 cast
+                seed: v
+                    .get("seed")?
+                    .as_u64()
+                    .map_err(|e| Error::Request(format!("seed: {e}")))?,
             },
             "decode" => RequestBody::Decode { latents: parse_matrix("latents")? },
             "encode" => RequestBody::Encode { images: parse_matrix("images")? },
             other => return Err(Error::Request(format!("unknown op '{other}'"))),
         };
-        let req = Request { dataset, steps, mode, tau, body, return_images };
+        let req = Request { dataset, steps, mode, tau, sampler, body, return_images };
         if req.lane_count() == 0 {
             return Err(Error::Request("request has zero lanes".into()));
+        }
+        // host-integrated kernels are undefined under injected noise; encode
+        // plans are always deterministic regardless of the parsed `eta`
+        if !matches!(req.body, RequestBody::Encode { .. }) && !sampler.supports(req.mode) {
+            return Err(Error::Request(format!(
+                "sampler '{}' requires a deterministic plan: \
+                 stochastic requests (eta>0, sigma-hat) are DDIM-only",
+                sampler.label()
+            )));
         }
         Ok(req)
     }
@@ -166,8 +197,72 @@ mod tests {
         assert_eq!(r.steps, 20);
         assert_eq!(r.mode, NoiseMode::Eta(0.5));
         assert_eq!(r.tau, TauKind::Quadratic);
+        assert_eq!(r.sampler, SamplerKind::Ddim);
         assert_eq!(r.lane_count(), 4);
         assert!(r.return_images);
+    }
+
+    #[test]
+    fn parse_sampler_field_and_default() {
+        let v = json::parse(
+            r#"{"op":"generate","dataset":"d","steps":10,"count":1,"seed":0,"sampler":"ab2"}"#,
+        )
+        .unwrap();
+        assert_eq!(Request::from_json(&v).unwrap().sampler, SamplerKind::Ab2);
+        // missing field falls back to the caller's default
+        let v = json::parse(r#"{"op":"generate","dataset":"d","steps":10,"count":1,"seed":0}"#)
+            .unwrap();
+        assert_eq!(
+            Request::from_json_with(&v, SamplerKind::PfOde).unwrap().sampler,
+            SamplerKind::PfOde
+        );
+        // an explicit field beats the default
+        let v = json::parse(
+            r#"{"op":"generate","dataset":"d","steps":10,"count":1,"seed":0,"sampler":"ddim"}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            Request::from_json_with(&v, SamplerKind::Ab2).unwrap().sampler,
+            SamplerKind::Ddim
+        );
+    }
+
+    #[test]
+    fn rejects_host_kernels_on_stochastic_plans() {
+        for s in [
+            r#"{"op":"generate","dataset":"d","steps":10,"count":1,"seed":0,"eta":1.0,"sampler":"ab2"}"#,
+            r#"{"op":"generate","dataset":"d","steps":10,"count":1,"seed":0,"eta":0.5,"sampler":"pf_ode"}"#,
+            r#"{"op":"generate","dataset":"d","steps":10,"count":1,"seed":0,"eta":"hat","sampler":"ab2"}"#,
+        ] {
+            let v = json::parse(s).unwrap();
+            let err = Request::from_json(&v).unwrap_err().to_string();
+            assert!(err.contains("DDIM-only"), "{s} -> {err}");
+        }
+        // eta>0 with the default DDIM sampler stays legal
+        let v = json::parse(
+            r#"{"op":"generate","dataset":"d","steps":10,"count":1,"seed":0,"eta":1.0}"#,
+        )
+        .unwrap();
+        assert!(Request::from_json(&v).is_ok());
+        // encode is deterministic by construction: host kernels are allowed
+        let v = json::parse(
+            r#"{"op":"encode","dataset":"d","steps":5,"images":[[0.0]],"sampler":"pf_ode"}"#,
+        )
+        .unwrap();
+        assert!(Request::from_json(&v).is_ok());
+    }
+
+    #[test]
+    fn rejects_bad_seeds() {
+        for s in [
+            r#"{"op":"generate","dataset":"d","steps":5,"count":1,"seed":-1}"#,
+            r#"{"op":"generate","dataset":"d","steps":5,"count":1,"seed":1.5}"#,
+            r#"{"op":"generate","dataset":"d","steps":5,"count":1,"seed":9007199254740994}"#,
+        ] {
+            let v = json::parse(s).unwrap();
+            let err = Request::from_json(&v).unwrap_err().to_string();
+            assert!(err.contains("seed"), "{s} -> {err}");
+        }
     }
 
     #[test]
@@ -202,6 +297,7 @@ mod tests {
             r#"{"op":"generate","dataset":"d","steps":5,"count":0,"seed":0}"#,
             r#"{"op":"generate","dataset":"d","count":1,"seed":0}"#,
             r#"{"op":"generate","dataset":"d","steps":5,"count":1,"seed":0,"eta":true}"#,
+            r#"{"op":"generate","dataset":"d","steps":5,"count":1,"seed":0,"sampler":"euler"}"#,
             r#"{"op":"encode","dataset":"d","steps":5,"images":[]}"#,
         ] {
             let v = json::parse(s).unwrap();

@@ -26,7 +26,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver};
 use std::sync::RwLock;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::config::ServeConfig;
 use crate::coordinator::metrics::{Histogram, MetricsSnapshot};
@@ -36,7 +36,9 @@ use crate::error::{Error, Result};
 use crate::jobj;
 use crate::json::{self, Value};
 
-/// How long a metrics poll waits on one shard before skipping it.
+/// Total budget a metrics poll spends waiting across *all* shards before
+/// skipping the stragglers (shared deadline, not per shard — a fleet of
+/// wedged shards must not stall a connection thread for 5s × N).
 const STATS_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// One dataset's shards plus its dispatch cursor. The cursor is
@@ -141,6 +143,14 @@ impl Router {
             }
         }
         let mut pools = self.pools.write().unwrap();
+        if self.stopping.load(Ordering::SeqCst) {
+            // raced with shutdown(): it has already signaled/joined every
+            // pool in the map, so a pool inserted now would never be
+            // stopped — tear the fresh shards down instead
+            drop(pools);
+            teardown(&shards);
+            return Err(Error::Coordinator("shutting down".into()));
+        }
         if pools.contains_key(dataset) {
             drop(pools);
             teardown(&shards); // raced: someone else's pool won
@@ -210,9 +220,12 @@ impl Router {
                 .flat_map(|p| p.shards.iter().filter_map(EngineShard::stats_request))
                 .collect()
         };
+        let deadline = Instant::now() + STATS_TIMEOUT;
         let per_shard: Vec<ShardStats> = pending
             .into_iter()
-            .filter_map(|rx| rx.recv_timeout(STATS_TIMEOUT).ok())
+            .filter_map(|rx| {
+                rx.recv_timeout(deadline.saturating_duration_since(Instant::now())).ok()
+            })
             .collect();
         let mut agg = MetricsSnapshot::default();
         let mut latency = Histogram::new();
@@ -223,6 +236,9 @@ impl Router {
             agg.lanes_completed += m.lanes_completed;
             agg.executable_calls += m.executable_calls;
             agg.steps_executed += m.steps_executed;
+            for (k, v) in agg.kernel_steps.iter_mut().zip(m.kernel_steps) {
+                *k += v;
+            }
             agg.occupancy_sum += m.occupancy_sum;
             agg.queue_accepted += m.queue_accepted;
             agg.queue_depth += m.queue_depth;
@@ -251,6 +267,9 @@ impl Router {
                     ("requests_completed", m.requests_completed),
                     ("requests_rejected", m.requests_rejected),
                     ("steps_executed", m.steps_executed),
+                    ("steps_ddim", m.kernel_steps[0]),
+                    ("steps_pf_ode", m.kernel_steps[1]),
+                    ("steps_ab2", m.kernel_steps[2]),
                     ("executable_calls", m.executable_calls),
                     ("occupancy", m.occupancy()),
                     ("latency_p50_s", m.latency_p50_s),
@@ -271,6 +290,9 @@ impl Router {
             ("lanes_completed", agg.lanes_completed),
             ("executable_calls", agg.executable_calls),
             ("steps_executed", agg.steps_executed),
+            ("steps_ddim", agg.kernel_steps[0]),
+            ("steps_pf_ode", agg.kernel_steps[1]),
+            ("steps_ab2", agg.kernel_steps[2]),
             ("occupancy", agg.occupancy()),
             ("latency_p50_s", agg.latency_p50_s),
             ("latency_p95_s", agg.latency_p95_s),

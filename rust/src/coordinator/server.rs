@@ -61,7 +61,8 @@ impl Server {
         self.addr
     }
 
-    /// The router, for in-process callers (benches poke metrics directly).
+    /// The router, for in-process callers that want to prewarm pools or
+    /// read metrics without a TCP round trip.
     pub fn router(&self) -> Option<&Arc<Router>> {
         self.router.as_ref()
     }
@@ -133,7 +134,7 @@ fn dispatch_line(line: &str, router: &Router) -> String {
         Some(op) if op == "ping" => json::to_string(&jobj![("ok", true), ("pong", true)]),
         Some(op) if op == "metrics" => router.metrics_json(),
         Some(_) => {
-            let req = match Request::from_json(&v) {
+            let req = match Request::from_json_with(&v, router.config().default_sampler) {
                 Ok(r) => r,
                 Err(e) => return err(e.to_string()),
             };

@@ -252,13 +252,19 @@ fn worker(args: WorkerArgs) {
             }
             handle_cmd(cmd, id, &dataset, &mut engine, &mut waiters);
         }
+        // publish load *before* the (potentially long) tick: the drain loop
+        // above moved lane cost out of `pending`, so waiting until after the
+        // tick would let least-loaded dispatch undercount this shard for the
+        // whole executable call and dogpile it. Queued load is counted in
+        // *lanes* (same unit as `pending`'s lane_cost), not requests.
+        engine_load.store(engine.active_lanes() + engine.queued_lanes(), Ordering::SeqCst);
         if let Err(e) = engine.tick() {
             eprintln!("[shard {id}:{dataset}] tick error: {e}");
         }
         for resp in engine.take_completed() {
             deliver(&mut waiters, resp);
         }
-        engine_load.store(engine.active_lanes() + engine.queued(), Ordering::SeqCst);
+        engine_load.store(engine.active_lanes() + engine.queued_lanes(), Ordering::SeqCst);
     }
 
     // --- drain: finish in-flight work, bounded by drain_timeout

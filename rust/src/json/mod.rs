@@ -62,6 +62,31 @@ impl Value {
         Ok(n as usize)
     }
 
+    /// Strict u64 accessor: rejects negatives, fractions, and magnitudes
+    /// at or above 2^53. The parser stores numbers as f64, so anything
+    /// larger has already lost bits — the old `as_f64() as u64` path
+    /// silently accepted it (and saturated negatives to 0). 2^53 itself is
+    /// rejected too: it is exactly representable, but it is also what
+    /// 2^53 + 1 rounds to, so accepting it would silently serve a
+    /// possibly-different seed than the client sent.
+    pub fn as_u64(&self) -> Result<u64> {
+        // 2^53: below this every integer round-trips uniquely through f64
+        const MAX_EXACT: f64 = 9_007_199_254_740_992.0;
+        let n = self.as_f64()?;
+        if n < 0.0 {
+            return Err(Error::Json(format!("expected non-negative integer, got {n}")));
+        }
+        if n.fract() != 0.0 {
+            return Err(Error::Json(format!("expected integer, got fractional {n}")));
+        }
+        if n >= MAX_EXACT {
+            return Err(Error::Json(format!(
+                "integer {n} is not exactly representable (>= 2^53)"
+            )));
+        }
+        Ok(n as u64)
+    }
+
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Value::Str(s) => Ok(s),
@@ -175,6 +200,21 @@ mod tests {
         assert!(parse("1.5").unwrap().as_usize().is_err());
         assert!(parse("-2").unwrap().as_usize().is_err());
         assert_eq!(parse("42").unwrap().as_usize().unwrap(), 42);
+    }
+
+    #[test]
+    fn as_u64_is_exact_or_errors() {
+        assert_eq!(parse("0").unwrap().as_u64().unwrap(), 0);
+        assert_eq!(parse("42").unwrap().as_u64().unwrap(), 42);
+        // 2^53 - 1: the largest uniquely-representable integer
+        assert_eq!(parse("9007199254740991").unwrap().as_u64().unwrap(), (1u64 << 53) - 1);
+        // 2^53 itself is ambiguous (2^53 + 1 rounds onto it) — rejected
+        for bad in [
+            "-1", "-0.5", "1.5", "9007199254740992", "9007199254740994", "1e300", "\"7\"",
+            "true",
+        ] {
+            assert!(parse(bad).unwrap().as_u64().is_err(), "{bad}");
+        }
     }
 
     #[test]

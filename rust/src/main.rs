@@ -12,7 +12,7 @@ use ddim_serve::coordinator::request::{Request, RequestBody};
 use ddim_serve::coordinator::{Engine, Server};
 use ddim_serve::error::Result;
 use ddim_serve::runtime::Runtime;
-use ddim_serve::sampler::BatchRunner;
+use ddim_serve::sampler::{BatchRunner, SamplerKind};
 use ddim_serve::schedule::{NoiseMode, SamplePlan, TauKind};
 use ddim_serve::tensor::{save_pgm, tile_grid};
 
@@ -25,8 +25,9 @@ COMMANDS
   serve       --artifacts D --dataset NAME --listen ADDR --max-batch N
               --queue-cap N --max-lanes N --shards N
               --placement ds=N[,ds=N...] --drain-timeout-ms MS
+              --default-sampler ddim|pf_ode|ab2
   generate    --artifacts D --dataset NAME --steps S --eta E|hat --tau linear|quadratic
-              --count N --seed K --out FILE.pgm
+              --sampler ddim|pf_ode|ab2 --count N --seed K --out FILE.pgm
   encode      --artifacts D --dataset NAME --steps S --seed K
   info        --artifacts D
 ";
@@ -74,6 +75,9 @@ fn config_from(args: &Args) -> Result<ServeConfig> {
     if let Some(p) = args.get("placement") {
         cfg.placement = ddim_serve::cli::parse_placement(p)?;
     }
+    if let Some(s) = args.get("default-sampler") {
+        cfg.default_sampler = SamplerKind::parse(s)?;
+    }
     cfg.drain_timeout_ms = args.get_u64("drain-timeout-ms", cfg.drain_timeout_ms)?;
     cfg.validate()?;
     Ok(cfg)
@@ -103,6 +107,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let tau = TauKind::parse(args.get_or("tau", "linear"))?;
     let count = args.get_usize("count", 16)?;
     let seed = args.get_u64("seed", 0)?;
+    let sampler = SamplerKind::parse(args.get_or("sampler", "ddim"))?;
     let out = args.get_or("out", "out/generate.pgm").to_string();
 
     let mut engine = Engine::new(cfg.clone())?;
@@ -111,6 +116,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         steps,
         mode,
         tau,
+        sampler,
         body: RequestBody::Generate { count, seed },
         return_images: true,
     })?;
@@ -134,8 +140,9 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let grid = tile_grid(&refs, rows, cols, img, img)?;
     save_pgm(&out, &grid)?;
     println!(
-        "wrote {count} samples (S={steps}, {}) to {out} in {:.2}s  [{}]",
+        "wrote {count} samples (S={steps}, {}, sampler={}) to {out} in {:.2}s  [{}]",
         mode.label(),
+        sampler.label(),
         t0.elapsed().as_secs_f64(),
         engine.metrics().summary()
     );

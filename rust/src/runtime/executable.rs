@@ -24,6 +24,24 @@ impl StepOutput {
     pub fn zeros(n: usize) -> Self {
         Self { x_prev: vec![0.0; n], eps: vec![0.0; n], x0: vec![0.0; n] }
     }
+
+    /// Borrowed view of one lane's slice of every output. This is what the
+    /// sampler layer consumes: an update kernel decides whether to commit
+    /// the fused `x_prev` or to re-integrate from `eps` host-side.
+    pub fn lane(&self, slot: usize, dim: usize) -> LaneStep<'_> {
+        let r = slot * dim..(slot + 1) * dim;
+        LaneStep { x_prev: &self.x_prev[r.clone()], eps: &self.eps[r.clone()], x0: &self.x0[r] }
+    }
+}
+
+/// One lane's view of a [`StepOutput`] — all three executable outputs, so
+/// update kernels can pick their ingredient instead of being hard-wired to
+/// `x_prev`.
+#[derive(Debug, Clone, Copy)]
+pub struct LaneStep<'a> {
+    pub x_prev: &'a [f32],
+    pub eps: &'a [f32],
+    pub x0: &'a [f32],
 }
 
 /// One PJRT-loaded executable (dataset × bucket).

@@ -9,9 +9,10 @@
 mod executable;
 mod literal;
 
-pub use executable::{StepExecutable, StepOutput};
+pub use executable::{LaneStep, StepExecutable, StepOutput};
 pub use literal::{literal_to_slice, vec_to_literal};
 
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::path::Path;
 use std::time::Instant;
@@ -50,19 +51,29 @@ impl Runtime {
     }
 
     /// Get (compiling if needed) the executable for `dataset` at `bucket`.
+    /// Single-probe via the entry API — this runs once per engine tick, so
+    /// the old `contains_key` → `insert` → `get` triple probe (plus a
+    /// second key clone on the miss path) was hot-loop waste. The one
+    /// remaining `to_string` is the entry API's owned-key cost; trading it
+    /// for a two-level map would mean four probes per hit instead of one.
     pub fn executable(&mut self, dataset: &str, bucket: usize) -> Result<&StepExecutable> {
-        let key = (dataset.to_string(), bucket);
-        if !self.cache.contains_key(&key) {
-            let ds = self.manifest.dataset(dataset)?;
-            let idx = self.manifest.bucket_index(bucket)?;
-            let path = self.manifest.hlo_path(ds, idx);
-            let t0 = Instant::now();
-            let exe =
-                StepExecutable::load(&self.client, &path, bucket, self.manifest.sample_dim())?;
-            self.compile_seconds += t0.elapsed().as_secs_f64();
-            self.cache.insert(key.clone(), exe);
+        match self.cache.entry((dataset.to_string(), bucket)) {
+            Entry::Occupied(e) => Ok(e.into_mut()),
+            Entry::Vacant(e) => {
+                let ds = self.manifest.dataset(dataset)?;
+                let idx = self.manifest.bucket_index(bucket)?;
+                let path = self.manifest.hlo_path(ds, idx);
+                let t0 = Instant::now();
+                let exe = StepExecutable::load(
+                    &self.client,
+                    &path,
+                    bucket,
+                    self.manifest.sample_dim(),
+                )?;
+                self.compile_seconds += t0.elapsed().as_secs_f64();
+                Ok(e.insert(exe))
+            }
         }
-        Ok(self.cache.get(&key).unwrap())
     }
 
     /// Eagerly compile every bucket for `dataset` (benches / server startup).

@@ -1,17 +1,27 @@
-//! Sampler layer: per-request trajectory state ([`Trajectory`]) and a
-//! direct batch driver ([`BatchRunner`]) used by the evaluation harnesses.
+//! Sampler layer: per-request trajectory state ([`Trajectory`]), the
+//! pluggable per-lane update kernels ([`UpdateKernel`]: DDIM Eq. 13,
+//! PF-ODE Euler Eq. 15, AB2 multistep), the shared batched-step packer
+//! ([`StepBatch`]), and a direct batch driver ([`BatchRunner`]) used by the
+//! evaluation harnesses.
 //!
 //! The coordinator (continuous batching across *heterogeneous* requests)
-//! builds on the same [`Trajectory`] type; `BatchRunner` is the simpler
-//! homogeneous case — N lanes marching through one shared [`SamplePlan`] —
-//! which is exactly the shape of the paper's Table-1/2/3 sweeps.
+//! builds on the same [`Trajectory`] + [`StepBatch`] types; `BatchRunner`
+//! is the simpler homogeneous case — N lanes marching through one shared
+//! [`SamplePlan`](crate::schedule::SamplePlan) — which is exactly the shape
+//! of the paper's Table-1/2/3 sweeps.
 
+mod batch;
+mod kernel;
 mod multistep;
 mod pf_ode;
 mod runner;
 mod trajectory;
 
+pub use batch::{PackedLane, StepBatch};
+pub use kernel::{SamplerKind, UpdateKernel};
 pub use multistep::Ab2State;
-pub use pf_ode::{ddim_update_host, pf_euler_update};
+pub use pf_ode::{
+    ddim_update_host, ddim_update_host_sigma, pf_euler_update, pf_euler_update_inplace,
+};
 pub use runner::BatchRunner;
 pub use trajectory::{Trajectory, TrajectoryKind};

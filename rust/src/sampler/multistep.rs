@@ -30,32 +30,40 @@ impl Ab2State {
     /// Advance one step: given x at ᾱ_t, the model's ε there, and the target
     /// ᾱ_prev, produce x at ᾱ_prev. Internally updates the history.
     pub fn step(&mut self, x: &[f32], eps: &[f32], alpha_t: f64, alpha_prev: f64) -> Vec<f32> {
+        let mut out = x.to_vec();
+        self.step_inplace(&mut out, eps, alpha_t, alpha_prev);
+        out
+    }
+
+    /// In-place [`Ab2State::step`] — the serving hot path. The update is
+    /// elementwise so overwriting `x` is safe, and the ε-history buffer is
+    /// reused after the first step: zero steady-state allocation.
+    pub fn step_inplace(&mut self, x: &mut [f32], eps: &[f32], alpha_t: f64, alpha_prev: f64) {
         let sb_t = ((1.0 - alpha_t) / alpha_t).sqrt();
         let sb_p = ((1.0 - alpha_prev) / alpha_prev).sqrt();
         let h = sb_p - sb_t; // negative while denoising (σ̄ decreases)
         let scale_in = 1.0 / alpha_t.sqrt();
         let scale_out = alpha_prev.sqrt();
 
-        let out: Vec<f32> = match &self.prev_eps {
+        match &self.prev_eps {
             Some(pe) if self.prev_h.abs() > 1e-12 => {
                 let r = h / (2.0 * self.prev_h);
-                x.iter()
-                    .zip(eps.iter().zip(pe))
-                    .map(|(&xv, (&e, &ep))| {
-                        let e_hat = e as f64 + (e as f64 - ep as f64) * r;
-                        ((xv as f64 * scale_in + h * e_hat) * scale_out) as f32
-                    })
-                    .collect()
+                for (xv, (&e, &ep)) in x.iter_mut().zip(eps.iter().zip(pe)) {
+                    let e_hat = e as f64 + (e as f64 - ep as f64) * r;
+                    *xv = ((*xv as f64 * scale_in + h * e_hat) * scale_out) as f32;
+                }
             }
-            _ => x
-                .iter()
-                .zip(eps)
-                .map(|(&xv, &e)| ((xv as f64 * scale_in + h * e as f64) * scale_out) as f32)
-                .collect(),
-        };
-        self.prev_eps = Some(eps.to_vec());
+            _ => {
+                for (xv, &e) in x.iter_mut().zip(eps) {
+                    *xv = ((*xv as f64 * scale_in + h * e as f64) * scale_out) as f32;
+                }
+            }
+        }
+        match &mut self.prev_eps {
+            Some(pe) if pe.len() == eps.len() => pe.copy_from_slice(eps),
+            slot => *slot = Some(eps.to_vec()),
+        }
         self.prev_h = h;
-        out
     }
 
     pub fn reset(&mut self) {

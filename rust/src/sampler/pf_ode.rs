@@ -11,16 +11,24 @@
 /// x̄(t−Δt) = x̄(t) + ½ ((1−ᾱ_p)/ᾱ_p − (1−ᾱ_t)/ᾱ_t) · sqrt(ᾱ_t/(1−ᾱ_t)) · ε
 /// with x̄ = x/√ᾱ; returns x(t−Δt) in un-rescaled coordinates.
 pub fn pf_euler_update(x: &[f32], eps: &[f32], alpha_t: f64, alpha_prev: f64) -> Vec<f32> {
+    let mut out = x.to_vec();
+    pf_euler_update_inplace(&mut out, eps, alpha_t, alpha_prev);
+    out
+}
+
+/// In-place [`pf_euler_update`] — the serving hot path (the update is
+/// elementwise, so overwriting `x` is safe and keeps the engine's
+/// zero-steady-state-allocation property for PF-ODE lanes).
+pub fn pf_euler_update_inplace(x: &mut [f32], eps: &[f32], alpha_t: f64, alpha_prev: f64) {
     assert_eq!(x.len(), eps.len());
     let lam = 0.5
         * ((1.0 - alpha_prev) / alpha_prev - (1.0 - alpha_t) / alpha_t)
         * (alpha_t / (1.0 - alpha_t)).sqrt();
     let scale_in = 1.0 / alpha_t.sqrt();
     let scale_out = alpha_prev.sqrt();
-    x.iter()
-        .zip(eps)
-        .map(|(&xv, &ev)| ((xv as f64 * scale_in + lam * ev as f64) * scale_out) as f32)
-        .collect()
+    for (xv, &ev) in x.iter_mut().zip(eps) {
+        *xv = ((*xv as f64 * scale_in + lam * ev as f64) * scale_out) as f32;
+    }
 }
 
 /// The DDIM update (Eq. 13 / Eq. 12 with σ=0), host-side, for apples-to-
@@ -32,6 +40,35 @@ pub fn ddim_update_host(x: &[f32], eps: &[f32], alpha_t: f64, alpha_prev: f64) -
     x.iter()
         .zip(eps)
         .map(|(&xv, &ev)| (xv as f64 * c_x0 + ev as f64 * c_eps) as f32)
+        .collect()
+}
+
+/// The full stochastic Eq.-12 update exactly as the fused executable
+/// composes it (see `python/compile/kernels/ddim_step.py`):
+///   x0   = (x − √(1−ᾱ_t) ε) / √ᾱ_t
+///   out  = √ᾱ_p x0 + √max(1−ᾱ_p−σ², 0) ε + σ·noise
+/// `noise` is the pre-scaled per-lane buffer the engine feeds the kernel
+/// (N(0,1) × `noise_scale`). With σ = 0 and zero noise this reduces to
+/// [`ddim_update_host`]. The golden tests pin the AOT graph's `x_prev`
+/// against this, lane by lane, so host kernels and the compiled graph can
+/// never drift apart silently.
+pub fn ddim_update_host_sigma(
+    x: &[f32],
+    eps: &[f32],
+    noise: &[f32],
+    alpha_t: f64,
+    alpha_prev: f64,
+    sigma: f64,
+) -> Vec<f32> {
+    assert_eq!(x.len(), eps.len());
+    assert_eq!(x.len(), noise.len());
+    let dir = (1.0 - alpha_prev - sigma * sigma).max(0.0).sqrt();
+    x.iter()
+        .zip(eps.iter().zip(noise))
+        .map(|(&xv, (&ev, &nv))| {
+            let x0 = (xv as f64 - (1.0 - alpha_t).sqrt() * ev as f64) / alpha_t.sqrt();
+            (alpha_prev.sqrt() * x0 + dir * ev as f64 + sigma * nv as f64) as f32
+        })
         .collect()
 }
 
@@ -71,6 +108,39 @@ mod tests {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max);
         assert!(max > 1e-2, "large-step updates should differ, max {max}");
+    }
+
+    #[test]
+    fn sigma_form_reduces_to_deterministic_ddim() {
+        let abar = crate::schedule::AlphaTable::linear(1000);
+        let x: Vec<f32> = (0..32).map(|i| (i as f32 * 0.21).sin()).collect();
+        let eps: Vec<f32> = (0..32).map(|i| (i as f32 * 0.43).cos()).collect();
+        let zeros = vec![0.0f32; 32];
+        let (a_t, a_p) = (abar.abar(700), abar.abar(350));
+        let det = ddim_update_host(&x, &eps, a_t, a_p);
+        let gen = ddim_update_host_sigma(&x, &eps, &zeros, a_t, a_p, 0.0);
+        let max: f32 =
+            det.iter().zip(&gen).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+        assert!(max < 1e-6, "sigma=0 form should match Eq. 13, diff {max}");
+    }
+
+    #[test]
+    fn sigma_form_adds_scaled_noise_and_shrinks_direction() {
+        let (a_t, a_p) = (0.25f64, 0.81f64);
+        let x = vec![1.0f32];
+        let eps = vec![0.5f32];
+        let noise = vec![2.0f32];
+        let sigma = 0.3f64;
+        let got = ddim_update_host_sigma(&x, &eps, &noise, a_t, a_p, sigma)[0] as f64;
+        let x0 = (1.0 - (1.0 - a_t).sqrt() * 0.5) / a_t.sqrt();
+        let want = a_p.sqrt() * x0
+            + (1.0 - a_p - sigma * sigma).sqrt() * 0.5
+            + sigma * 2.0;
+        assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+        // direction coefficient is clamped at 0 when sigma^2 > 1 - alpha_prev
+        let clamped = ddim_update_host_sigma(&x, &eps, &noise, a_t, a_p, 0.9)[0] as f64;
+        let want_clamped = a_p.sqrt() * x0 + 0.9 * 2.0;
+        assert!((clamped - want_clamped).abs() < 1e-6);
     }
 
     #[test]

@@ -3,12 +3,13 @@
 //! harness's workhorse (Table 1/2/3, Figs. 3–6) — every lane is at the same
 //! step index, so it pads only the final partial chunk.
 //!
-//! (The coordinator generalises this to *heterogeneous* lanes; see
-//! `coordinator::engine`.)
+//! Packing goes through the shared [`StepBatch`] — the same audited path
+//! the coordinator engine uses for heterogeneous lanes (see
+//! `coordinator::engine`).
 
 use crate::error::Result;
-use crate::runtime::{Runtime, StepOutput};
-use crate::sampler::Trajectory;
+use crate::runtime::Runtime;
+use crate::sampler::{SamplerKind, StepBatch, Trajectory};
 use crate::schedule::SamplePlan;
 
 /// Reusable buffers + batch loop for same-plan sampling.
@@ -16,14 +17,9 @@ pub struct BatchRunner {
     dataset: String,
     bucket: usize,
     dim: usize,
-    // reused across calls: zero steady-state allocation
-    x: Vec<f32>,
-    t: Vec<f32>,
-    a_in: Vec<f32>,
-    a_out: Vec<f32>,
-    sigma: Vec<f32>,
-    noise: Vec<f32>,
-    out: StepOutput,
+    // shared pack/pad/run path; reused across calls: zero steady-state
+    // allocation on the DDIM path
+    batch: StepBatch,
     /// executable calls issued (for Fig. 4 accounting)
     pub calls: u64,
 }
@@ -38,13 +34,7 @@ impl BatchRunner {
             dataset: dataset.to_string(),
             bucket,
             dim,
-            x: vec![0.0; bucket * dim],
-            t: vec![0.0; bucket],
-            a_in: vec![0.0; bucket],
-            a_out: vec![0.0; bucket],
-            sigma: vec![0.0; bucket],
-            noise: vec![0.0; bucket * dim],
-            out: StepOutput::zeros(bucket * dim),
+            batch: StepBatch::new(bucket, dim),
             calls: 0,
         })
     }
@@ -80,33 +70,16 @@ impl BatchRunner {
         idxs: &[usize],
     ) -> Result<()> {
         let b = self.bucket;
-        let dim = self.dim;
-        assert!(idxs.len() <= b);
-        // pack lanes; pad dead lanes by repeating lane 0's params (harmless:
-        // outputs of padding lanes are never read back)
-        for (lane, &i) in idxs.iter().enumerate() {
-            let tr = &mut trajs[i];
-            let p = tr.next_params()?;
-            self.x[lane * dim..(lane + 1) * dim].copy_from_slice(tr.state());
-            self.t[lane] = p.t_model as f32;
-            self.a_in[lane] = p.alpha_in as f32;
-            self.a_out[lane] = p.alpha_out as f32;
-            self.sigma[lane] = p.sigma_dir as f32;
-            tr.fill_noise(&mut self.noise[lane * dim..(lane + 1) * dim])?;
+        assert!(!idxs.is_empty() && idxs.len() <= b);
+        for (slot, &i) in idxs.iter().enumerate() {
+            self.batch.pack(slot, &mut trajs[i])?;
         }
-        for lane in idxs.len()..b {
-            self.x[lane * dim..(lane + 1) * dim].fill(0.0);
-            self.t[lane] = self.t[0];
-            self.a_in[lane] = self.a_in[0].max(1e-4);
-            self.a_out[lane] = self.a_out[0].max(1e-4);
-            self.sigma[lane] = 0.0;
-            self.noise[lane * dim..(lane + 1) * dim].fill(0.0);
-        }
+        self.batch.pad(idxs.len(), b);
         let exe = rt.executable(&self.dataset, b)?;
-        exe.run(&self.x, &self.t, &self.a_in, &self.a_out, &self.sigma, &self.noise, &mut self.out)?;
+        self.batch.run(exe, b)?;
         self.calls += 1;
-        for (lane, &i) in idxs.iter().enumerate() {
-            trajs[i].advance(&self.out.x_prev[lane * dim..(lane + 1) * dim])?;
+        for (slot, &i) in idxs.iter().enumerate() {
+            trajs[i].advance(self.batch.lane(slot))?;
         }
         Ok(())
     }
@@ -120,8 +93,23 @@ impl BatchRunner {
         n: usize,
         seed_base: u64,
     ) -> Result<Vec<Vec<f32>>> {
+        self.generate_with(rt, plan, n, seed_base, SamplerKind::Ddim)
+    }
+
+    /// [`BatchRunner::generate`] under an explicit update kernel (the
+    /// §4.3/§7 ablations: PF-ODE Euler, AB2 multistep).
+    pub fn generate_with(
+        &mut self,
+        rt: &mut Runtime,
+        plan: &SamplePlan,
+        n: usize,
+        seed_base: u64,
+        kernel: SamplerKind,
+    ) -> Result<Vec<Vec<f32>>> {
         let trajs: Vec<Trajectory> = (0..n)
-            .map(|i| Trajectory::from_prior(plan.clone(), self.dim, seed_base + i as u64))
+            .map(|i| {
+                Trajectory::from_prior_with(plan.clone(), self.dim, seed_base + i as u64, kernel)
+            })
             .collect();
         self.run_all(rt, trajs)
     }

@@ -1,9 +1,12 @@
 //! One diffusion trajectory: the current iterate x, its position in a
-//! [`SamplePlan`], and its private noise stream. This is the unit the
+//! [`SamplePlan`], its private noise stream, and the update kernel that
+//! decides how each executable step is committed. This is the unit the
 //! coordinator schedules — a *lane* in a batched executable call.
 
 use crate::error::{Error, Result};
 use crate::rng::{GaussianSource, Pcg64};
+use crate::runtime::LaneStep;
+use crate::sampler::{SamplerKind, UpdateKernel};
 use crate::schedule::{SamplePlan, StepParams};
 
 /// What the trajectory starts from.
@@ -23,27 +26,58 @@ pub struct Trajectory {
     step: usize,
     noise: GaussianSource,
     kind: TrajectoryKind,
+    kernel: UpdateKernel,
 }
 
 impl Trajectory {
-    /// Generation from the prior: x_T filled from `seed`'s stream.
+    /// Generation from the prior: x_T filled from `seed`'s stream, stepped
+    /// by the DDIM kernel (the fused executable's own `x_prev`).
     pub fn from_prior(plan: SamplePlan, dim: usize, seed: u64) -> Self {
+        Self::from_prior_with(plan, dim, seed, SamplerKind::Ddim)
+    }
+
+    /// Generation from the prior with an explicit update kernel.
+    pub fn from_prior_with(plan: SamplePlan, dim: usize, seed: u64, kernel: SamplerKind) -> Self {
         let mut root = Pcg64::seeded(seed);
         let mut prior = GaussianSource::new(root.fork(0));
         let noise = GaussianSource::new(root.fork(1));
         let x = prior.vec(dim);
-        Self { plan, x, step: 0, noise, kind: TrajectoryKind::FromPrior }
+        Self {
+            plan,
+            x,
+            step: 0,
+            noise,
+            kind: TrajectoryKind::FromPrior,
+            kernel: kernel.instantiate(),
+        }
     }
 
     /// Start from caller-provided state (encode / interpolation).
     pub fn from_state(plan: SamplePlan, x: Vec<f32>, seed: u64) -> Self {
+        Self::from_state_with(plan, x, seed, SamplerKind::Ddim)
+    }
+
+    /// Caller-provided start with an explicit update kernel.
+    pub fn from_state_with(plan: SamplePlan, x: Vec<f32>, seed: u64, kernel: SamplerKind) -> Self {
         let mut root = Pcg64::seeded(seed);
         let noise = GaussianSource::new(root.fork(1));
-        Self { plan, x, step: 0, noise, kind: TrajectoryKind::FromState }
+        Self {
+            plan,
+            x,
+            step: 0,
+            noise,
+            kind: TrajectoryKind::FromState,
+            kernel: kernel.instantiate(),
+        }
     }
 
     pub fn kind(&self) -> TrajectoryKind {
         self.kind
+    }
+
+    /// Which update kernel steps this lane.
+    pub fn kernel_kind(&self) -> SamplerKind {
+        self.kernel.kind()
     }
 
     pub fn plan(&self) -> &SamplePlan {
@@ -98,19 +132,23 @@ impl Trajectory {
         Ok(())
     }
 
-    /// Commit the executable's output for this lane and advance.
-    pub fn advance(&mut self, x_next: &[f32]) -> Result<()> {
+    /// Commit the executable's outputs for this lane through the update
+    /// kernel and advance. DDIM copies `step.x_prev`; PF-ODE and AB2
+    /// re-integrate host-side from `step.eps`.
+    pub fn advance(&mut self, step: LaneStep<'_>) -> Result<()> {
         if self.is_done() {
             return Err(Error::Coordinator("advance on finished trajectory".into()));
         }
-        if x_next.len() != self.x.len() {
+        if step.x_prev.len() != self.x.len() || step.eps.len() != self.x.len() {
             return Err(Error::Shape(format!(
-                "advance: {} vs {}",
-                x_next.len(),
+                "advance: x_prev {} / eps {} vs {}",
+                step.x_prev.len(),
+                step.eps.len(),
                 self.x.len()
             )));
         }
-        self.x.copy_from_slice(x_next);
+        let p = self.next_params()?;
+        self.kernel.advance(&mut self.x, step, p);
         self.step += 1;
         Ok(())
     }
@@ -119,11 +157,17 @@ impl Trajectory {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sampler::{ddim_update_host, pf_euler_update};
     use crate::schedule::{AlphaTable, NoiseMode, SamplePlan, TauKind};
 
     fn plan(s: usize, mode: NoiseMode) -> SamplePlan {
         let t = AlphaTable::linear(1000);
         SamplePlan::generate(&t, TauKind::Linear, s, mode).unwrap()
+    }
+
+    /// A DDIM-style step view where every output carries `buf`.
+    fn lane(buf: &[f32]) -> LaneStep<'_> {
+        LaneStep { x_prev: buf, eps: buf, x0: buf }
     }
 
     #[test]
@@ -133,22 +177,27 @@ mod tests {
         let c = Trajectory::from_prior(plan(5, NoiseMode::Eta(0.0)), 16, 43);
         assert_eq!(a.state(), b.state());
         assert_ne!(a.state(), c.state());
+        // the kernel choice must not perturb the prior draw
+        let d = Trajectory::from_prior_with(plan(5, NoiseMode::Eta(0.0)), 16, 42, SamplerKind::Ab2);
+        assert_eq!(a.state(), d.state());
+        assert_eq!(d.kernel_kind(), SamplerKind::Ab2);
     }
 
     #[test]
     fn lifecycle() {
         let mut t = Trajectory::from_prior(plan(3, NoiseMode::Eta(0.0)), 4, 1);
         assert_eq!(t.steps_left(), 3);
+        assert_eq!(t.kernel_kind(), SamplerKind::Ddim);
         assert!(!t.is_done());
         for i in 0..3 {
             let p = t.next_params().unwrap();
             assert!(p.alpha_out > p.alpha_in);
-            t.advance(&[i as f32; 4]).unwrap();
+            t.advance(lane(&[i as f32; 4])).unwrap();
         }
         assert!(t.is_done());
         assert_eq!(t.state(), &[2.0; 4]);
         assert!(t.next_params().is_err());
-        assert!(t.advance(&[0.0; 4]).is_err());
+        assert!(t.advance(lane(&[0.0; 4])).is_err());
     }
 
     #[test]
@@ -172,7 +221,7 @@ mod tests {
     #[test]
     fn advance_checks_len() {
         let mut t = Trajectory::from_prior(plan(2, NoiseMode::Eta(0.0)), 4, 1);
-        assert!(t.advance(&[0.0; 3]).is_err());
+        assert!(t.advance(lane(&[0.0; 3])).is_err());
     }
 
     #[test]
@@ -181,5 +230,33 @@ mod tests {
         let t = Trajectory::from_state(plan(2, NoiseMode::Eta(0.0)), x.clone(), 0);
         assert_eq!(t.state(), &x[..]);
         assert_eq!(t.kind(), TrajectoryKind::FromState);
+    }
+
+    #[test]
+    fn pf_ode_trajectory_integrates_from_eps_not_x_prev() {
+        let p = plan(3, NoiseMode::Eta(0.0));
+        let sp = p.steps()[0];
+        let mut t = Trajectory::from_prior_with(p.clone(), 4, 9, SamplerKind::PfOde);
+        let x0 = t.state().to_vec();
+        let eps = [0.25f32, -0.5, 0.75, -1.0];
+        let bogus_x_prev = [99.0f32; 4];
+        t.advance(LaneStep { x_prev: &bogus_x_prev, eps: &eps, x0: &bogus_x_prev }).unwrap();
+        assert_eq!(t.state(), &pf_euler_update(&x0, &eps, sp.alpha_in, sp.alpha_out)[..]);
+        assert_eq!(t.steps_done(), 1);
+    }
+
+    #[test]
+    fn ab2_trajectory_first_step_is_euler() {
+        let p = plan(3, NoiseMode::Eta(0.0));
+        let sp = p.steps()[0];
+        let mut t = Trajectory::from_prior_with(p.clone(), 4, 9, SamplerKind::Ab2);
+        let x0 = t.state().to_vec();
+        let eps = [0.25f32, -0.5, 0.75, -1.0];
+        let bogus = [99.0f32; 4];
+        t.advance(LaneStep { x_prev: &bogus, eps: &eps, x0: &bogus }).unwrap();
+        let want = ddim_update_host(&x0, &eps, sp.alpha_in, sp.alpha_out);
+        let diff: f32 =
+            t.state().iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+        assert!(diff < 1e-5, "AB2 warmup should be the Euler/DDIM step, diff {diff}");
     }
 }

@@ -4,6 +4,7 @@
 
 use crate::coordinator::request::{Request, RequestBody};
 use crate::rng::Pcg64;
+use crate::sampler::SamplerKind;
 use crate::schedule::{NoiseMode, TauKind};
 
 /// One request class in the mix.
@@ -13,6 +14,7 @@ pub struct RequestClass {
     pub weight: f64,
     pub steps: usize,
     pub mode: NoiseMode,
+    pub sampler: SamplerKind,
     pub count: usize,
 }
 
@@ -25,19 +27,33 @@ pub struct Workload {
     pub rate_hz: f64,
 }
 
+fn class(
+    weight: f64,
+    steps: usize,
+    mode: NoiseMode,
+    sampler: SamplerKind,
+    count: usize,
+) -> RequestClass {
+    RequestClass { weight, steps, mode, sampler, count }
+}
+
 impl Workload {
     /// The default mixed workload used in EXPERIMENTS.md: interactive
-    /// low-step DDIM requests, batch high-quality requests, and a few
-    /// stochastic DDPM ones.
+    /// low-step DDIM requests, batch high-quality requests, a few
+    /// stochastic DDPM ones, and a slice of the alternative update
+    /// kernels (PF-ODE / AB2) now that they are first-class scenarios.
     pub fn standard(dataset: &str, rate_hz: f64) -> Self {
+        let d = SamplerKind::Ddim;
         Self {
             dataset: dataset.to_string(),
             rate_hz,
             classes: vec![
-                RequestClass { weight: 0.5, steps: 10, mode: NoiseMode::Eta(0.0), count: 1 },
-                RequestClass { weight: 0.25, steps: 20, mode: NoiseMode::Eta(0.0), count: 4 },
-                RequestClass { weight: 0.15, steps: 50, mode: NoiseMode::Eta(0.0), count: 1 },
-                RequestClass { weight: 0.1, steps: 20, mode: NoiseMode::Eta(1.0), count: 1 },
+                class(0.4, 10, NoiseMode::Eta(0.0), d, 1),
+                class(0.25, 20, NoiseMode::Eta(0.0), d, 4),
+                class(0.15, 50, NoiseMode::Eta(0.0), d, 1),
+                class(0.1, 20, NoiseMode::Eta(1.0), d, 1),
+                class(0.05, 10, NoiseMode::Eta(0.0), SamplerKind::PfOde, 1),
+                class(0.05, 10, NoiseMode::Eta(0.0), SamplerKind::Ab2, 1),
             ],
         }
     }
@@ -69,6 +85,7 @@ impl Workload {
                     steps: class.steps,
                     mode: class.mode,
                     tau: TauKind::Linear,
+                    sampler: class.sampler,
                     body: RequestBody::Generate { count: class.count, seed: seed * 1000 + i as u64 },
                     return_images: false,
                 },
@@ -105,6 +122,14 @@ mod tests {
             .count() as f64
             / 4000.0;
         assert!((stoch - 0.1).abs() < 0.03, "stochastic fraction {stoch}");
+        let host_kernels = reqs
+            .iter()
+            .filter(|(_, r)| r.sampler != SamplerKind::Ddim)
+            .count() as f64
+            / 4000.0;
+        assert!((host_kernels - 0.1).abs() < 0.03, "pf_ode+ab2 fraction {host_kernels}");
+        // the mix never pairs a host kernel with a stochastic plan
+        assert!(reqs.iter().all(|(_, r)| r.sampler.supports(r.mode)));
     }
 
     #[test]

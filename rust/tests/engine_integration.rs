@@ -5,6 +5,7 @@
 use ddim_serve::config::ServeConfig;
 use ddim_serve::coordinator::request::{Request, RequestBody};
 use ddim_serve::coordinator::{Engine, ResponseBody};
+use ddim_serve::sampler::SamplerKind;
 use ddim_serve::schedule::{NoiseMode, TauKind};
 
 const ROOT: &str = env!("CARGO_MANIFEST_DIR");
@@ -39,11 +40,22 @@ fn engine(max_batch: usize, queue_cap: usize, max_lanes: usize) -> Engine {
 }
 
 fn gen_request(steps: usize, mode: NoiseMode, count: usize, seed: u64) -> Request {
+    gen_request_with(steps, mode, count, seed, SamplerKind::Ddim)
+}
+
+fn gen_request_with(
+    steps: usize,
+    mode: NoiseMode,
+    count: usize,
+    seed: u64,
+    sampler: SamplerKind,
+) -> Request {
     Request {
         dataset: "sprites".into(),
         steps,
         mode,
         tau: TauKind::Linear,
+        sampler,
         body: RequestBody::Generate { count, seed },
         return_images: true,
     }
@@ -187,6 +199,7 @@ fn encode_decode_round_trip_has_low_error() {
             steps: 50,
             mode: NoiseMode::Eta(0.0),
             tau: TauKind::Linear,
+            sampler: SamplerKind::Ddim,
             body: RequestBody::Encode { images: vec![img.clone()] },
             return_images: true,
         })
@@ -204,6 +217,7 @@ fn encode_decode_round_trip_has_low_error() {
             steps: 50,
             mode: NoiseMode::Eta(0.0),
             tau: TauKind::Linear,
+            sampler: SamplerKind::Ddim,
             body: RequestBody::Decode { latents: vec![latent] },
             return_images: true,
         })
@@ -250,10 +264,16 @@ fn submit_validates_requests() {
         steps: 3,
         mode: NoiseMode::Eta(0.0),
         tau: TauKind::Linear,
+        sampler: SamplerKind::Ddim,
         body: RequestBody::Decode { latents: vec![vec![0.0; 7]] },
         return_images: false,
     };
     assert!(e.submit(bad).is_err());
+    // host kernels on a stochastic plan are rejected at admission
+    let err = e.submit(gen_request_with(3, NoiseMode::Eta(1.0), 1, 0, SamplerKind::Ab2));
+    assert!(err.unwrap_err().to_string().contains("DDIM-only"));
+    let err = e.submit(gen_request_with(3, NoiseMode::SigmaHat, 1, 0, SamplerKind::PfOde));
+    assert!(err.is_err());
 }
 
 /// No starvation: a long request admitted alongside a constant churn of
@@ -299,4 +319,121 @@ fn ddpm_same_seed_same_result_different_seed_differs() {
     let resp_b = e2.run_until_idle().unwrap();
     let img_b = outputs(resp_b.iter().find(|r| r.id == b).unwrap());
     assert_eq!(img_a, img_b);
+}
+
+/// §4.3's point, end to end through the engine: at S=10 the three update
+/// kernels genuinely disagree; at S=100 (small-step limit) the Eq.-13 and
+/// Eq.-15 discretisations converge onto the same ODE solution.
+#[test]
+fn kernels_differ_at_s10_and_agree_at_s100() {
+    require_artifacts!();
+
+    let run = |steps: usize, sampler: SamplerKind| -> Vec<f32> {
+        let mut e = engine(4, 8, 8);
+        let id = e
+            .submit(gen_request_with(steps, NoiseMode::Eta(0.0), 1, 2024, sampler))
+            .unwrap();
+        let resp = e.run_until_idle().unwrap();
+        outputs(resp.iter().find(|r| r.id == id).unwrap()).remove(0)
+    };
+    let rms = |a: &[f32], b: &[f32]| -> f64 {
+        let s: f64 = a
+            .iter()
+            .zip(b)
+            .map(|(x, y)| ((x - y) as f64).powi(2))
+            .sum::<f64>();
+        (s / a.len() as f64).sqrt()
+    };
+
+    let d10 = run(10, SamplerKind::Ddim);
+    let p10 = run(10, SamplerKind::PfOde);
+    let a10 = run(10, SamplerKind::Ab2);
+    let rms_pf_10 = rms(&d10, &p10);
+    let rms_ab_10 = rms(&d10, &a10);
+    assert!(rms_pf_10 > 1e-4, "S=10: PF-ODE should differ from DDIM, rms {rms_pf_10}");
+    assert!(rms_ab_10 > 1e-4, "S=10: AB2 should differ from DDIM, rms {rms_ab_10}");
+
+    let d100 = run(100, SamplerKind::Ddim);
+    let p100 = run(100, SamplerKind::PfOde);
+    let rms_pf_100 = rms(&d100, &p100);
+    assert!(
+        rms_pf_100 < 0.5 * rms_pf_10,
+        "S=100: Eq.13 vs Eq.15 should shrink toward the shared ODE \
+         (rms {rms_pf_100} vs S=10 rms {rms_pf_10})"
+    );
+    assert!(rms_pf_100 < 0.1, "S=100 disagreement still large: {rms_pf_100}");
+}
+
+/// Lanes running *different* update kernels must batch correctly in one
+/// tick: each request's result matches its solo run, and the AB2 lane's ε
+/// history survives the engine's swap_remove/round-robin shuffling.
+#[test]
+fn heterogeneous_kernels_batch_in_one_tick() {
+    require_artifacts!();
+    let steps = 6usize;
+    let solo = |sampler: SamplerKind| -> Vec<f32> {
+        let mut e = engine(8, 8, 8);
+        let id = e
+            .submit(gen_request_with(steps, NoiseMode::Eta(0.0), 1, 77, sampler))
+            .unwrap();
+        let resp = e.run_until_idle().unwrap();
+        outputs(resp.iter().find(|r| r.id == id).unwrap()).remove(0)
+    };
+    let solo_imgs: Vec<Vec<f32>> = SamplerKind::ALL.iter().map(|&k| solo(k)).collect();
+
+    let mut e = engine(8, 8, 8);
+    let ids: Vec<_> = SamplerKind::ALL
+        .iter()
+        .map(|&k| e.submit(gen_request_with(steps, NoiseMode::Eta(0.0), 1, 77, k)).unwrap())
+        .collect();
+    // one tick admits and advances all three lanes together
+    assert!(e.tick().unwrap());
+    assert_eq!(e.active_lanes(), 3, "all kernels resident in one batch");
+    let resp = e.run_until_idle().unwrap();
+
+    for ((&id, want), kind) in ids.iter().zip(&solo_imgs).zip(SamplerKind::ALL) {
+        let got = outputs(resp.iter().find(|r| r.id == id).unwrap()).remove(0);
+        let max_diff = got
+            .iter()
+            .zip(want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            max_diff < 1e-3,
+            "{kind:?}: batched with other kernels changed the result, diff {max_diff}"
+        );
+    }
+    // same prior, same model, different committed updates: results differ
+    let d = outputs(resp.iter().find(|r| r.id == ids[0]).unwrap()).remove(0);
+    let p = outputs(resp.iter().find(|r| r.id == ids[1]).unwrap()).remove(0);
+    let a = outputs(resp.iter().find(|r| r.id == ids[2]).unwrap()).remove(0);
+    assert_ne!(d, p);
+    assert_ne!(d, a);
+
+    // per-kernel accounting: each kernel stepped `steps` times
+    let m = e.metrics();
+    assert_eq!(m.kernel_steps, [steps as u64, steps as u64, steps as u64]);
+    assert_eq!(m.kernel_steps.iter().sum::<u64>(), m.steps_executed);
+}
+
+/// The acceptance-criteria wire shape, minus TCP: a JSON `"sampler":"ab2"`
+/// request parses, admits, and completes through `run_until_idle`.
+#[test]
+fn ab2_json_request_runs_to_completion() {
+    require_artifacts!();
+    let v = ddim_serve::json::parse(
+        r#"{"op":"generate","dataset":"sprites","steps":8,"eta":0.0,
+            "count":2,"seed":11,"sampler":"ab2","return_images":true}"#,
+    )
+    .unwrap();
+    let req = Request::from_json(&v).unwrap();
+    assert_eq!(req.sampler, SamplerKind::Ab2);
+    let mut e = engine(8, 8, 8);
+    let id = e.submit(req).unwrap();
+    let resp = e.run_until_idle().unwrap();
+    let imgs = outputs(resp.iter().find(|r| r.id == id).unwrap());
+    assert_eq!(imgs.len(), 2);
+    assert!(imgs[0].iter().all(|v| v.is_finite()));
+    let m = e.metrics();
+    assert_eq!(m.kernel_steps[SamplerKind::Ab2.index()], 16, "2 lanes x 8 steps");
 }

@@ -1,0 +1,100 @@
+//! Host-kernel ↔ AOT-graph drift guard: the fused executable's `x_prev`
+//! must match the host-side Eq.-12 arithmetic (`ddim_update_host` /
+//! `ddim_update_host_sigma`) lane by lane — padding lanes included — for
+//! every noise mode the serving path accepts (η=0, η=1, σ̂). The engine's
+//! PF-ODE/AB2 kernels re-integrate from the same executable's ε, so this
+//! single invariant is what keeps *all* update kernels and the compiled
+//! graph from drifting apart silently.
+//!
+//! Inputs are packed through the shared `StepBatch` (the exact serving
+//! path), then read back via `StepBatch::packed` so the comparison uses
+//! precisely what the executable saw.
+
+use ddim_serve::runtime::Runtime;
+use ddim_serve::sampler::{ddim_update_host, ddim_update_host_sigma, StepBatch, Trajectory};
+use ddim_serve::schedule::{NoiseMode, SamplePlan, TauKind};
+
+const ROOT: &str = env!("CARGO_MANIFEST_DIR");
+
+fn artifacts_root() -> String {
+    format!("{ROOT}/artifacts")
+}
+
+#[test]
+fn executable_x_prev_matches_host_ddim_update_across_modes() {
+    let root = artifacts_root();
+    if !std::path::Path::new(&root).join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+        return;
+    }
+    let mut rt = Runtime::load(&root).unwrap();
+    let dim = rt.manifest().sample_dim();
+    let bucket = rt.manifest().bucket_for(4);
+    let abar = rt.alphas().clone();
+    let real_lanes = 2usize.min(bucket);
+
+    for mode in [NoiseMode::Eta(0.0), NoiseMode::Eta(1.0), NoiseMode::SigmaHat] {
+        let plan = SamplePlan::generate(&abar, TauKind::Linear, 5, mode).unwrap();
+        let mut trajs: Vec<Trajectory> = (0..real_lanes)
+            .map(|i| Trajectory::from_prior(plan.clone(), dim, 1000 + i as u64))
+            .collect();
+        let mut batch = StepBatch::new(bucket, dim);
+        for step in 0..plan.len() {
+            for (slot, tr) in trajs.iter_mut().enumerate() {
+                batch.pack(slot, tr).unwrap();
+            }
+            batch.pad(real_lanes, bucket);
+            // run through a fresh executable handle each step (cache hit)
+            let exe = rt.executable("sprites", bucket).unwrap();
+            batch.run(exe, bucket).unwrap();
+
+            // every lane — real and padding — must satisfy the host Eq.-12
+            // composition on the inputs it was actually packed with
+            for slot in 0..bucket {
+                let packed = batch.packed(slot);
+                let out = batch.lane(slot);
+                let want = ddim_update_host_sigma(
+                    packed.x,
+                    out.eps,
+                    packed.noise,
+                    packed.alpha_in as f64,
+                    packed.alpha_out as f64,
+                    packed.sigma as f64,
+                );
+                let max = out
+                    .x_prev
+                    .iter()
+                    .zip(&want)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(
+                    max < 2e-4,
+                    "{} step {step} lane {slot} (padding={}): \
+                     executable x_prev drifted {max} from host Eq. 12",
+                    mode.label(),
+                    slot >= real_lanes
+                );
+                // deterministic lanes must also match the σ=0 fast form
+                if packed.sigma == 0.0 && packed.noise.iter().all(|&n| n == 0.0) {
+                    let det = ddim_update_host(
+                        packed.x,
+                        out.eps,
+                        packed.alpha_in as f64,
+                        packed.alpha_out as f64,
+                    );
+                    let max = out
+                        .x_prev
+                        .iter()
+                        .zip(&det)
+                        .map(|(a, b)| (a - b).abs())
+                        .fold(0.0f32, f32::max);
+                    assert!(max < 2e-4, "{} deterministic form drift {max}", mode.label());
+                }
+            }
+            for (slot, tr) in trajs.iter_mut().enumerate() {
+                tr.advance(batch.lane(slot)).unwrap();
+            }
+        }
+        assert!(trajs.iter().all(|t| t.is_done()));
+    }
+}

@@ -138,7 +138,7 @@ fn runner_and_engine_agree() {
     use ddim_serve::coordinator::request::{Request, RequestBody};
     use ddim_serve::coordinator::{Engine, ResponseBody};
     use ddim_serve::runtime::Runtime;
-    use ddim_serve::sampler::BatchRunner;
+    use ddim_serve::sampler::{BatchRunner, SamplerKind};
 
     let mut rt = Runtime::load(&root).unwrap();
     let plan =
@@ -159,6 +159,7 @@ fn runner_and_engine_agree() {
             steps: 7,
             mode: NoiseMode::Eta(0.0),
             tau: TauKind::Quadratic,
+            sampler: SamplerKind::Ddim,
             body: RequestBody::Generate { count: 3, seed: 555 },
             return_images: true,
         })

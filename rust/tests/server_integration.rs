@@ -258,3 +258,95 @@ fn shutdown_answers_inflight_waiters() {
         assert!(msg.contains("shutting down"), "unexpected error: {msg}");
     }
 }
+
+/// Acceptance: `{"op":"generate",...,"sampler":"ab2"}` round-trips through
+/// the *sharded* server; per-kernel step counters surface in the merged
+/// metrics and the per-shard breakdown; stochastic+host-kernel requests are
+/// rejected on the wire.
+#[test]
+fn sampler_field_round_trips_through_sharded_server() {
+    let root = format!("{ROOT}/artifacts");
+    if !std::path::Path::new(&root).join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing");
+        return;
+    }
+    let cfg = ServeConfig {
+        artifact_root: root,
+        dataset: "sprites".into(),
+        listen: "127.0.0.1:0".into(),
+        max_batch: 8,
+        shards: 2,
+        ..Default::default()
+    };
+    let server = Server::start(cfg).unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+
+    // one request per kernel, eta=0, same seed
+    let gen = |sampler: &str| {
+        jobj![
+            ("op", "generate"),
+            ("dataset", "sprites"),
+            ("steps", 6.0),
+            ("eta", 0.0),
+            ("count", 1.0),
+            ("seed", 9.0),
+            ("sampler", sampler),
+            ("return_images", true),
+        ]
+    };
+    let rd = c.roundtrip(&gen("ddim")).unwrap();
+    let rp = c.roundtrip(&gen("pf_ode")).unwrap();
+    let ra = c.roundtrip(&gen("ab2")).unwrap();
+    for r in [&rd, &rp, &ra] {
+        assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
+        assert_eq!(r.get("steps_executed").unwrap().as_usize().unwrap(), 6);
+    }
+    // distinct kernels commit distinct trajectories from the same prior
+    assert_ne!(rd.get("outputs").unwrap(), rp.get("outputs").unwrap());
+    assert_ne!(rd.get("outputs").unwrap(), ra.get("outputs").unwrap());
+
+    // unknown sampler and stochastic+host-kernel combinations are rejected
+    let mut bad = gen("euler");
+    let e = c.roundtrip(&bad).unwrap();
+    assert!(!e.get("ok").unwrap().as_bool().unwrap());
+    bad = jobj![
+        ("op", "generate"),
+        ("dataset", "sprites"),
+        ("steps", 6.0),
+        ("eta", 1.0),
+        ("count", 1.0),
+        ("seed", 9.0),
+        ("sampler", "ab2"),
+    ];
+    let e = c.roundtrip(&bad).unwrap();
+    assert!(!e.get("ok").unwrap().as_bool().unwrap());
+    assert!(e.get("error").unwrap().as_str().unwrap().contains("DDIM-only"));
+    // a >2^53 seed is rejected loudly instead of silently truncated
+    let e = c
+        .roundtrip(&jobj![
+            ("op", "generate"),
+            ("dataset", "sprites"),
+            ("steps", 6.0),
+            ("count", 1.0),
+            ("seed", 9007199254740994.0),
+        ])
+        .unwrap();
+    assert!(!e.get("ok").unwrap().as_bool().unwrap());
+    assert!(e.get("error").unwrap().as_str().unwrap().contains("seed"));
+
+    // merged metrics expose per-kernel steps; shard breakdown carries them too
+    let m = c.roundtrip(&jobj![("op", "metrics")]).unwrap();
+    assert!(m.get("ok").unwrap().as_bool().unwrap());
+    assert_eq!(m.get("steps_pf_ode").unwrap().as_usize().unwrap(), 6);
+    assert_eq!(m.get("steps_ab2").unwrap().as_usize().unwrap(), 6);
+    assert!(m.get("steps_ddim").unwrap().as_usize().unwrap() >= 6);
+    let shards = m.get("shards").unwrap().as_arr().unwrap();
+    assert_eq!(shards.len(), 2);
+    let shard_ab2: usize = shards
+        .iter()
+        .map(|s| s.get("steps_ab2").unwrap().as_usize().unwrap())
+        .sum();
+    assert_eq!(shard_ab2, 6, "per-shard kernel counters sum to the merged total");
+
+    server.shutdown();
+}
