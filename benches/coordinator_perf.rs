@@ -7,8 +7,11 @@
 //! (d) router shard scaling: aggregate steps/s for the same multi-dataset
 //! workload at 1/2/4 shards per dataset — the speedup the sharded
 //! coordinator is supposed to buy on a multi-core host, measured rather
-//! than asserted; and (e) per-update-kernel engine throughput (DDIM vs
-//! PF-ODE vs AB2 host integration) at a fixed batch.
+//! than asserted; (e) per-update-kernel engine throughput (DDIM vs
+//! PF-ODE vs AB2 host integration) at a fixed batch; and (f) an
+//! off-bucket active-lane sweep crossing {old single-bucket policy,
+//! occupancy planner} × {pipeline depth 1, 2} — occupancy is asserted
+//! (it is deterministic), throughput is recorded.
 //!
 //! Besides the human-readable tables, every section is dumped to
 //! `BENCH_coordinator.json` so the perf trajectory is tracked across PRs
@@ -60,6 +63,7 @@ fn main() {
     let mut sec_mixed: Vec<Value> = Vec::new();
     let mut sec_shards: Vec<Value> = Vec::new();
     let mut sec_kernels: Vec<Value> = Vec::new();
+    let mut sec_planner: Vec<Value> = Vec::new();
 
     println!("=== coordinator_perf (a): raw executable latency per bucket ===");
     println!(
@@ -322,6 +326,102 @@ fn main() {
         ]);
     }
 
+    println!("\n=== coordinator_perf (f): occupancy planner × pipelined executor ===");
+    // Off-bucket active-lane counts (nothing in {1,2,4,8,16} fits 9/17/33
+    // exactly) under a mixed-kernel workload, crossing the batch-formation
+    // policy (max_padding_waste 1.0 = old single-bucket, 0.25 = planner)
+    // with pipeline depth 1 (serial) and 2 (executor thread). Occupancy and
+    // padding waste are scheduling arithmetic — deterministic, asserted.
+    // Throughput is wall-clock — printed and dumped, not asserted.
+    println!(
+        "{:>6} | {:>8} | {:>6} | {:>10} | {:>10} | {:>6} | {:>9} | {:>8} | {:>8}",
+        "lanes", "policy", "depth", "steps/s", "occupancy", "waste", "sub/tick", "overlap", "speedup"
+    );
+    let steps = if common::quick() { 4 } else { 12 };
+    for &lanes in &[9usize, 17, 33] {
+        let mut occ_single = 0.0f64;
+        let mut sps_depth1 = 0.0f64;
+        for &(policy, waste) in &[("single", 1.0f64), ("planner", 0.25)] {
+            for &depth in &[1usize, 2] {
+                let cfg = ServeConfig {
+                    artifact_root: common::artifacts_root(),
+                    dataset: ds.into(),
+                    max_batch: lanes,
+                    max_lanes: 64,
+                    queue_capacity: 1024,
+                    max_padding_waste: waste,
+                    pipeline_depth: depth,
+                    ..Default::default()
+                };
+                let mut engine = Engine::new(cfg).expect("engine");
+                engine.warmup().expect("warmup");
+                // mixed-kernel fill: exactly `lanes` equal-length lanes so
+                // the active count (and thus the tick plan) stays constant
+                let third = lanes / 3;
+                for (kernel, count, seed) in [
+                    (SamplerKind::Ddim, lanes - 2 * third, 1u64),
+                    (SamplerKind::PfOde, third, 2),
+                    (SamplerKind::Ab2, third, 3),
+                ] {
+                    engine
+                        .submit(Request {
+                            dataset: ds.into(),
+                            steps,
+                            mode: NoiseMode::Eta(0.0),
+                            tau: TauKind::Linear,
+                            sampler: kernel,
+                            body: RequestBody::Generate { count, seed },
+                            return_images: false,
+                        })
+                        .expect("submit");
+                }
+                let t0 = Instant::now();
+                engine.run_until_idle().expect("drain");
+                let wall = t0.elapsed().as_secs_f64();
+                let m = engine.metrics();
+                let sps = m.steps_executed as f64 / wall;
+                assert_eq!(m.steps_executed, (lanes * steps) as u64);
+                if policy == "single" && depth == 1 {
+                    occ_single = m.occupancy();
+                }
+                if policy == "planner" && depth == 1 {
+                    sps_depth1 = sps;
+                    // deterministic scheduling arithmetic: the planner may
+                    // never lose occupancy to the single-bucket policy
+                    assert!(
+                        m.occupancy() + 1e-9 >= occ_single,
+                        "planner occupancy {} < single-bucket {occ_single} at {lanes} lanes",
+                        m.occupancy()
+                    );
+                }
+                let speedup = if policy == "planner" && depth == 2 && sps_depth1 > 0.0 {
+                    sps / sps_depth1
+                } else {
+                    1.0
+                };
+                println!(
+                    "{lanes:>6} | {policy:>8} | {depth:>6} | {sps:>10.0} | {:>10.2} | {:>6.2} | {:>9.2} | {:>8.2} | {speedup:>7.2}x",
+                    m.occupancy(),
+                    m.padding_waste(),
+                    m.sub_batches_per_tick(),
+                    m.overlap_frac(),
+                );
+                sec_planner.push(jobj![
+                    ("active_lanes", lanes),
+                    ("policy", policy),
+                    ("pipeline_depth", depth),
+                    ("wall_s", wall),
+                    ("steps_per_s", sps),
+                    ("occupancy", m.occupancy()),
+                    ("padding_waste", m.padding_waste()),
+                    ("sub_batches", m.sub_batches),
+                    ("sub_batches_per_tick", m.sub_batches_per_tick()),
+                    ("overlap_frac", m.overlap_frac()),
+                ]);
+            }
+        }
+    }
+
     let dump = jobj![
         ("bench", "coordinator_perf"),
         ("quick", common::quick()),
@@ -330,11 +430,12 @@ fn main() {
         ("mixed_workload", Value::Arr(sec_mixed)),
         ("shard_scaling", Value::Arr(sec_shards)),
         ("update_kernels", Value::Arr(sec_kernels)),
+        ("planner_pipeline", Value::Arr(sec_planner)),
     ];
     match std::fs::write(RESULT_PATH, json::to_string(&dump) + "\n") {
         Ok(()) => println!("\nwrote machine-readable results to {RESULT_PATH}"),
         Err(e) => eprintln!("\nWARN: could not write {RESULT_PATH}: {e}"),
     }
 
-    println!("\ninterpretation: overhead column (b) is the coordinator tax (§Perf target < 5%);\ncurve (c) shows continuous batching converting batch capacity into steps/s at near-constant p95;\nsweep (d) is the sharding payoff — aggregate steps/s should scale with shards until cores saturate;\ntable (e) prices the host-side PF-ODE/AB2 integration against the fused DDIM commit.");
+    println!("\ninterpretation: overhead column (b) is the coordinator tax (§Perf target < 5%);\ncurve (c) shows continuous batching converting batch capacity into steps/s at near-constant p95;\nsweep (d) is the sharding payoff — aggregate steps/s should scale with shards until cores saturate;\ntable (e) prices the host-side PF-ODE/AB2 integration against the fused DDIM commit;\nsweep (f) shows the planner converting padded FLOPs into occupancy at off-bucket lane counts,\nand depth-2 pipelining overlapping pack/advance with device time (speedup vs planner depth 1).");
 }

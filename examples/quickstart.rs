@@ -45,7 +45,7 @@ fn main() -> anyhow::Result<()> {
         ResponseBody::Error { message } => anyhow::bail!("generation failed: {message}"),
     };
 
-    let img = engine.runtime().manifest().img;
+    let img = engine.manifest().img;
     let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
     let grid = tile_grid(&refs, 4, 4, img, img)?;
     save_pgm("out/quickstart.pgm", &grid)?;

@@ -1,0 +1,317 @@
+//! Artifact-tree access: `manifest.json` (what `python/compile/aot.py`
+//! wrote) plus the tensorfile interchange format (`<name>.bin` raw
+//! little-endian f32/f64 + `<name>.bin.json` `{"shape":[...],"dtype":...}`
+//! sidecar — see `python/compile/tensorfile.py`, the other half of the
+//! mirror).
+//!
+//! The manifest is the runtime's single source of truth for image
+//! geometry, the compiled batch buckets, and the per-dataset HLO paths;
+//! nothing else in the crate touches the artifact directory layout.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::json::{self, Value};
+use crate::tensor::Tensor;
+
+/// One trained dataset's entry in the manifest.
+#[derive(Debug, Clone)]
+pub struct DatasetInfo {
+    /// Relative HLO-text paths, one per bucket, in `Manifest::buckets` order.
+    pub hlo: Vec<String>,
+    /// Trained parameter count (reporting only).
+    pub params: u64,
+    /// Final training loss (reporting only).
+    pub final_loss: f64,
+    /// Sample count behind the reference feature statistics (proxy-FID).
+    pub ref_n: usize,
+}
+
+/// Parsed `manifest.json` + the artifact root it was loaded from.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    /// Image side length (samples are `img × img`).
+    pub img: usize,
+    pub channels: usize,
+    /// Diffusion horizon T of the training schedule.
+    pub t_max: usize,
+    /// Compiled batch buckets, ascending (one executable per dataset × bucket).
+    pub buckets: Vec<usize>,
+    /// Feature dimension of the proxy-FID extractor.
+    pub feat_dim: usize,
+    /// Datasets in deterministic (BTreeMap) order.
+    pub datasets: BTreeMap<String, DatasetInfo>,
+}
+
+impl Manifest {
+    /// Load `<root>/manifest.json`.
+    pub fn load(root: impl AsRef<Path>) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .map_err(|e| Error::Artifact(format!("{}: {e}", path.display())))?;
+        let v = json::parse(&text)?;
+        let img = v.get("img")?.as_usize()?;
+        let channels = v.get("channels")?.as_usize()?;
+        let t_max = v.get("T")?.as_usize()?;
+        let buckets = v.get("buckets")?.as_usize_vec()?;
+        if buckets.is_empty() || buckets[0] == 0 {
+            return Err(Error::Artifact("manifest buckets empty or zero".into()));
+        }
+        if buckets.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(Error::Artifact(format!(
+                "manifest buckets must be strictly ascending, got {buckets:?}"
+            )));
+        }
+        let feat_dim = match v.get_opt("feat_dim") {
+            Some(fd) => fd.as_usize()?,
+            None => crate::stats::FEAT_DIM,
+        };
+        let mut datasets = BTreeMap::new();
+        let Value::Obj(ds_map) = v.get("datasets")? else {
+            return Err(Error::Artifact("manifest 'datasets' is not an object".into()));
+        };
+        for (name, d) in ds_map {
+            let hlo: Vec<String> = d
+                .get("hlo")?
+                .as_arr()?
+                .iter()
+                .map(|p| p.as_str().map(str::to_string))
+                .collect::<Result<_>>()?;
+            if hlo.len() != buckets.len() {
+                return Err(Error::Artifact(format!(
+                    "dataset '{name}': {} HLO files for {} buckets",
+                    hlo.len(),
+                    buckets.len()
+                )));
+            }
+            datasets.insert(
+                name.clone(),
+                DatasetInfo {
+                    hlo,
+                    params: d.get("params")?.as_u64()?,
+                    final_loss: d.get("final_loss")?.as_f64()?,
+                    ref_n: d.get("ref_n")?.as_usize()?,
+                },
+            );
+        }
+        if datasets.is_empty() {
+            return Err(Error::Artifact("manifest has no datasets".into()));
+        }
+        Ok(Self { root, img, channels, t_max, buckets, feat_dim, datasets })
+    }
+
+    /// Elements per sample (`img * img * channels`).
+    pub fn sample_dim(&self) -> usize {
+        self.img * self.img * self.channels
+    }
+
+    /// Look up a dataset or error with the known names.
+    pub fn dataset(&self, name: &str) -> Result<&DatasetInfo> {
+        self.datasets.get(name).ok_or_else(|| {
+            let known: Vec<&str> = self.datasets.keys().map(String::as_str).collect();
+            Error::Artifact(format!("unknown dataset '{name}' (manifest has {known:?})"))
+        })
+    }
+
+    /// Index of an exactly-compiled bucket (for HLO path lookup).
+    pub fn bucket_index(&self, bucket: usize) -> Result<usize> {
+        self.buckets.iter().position(|&b| b == bucket).ok_or_else(|| {
+            Error::Artifact(format!("no compiled bucket {bucket} (have {:?})", self.buckets))
+        })
+    }
+
+    /// Smallest compiled bucket that fits `n` lanes (the largest bucket
+    /// when nothing fits — callers split such selections into sub-batches).
+    pub fn bucket_for(&self, n: usize) -> usize {
+        self.buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| *self.buckets.last().expect("non-empty buckets"))
+    }
+
+    /// Absolute path of one dataset × bucket HLO module.
+    pub fn hlo_path(&self, ds: &DatasetInfo, bucket_idx: usize) -> PathBuf {
+        self.root.join(&ds.hlo[bucket_idx])
+    }
+
+    /// Absolute path of a golden tensorfile (`<root>/<ds>/goldens/<name>.bin`).
+    pub fn golden_path(&self, dataset: &str, name: &str) -> PathBuf {
+        self.root.join(dataset).join("goldens").join(format!("{name}.bin"))
+    }
+
+    /// Reference feature statistics `(mu, cov)` tensorfile paths.
+    pub fn ref_stats_paths(&self, dataset: &str) -> (PathBuf, PathBuf) {
+        let d = self.root.join(dataset);
+        (d.join("ref_mu.bin"), d.join("ref_cov.bin"))
+    }
+}
+
+/// Read a tensorfile's `.bin.json` sidecar: `(shape, dtype)`.
+fn read_meta(path: &Path) -> Result<(Vec<usize>, String)> {
+    let mut side = path.as_os_str().to_os_string();
+    side.push(".json");
+    let text = fs::read_to_string(&side)
+        .map_err(|e| Error::Artifact(format!("{}: {e}", Path::new(&side).display())))?;
+    let v = json::parse(&text)?;
+    Ok((v.get("shape")?.as_usize_vec()?, v.get("dtype")?.as_str()?.to_string()))
+}
+
+fn read_bytes(path: &Path, want: usize) -> Result<Vec<u8>> {
+    let bytes = fs::read(path).map_err(|e| Error::Artifact(format!("{}: {e}", path.display())))?;
+    if bytes.len() != want {
+        return Err(Error::Artifact(format!(
+            "{}: {} bytes on disk, sidecar shape wants {want}",
+            path.display(),
+            bytes.len()
+        )));
+    }
+    Ok(bytes)
+}
+
+/// Read a tensorfile as f32 (f64 files are narrowed — the python build
+/// writes float64 for some goldens, the runtime consumes f32 throughout).
+pub fn read_tensor(path: impl AsRef<Path>) -> Result<Tensor> {
+    let path = path.as_ref();
+    let (shape, dtype) = read_meta(path)?;
+    let n: usize = shape.iter().product();
+    let data: Vec<f32> = match dtype.as_str() {
+        "f32" => read_bytes(path, n * 4)?
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().expect("chunk of 4")))
+            .collect(),
+        "f64" => read_bytes(path, n * 8)?
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().expect("chunk of 8")) as f32)
+            .collect(),
+        other => {
+            return Err(Error::Artifact(format!("{}: unknown dtype '{other}'", path.display())))
+        }
+    };
+    Tensor::new(shape, data)
+}
+
+/// Read a tensorfile at full f64 precision (reference statistics).
+pub fn read_tensor_f64(path: impl AsRef<Path>) -> Result<(Vec<usize>, Vec<f64>)> {
+    let path = path.as_ref();
+    let (shape, dtype) = read_meta(path)?;
+    let n: usize = shape.iter().product();
+    let data: Vec<f64> = match dtype.as_str() {
+        "f32" => read_bytes(path, n * 4)?
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().expect("chunk of 4")) as f64)
+            .collect(),
+        "f64" => read_bytes(path, n * 8)?
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().expect("chunk of 8")))
+            .collect(),
+        other => {
+            return Err(Error::Artifact(format!("{}: unknown dtype '{other}'", path.display())))
+        }
+    };
+    Ok((shape, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ddim-artifacts-test-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    const MANIFEST: &str = r#"{
+        "img": 16, "channels": 1, "T": 1000,
+        "buckets": [1, 2, 4, 8, 16], "feat_dim": 24,
+        "datasets": {
+            "sprites": {
+                "hlo": ["sprites/b1.hlo.txt", "sprites/b2.hlo.txt",
+                        "sprites/b4.hlo.txt", "sprites/b8.hlo.txt",
+                        "sprites/b16.hlo.txt"],
+                "params": 123456, "final_loss": 0.0421, "ref_n": 4096
+            }
+        }
+    }"#;
+
+    #[test]
+    fn manifest_round_trip_and_lookups() {
+        let dir = tmpdir("manifest");
+        write_manifest(&dir, MANIFEST);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.sample_dim(), 256);
+        assert_eq!(m.t_max, 1000);
+        assert_eq!(m.buckets, vec![1, 2, 4, 8, 16]);
+        assert_eq!(m.dataset("sprites").unwrap().ref_n, 4096);
+        assert!(m.dataset("blobs").is_err());
+        assert_eq!(m.bucket_index(8).unwrap(), 3);
+        assert!(m.bucket_index(5).is_err());
+        // bucket_for: smallest bucket >= n, clamped to the largest
+        assert_eq!(m.bucket_for(1), 1);
+        assert_eq!(m.bucket_for(3), 4);
+        assert_eq!(m.bucket_for(16), 16);
+        assert_eq!(m.bucket_for(33), 16);
+        let hlo = m.hlo_path(m.dataset("sprites").unwrap(), 2);
+        assert!(hlo.ends_with("sprites/b4.hlo.txt"));
+        assert!(m.golden_path("sprites", "b1_x").ends_with("sprites/goldens/b1_x.bin"));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        let dir = tmpdir("reject");
+        for bad in [
+            r#"{"img":16,"channels":1,"T":10,"buckets":[],"datasets":{}}"#,
+            r#"{"img":16,"channels":1,"T":10,"buckets":[4,2],"datasets":{}}"#,
+            r#"{"img":16,"channels":1,"T":10,"buckets":[1,2],"datasets":{}}"#,
+            r#"{"img":16,"channels":1,"T":10,"buckets":[1,2],
+                "datasets":{"a":{"hlo":["x"],"params":1,"final_loss":0.1,"ref_n":8}}}"#,
+        ] {
+            write_manifest(&dir, bad);
+            assert!(Manifest::load(&dir).is_err(), "{bad}");
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tensorfile_f32_and_f64_round_trip() {
+        let dir = tmpdir("tensor");
+        let path = dir.join("t.bin");
+        let vals32: Vec<f32> = vec![0.5, -1.25, 3.0, 0.0, 2.5, -0.125];
+        let bytes: Vec<u8> = vals32.iter().flat_map(|v| v.to_le_bytes()).collect();
+        fs::write(&path, bytes).unwrap();
+        fs::write(
+            dir.join("t.bin.json"),
+            r#"{"shape": [2, 3], "dtype": "f32"}"#,
+        )
+        .unwrap();
+        let t = read_tensor(&path).unwrap();
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.data(), &vals32[..]);
+        let (shape, d64) = read_tensor_f64(&path).unwrap();
+        assert_eq!(shape, vec![2, 3]);
+        assert_eq!(d64, vals32.iter().map(|&v| v as f64).collect::<Vec<_>>());
+
+        let path64 = dir.join("u.bin");
+        let vals64: Vec<f64> = vec![1.5, -2.25];
+        let bytes: Vec<u8> = vals64.iter().flat_map(|v| v.to_le_bytes()).collect();
+        fs::write(&path64, bytes).unwrap();
+        fs::write(dir.join("u.bin.json"), r#"{"shape": [2], "dtype": "f64"}"#).unwrap();
+        assert_eq!(read_tensor(&path64).unwrap().data(), &[1.5f32, -2.25]);
+        assert_eq!(read_tensor_f64(&path64).unwrap().1, vals64);
+        // byte-length mismatch is an error, not a truncation
+        fs::write(dir.join("u.bin.json"), r#"{"shape": [3], "dtype": "f64"}"#).unwrap();
+        assert!(read_tensor(&path64).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -3,7 +3,7 @@
 //! but everything the paper's experiments vary is a field here.
 
 use crate::error::{Error, Result};
-use crate::sampler::SamplerKind;
+use crate::sampler::{SamplerKind, DEFAULT_MAX_PADDING_WASTE};
 
 /// Coordinator / server configuration.
 #[derive(Debug, Clone)]
@@ -34,6 +34,19 @@ pub struct ServeConfig {
     /// On shutdown, in-flight lanes get this long to finish before the
     /// remaining waiters are answered with a "shutting down" error.
     pub drain_timeout_ms: u64,
+    /// Step-execution pipeline depth (`--pipeline-depth`): number of
+    /// sub-batch buffers in flight per engine. 1 = serial (pack → run →
+    /// advance on the engine thread, exactly the pre-pipeline behavior);
+    /// ≥ 2 runs execution on a dedicated executor thread so packing and
+    /// retiring overlap device time. Output is bitwise-identical at every
+    /// depth.
+    pub pipeline_depth: usize,
+    /// Batch-formation padding threshold (`--max-padding-waste`): a tick
+    /// selection whose padded fraction would exceed this is decomposed
+    /// into exactly-sized sub-batches on bucket boundaries instead of
+    /// running one padded call. 0 splits maximally; 1 restores the old
+    /// single-bucket policy.
+    pub max_padding_waste: f64,
 }
 
 impl Default for ServeConfig {
@@ -50,6 +63,8 @@ impl Default for ServeConfig {
             shards: 1,
             placement: Vec::new(),
             drain_timeout_ms: 2000,
+            pipeline_depth: 1,
+            max_padding_waste: DEFAULT_MAX_PADDING_WASTE,
         }
     }
 }
@@ -74,6 +89,24 @@ impl ServeConfig {
         }
         if self.shards == 0 {
             return Err(Error::Coordinator("shards must be > 0".into()));
+        }
+        if self.pipeline_depth == 0 {
+            return Err(Error::Coordinator(
+                "pipeline_depth must be >= 1 (1 = serial)".into(),
+            ));
+        }
+        if self.pipeline_depth > 8 {
+            return Err(Error::Coordinator(format!(
+                "pipeline_depth {} is absurd: each unit is a full batch buffer \
+                 and anything past ~3 only adds latency (max 8)",
+                self.pipeline_depth
+            )));
+        }
+        if !(0.0..=1.0).contains(&self.max_padding_waste) {
+            return Err(Error::Coordinator(format!(
+                "max_padding_waste must be a fraction in [0, 1], got {}",
+                self.max_padding_waste
+            )));
         }
         for (i, (ds, n)) in self.placement.iter().enumerate() {
             if ds.is_empty() {
@@ -120,6 +153,11 @@ mod tests {
             ServeConfig { max_lanes: 4, max_batch: 16, ..Default::default() },
             ServeConfig { queue_capacity: 0, ..Default::default() },
             ServeConfig { shards: 0, ..Default::default() },
+            ServeConfig { pipeline_depth: 0, ..Default::default() },
+            ServeConfig { pipeline_depth: 9, ..Default::default() },
+            ServeConfig { max_padding_waste: -0.1, ..Default::default() },
+            ServeConfig { max_padding_waste: 1.5, ..Default::default() },
+            ServeConfig { max_padding_waste: f64::NAN, ..Default::default() },
             ServeConfig { placement: vec![("sprites".into(), 0)], ..Default::default() },
             ServeConfig {
                 placement: vec![("a".into(), 1), ("a".into(), 2)],
@@ -129,6 +167,15 @@ mod tests {
         for c in bad {
             assert!(c.validate().is_err(), "{c:?}");
         }
+    }
+
+    #[test]
+    fn pipeline_and_planner_knobs_validate() {
+        ServeConfig { pipeline_depth: 2, ..Default::default() }.validate().unwrap();
+        ServeConfig { pipeline_depth: 8, max_padding_waste: 0.0, ..Default::default() }
+            .validate()
+            .unwrap();
+        ServeConfig { max_padding_waste: 1.0, ..Default::default() }.validate().unwrap();
     }
 
     #[test]

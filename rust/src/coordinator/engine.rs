@@ -1,13 +1,22 @@
-//! The engine: lanes, admission, bucket selection, and the tick loop —
-//! continuous step-level batching over the AOT `denoise_step` executables.
+//! The engine: lanes, admission, occupancy-aware batch formation, and the
+//! pipelined tick loop — continuous step-level batching over the AOT
+//! `denoise_step` executables.
 //!
 //! Scheduling policy (deliberately simple, measured in §Perf):
 //! - admission: FIFO from the bounded queue while lane capacity allows,
 //!   whole requests at a time (no partial admission);
 //! - selection: round-robin over active lanes, up to `max_batch` per tick —
 //!   no lane can starve (tested by property below);
-//! - bucket: smallest compiled bucket that fits the selected lanes (pads
-//!   dead lanes; padding never leaks — also tested).
+//! - batch formation: the selection is decomposed by the tick planner
+//!   ([`crate::sampler::planner`]) into exactly-sized sub-batches on
+//!   compiled-bucket boundaries (9 lanes → 8+1 instead of one bucket-16
+//!   call with 7 dead lanes), bounded by `max_padding_waste`;
+//! - execution: with `pipeline_depth` 1 the sub-batches run serially on
+//!   this thread; with depth ≥ 2 they stream through a dedicated executor
+//!   thread ([`super::executor`]) so sub-batch *k+1* packs and *k−1*
+//!   advances/retires while *k* is on the device. The plan is
+//!   depth-independent, so pipelined output is **bitwise identical** to
+//!   serial (pinned in `engine_integration`).
 //!
 //! One engine serves one dataset (executables are per dataset); run several
 //! engines for multi-model serving.
@@ -15,14 +24,17 @@
 use std::collections::HashMap;
 use std::time::Instant;
 
+use crate::artifacts::Manifest;
 use crate::config::ServeConfig;
+use crate::coordinator::executor::{PipelineExecutor, SubBatchDone};
 use crate::coordinator::metrics::{Histogram, MetricsSnapshot};
 use crate::coordinator::queue::BoundedQueue;
 use crate::coordinator::request::{Request, RequestBody, RequestId, Response, ResponseBody};
 use crate::error::{Error, Result};
 use crate::runtime::Runtime;
+use crate::sampler::planner::{plan_sub_batches, SubBatch};
 use crate::sampler::{StepBatch, Trajectory};
-use crate::schedule::{Direction, SamplePlan};
+use crate::schedule::{AlphaTable, Direction, SamplePlan};
 
 struct Lane {
     req: RequestId,
@@ -45,10 +57,53 @@ struct Pending {
     submitted: Instant,
 }
 
+/// Execution counters shared by the inline and pipelined paths,
+/// identical semantics at every pipeline depth: call-shaped counters
+/// move when a sub-batch's device call *succeeds* (`record_call`), and
+/// `steps` moves per lane-step actually committed (in `advance_sub`,
+/// lock-step with `kernel_steps`) — so a sub-batch that fails on the
+/// executor, or an advance error partway through a sub-batch, never
+/// breaks the `steps_executed == sum(kernel_steps)` invariant the wire
+/// metrics pin.
+#[derive(Default)]
+struct ExecCounters {
+    calls: u64,
+    sub_batches: u64,
+    steps: u64,
+    padded_lanes: u64,
+    occupancy_sum: f64,
+    /// engine-thread seconds blocked on device completions
+    wait_s: f64,
+    /// execution-path seconds spent running sub-batches
+    busy_s: f64,
+}
+
+impl ExecCounters {
+    fn record_call(&mut self, lanes: usize, bucket: usize) {
+        self.calls += 1;
+        self.sub_batches += 1;
+        self.padded_lanes += (bucket - lanes) as u64;
+        self.occupancy_sum += lanes as f64 / bucket as f64;
+    }
+}
+
+/// Where packed sub-batches execute. PJRT state never crosses threads:
+/// inline mode owns the runtime on the engine thread; pipelined mode's
+/// executor thread loads (and keeps) its own.
+enum ExecBackend {
+    /// `pipeline_depth == 1`: pack → run → advance, serially, one buffer.
+    Inline { rt: Runtime, batch: StepBatch },
+    /// `pipeline_depth >= 2`: a ping-pong pool of buffers streaming
+    /// through the executor thread.
+    Pipelined(PipelineExecutor),
+}
+
 /// The coordinator engine. Synchronous API: `submit` + `tick`/`run_until_idle`;
 /// the TCP server wraps it in a thread (see [`super::server`]).
 pub struct Engine {
-    rt: Runtime,
+    exec: ExecBackend,
+    manifest: Manifest,
+    alphas: AlphaTable,
     cfg: ServeConfig,
     queue: BoundedQueue<Pending>,
     lanes: Vec<Lane>,
@@ -57,38 +112,82 @@ pub struct Engine {
     next_id: RequestId,
     rr_cursor: usize,
     dim: usize,
-    // shared pack/pad/run path (max bucket capacity), reused every tick
-    batch: StepBatch,
+    /// Largest bucket any sub-batch may run at (= StepBatch capacity).
+    batch_capacity: usize,
     sel: Vec<usize>,
+    plan: Vec<SubBatch>,
     // metrics
     latency: Histogram,
     started: Instant,
-    calls: u64,
-    steps: u64,
+    ctr: ExecCounters,
     /// steps per update kernel, indexed by
     /// [`crate::sampler::SamplerKind::index`]
     kernel_steps: [u64; 3],
     lanes_done: u64,
     requests_done: u64,
-    occupancy_sum: f64,
+    ticks: u64,
 }
 
 impl Engine {
-    /// Build an engine over `artifact_root` for `cfg.dataset`.
+    /// Build an engine over `artifact_root` for `cfg.dataset`. With
+    /// `pipeline_depth >= 2` the runtime is loaded by (and lives on) the
+    /// executor thread; otherwise it lives here.
     pub fn new(cfg: ServeConfig) -> Result<Self> {
         cfg.validate()?;
-        let rt = Runtime::load(&cfg.artifact_root)?;
-        Self::with_runtime(rt, cfg)
+        if cfg.pipeline_depth >= 2 {
+            let (exec, manifest, alphas) = PipelineExecutor::spawn(&cfg)?;
+            Self::build(ExecBackend::Pipelined(exec), manifest, alphas, cfg)
+        } else {
+            let rt = Runtime::load(&cfg.artifact_root)?;
+            Self::with_runtime(rt, cfg)
+        }
     }
 
-    /// Build from an existing runtime (tests / benches).
+    /// Build from an existing runtime (tests / benches). PJRT state must
+    /// not cross threads, so with `pipeline_depth >= 2` the executor
+    /// thread loads its own runtime from `cfg.artifact_root` and `rt` is
+    /// only used for up-front validation — the roots must match, or the
+    /// engine would validate against one artifact tree while executing
+    /// another.
     pub fn with_runtime(rt: Runtime, cfg: ServeConfig) -> Result<Self> {
         cfg.validate()?;
         rt.manifest().dataset(&cfg.dataset)?;
-        let max_bucket = rt.manifest().bucket_for(cfg.max_batch);
-        let dim = rt.manifest().sample_dim();
+        if cfg.pipeline_depth >= 2 {
+            if rt.manifest().root != std::path::Path::new(&cfg.artifact_root) {
+                return Err(Error::Coordinator(format!(
+                    "pipelined engines reload their runtime from cfg.artifact_root \
+                     ('{}'), which differs from the provided runtime's root ('{}') — \
+                     pass a runtime loaded from the same root, or use Engine::new",
+                    cfg.artifact_root,
+                    rt.manifest().root.display()
+                )));
+            }
+            drop(rt);
+            let (exec, manifest, alphas) = PipelineExecutor::spawn(&cfg)?;
+            Self::build(ExecBackend::Pipelined(exec), manifest, alphas, cfg)
+        } else {
+            let manifest = rt.manifest().clone();
+            let alphas = rt.alphas().clone();
+            let capacity = manifest.bucket_for(cfg.max_batch);
+            let dim = manifest.sample_dim();
+            let exec = ExecBackend::Inline { rt, batch: StepBatch::new(capacity, dim) };
+            Self::build(exec, manifest, alphas, cfg)
+        }
+    }
+
+    fn build(
+        exec: ExecBackend,
+        manifest: Manifest,
+        alphas: AlphaTable,
+        cfg: ServeConfig,
+    ) -> Result<Self> {
+        manifest.dataset(&cfg.dataset)?;
+        let batch_capacity = manifest.bucket_for(cfg.max_batch);
+        let dim = manifest.sample_dim();
         Ok(Self {
-            rt,
+            exec,
+            manifest,
+            alphas,
             queue: BoundedQueue::new(cfg.queue_capacity),
             lanes: Vec::new(),
             inflight: HashMap::new(),
@@ -96,16 +195,16 @@ impl Engine {
             next_id: 1,
             rr_cursor: 0,
             dim,
-            batch: StepBatch::new(max_bucket, dim),
-            sel: Vec::with_capacity(max_bucket),
+            batch_capacity,
+            sel: Vec::with_capacity(batch_capacity),
+            plan: Vec::new(),
             latency: Histogram::new(),
             started: Instant::now(),
-            calls: 0,
-            steps: 0,
+            ctr: ExecCounters::default(),
             kernel_steps: [0; 3],
             lanes_done: 0,
             requests_done: 0,
-            occupancy_sum: 0.0,
+            ticks: 0,
             cfg,
         })
     }
@@ -113,11 +212,15 @@ impl Engine {
     /// Pre-compile every bucket (avoids first-request latency spikes).
     pub fn warmup(&mut self) -> Result<()> {
         let ds = self.cfg.dataset.clone();
-        self.rt.warmup(&ds)
+        match &mut self.exec {
+            ExecBackend::Inline { rt, .. } => rt.warmup(&ds),
+            ExecBackend::Pipelined(pipe) => pipe.warmup(),
+        }
     }
 
-    pub fn runtime(&self) -> &Runtime {
-        &self.rt
+    /// The artifact manifest (geometry, buckets, datasets).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
     }
 
     pub fn config(&self) -> &ServeConfig {
@@ -140,7 +243,7 @@ impl Engine {
                 self.cfg.max_lanes
             )));
         }
-        let abar = self.rt.alphas();
+        let abar = &self.alphas;
         let plan = match &request.body {
             RequestBody::Encode { .. } => SamplePlan::encode(abar, request.tau, request.steps)?,
             _ => SamplePlan::generate(abar, request.tau, request.steps, request.mode)?,
@@ -175,7 +278,8 @@ impl Engine {
         }
         let id = self.next_id;
         self.next_id += 1;
-        self.queue.push(Pending { id, request, plan, submitted: Instant::now() })?;
+        let lanes = request.lane_count();
+        self.queue.push(Pending { id, request, plan, submitted: Instant::now() }, lanes)?;
         Ok(id)
     }
 
@@ -186,9 +290,11 @@ impl Engine {
 
     /// Lanes represented by the requests still waiting for admission —
     /// the unit the router's least-loaded dispatch balances in (a queued
-    /// count=8 generate is 8 lanes of backlog, not 1).
+    /// count=8 generate is 8 lanes of backlog, not 1). O(1): the queue
+    /// keeps a running lane count, since this runs under the router's
+    /// load-gauge poll every worker-loop iteration.
     pub fn queued_lanes(&self) -> usize {
-        self.queue.iter().map(|p| p.request.lane_count()).sum()
+        self.queue.lanes()
     }
 
     /// Number of lanes currently resident.
@@ -266,48 +372,206 @@ impl Engine {
         admitted
     }
 
+    /// Advance every occupied slot of a completed sub-batch through its
+    /// lane's update kernel; lanes that finished their plan are recorded
+    /// for the tick's retire pass (indices stay valid until then — lanes
+    /// are only removed after the whole tick's plan has drained).
+    fn advance_sub(
+        lanes: &mut [Lane],
+        kernel_steps: &mut [u64; 3],
+        ctr: &mut ExecCounters,
+        batch: &StepBatch,
+        sub: &[usize],
+        finished: &mut Vec<usize>,
+    ) -> Result<()> {
+        for (slot, &li) in sub.iter().enumerate() {
+            let lane = &mut lanes[li];
+            lane.traj.advance(batch.lane(slot))?;
+            // counted only after the commit succeeds, in lock-step, so
+            // steps_executed == sum(kernel_steps) holds even when an
+            // advance error abandons the rest of the sub-batch
+            ctr.steps += 1;
+            kernel_steps[lane.traj.kernel_kind().index()] += 1;
+            if lane.traj.is_done() {
+                finished.push(li);
+            }
+        }
+        Ok(())
+    }
+
+    /// Receive one completion from the executor, record and advance it,
+    /// and return its buffers to the pool. Work counters move only on
+    /// success, exactly like the inline path.
+    fn complete_one(
+        pipe: &mut PipelineExecutor,
+        lanes: &mut [Lane],
+        kernel_steps: &mut [u64; 3],
+        finished: &mut Vec<usize>,
+        ctr: &mut ExecCounters,
+    ) -> Result<()> {
+        let t0 = Instant::now();
+        let done = pipe.recv_done()?;
+        ctr.wait_s += t0.elapsed().as_secs_f64();
+        ctr.busy_s += done.busy_s;
+        let SubBatchDone { job, result, .. } = done;
+        let advanced = match &result {
+            Ok(()) => {
+                ctr.record_call(job.lanes, job.bucket);
+                Self::advance_sub(
+                    lanes,
+                    kernel_steps,
+                    ctr,
+                    &job.batch,
+                    &job.sel[..job.lanes],
+                    finished,
+                )
+            }
+            Err(_) => Ok(()),
+        };
+        pipe.put_free(job);
+        result.and(advanced)
+    }
+
     /// One scheduling tick: admit, select up to `max_batch` lanes
-    /// round-robin, run one fused step, retire finished lanes/requests.
-    /// Returns `true` if any work was done.
+    /// round-robin, decompose the selection into planned sub-batches, run
+    /// them (serially or through the pipeline), retire finished
+    /// lanes/requests. Returns `true` if any work was done.
     pub fn tick(&mut self) -> Result<bool> {
         self.admit();
         if self.lanes.is_empty() {
             return Ok(false);
         }
-        // --- select lanes round-robin
+        // --- select lanes round-robin (identical at every pipeline depth)
         let n_active = self.lanes.len();
         let n_sel = n_active.min(self.cfg.max_batch);
-        let bucket = self.rt.manifest().bucket_for(n_sel);
         self.sel.clear();
         for k in 0..n_sel {
             self.sel.push((self.rr_cursor + k) % n_active);
         }
-        self.rr_cursor = (self.rr_cursor + n_sel) % n_active.max(1);
+        self.rr_cursor = (self.rr_cursor + n_sel) % n_active;
 
-        // --- pack + pad through the shared StepBatch path
-        for (lane_slot, &li) in self.sel.iter().enumerate() {
-            self.batch.pack(lane_slot, &mut self.lanes[li].traj)?;
-        }
-        self.batch.pad(n_sel, bucket);
+        // --- decompose the selection on bucket boundaries; the plan only
+        // depends on (n_sel, buckets, threshold), never on pipeline depth,
+        // which is what makes pipelined output bitwise-identical to serial
+        let mut plan = std::mem::take(&mut self.plan);
+        plan_sub_batches(
+            n_sel,
+            &self.manifest.buckets,
+            self.batch_capacity,
+            self.cfg.max_padding_waste,
+            &mut plan,
+        );
+        self.ticks += 1;
 
-        // --- run
-        let exe = self.rt.executable(&self.cfg.dataset, bucket)?;
-        self.batch.run(exe, bucket)?;
-        self.calls += 1;
-        self.steps += n_sel as u64;
-        self.occupancy_sum += n_sel as f64 / bucket as f64;
-
-        // --- advance + retire (each lane commits through its own kernel)
         let mut finished: Vec<usize> = Vec::new();
-        for (lane_slot, &li) in self.sel.iter().enumerate() {
-            let lane = &mut self.lanes[li];
-            self.kernel_steps[lane.traj.kernel_kind().index()] += 1;
-            lane.traj.advance(self.batch.lane(lane_slot))?;
-            if lane.traj.is_done() {
-                finished.push(li);
+        let mut first_err: Option<Error> = None;
+        match &mut self.exec {
+            ExecBackend::Inline { rt, batch } => {
+                'subs: for sb in &plan {
+                    let sub = &self.sel[sb.start..sb.start + sb.lanes];
+                    for (slot, &li) in sub.iter().enumerate() {
+                        if let Err(e) = batch.pack(slot, &mut self.lanes[li].traj) {
+                            first_err = Some(e);
+                            break 'subs;
+                        }
+                    }
+                    batch.pad(sb.lanes, sb.bucket);
+                    let t0 = Instant::now();
+                    let ran = rt
+                        .executable(&self.cfg.dataset, sb.bucket)
+                        .and_then(|exe| batch.run(exe, sb.bucket));
+                    let dt = t0.elapsed().as_secs_f64();
+                    // serial execution blocks this thread for the whole
+                    // device call: busy == wait, overlap_frac == 0
+                    self.ctr.busy_s += dt;
+                    self.ctr.wait_s += dt;
+                    if let Err(e) = ran {
+                        first_err = Some(e);
+                        break 'subs;
+                    }
+                    self.ctr.record_call(sb.lanes, sb.bucket);
+                    if let Err(e) = Self::advance_sub(
+                        &mut self.lanes,
+                        &mut self.kernel_steps,
+                        &mut self.ctr,
+                        batch,
+                        sub,
+                        &mut finished,
+                    ) {
+                        first_err = Some(e);
+                        break 'subs;
+                    }
+                }
+            }
+            ExecBackend::Pipelined(pipe) => {
+                'subs: for sb in &plan {
+                    // a buffer must be free before packing; completing the
+                    // oldest in-flight sub-batch (advancing its lanes while
+                    // newer ones run) is the pipeline's steady state
+                    let mut job = loop {
+                        if let Some(job) = pipe.take_free() {
+                            break job;
+                        }
+                        if let Err(e) = Self::complete_one(
+                            pipe,
+                            &mut self.lanes,
+                            &mut self.kernel_steps,
+                            &mut finished,
+                            &mut self.ctr,
+                        ) {
+                            first_err = Some(e);
+                            break 'subs;
+                        }
+                    };
+                    job.sel.clear();
+                    job.sel.extend_from_slice(&self.sel[sb.start..sb.start + sb.lanes]);
+                    job.lanes = sb.lanes;
+                    job.bucket = sb.bucket;
+                    let mut packed = true;
+                    for slot in 0..job.lanes {
+                        let li = job.sel[slot];
+                        if let Err(e) = job.batch.pack(slot, &mut self.lanes[li].traj) {
+                            first_err = Some(e);
+                            packed = false;
+                            break;
+                        }
+                    }
+                    if !packed {
+                        pipe.put_free(job);
+                        break 'subs;
+                    }
+                    job.batch.pad(job.lanes, job.bucket);
+                    // work is counted at *completion* (complete_one), so a
+                    // sub-batch that fails on the executor never inflates
+                    // steps_executed
+                    if let Err(e) = pipe.submit(job) {
+                        first_err = Some(e);
+                        break 'subs;
+                    }
+                }
+                // --- drain: a tick ends with nothing in flight, so lane
+                // indices stay valid for the retire pass and the next
+                // tick's selection (and abort/shutdown) see settled state
+                while pipe.in_flight() > 0 {
+                    if let Err(e) = Self::complete_one(
+                        pipe,
+                        &mut self.lanes,
+                        &mut self.kernel_steps,
+                        &mut finished,
+                        &mut self.ctr,
+                    ) {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
+                }
             }
         }
-        // remove finished lanes (highest index first so swap_remove is safe)
+        self.plan = plan;
+
+        // --- retire finished lanes/requests, even on a partial tick —
+        // a finished lane left resident would fail to pack next tick
+        // (highest index first so swap_remove is safe)
         finished.sort_unstable_by(|a, b| b.cmp(a));
         for li in finished {
             let lane = self.lanes.swap_remove(li);
@@ -341,7 +605,17 @@ impl Engine {
         } else {
             self.rr_cursor %= self.lanes.len();
         }
-        Ok(true)
+        // a dead executor took its in-flight buffers with it and can never
+        // execute again: answer everything resident/queued with an explicit
+        // error now, instead of error-looping while waiters hang
+        let executor_dead = matches!(&self.exec, ExecBackend::Pipelined(p) if p.is_dead());
+        if executor_dead {
+            self.abort_pending("step executor died");
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(true),
+        }
     }
 
     /// Tick until queue and lanes drain; returns everything completed.
@@ -368,7 +642,8 @@ impl Engine {
     /// Answer every queued and in-flight request with an error response
     /// (pushed onto the completed list) and drop their lanes. Returns how
     /// many requests were aborted. Used when a drain deadline expires —
-    /// nothing may be left blocked on a response channel.
+    /// nothing may be left blocked on a response channel. (Safe at any
+    /// tick boundary: the pipeline never holds sub-batches across ticks.)
     pub fn abort_pending(&mut self, message: &str) -> usize {
         let mut aborted = 0;
         while let Some(p) = self.queue.pop() {
@@ -400,10 +675,15 @@ impl Engine {
             requests_completed: self.requests_done,
             requests_rejected: self.queue.rejected,
             lanes_completed: self.lanes_done,
-            executable_calls: self.calls,
-            steps_executed: self.steps,
+            executable_calls: self.ctr.calls,
+            steps_executed: self.ctr.steps,
             kernel_steps: self.kernel_steps,
-            occupancy_sum: self.occupancy_sum,
+            occupancy_sum: self.ctr.occupancy_sum,
+            ticks: self.ticks,
+            sub_batches: self.ctr.sub_batches,
+            padded_lanes: self.ctr.padded_lanes,
+            pipeline_wait_s: self.ctr.wait_s,
+            device_busy_s: self.ctr.busy_s,
             latency_p50_s: self.latency.quantile(0.5),
             latency_p95_s: self.latency.quantile(0.95),
             latency_p99_s: self.latency.quantile(0.99),

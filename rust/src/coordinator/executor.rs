@@ -1,0 +1,307 @@
+//! The pipelined step executor: a dedicated per-engine thread that owns
+//! the PJRT runtime and services packed sub-batches, so the engine thread
+//! can pack sub-batch *k+1* and advance/retire *k−1* while *k* is on the
+//! device.
+//!
+//! Ownership rules mirror [`super::shard`]: PJRT state never crosses a
+//! thread boundary. The executor thread *loads its own* [`Runtime`] and
+//! ships plain-data clones of the manifest and α̅-table back to the engine
+//! for admission-time validation; only [`StepBatch`] buffers (plain
+//! `Vec<f32>`s) and [`PendingStep`]-derived outputs travel between the
+//! threads, via a ping-pong pool of `pipeline_depth` buffers.
+//!
+//! The worker keeps at most one *submitted-but-unawaited* step: on
+//! receiving sub-batch *k+1* it submits it to the device **before**
+//! waiting on *k*, so back-to-back sub-batches queue on the device with
+//! no host gap. Completions are delivered strictly in submission order
+//! (single worker, FIFO channels), which the engine's in-flight
+//! accounting relies on.
+
+use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::artifacts::Manifest;
+use crate::config::ServeConfig;
+use crate::error::{Error, Result};
+use crate::runtime::{PendingStep, Runtime};
+use crate::sampler::StepBatch;
+use crate::schedule::AlphaTable;
+
+/// One planned sub-batch travelling between the engine and the executor:
+/// the packed buffers plus the lane bookkeeping the engine needs to
+/// advance the right trajectories when it comes back.
+pub struct SubBatchJob {
+    pub batch: StepBatch,
+    /// Engine lane indices packed into slots `0..lanes` (entries past
+    /// `lanes` are stale scratch).
+    pub sel: Vec<usize>,
+    /// Occupied slots.
+    pub lanes: usize,
+    /// Bucket the call runs at (`lanes..bucket` are padding).
+    pub bucket: usize,
+}
+
+/// A completed sub-batch: the job with its outputs landed, the execution
+/// seconds it took, and the execution result.
+pub struct SubBatchDone {
+    pub job: SubBatchJob,
+    /// Executor seconds attributable to *this* sub-batch: its own submit
+    /// duration plus its own readback wait — time spent finishing *other*
+    /// jobs in between is excluded, so summing `busy_s` across jobs never
+    /// double-counts device time.
+    pub busy_s: f64,
+    pub result: Result<()>,
+}
+
+enum ExecCmd {
+    Run(SubBatchJob),
+    Warmup(Sender<Result<()>>),
+}
+
+/// Engine-side handle: command channel, completion channel, and the
+/// free-buffer pool. Dropping the handle closes the command channel; the
+/// worker finishes anything in flight and exits.
+pub struct PipelineExecutor {
+    cmd_tx: Sender<ExecCmd>,
+    done_rx: Receiver<SubBatchDone>,
+    handle: Option<JoinHandle<()>>,
+    free: Vec<SubBatchJob>,
+    in_flight: usize,
+    /// Set once a channel to the worker breaks (worker panic). In-flight
+    /// buffers are lost with the worker; the engine checks this to fail
+    /// its resident work loudly instead of error-looping forever.
+    dead: bool,
+}
+
+impl PipelineExecutor {
+    /// Spawn the executor for `cfg.dataset`, blocking until its runtime
+    /// is loaded. Returns the handle plus manifest/α̅ clones for the
+    /// engine's own (runtime-free) validation and planning.
+    pub fn spawn(cfg: &ServeConfig) -> Result<(PipelineExecutor, Manifest, AlphaTable)> {
+        let depth = cfg.pipeline_depth;
+        debug_assert!(depth >= 2, "depth-1 engines run inline, without an executor");
+        let (cmd_tx, cmd_rx) = mpsc::channel::<ExecCmd>();
+        let (done_tx, done_rx) = mpsc::channel::<SubBatchDone>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(Manifest, AlphaTable)>>();
+        let artifact_root = cfg.artifact_root.clone();
+        let dataset = cfg.dataset.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("ddim-exec-{dataset}"))
+            .spawn(move || worker(&artifact_root, &dataset, cmd_rx, done_tx, ready_tx))
+            .map_err(Error::Io)?;
+        let (manifest, alphas) = match ready_rx.recv() {
+            Ok(Ok(pair)) => pair,
+            Ok(Err(e)) => {
+                let _ = handle.join();
+                return Err(e);
+            }
+            Err(_) => {
+                let _ = handle.join();
+                return Err(Error::Coordinator("step executor died during bring-up".into()));
+            }
+        };
+        let dim = manifest.sample_dim();
+        let capacity = manifest.bucket_for(cfg.max_batch);
+        let free = (0..depth)
+            .map(|_| SubBatchJob {
+                batch: StepBatch::new(capacity, dim),
+                sel: Vec::with_capacity(capacity),
+                lanes: 0,
+                bucket: 0,
+            })
+            .collect();
+        let exec = PipelineExecutor {
+            cmd_tx,
+            done_rx,
+            handle: Some(handle),
+            free,
+            in_flight: 0,
+            dead: false,
+        };
+        Ok((exec, manifest, alphas))
+    }
+
+    /// Take a free buffer if one is available; otherwise the caller must
+    /// [`PipelineExecutor::recv_done`] first.
+    pub fn take_free(&mut self) -> Option<SubBatchJob> {
+        self.free.pop()
+    }
+
+    /// Return a completed job's buffers to the pool.
+    pub fn put_free(&mut self, job: SubBatchJob) {
+        self.free.push(job);
+    }
+
+    /// Sub-batches handed to the executor and not yet received back.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Whether the worker thread is gone (see `dead` field).
+    pub fn is_dead(&self) -> bool {
+        self.dead
+    }
+
+    /// Queue a packed job on the executor.
+    pub fn submit(&mut self, job: SubBatchJob) -> Result<()> {
+        match self.cmd_tx.send(ExecCmd::Run(job)) {
+            Ok(()) => {
+                self.in_flight += 1;
+                Ok(())
+            }
+            Err(_) => {
+                self.dead = true;
+                Err(Error::Coordinator("step executor is gone".into()))
+            }
+        }
+    }
+
+    /// Block for the next completion (submission order).
+    pub fn recv_done(&mut self) -> Result<SubBatchDone> {
+        if self.in_flight == 0 {
+            // nothing will ever arrive; reachable only after the worker
+            // died and took the pool's in-flight buffers with it
+            return Err(Error::Coordinator("step executor has nothing in flight".into()));
+        }
+        match self.done_rx.recv() {
+            Ok(done) => {
+                self.in_flight -= 1;
+                Ok(done)
+            }
+            Err(_) => {
+                // worker gone: nothing further will ever arrive
+                self.in_flight = 0;
+                self.dead = true;
+                Err(Error::Coordinator("step executor died mid-flight".into()))
+            }
+        }
+    }
+
+    /// Compile every bucket on the executor's runtime (blocking).
+    pub fn warmup(&mut self) -> Result<()> {
+        debug_assert_eq!(self.in_flight, 0, "warmup with sub-batches in flight");
+        let (tx, rx) = mpsc::channel();
+        if self.cmd_tx.send(ExecCmd::Warmup(tx)).is_err() {
+            self.dead = true;
+            return Err(Error::Coordinator("step executor is gone".into()));
+        }
+        match rx.recv() {
+            Ok(result) => result,
+            Err(_) => {
+                self.dead = true;
+                Err(Error::Coordinator("step executor died during warmup".into()))
+            }
+        }
+    }
+}
+
+impl Drop for PipelineExecutor {
+    fn drop(&mut self) {
+        // closing the command channel is the stop signal
+        let (dead_tx, _) = mpsc::channel();
+        self.cmd_tx = dead_tx;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A job submitted to the device whose completion has not been sent yet.
+struct InFlight {
+    job: SubBatchJob,
+    pending: PendingStep,
+    /// seconds already spent on this job (its submit call)
+    busy_s: f64,
+}
+
+fn finish(done_tx: &Sender<SubBatchDone>, inflight: InFlight) {
+    let InFlight { mut job, pending, busy_s } = inflight;
+    let t0 = Instant::now();
+    let result = job.batch.finish(pending);
+    let busy_s = busy_s + t0.elapsed().as_secs_f64();
+    let _ = done_tx.send(SubBatchDone { job, busy_s, result });
+}
+
+fn worker(
+    artifact_root: &str,
+    dataset: &str,
+    cmd_rx: Receiver<ExecCmd>,
+    done_tx: Sender<SubBatchDone>,
+    ready_tx: Sender<Result<(Manifest, AlphaTable)>>,
+) {
+    let mut rt = match Runtime::load(artifact_root) {
+        Ok(rt) => {
+            let _ = ready_tx.send(Ok((rt.manifest().clone(), rt.alphas().clone())));
+            rt
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+    // at most one submitted-but-unawaited step
+    let mut pending: Option<InFlight> = None;
+    loop {
+        // with a step in flight, only *peek* for more work — if none is
+        // queued yet, complete the in-flight step instead of blocking
+        let cmd = if pending.is_some() {
+            match cmd_rx.try_recv() {
+                Ok(c) => Some(c),
+                Err(TryRecvError::Empty) => None,
+                Err(TryRecvError::Disconnected) => break,
+            }
+        } else {
+            match cmd_rx.recv() {
+                Ok(c) => Some(c),
+                Err(_) => break,
+            }
+        };
+        match cmd {
+            Some(ExecCmd::Run(mut job)) => {
+                let t0 = Instant::now();
+                let submitted = rt
+                    .executable(dataset, job.bucket)
+                    .and_then(|exe| job.batch.submit(exe, job.bucket));
+                // this job's own submit seconds; its readback wait is added
+                // in finish() — time spent finishing the *previous* job
+                // below is charged to neither
+                let submit_s = t0.elapsed().as_secs_f64();
+                // complete the previous step only after the new one is on
+                // the device (order of Dones still matches submission)
+                match submitted {
+                    Ok(p) => {
+                        let next = InFlight { job, pending: p, busy_s: submit_s };
+                        if let Some(prev) = pending.take() {
+                            finish(&done_tx, prev);
+                        }
+                        pending = Some(next);
+                    }
+                    Err(e) => {
+                        if let Some(prev) = pending.take() {
+                            finish(&done_tx, prev);
+                        }
+                        let _ = done_tx.send(SubBatchDone {
+                            job,
+                            busy_s: submit_s,
+                            result: Err(e),
+                        });
+                    }
+                }
+            }
+            Some(ExecCmd::Warmup(tx)) => {
+                if let Some(prev) = pending.take() {
+                    finish(&done_tx, prev);
+                }
+                let _ = tx.send(rt.warmup(dataset));
+            }
+            None => {
+                let prev = pending.take().expect("idle worker only blocks in recv");
+                finish(&done_tx, prev);
+            }
+        }
+    }
+    if let Some(prev) = pending.take() {
+        finish(&done_tx, prev);
+    }
+}

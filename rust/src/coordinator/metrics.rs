@@ -107,6 +107,21 @@ pub struct MetricsSnapshot {
     pub kernel_steps: [u64; 3],
     /// sum over calls of (occupied lanes / bucket) — occupancy = this / calls
     pub occupancy_sum: f64,
+    /// Ticks that executed at least one sub-batch.
+    pub ticks: u64,
+    /// Sub-batch device calls issued by the tick planner (equals
+    /// `executable_calls`; kept explicit so `sub_batches / ticks` reads
+    /// directly as the decomposition factor).
+    pub sub_batches: u64,
+    /// Dead (padding) lane-slots executed — `padding_waste()` is the
+    /// fraction of all executed slots these represent.
+    pub padded_lanes: u64,
+    /// Engine-thread seconds spent blocked on device completions.
+    pub pipeline_wait_s: f64,
+    /// Seconds the execution path spent running sub-batches (device +
+    /// readback). Serial engines block for all of it (`overlap_frac` 0);
+    /// pipelined engines hide part of it behind pack/advance work.
+    pub device_busy_s: f64,
     pub latency_p50_s: f64,
     pub latency_p95_s: f64,
     pub latency_p99_s: f64,
@@ -137,10 +152,43 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Fraction of executed lane-slots that were inert padding
+    /// (`padded / (padded + occupied)`). The occupancy planner exists to
+    /// drive this toward 0 at off-bucket lane counts.
+    pub fn padding_waste(&self) -> f64 {
+        let total = self.padded_lanes + self.steps_executed;
+        if total == 0 {
+            0.0
+        } else {
+            self.padded_lanes as f64 / total as f64
+        }
+    }
+
+    /// Average sub-batches per working tick (1.0 = the old single-bucket
+    /// policy's shape; higher means the planner is decomposing).
+    pub fn sub_batches_per_tick(&self) -> f64 {
+        if self.ticks == 0 {
+            0.0
+        } else {
+            self.sub_batches as f64 / self.ticks as f64
+        }
+    }
+
+    /// Fraction of execution time hidden behind engine-thread work
+    /// (`1 - blocked/busy`): 0 for a serial engine, climbing toward 1 as
+    /// the pipeline keeps the device and the host concurrently busy.
+    pub fn overlap_frac(&self) -> f64 {
+        if self.device_busy_s <= 0.0 {
+            0.0
+        } else {
+            (1.0 - self.pipeline_wait_s / self.device_busy_s).clamp(0.0, 1.0)
+        }
+    }
+
     /// One-line human summary for examples/benches.
     pub fn summary(&self) -> String {
         format!(
-            "req={} rej={} lanes={} calls={} steps={} (ddim/pf/ab2={}/{}/{}) occ={:.2} p50={:.1}ms p95={:.1}ms p99={:.1}ms thr={:.1} steps/s",
+            "req={} rej={} lanes={} calls={} steps={} (ddim/pf/ab2={}/{}/{}) occ={:.2} waste={:.2} sub/tick={:.2} ovl={:.2} p50={:.1}ms p95={:.1}ms p99={:.1}ms thr={:.1} steps/s",
             self.requests_completed,
             self.requests_rejected,
             self.lanes_completed,
@@ -150,6 +198,9 @@ impl MetricsSnapshot {
             self.kernel_steps[1],
             self.kernel_steps[2],
             self.occupancy(),
+            self.padding_waste(),
+            self.sub_batches_per_tick(),
+            self.overlap_frac(),
             self.latency_p50_s * 1e3,
             self.latency_p95_s * 1e3,
             self.latency_p99_s * 1e3,
@@ -251,5 +302,36 @@ mod tests {
         assert!((s.occupancy() - 0.75).abs() < 1e-12);
         assert!((s.steps_per_second() - 50.0).abs() < 1e-12);
         assert!(!s.summary().is_empty());
+    }
+
+    #[test]
+    fn planner_and_pipeline_gauges() {
+        let empty = MetricsSnapshot::default();
+        assert_eq!(empty.padding_waste(), 0.0);
+        assert_eq!(empty.sub_batches_per_tick(), 0.0);
+        assert_eq!(empty.overlap_frac(), 0.0);
+
+        // 100 occupied slots + 25 padded: 20% of executed slots wasted
+        let s = MetricsSnapshot {
+            steps_executed: 100,
+            padded_lanes: 25,
+            ticks: 10,
+            sub_batches: 15,
+            pipeline_wait_s: 1.0,
+            device_busy_s: 4.0,
+            ..Default::default()
+        };
+        assert!((s.padding_waste() - 0.2).abs() < 1e-12);
+        assert!((s.sub_batches_per_tick() - 1.5).abs() < 1e-12);
+        assert!((s.overlap_frac() - 0.75).abs() < 1e-12);
+
+        // serial engines block for every device second: zero overlap,
+        // and clock jitter must never push the gauge negative
+        let serial = MetricsSnapshot {
+            pipeline_wait_s: 4.00001,
+            device_busy_s: 4.0,
+            ..Default::default()
+        };
+        assert_eq!(serial.overlap_frac(), 0.0);
     }
 }

@@ -23,6 +23,7 @@
 //! - [`server`]:  std::net JSON-line transport over the router
 
 pub mod engine;
+pub mod executor;
 pub mod metrics;
 pub mod queue;
 pub mod request;
@@ -31,6 +32,7 @@ pub mod server;
 pub mod shard;
 
 pub use engine::Engine;
+pub use executor::PipelineExecutor;
 pub use metrics::{Histogram, MetricsSnapshot};
 pub use queue::BoundedQueue;
 pub use request::{Request, RequestBody, RequestId, Response, ResponseBody};

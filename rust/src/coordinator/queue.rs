@@ -1,16 +1,22 @@
 //! Bounded FIFO admission queue. Full queue = immediate rejection — the
 //! backpressure signal a latency-SLO serving system wants (queueing deeper
 //! only converts rejects into timeouts).
+//!
+//! Each item carries a *lane weight* (how many trajectories it will admit)
+//! and the queue maintains the running total, because the router's
+//! least-loaded dispatch polls the backlog in lanes on every worker-loop
+//! iteration — an O(queue) walk there was measurable under load.
 
 use std::collections::VecDeque;
 
 use crate::error::{Error, Result};
 
-/// FIFO with a hard capacity.
+/// FIFO with a hard capacity and O(1) lane-weight accounting.
 #[derive(Debug)]
 pub struct BoundedQueue<T> {
-    items: VecDeque<T>,
+    items: VecDeque<(T, usize)>,
     capacity: usize,
+    lanes: usize,
     /// total accepted / rejected (metrics)
     pub accepted: u64,
     pub rejected: u64,
@@ -18,11 +24,18 @@ pub struct BoundedQueue<T> {
 
 impl<T> BoundedQueue<T> {
     pub fn new(capacity: usize) -> Self {
-        Self { items: VecDeque::with_capacity(capacity), capacity, accepted: 0, rejected: 0 }
+        Self {
+            items: VecDeque::with_capacity(capacity),
+            capacity,
+            lanes: 0,
+            accepted: 0,
+            rejected: 0,
+        }
     }
 
-    /// Admit or reject.
-    pub fn push(&mut self, item: T) -> Result<()> {
+    /// Admit or reject. `lanes` is the item's weight in the running lane
+    /// count (a count=8 generate is 8 lanes of backlog, not 1).
+    pub fn push(&mut self, item: T, lanes: usize) -> Result<()> {
         if self.items.len() >= self.capacity {
             self.rejected += 1;
             return Err(Error::Coordinator(format!(
@@ -30,22 +43,36 @@ impl<T> BoundedQueue<T> {
                 self.capacity
             )));
         }
-        self.items.push_back(item);
+        self.items.push_back((item, lanes));
+        self.lanes += lanes;
         self.accepted += 1;
         Ok(())
     }
 
     pub fn pop(&mut self) -> Option<T> {
-        self.items.pop_front()
+        let (item, lanes) = self.items.pop_front()?;
+        self.lanes -= lanes;
+        Some(item)
     }
 
     pub fn peek(&self) -> Option<&T> {
-        self.items.front()
+        self.items.front().map(|(item, _)| item)
     }
 
     /// Iterate queued items front-to-back (metrics / load accounting).
     pub fn iter(&self) -> impl Iterator<Item = &T> {
-        self.items.iter()
+        self.items.iter().map(|(item, _)| item)
+    }
+
+    /// Iterate queued `(item, lane weight)` entries front-to-back.
+    pub fn iter_entries(&self) -> impl Iterator<Item = (&T, usize)> {
+        self.items.iter().map(|(item, lanes)| (item, *lanes))
+    }
+
+    /// Running total of queued lane weights — O(1), maintained on every
+    /// push/pop (and therefore across aborts, which drain through `pop`).
+    pub fn lanes(&self) -> usize {
+        self.lanes
     }
 
     pub fn len(&self) -> usize {
@@ -68,12 +95,12 @@ mod tests {
     #[test]
     fn fifo_order() {
         let mut q = BoundedQueue::new(3);
-        q.push(1).unwrap();
-        q.push(2).unwrap();
-        q.push(3).unwrap();
+        q.push(1, 1).unwrap();
+        q.push(2, 1).unwrap();
+        q.push(3, 1).unwrap();
         assert_eq!(q.pop(), Some(1));
         assert_eq!(q.pop(), Some(2));
-        q.push(4).unwrap();
+        q.push(4, 1).unwrap();
         assert_eq!(q.iter().copied().collect::<Vec<_>>(), vec![3, 4]);
         assert_eq!(q.pop(), Some(3));
         assert_eq!(q.pop(), Some(4));
@@ -83,30 +110,54 @@ mod tests {
     #[test]
     fn rejects_when_full_and_counts() {
         let mut q = BoundedQueue::new(2);
-        q.push(1).unwrap();
-        q.push(2).unwrap();
-        assert!(q.push(3).is_err());
+        q.push(1, 1).unwrap();
+        q.push(2, 1).unwrap();
+        assert!(q.push(3, 1).is_err());
         assert_eq!(q.accepted, 2);
         assert_eq!(q.rejected, 1);
         q.pop();
-        q.push(3).unwrap();
+        q.push(3, 1).unwrap();
         assert_eq!(q.accepted, 3);
     }
 
     #[test]
-    fn property_never_exceeds_capacity() {
-        crate::testing::check("queue_capacity", 100, |g| {
+    fn lane_count_tracks_pushes_pops_and_rejects() {
+        let mut q = BoundedQueue::new(2);
+        assert_eq!(q.lanes(), 0);
+        q.push("a", 8).unwrap();
+        q.push("b", 1).unwrap();
+        assert_eq!(q.lanes(), 9);
+        assert!(q.push("c", 4).is_err(), "reject must not count lanes");
+        assert_eq!(q.lanes(), 9);
+        assert_eq!(q.pop(), Some("a"));
+        assert_eq!(q.lanes(), 1);
+        assert_eq!(q.pop(), Some("b"));
+        assert_eq!(q.lanes(), 0);
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.lanes(), 0);
+    }
+
+    #[test]
+    fn property_never_exceeds_capacity_and_lane_count_matches_contents() {
+        crate::testing::check("queue_capacity_and_lanes", 100, |g| {
             let cap = g.int_in(1, 16);
             let mut q = BoundedQueue::new(cap);
             let ops = g.int_in(1, 200);
             for _ in 0..ops {
                 if g.bool() {
-                    let _ = q.push(0u8);
+                    let w = g.int_in(0, 9);
+                    let _ = q.push(0u8, w);
                 } else {
                     q.pop();
                 }
                 if q.len() > cap {
                     return Err(format!("len {} > cap {cap}", q.len()));
+                }
+                // the running count must equal a fresh walk over the
+                // queued entries' weights — the O(1) gauge never drifts
+                let walked: usize = q.iter_entries().map(|(_, w)| w).sum();
+                if q.lanes() != walked {
+                    return Err(format!("lanes() {} != walked {walked}", q.lanes()));
                 }
             }
             Ok(())

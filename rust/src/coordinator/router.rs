@@ -240,6 +240,11 @@ impl Router {
                 *k += v;
             }
             agg.occupancy_sum += m.occupancy_sum;
+            agg.ticks += m.ticks;
+            agg.sub_batches += m.sub_batches;
+            agg.padded_lanes += m.padded_lanes;
+            agg.pipeline_wait_s += m.pipeline_wait_s;
+            agg.device_busy_s += m.device_busy_s;
             agg.queue_accepted += m.queue_accepted;
             agg.queue_depth += m.queue_depth;
             agg.active_lanes += m.active_lanes;
@@ -272,6 +277,10 @@ impl Router {
                     ("steps_ab2", m.kernel_steps[2]),
                     ("executable_calls", m.executable_calls),
                     ("occupancy", m.occupancy()),
+                    ("padding_waste", m.padding_waste()),
+                    ("ticks", m.ticks),
+                    ("sub_batches", m.sub_batches),
+                    ("overlap_frac", m.overlap_frac()),
                     ("latency_p50_s", m.latency_p50_s),
                     ("latency_p95_s", m.latency_p95_s),
                     ("latency_p99_s", m.latency_p99_s),
@@ -294,6 +303,10 @@ impl Router {
             ("steps_pf_ode", agg.kernel_steps[1]),
             ("steps_ab2", agg.kernel_steps[2]),
             ("occupancy", agg.occupancy()),
+            ("padding_waste", agg.padding_waste()),
+            ("ticks", agg.ticks),
+            ("sub_batches", agg.sub_batches),
+            ("overlap_frac", agg.overlap_frac()),
             ("latency_p50_s", agg.latency_p50_s),
             ("latency_p95_s", agg.latency_p95_s),
             ("latency_p99_s", agg.latency_p99_s),

@@ -26,6 +26,10 @@ COMMANDS
               --queue-cap N --max-lanes N --shards N
               --placement ds=N[,ds=N...] --drain-timeout-ms MS
               --default-sampler ddim|pf_ode|ab2
+              --pipeline-depth N (1 = serial; >= 2 overlaps pack/advance
+                with device execution, bitwise-identical output)
+              --max-padding-waste F (0..1; selections padding more than
+                this split into exact sub-batches on bucket boundaries)
   generate    --artifacts D --dataset NAME --steps S --eta E|hat --tau linear|quadratic
               --sampler ddim|pf_ode|ab2 --count N --seed K --out FILE.pgm
   encode      --artifacts D --dataset NAME --steps S --seed K
@@ -79,6 +83,8 @@ fn config_from(args: &Args) -> Result<ServeConfig> {
         cfg.default_sampler = SamplerKind::parse(s)?;
     }
     cfg.drain_timeout_ms = args.get_u64("drain-timeout-ms", cfg.drain_timeout_ms)?;
+    cfg.pipeline_depth = args.get_usize("pipeline-depth", cfg.pipeline_depth)?;
+    cfg.max_padding_waste = args.get_f64("max-padding-waste", cfg.max_padding_waste)?;
     cfg.validate()?;
     Ok(cfg)
 }
@@ -129,7 +135,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
             return Err(ddim_serve::Error::Coordinator(message))
         }
     };
-    let img = engine.runtime().manifest().img;
+    let img = engine.manifest().img;
     let cols = (count as f64).sqrt().ceil() as usize;
     let rows = count.div_ceil(cols);
     let mut padded: Vec<Vec<f32>> = images;

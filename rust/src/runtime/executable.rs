@@ -44,6 +44,50 @@ pub struct LaneStep<'a> {
     pub x0: &'a [f32],
 }
 
+/// A step that has been handed to the device but not read back yet —
+/// the result of [`StepExecutable::submit`]. Owns the device buffers, so
+/// it is independent of the executable that produced it: the caller can
+/// submit the next step (same or different executable) before waiting on
+/// this one. [`PendingStep::wait_into`] blocks on the device and copies
+/// the three outputs host-side.
+pub struct PendingStep {
+    bufs: Vec<Vec<xla::PjRtBuffer>>,
+    /// expected elements per output (bucket × dim)
+    n: usize,
+}
+
+impl PendingStep {
+    /// Block until the device finishes, then copy `(x_prev, eps, x0)` into
+    /// the first `bucket*dim` elements of `out`. All three buffers are
+    /// validated together — a caller-constructed [`StepOutput`] with
+    /// mismatched `eps`/`x0` lengths is fixed up here rather than slipping
+    /// through to `literal_to_slice` — and they only ever *grow*: a
+    /// capacity-sized buffer stays put while sub-batches of different
+    /// buckets stream through it, keeping the hot loop allocation-free.
+    pub fn wait_into(self, out: &mut StepOutput) -> Result<()> {
+        let first = self
+            .bufs
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| Error::Xla("execute returned no buffers".into()))?;
+        let tuple = first.to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != 3 {
+            return Err(Error::Xla(format!("expected 3 outputs, got {}", parts.len())));
+        }
+        let n = self.n;
+        for buf in [&mut out.x_prev, &mut out.eps, &mut out.x0] {
+            if buf.len() < n {
+                buf.resize(n, 0.0);
+            }
+        }
+        literal_to_slice(&parts[0], &mut out.x_prev[..n])?;
+        literal_to_slice(&parts[1], &mut out.eps[..n])?;
+        literal_to_slice(&parts[2], &mut out.x0[..n])?;
+        Ok(())
+    }
+}
+
 /// One PJRT-loaded executable (dataset × bucket).
 pub struct StepExecutable {
     exe: xla::PjRtLoadedExecutable,
@@ -97,12 +141,15 @@ impl StepExecutable {
         self.bucket
     }
 
-    /// Execute one fused denoise step.
+    /// Hand one fused denoise step to the device without waiting for it.
     ///
     /// `x`, `noise`: `bucket*dim` f32; `t`, `alpha_t`, `alpha_prev`,
-    /// `sigma`: `bucket` f32. Outputs are written into `out` (reused across
-    /// calls by the engine — zero steady-state allocation).
-    pub fn run(
+    /// `sigma`: `bucket` f32. The input literals are snapshotted into
+    /// device buffers during this call, so they may be refilled for the
+    /// next submission while the returned [`PendingStep`] is still in
+    /// flight — this is what lets the pipelined executor keep the device
+    /// busy while the engine thread packs and retires lanes.
+    pub fn submit(
         &self,
         x: &[f32],
         t: &[f32],
@@ -110,8 +157,7 @@ impl StepExecutable {
         alpha_prev: &[f32],
         sigma: &[f32],
         noise: &[f32],
-        out: &mut StepOutput,
-    ) -> Result<()> {
+    ) -> Result<PendingStep> {
         let b = self.bucket;
         if x.len() != b * self.dim
             || noise.len() != b * self.dim
@@ -132,19 +178,24 @@ impl StepExecutable {
         lits[3].copy_raw_from(alpha_prev)?;
         lits[4].copy_raw_from(sigma)?;
         lits[5].copy_raw_from(noise)?;
-        let result = self.exe.execute::<xla::Literal>(&lits)?;
-        let tuple = result[0][0].to_literal_sync()?;
-        let parts = tuple.to_tuple()?;
-        if parts.len() != 3 {
-            return Err(Error::Xla(format!("expected 3 outputs, got {}", parts.len())));
-        }
-        if out.x_prev.len() != b * self.dim {
-            *out = StepOutput::zeros(b * self.dim);
-        }
-        literal_to_slice(&parts[0], &mut out.x_prev)?;
-        literal_to_slice(&parts[1], &mut out.eps)?;
-        literal_to_slice(&parts[2], &mut out.x0)?;
+        let bufs = self.exe.execute::<xla::Literal>(&lits)?;
         self.calls.set(self.calls.get() + 1);
-        Ok(())
+        Ok(PendingStep { bufs, n: b * self.dim })
+    }
+
+    /// Execute one fused denoise step synchronously: [`StepExecutable::submit`]
+    /// + [`PendingStep::wait_into`]. Outputs are written into `out` (reused
+    /// across calls by the engine — zero steady-state allocation).
+    pub fn run(
+        &self,
+        x: &[f32],
+        t: &[f32],
+        alpha_t: &[f32],
+        alpha_prev: &[f32],
+        sigma: &[f32],
+        noise: &[f32],
+        out: &mut StepOutput,
+    ) -> Result<()> {
+        self.submit(x, t, alpha_t, alpha_prev, sigma, noise)?.wait_into(out)
     }
 }

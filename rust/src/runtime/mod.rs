@@ -9,7 +9,7 @@
 mod executable;
 mod literal;
 
-pub use executable::{LaneStep, StepExecutable, StepOutput};
+pub use executable::{LaneStep, PendingStep, StepExecutable, StepOutput};
 pub use literal::{literal_to_slice, vec_to_literal};
 
 use std::collections::hash_map::Entry;

@@ -8,7 +8,7 @@
 //! a runtime, and everything above goes through it.
 
 use crate::error::Result;
-use crate::runtime::{LaneStep, StepExecutable, StepOutput};
+use crate::runtime::{LaneStep, PendingStep, StepExecutable, StepOutput};
 use crate::sampler::Trajectory;
 
 /// Reusable input/output buffers for one batched `denoise_step` call,
@@ -93,18 +93,35 @@ impl StepBatch {
         }
     }
 
-    /// Execute `exe` over the first `bucket` packed slots.
-    pub fn run(&mut self, exe: &StepExecutable, bucket: usize) -> Result<()> {
+    /// Hand the first `bucket` packed slots to the device without waiting
+    /// (the pipelined half of [`StepBatch::run`]). The inputs are
+    /// snapshotted during submission, so this batch may be re-packed for a
+    /// later step while the returned [`PendingStep`] is still in flight —
+    /// but [`StepBatch::finish`] must run first if this batch's own
+    /// outputs are still wanted.
+    pub fn submit(&mut self, exe: &StepExecutable, bucket: usize) -> Result<PendingStep> {
         let d = self.dim;
-        exe.run(
+        exe.submit(
             &self.x[..bucket * d],
             &self.t[..bucket],
             &self.a_in[..bucket],
             &self.a_out[..bucket],
             &self.sigma[..bucket],
             &self.noise[..bucket * d],
-            &mut self.out,
         )
+    }
+
+    /// Wait for a submitted step and land its outputs in this batch
+    /// (readable through [`StepBatch::lane`]).
+    pub fn finish(&mut self, pending: PendingStep) -> Result<()> {
+        pending.wait_into(&mut self.out)
+    }
+
+    /// Execute `exe` over the first `bucket` packed slots synchronously
+    /// ([`StepBatch::submit`] + [`StepBatch::finish`]).
+    pub fn run(&mut self, exe: &StepExecutable, bucket: usize) -> Result<()> {
+        let pending = self.submit(exe, bucket)?;
+        self.finish(pending)
     }
 
     /// Output view of `slot` from the last [`StepBatch::run`].

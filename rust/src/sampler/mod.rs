@@ -1,8 +1,9 @@
 //! Sampler layer: per-request trajectory state ([`Trajectory`]), the
 //! pluggable per-lane update kernels ([`UpdateKernel`]: DDIM Eq. 13,
 //! PF-ODE Euler Eq. 15, AB2 multistep), the shared batched-step packer
-//! ([`StepBatch`]), and a direct batch driver ([`BatchRunner`]) used by the
-//! evaluation harnesses.
+//! ([`StepBatch`]), the occupancy-aware tick planner ([`planner`]), and a
+//! direct batch driver ([`BatchRunner`]) used by the evaluation
+//! harnesses.
 //!
 //! The coordinator (continuous batching across *heterogeneous* requests)
 //! builds on the same [`Trajectory`] + [`StepBatch`] types; `BatchRunner`
@@ -14,6 +15,7 @@ mod batch;
 mod kernel;
 mod multistep;
 mod pf_ode;
+pub mod planner;
 mod runner;
 mod trajectory;
 
@@ -23,5 +25,6 @@ pub use multistep::Ab2State;
 pub use pf_ode::{
     ddim_update_host, ddim_update_host_sigma, pf_euler_update, pf_euler_update_inplace,
 };
+pub use planner::{plan_sub_batches, SubBatch, DEFAULT_MAX_PADDING_WASTE};
 pub use runner::BatchRunner;
 pub use trajectory::{Trajectory, TrajectoryKind};

@@ -1,0 +1,255 @@
+//! Occupancy-aware batch formation: decompose one tick's lane selection
+//! into exactly-sized sub-batches on compiled-bucket boundaries.
+//!
+//! The old policy ran the whole selection in the smallest bucket that
+//! fits, padding the rest — 9 selected lanes with buckets {…,8,16} ran
+//! bucket 16 with 7 dead lanes, ~44% wasted FLOPs on every such tick.
+//! The planner instead fills buckets exactly (9 → 8+1) and only pads the
+//! final remainder, with a tunable threshold deciding when a padded
+//! single call beats extra per-call overhead. Pure arithmetic over the
+//! bucket list — no runtime needed — so the greedy policy is
+//! property-tested exhaustively below.
+
+/// One device call of a planned tick: lanes `sel[start..start+lanes]`
+/// packed into slots `0..lanes` of a batch run at `bucket`
+/// (`bucket - lanes` slots are inert padding).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubBatch {
+    /// Offset into the tick's selection order.
+    pub start: usize,
+    /// Occupied lanes (≥ 1).
+    pub lanes: usize,
+    /// Compiled bucket the call runs at (≥ `lanes`).
+    pub bucket: usize,
+}
+
+impl SubBatch {
+    /// Dead slots this call executes.
+    pub fn padding(&self) -> usize {
+        self.bucket - self.lanes
+    }
+}
+
+/// Default padding-waste threshold (`ServeConfig::max_padding_waste`):
+/// a remainder whose padded fraction is at most this runs as one padded
+/// call; anything worse is decomposed into exact buckets first. 0.25
+/// keeps e.g. 3 lanes in a single bucket-4 call (25% waste, matching the
+/// old policy bitwise) while splitting 9 → 8+1 instead of padding to 16.
+pub const DEFAULT_MAX_PADDING_WASTE: f64 = 0.25;
+
+/// Greedily decompose `n` selected lanes over the ascending compiled
+/// `buckets` (only buckets ≤ `capacity` are eligible), appending to
+/// `out`. Guarantees, property-tested below:
+///
+/// - the sub-batches tile `0..n` exactly (each selected lane covered once);
+/// - every `lanes`/`bucket` is ≤ `capacity`;
+/// - total padding never exceeds the old single-bucket policy's
+///   (`bucket_for(n) - n`), whatever `max_waste` is;
+/// - `max_waste >= 1.0` reproduces the old single-bucket selection
+///   whenever one bucket can hold all `n` lanes.
+///
+/// `max_waste` is the padded fraction (`padding / bucket`) above which a
+/// pad-up call is rejected in favour of exact decomposition.
+pub fn plan_sub_batches(n: usize, buckets: &[usize], capacity: usize, max_waste: f64, out: &mut Vec<SubBatch>) {
+    out.clear();
+    if n == 0 {
+        return;
+    }
+    let eligible = |b: usize| b <= capacity;
+    // fallback for a degenerate bucket list: one exactly-sized call
+    if !buckets.iter().any(|&b| eligible(b)) {
+        out.push(SubBatch { start: 0, lanes: n, bucket: n });
+        return;
+    }
+    let up = |r: usize| buckets.iter().copied().filter(|&b| eligible(b)).find(|&b| b >= r);
+    let down = |r: usize| buckets.iter().copied().filter(|&b| eligible(b) && b <= r).last();
+
+    let mut start = 0usize;
+    let mut rem = n;
+    while rem > 0 {
+        let fits = up(rem);
+        if let Some(b) = fits {
+            let waste = (b - rem) as f64 / b as f64;
+            if waste <= max_waste || down(rem).is_none() {
+                out.push(SubBatch { start, lanes: rem, bucket: b });
+                break;
+            }
+        }
+        match down(rem) {
+            Some(b) => {
+                // exact fill with the largest bucket that fits
+                out.push(SubBatch { start, lanes: b, bucket: b });
+                start += b;
+                rem -= b;
+            }
+            None => {
+                // no bucket ≤ rem: forced pad-up (up() must exist here,
+                // since some bucket is eligible and all of them are > rem)
+                let b = fits.expect("some eligible bucket >= rem");
+                out.push(SubBatch { start, lanes: rem, bucket: b });
+                break;
+            }
+        }
+    }
+
+    // Never do worse than the old policy: if greedy decomposition pads
+    // more than one big padded call would (possible for irregular,
+    // non-doubling bucket lists), fall back to the single bucket.
+    if let Some(single) = up(n) {
+        let plan_padding: usize = out.iter().map(SubBatch::padding).sum();
+        if plan_padding > single - n {
+            out.clear();
+            out.push(SubBatch { start: 0, lanes: n, bucket: single });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(n: usize, buckets: &[usize], capacity: usize, max_waste: f64) -> Vec<SubBatch> {
+        let mut out = Vec::new();
+        plan_sub_batches(n, buckets, capacity, max_waste, &mut out);
+        out
+    }
+
+    const POW2: &[usize] = &[1, 2, 4, 8, 16];
+
+    #[test]
+    fn exact_bucket_is_one_full_call() {
+        for &n in POW2 {
+            assert_eq!(
+                plan(n, POW2, 16, DEFAULT_MAX_PADDING_WASTE),
+                vec![SubBatch { start: 0, lanes: n, bucket: n }]
+            );
+        }
+    }
+
+    #[test]
+    fn off_bucket_counts_decompose() {
+        // 9 → 8 + 1 instead of one bucket-16 call with 7 dead lanes
+        assert_eq!(
+            plan(9, POW2, 16, DEFAULT_MAX_PADDING_WASTE),
+            vec![
+                SubBatch { start: 0, lanes: 8, bucket: 8 },
+                SubBatch { start: 8, lanes: 1, bucket: 1 },
+            ]
+        );
+        // 33 exceeds the largest bucket: 16 + 16 + 1
+        assert_eq!(
+            plan(33, POW2, 16, DEFAULT_MAX_PADDING_WASTE),
+            vec![
+                SubBatch { start: 0, lanes: 16, bucket: 16 },
+                SubBatch { start: 16, lanes: 16, bucket: 16 },
+                SubBatch { start: 32, lanes: 1, bucket: 1 },
+            ]
+        );
+    }
+
+    #[test]
+    fn threshold_keeps_cheap_padding_in_one_call() {
+        // 3 lanes → bucket 4 is 25% waste: at the default threshold this
+        // stays a single padded call (bitwise-identical to the old policy)
+        assert_eq!(
+            plan(3, POW2, 16, DEFAULT_MAX_PADDING_WASTE),
+            vec![SubBatch { start: 0, lanes: 3, bucket: 4 }]
+        );
+        // but a stricter threshold splits it
+        assert_eq!(
+            plan(3, POW2, 16, 0.1),
+            vec![
+                SubBatch { start: 0, lanes: 2, bucket: 2 },
+                SubBatch { start: 2, lanes: 1, bucket: 1 },
+            ]
+        );
+    }
+
+    #[test]
+    fn max_waste_one_reproduces_old_single_bucket_policy() {
+        for n in 1..=16 {
+            let got = plan(n, POW2, 16, 1.0);
+            let old_bucket = POW2.iter().copied().find(|&b| b >= n).unwrap();
+            assert_eq!(got, vec![SubBatch { start: 0, lanes: n, bucket: old_bucket }], "n={n}");
+        }
+    }
+
+    #[test]
+    fn capacity_restricts_eligible_buckets() {
+        // capacity 8: bucket 16 may not be used even for 9+ lanes
+        let got = plan(12, POW2, 8, DEFAULT_MAX_PADDING_WASTE);
+        assert!(got.iter().all(|s| s.bucket <= 8), "{got:?}");
+        assert_eq!(got.iter().map(|s| s.lanes).sum::<usize>(), 12);
+    }
+
+    #[test]
+    fn missing_small_buckets_force_padding() {
+        // buckets {4, 8}: a remainder of 1 has to pad up to 4
+        let got = plan(9, &[4, 8], 8, DEFAULT_MAX_PADDING_WASTE);
+        assert_eq!(got.iter().map(|s| s.lanes).sum::<usize>(), 9);
+        let padding: usize = got.iter().map(SubBatch::padding).sum();
+        assert!(padding <= 3, "{got:?}"); // old policy (no bucket ≥ 9) can't even run this
+    }
+
+    #[test]
+    fn degenerate_bucket_list_runs_exact() {
+        assert_eq!(plan(5, &[], 16, 0.25), vec![SubBatch { start: 0, lanes: 5, bucket: 5 }]);
+        assert_eq!(plan(5, &[32], 16, 0.25), vec![SubBatch { start: 0, lanes: 5, bucket: 5 }]);
+        assert!(plan(0, POW2, 16, 0.25).is_empty());
+    }
+
+    /// The load-bearing properties: every selected lane covered exactly
+    /// once by in-order contiguous sub-batches, capacity respected, and
+    /// padding never worse than the old single-bucket policy — over
+    /// random bucket lists (not just powers of two), selection sizes,
+    /// capacities and thresholds.
+    #[test]
+    fn property_plan_tiles_selection_within_capacity_and_padding_bound() {
+        crate::testing::check("planner_greedy_decomposition", 300, |g| {
+            // random strictly-ascending bucket list, possibly without 1
+            let mut buckets: Vec<usize> = Vec::new();
+            let mut b = g.int_in(1, 4);
+            for _ in 0..g.int_in(1, 6) {
+                buckets.push(b);
+                b += g.int_in(1, 2) * b.max(1); // irregular growth
+            }
+            let largest = *buckets.last().unwrap();
+            let capacity = if g.bool() { largest } else { g.int_in(1, largest).max(1) };
+            let n = g.int_in(1, 2 * largest + 1).max(1);
+            let max_waste = g.f64_in(0.0, 1.0);
+            let mut out = Vec::new();
+            plan_sub_batches(n, &buckets, capacity, max_waste, &mut out);
+
+            // (1) tiles 0..n contiguously, in order, each lane exactly once
+            let mut cursor = 0usize;
+            for s in &out {
+                if s.start != cursor {
+                    return Err(format!("gap/overlap at {s:?} (cursor {cursor}) in {out:?}"));
+                }
+                if s.lanes == 0 || s.lanes > s.bucket {
+                    return Err(format!("bad sub-batch {s:?}"));
+                }
+                cursor += s.lanes;
+            }
+            if cursor != n {
+                return Err(format!("covered {cursor} of {n} lanes: {out:?}"));
+            }
+            // (2) capacity respected whenever any compiled bucket fits it
+            if buckets.iter().any(|&b| b <= capacity) {
+                if let Some(s) = out.iter().find(|s| s.bucket > capacity) {
+                    return Err(format!("bucket over capacity {capacity}: {s:?}"));
+                }
+            }
+            // (3) padding never exceeds the old single-bucket policy
+            if let Some(single) = buckets.iter().copied().find(|&b| b >= n && b <= capacity) {
+                let padding: usize = out.iter().map(SubBatch::padding).sum();
+                if padding > single - n {
+                    return Err(format!(
+                        "padding {padding} worse than single bucket {single} for n={n}: {out:?}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -9,6 +9,7 @@
 
 use crate::error::Result;
 use crate::runtime::Runtime;
+use crate::sampler::planner::{plan_sub_batches, SubBatch, DEFAULT_MAX_PADDING_WASTE};
 use crate::sampler::{SamplerKind, StepBatch, Trajectory};
 use crate::schedule::SamplePlan;
 
@@ -17,9 +18,11 @@ pub struct BatchRunner {
     dataset: String,
     bucket: usize,
     dim: usize,
+    buckets: Vec<usize>,
     // shared pack/pad/run path; reused across calls: zero steady-state
     // allocation on the DDIM path
     batch: StepBatch,
+    plan_scratch: Vec<SubBatch>,
     /// executable calls issued (for Fig. 4 accounting)
     pub calls: u64,
 }
@@ -34,7 +37,9 @@ impl BatchRunner {
             dataset: dataset.to_string(),
             bucket,
             dim,
+            buckets: rt.manifest().buckets.clone(),
             batch: StepBatch::new(bucket, dim),
+            plan_scratch: Vec::new(),
             calls: 0,
         })
     }
@@ -62,25 +67,33 @@ impl BatchRunner {
         Ok(trajs.into_iter().map(Trajectory::into_state).collect())
     }
 
-    /// Advance the listed lanes (≤ bucket of them) one step.
+    /// Advance the listed lanes (≤ bucket of them) one step. The chunk is
+    /// run through the occupancy planner, so a partial tail (e.g. 5 lanes
+    /// left on a bucket-16 runner) fills small exact buckets instead of
+    /// padding the full preferred bucket with dead lanes.
     fn step_chunk(
         &mut self,
         rt: &mut Runtime,
         trajs: &mut [Trajectory],
         idxs: &[usize],
     ) -> Result<()> {
-        let b = self.bucket;
-        assert!(!idxs.is_empty() && idxs.len() <= b);
-        for (slot, &i) in idxs.iter().enumerate() {
-            self.batch.pack(slot, &mut trajs[i])?;
+        assert!(!idxs.is_empty() && idxs.len() <= self.bucket);
+        let mut plan = std::mem::take(&mut self.plan_scratch);
+        plan_sub_batches(idxs.len(), &self.buckets, self.bucket, DEFAULT_MAX_PADDING_WASTE, &mut plan);
+        for sb in &plan {
+            let sub = &idxs[sb.start..sb.start + sb.lanes];
+            for (slot, &i) in sub.iter().enumerate() {
+                self.batch.pack(slot, &mut trajs[i])?;
+            }
+            self.batch.pad(sb.lanes, sb.bucket);
+            let exe = rt.executable(&self.dataset, sb.bucket)?;
+            self.batch.run(exe, sb.bucket)?;
+            self.calls += 1;
+            for (slot, &i) in sub.iter().enumerate() {
+                trajs[i].advance(self.batch.lane(slot))?;
+            }
         }
-        self.batch.pad(idxs.len(), b);
-        let exe = rt.executable(&self.dataset, b)?;
-        self.batch.run(exe, b)?;
-        self.calls += 1;
-        for (slot, &i) in idxs.iter().enumerate() {
-            trajs[i].advance(self.batch.lane(slot))?;
-        }
+        self.plan_scratch = plan;
         Ok(())
     }
 

@@ -416,6 +416,95 @@ fn heterogeneous_kernels_batch_in_one_tick() {
     assert_eq!(m.kernel_steps.iter().sum::<u64>(), m.steps_executed);
 }
 
+/// THE pipelining-correctness property: with the tick plan fixed, depth
+/// only changes *when* sub-batches execute, never what they compute — so
+/// a pipelined engine (depth ≥ 2, executor thread, ping-pong buffers)
+/// must be **bitwise** identical to the serial engine (depth 1) on a
+/// heterogeneous-kernel, mixed-length, partly stochastic workload whose
+/// off-bucket lane counts force multi-sub-batch ticks.
+#[test]
+fn pipelined_depth_matches_serial_bitwise() {
+    require_artifacts!();
+    let run = |depth: usize| -> Vec<(u64, Vec<Vec<f32>>)> {
+        let cfg = ServeConfig {
+            artifact_root: artifacts_root(),
+            dataset: "sprites".into(),
+            max_batch: 16,
+            queue_capacity: 32,
+            max_lanes: 32,
+            pipeline_depth: depth,
+            ..Default::default()
+        };
+        let mut e = Engine::new(cfg).unwrap();
+        // 3+2+2+2 = 9 lanes resident at once: the planner splits 9 → 8+1,
+        // so every tick exercises multiple sub-batches through the pipe;
+        // mixed kernels + an η=1 request cover host integration and the
+        // per-lane noise streams
+        let mut ids = Vec::new();
+        ids.push(e.submit(gen_request_with(6, NoiseMode::Eta(0.0), 3, 5, SamplerKind::Ddim)).unwrap());
+        ids.push(e.submit(gen_request_with(9, NoiseMode::Eta(0.0), 2, 6, SamplerKind::PfOde)).unwrap());
+        ids.push(e.submit(gen_request_with(4, NoiseMode::Eta(0.0), 2, 7, SamplerKind::Ab2)).unwrap());
+        ids.push(e.submit(gen_request_with(7, NoiseMode::Eta(1.0), 2, 8, SamplerKind::Ddim)).unwrap());
+        let resp = e.run_until_idle().unwrap();
+        let m = e.metrics();
+        assert_eq!(m.sub_batches, m.executable_calls);
+        assert!(
+            m.sub_batches_per_tick() > 1.0,
+            "workload was meant to force decomposed ticks, got {}",
+            m.sub_batches_per_tick()
+        );
+        if depth == 1 {
+            assert_eq!(m.overlap_frac(), 0.0, "serial engines cannot overlap");
+        }
+        ids.iter()
+            .map(|&id| (id, outputs(resp.iter().find(|r| r.id == id).unwrap())))
+            .collect()
+    };
+    let serial = run(1);
+    for depth in [2usize, 3] {
+        let pipelined = run(depth);
+        assert_eq!(
+            serial, pipelined,
+            "pipeline depth {depth} changed sample bits vs serial"
+        );
+    }
+}
+
+/// The planner's occupancy win, observed end-to-end: 9 equal-length lanes
+/// at max_batch 16 run 8+1 (occupancy 1.0, zero padding) instead of one
+/// padded bucket-16 call — while `max_padding_waste: 1.0` restores the
+/// old single-bucket policy exactly.
+#[test]
+fn planner_raises_occupancy_at_off_bucket_counts() {
+    require_artifacts!();
+    let run = |max_waste: f64| {
+        let cfg = ServeConfig {
+            artifact_root: artifacts_root(),
+            dataset: "sprites".into(),
+            max_batch: 16,
+            queue_capacity: 16,
+            max_lanes: 32,
+            max_padding_waste: max_waste,
+            ..Default::default()
+        };
+        let mut e = Engine::new(cfg).unwrap();
+        e.submit(gen_request(5, NoiseMode::Eta(0.0), 9, 42)).unwrap();
+        e.run_until_idle().unwrap();
+        e.metrics()
+    };
+    let old = run(1.0);
+    assert_eq!(old.sub_batches, 5, "single-bucket policy: one call per tick");
+    assert_eq!(old.padded_lanes, 5 * (16 - 9));
+    assert!((old.occupancy() - 9.0 / 16.0).abs() < 1e-9, "occ {}", old.occupancy());
+
+    let planned = run(0.25);
+    assert_eq!(planned.sub_batches, 10, "9 lanes split 8+1 each tick");
+    assert_eq!(planned.padded_lanes, 0);
+    assert!((planned.occupancy() - 1.0).abs() < 1e-9, "occ {}", planned.occupancy());
+    assert!(planned.padding_waste() < old.padding_waste());
+    assert_eq!(planned.steps_executed, old.steps_executed);
+}
+
 /// The acceptance-criteria wire shape, minus TCP: a JSON `"sampler":"ab2"`
 /// request parses, admits, and completes through `run_until_idle`.
 #[test]
