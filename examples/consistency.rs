@@ -15,7 +15,7 @@ use ddim_serve::tensor::{save_pgm, tile_grid};
 
 const S_LIST: [usize; 5] = [5, 10, 20, 50, 100];
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ddim_serve::Result<()> {
     let args = Args::from_env()?;
     let dataset = args.get_or("dataset", "sprites").to_string();
     let count = args.get_usize("count", 6)?;

@@ -9,7 +9,7 @@
 use ddim_serve::discrete::{DiscreteSampler, DiscreteSchedule, TabularModel};
 use ddim_serve::discrete::total_variation;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ddim_serve::Result<()> {
     let t_max = 200usize;
     let k = 8usize;
     // a lumpy data distribution over 8 symbols

@@ -15,7 +15,7 @@ use ddim_serve::tensor::{save_pgm, tile_grid};
 
 const ALPHAS: usize = 11;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ddim_serve::Result<()> {
     let args = Args::from_env()?;
     let dataset = args.get_or("dataset", "blobs").to_string();
     let steps = args.get_usize("steps", 50)?;

@@ -13,7 +13,7 @@ use ddim_serve::sampler::SamplerKind;
 use ddim_serve::schedule::{NoiseMode, TauKind};
 use ddim_serve::tensor::{save_pgm, tile_grid};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ddim_serve::Result<()> {
     let args = Args::from_env()?;
     let dataset = args.get_or("dataset", "sprites").to_string();
     let steps = args.get_usize("steps", 20)?;
@@ -42,7 +42,9 @@ fn main() -> anyhow::Result<()> {
     let resp = responses.iter().find(|r| r.id == id).unwrap();
     let images = match &resp.body {
         ResponseBody::Ok { outputs } => outputs,
-        ResponseBody::Error { message } => anyhow::bail!("generation failed: {message}"),
+        ResponseBody::Error { message } => {
+            return Err(ddim_serve::Error::Coordinator(format!("generation failed: {message}")))
+        }
     };
 
     let img = engine.manifest().img;

@@ -12,7 +12,7 @@ use ddim_serve::sampler::BatchRunner;
 use ddim_serve::schedule::{NoiseMode, SamplePlan, TauKind};
 use ddim_serve::tensor::{save_pgm, tile_grid};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ddim_serve::Result<()> {
     let args = Args::from_env()?;
     let dataset = args.get_or("dataset", "sprites").to_string();
     let count = args.get_usize("count", 8)?;

@@ -19,7 +19,7 @@ use ddim_serve::jobj;
 use ddim_serve::schedule::NoiseMode;
 use ddim_serve::workload::Workload;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ddim_serve::Result<()> {
     let args = Args::from_env()?;
     let dataset = args.get_or("dataset", "sprites").to_string();
     let n_requests = args.get_usize("requests", 60)?;
@@ -75,7 +75,7 @@ fn main() -> anyhow::Result<()> {
                 std::thread::sleep(Duration::from_secs_f64(arrival - now));
             }
             let sent = Instant::now();
-            let ok = (|| -> anyhow::Result<bool> {
+            let ok = (|| -> ddim_serve::Result<bool> {
                 let mut c = Client::connect(addr)?;
                 let resp = c.roundtrip(&jobj![
                     ("op", "generate"),
@@ -144,7 +144,7 @@ fn main() -> anyhow::Result<()> {
     server.shutdown();
     println!("server shut down cleanly");
     if failures > 0 {
-        anyhow::bail!("{failures} requests failed");
+        return Err(ddim_serve::Error::Coordinator(format!("{failures} requests failed")));
     }
     Ok(())
 }

@@ -3,13 +3,23 @@
 //! but everything the paper's experiments vary is a field here.
 
 use crate::error::{Error, Result};
+use crate::runtime::BackendKind;
 use crate::sampler::{SamplerKind, DEFAULT_MAX_PADDING_WASTE};
 
 /// Coordinator / server configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
-    /// Artifact directory produced by `make artifacts`.
+    /// Artifact directory produced by `make artifacts` (or
+    /// `testing::fixtures` for the hermetic tier).
     pub artifact_root: String,
+    /// Step backend every engine/executor runtime loads on
+    /// (`--backend ref|xla`). The default honours the `DDIM_BACKEND` env
+    /// override, matching `Runtime::load` — so a bench or test process
+    /// lives entirely on one backend — and, like `Runtime::load`, fails
+    /// loudly (panics, since `Default` cannot return errors) on an
+    /// unparseable value rather than silently serving the wrong backend.
+    /// `xla` needs the non-default `xla` cargo feature.
+    pub backend: BackendKind,
     /// Dataset whose executables serve this process.
     pub dataset: String,
     /// Largest batch bucket the engine may use (≤ largest compiled bucket).
@@ -53,6 +63,7 @@ impl Default for ServeConfig {
     fn default() -> Self {
         Self {
             artifact_root: "artifacts".into(),
+            backend: BackendKind::from_env().expect("DDIM_BACKEND must be ref|xla"),
             dataset: "sprites".into(),
             max_batch: 16,
             queue_capacity: 256,

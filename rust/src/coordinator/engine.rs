@@ -138,7 +138,7 @@ impl Engine {
             let (exec, manifest, alphas) = PipelineExecutor::spawn(&cfg)?;
             Self::build(ExecBackend::Pipelined(exec), manifest, alphas, cfg)
         } else {
-            let rt = Runtime::load(&cfg.artifact_root)?;
+            let rt = Runtime::load_with(&cfg.artifact_root, cfg.backend)?;
             Self::with_runtime(rt, cfg)
         }
     }
@@ -152,6 +152,13 @@ impl Engine {
     pub fn with_runtime(rt: Runtime, cfg: ServeConfig) -> Result<Self> {
         cfg.validate()?;
         rt.manifest().dataset(&cfg.dataset)?;
+        if rt.backend_kind() != cfg.backend {
+            return Err(Error::Coordinator(format!(
+                "runtime is on the '{}' backend but cfg wants '{}'",
+                rt.backend_kind().label(),
+                cfg.backend.label()
+            )));
+        }
         if cfg.pipeline_depth >= 2 {
             if rt.manifest().root != std::path::Path::new(&cfg.artifact_root) {
                 return Err(Error::Coordinator(format!(

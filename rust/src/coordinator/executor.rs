@@ -24,7 +24,7 @@ use std::time::Instant;
 use crate::artifacts::Manifest;
 use crate::config::ServeConfig;
 use crate::error::{Error, Result};
-use crate::runtime::{PendingStep, Runtime};
+use crate::runtime::{BackendKind, PendingStep, Runtime};
 use crate::sampler::StepBatch;
 use crate::schedule::AlphaTable;
 
@@ -85,10 +85,11 @@ impl PipelineExecutor {
         let (done_tx, done_rx) = mpsc::channel::<SubBatchDone>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(Manifest, AlphaTable)>>();
         let artifact_root = cfg.artifact_root.clone();
+        let backend = cfg.backend;
         let dataset = cfg.dataset.clone();
         let handle = std::thread::Builder::new()
             .name(format!("ddim-exec-{dataset}"))
-            .spawn(move || worker(&artifact_root, &dataset, cmd_rx, done_tx, ready_tx))
+            .spawn(move || worker(&artifact_root, backend, &dataset, cmd_rx, done_tx, ready_tx))
             .map_err(Error::Io)?;
         let (manifest, alphas) = match ready_rx.recv() {
             Ok(Ok(pair)) => pair,
@@ -225,12 +226,13 @@ fn finish(done_tx: &Sender<SubBatchDone>, inflight: InFlight) {
 
 fn worker(
     artifact_root: &str,
+    backend: BackendKind,
     dataset: &str,
     cmd_rx: Receiver<ExecCmd>,
     done_tx: Sender<SubBatchDone>,
     ready_tx: Sender<Result<(Manifest, AlphaTable)>>,
 ) {
-    let mut rt = match Runtime::load(artifact_root) {
+    let mut rt = match Runtime::load_with(artifact_root, backend) {
         Ok(rt) => {
             let _ = ready_tx.send(Ok((rt.manifest().clone(), rt.alphas().clone())));
             rt

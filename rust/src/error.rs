@@ -1,49 +1,74 @@
-//! Crate-wide error type. One enum, `thiserror`-derived, so every layer
-//! (artifact loading, JSON, PJRT, coordinator) reports through a single
-//! `Result` alias.
+//! Crate-wide error type. One enum with hand-rolled `Display` /
+//! `std::error::Error` impls (the hermetic build carries zero external
+//! dependencies — `thiserror` included), so every layer (artifact loading,
+//! JSON, backend, coordinator) reports through a single `Result` alias.
 
-use thiserror::Error;
+use std::fmt;
 
 /// All the ways the serving stack can fail.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// I/O errors from artifact / image / socket handling.
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// JSON syntax or type errors from [`crate::json`].
-    #[error("json: {0}")]
     Json(String),
 
     /// Malformed or missing artifacts (manifest, tensorfiles, HLO).
-    #[error("artifact: {0}")]
     Artifact(String),
 
-    /// PJRT / XLA failures surfaced by the `xla` crate.
-    #[error("xla: {0}")]
+    /// Step-backend failures: PJRT/XLA errors surfaced by the `xla`
+    /// feature's wrapper crate, or reference-backend misuse.
     Xla(String),
 
     /// Shape or dtype mismatches in tensor plumbing.
-    #[error("shape: {0}")]
     Shape(String),
 
     /// Invalid schedule parameters (τ, η, S out of range).
-    #[error("schedule: {0}")]
     Schedule(String),
 
     /// Coordinator-level rejections (queue full, unknown dataset, ...).
-    #[error("coordinator: {0}")]
     Coordinator(String),
 
     /// Linear-algebra failures (non-convergence, non-SPD input).
-    #[error("linalg: {0}")]
     Linalg(String),
 
     /// Malformed client requests on the wire protocol.
-    #[error("request: {0}")]
     Request(String),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Json(m) => write!(f, "json: {m}"),
+            Error::Artifact(m) => write!(f, "artifact: {m}"),
+            Error::Xla(m) => write!(f, "xla: {m}"),
+            Error::Shape(m) => write!(f, "shape: {m}"),
+            Error::Schedule(m) => write!(f, "schedule: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator: {m}"),
+            Error::Linalg(m) => write!(f, "linalg: {m}"),
+            Error::Request(m) => write!(f, "request: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -52,3 +77,19 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_layer() {
+        assert_eq!(Error::Json("bad".into()).to_string(), "json: bad");
+        assert_eq!(Error::Xla("pjrt".into()).to_string(), "xla: pjrt");
+        let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(io.to_string().starts_with("io: "));
+        use std::error::Error as _;
+        assert!(io.source().is_some());
+        assert!(Error::Shape("s".into()).source().is_none());
+    }
+}

@@ -22,7 +22,7 @@ ddim-serve — DDIM (Song et al., ICLR 2021) as a rust+JAX+Pallas serving stack
 USAGE: ddim-serve <command> [--flag value]...
 
 COMMANDS
-  serve       --artifacts D --dataset NAME --listen ADDR --max-batch N
+  serve       --artifacts D --backend ref|xla --dataset NAME --listen ADDR --max-batch N
               --queue-cap N --max-lanes N --shards N
               --placement ds=N[,ds=N...] --drain-timeout-ms MS
               --default-sampler ddim|pf_ode|ab2
@@ -34,6 +34,8 @@ COMMANDS
               --sampler ddim|pf_ode|ab2 --count N --seed K --out FILE.pgm
   encode      --artifacts D --dataset NAME --steps S --seed K
   info        --artifacts D
+  fixtures    --out DIR   (materialise a synthetic artifact bundle for the
+              hermetic reference backend: manifest, alphas, goldens, stats)
 ";
 
 fn main() {
@@ -49,6 +51,7 @@ fn main() {
         Some("generate") => run(cmd_generate(&args)),
         Some("encode") => run(cmd_encode(&args)),
         Some("info") => run(cmd_info(&args)),
+        Some("fixtures") => run(cmd_fixtures(&args)),
         _ => {
             println!("{HELP}");
             0
@@ -70,6 +73,10 @@ fn run(r: Result<()>) -> i32 {
 fn config_from(args: &Args) -> Result<ServeConfig> {
     let mut cfg = ServeConfig::default();
     cfg.artifact_root = args.get_or("artifacts", "artifacts").to_string();
+    cfg.backend = match args.get("backend") {
+        Some(b) => ddim_serve::runtime::BackendKind::parse(b)?,
+        None => ddim_serve::runtime::BackendKind::from_env()?,
+    };
     cfg.dataset = args.get_or("dataset", "sprites").to_string();
     cfg.max_batch = args.get_usize("max-batch", cfg.max_batch)?;
     cfg.queue_capacity = args.get_usize("queue-cap", cfg.queue_capacity)?;
@@ -92,9 +99,10 @@ fn config_from(args: &Args) -> Result<ServeConfig> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = config_from(args)?;
     println!(
-        "starting ddim-serve: dataset={} artifacts={} listen={} shards/dataset={}",
+        "starting ddim-serve: dataset={} artifacts={} backend={} listen={} shards/dataset={}",
         cfg.dataset,
         cfg.artifact_root,
+        cfg.backend.label(),
         cfg.listen,
         cfg.shards_for(&cfg.dataset)
     );
@@ -159,7 +167,7 @@ fn cmd_encode(args: &Args) -> Result<()> {
     let cfg = config_from(args)?;
     let steps = args.get_usize("steps", 100)?;
     let seed = args.get_u64("seed", 0)?;
-    let mut rt = Runtime::load(&cfg.artifact_root)?;
+    let mut rt = Runtime::load_with(&cfg.artifact_root, cfg.backend)?;
     // generate a sample first, then encode and decode it back
     let gen_plan = SamplePlan::generate(rt.alphas(), TauKind::Linear, steps, NoiseMode::Eta(0.0))?;
     let enc_plan = SamplePlan::encode(rt.alphas(), TauKind::Linear, steps)?;
@@ -172,9 +180,25 @@ fn cmd_encode(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_fixtures(args: &Args) -> Result<()> {
+    let out = args.get_or("out", "fixture-artifacts");
+    ddim_serve::testing::fixtures::write_into(std::path::Path::new(out))?;
+    let rt = Runtime::load_with(out, ddim_serve::runtime::BackendKind::Reference)?;
+    println!(
+        "wrote synthetic artifact bundle to {out}: {} datasets, T={}, buckets {:?}",
+        rt.manifest().datasets.len(),
+        rt.manifest().t_max,
+        rt.manifest().buckets
+    );
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     let root = args.get_or("artifacts", "artifacts");
-    let rt = Runtime::load(root)?;
+    // info only reads manifest/alphas metadata, never executes a step:
+    // load the always-available reference backend regardless of
+    // --backend/DDIM_BACKEND so it works on any build
+    let rt = Runtime::load_with(root, ddim_serve::runtime::BackendKind::Reference)?;
     let m = rt.manifest();
     println!("artifact root : {}", m.root.display());
     println!("image         : {}x{} x{} ch", m.img, m.img, m.channels);

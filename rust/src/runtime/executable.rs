@@ -1,16 +1,24 @@
-//! A compiled `denoise_step` executable for one batch bucket.
+//! The backend-independent `denoise_step` executable: one fixed call
+//! signature served by either step backend.
 //!
-//! Signature (fixed by `python/compile/aot.py`):
+//! Signature (fixed by `python/compile/aot.py`, mirrored by the reference
+//! backend):
 //!   inputs : x[B,1,H,W] f32, t[B], alpha_t[B], alpha_prev[B], sigma[B],
 //!            noise[B,1,H,W]
 //!   outputs: (x_prev, eps, x0_pred) each [B,1,H,W]
 //! All schedule quantities are *per-sample vectors* — the property that lets
 //! the coordinator batch trajectories at heterogeneous timesteps.
+//!
+//! Everything above this layer (StepBatch, engine, executor, benches) sees
+//! only [`StepExecutable`] / [`PendingStep`] / [`StepOutput`]; which backend
+//! computes the step is decided once, at [`super::Runtime`] construction.
 
-use std::path::Path;
+use std::sync::Arc;
 
 use crate::error::{Error, Result};
-use crate::runtime::literal::literal_to_slice;
+use crate::runtime::reference::{RefExec, RefModel};
+#[cfg(feature = "xla")]
+use crate::runtime::xla::{XlaExec, XlaPending};
 
 /// Host-side output buffers of one step call (lengths = bucket × dim).
 #[derive(Debug, Clone)]
@@ -44,95 +52,99 @@ pub struct LaneStep<'a> {
     pub x0: &'a [f32],
 }
 
-/// A step that has been handed to the device but not read back yet —
-/// the result of [`StepExecutable::submit`]. Owns the device buffers, so
-/// it is independent of the executable that produced it: the caller can
-/// submit the next step (same or different executable) before waiting on
-/// this one. [`PendingStep::wait_into`] blocks on the device and copies
-/// the three outputs host-side.
+enum PendingImpl {
+    /// Reference backend: the step was computed synchronously at submit
+    /// time; the buffers just wait to be landed.
+    Ref { x_prev: Vec<f32>, eps: Vec<f32>, x0: Vec<f32> },
+    #[cfg(feature = "xla")]
+    Xla(XlaPending),
+}
+
+/// A step that has been handed to the backend but not read back yet —
+/// the result of [`StepExecutable::submit`]. Owns its backend state
+/// (device buffers, or the reference backend's computed outputs), so it is
+/// independent of the executable that produced it: the caller can submit
+/// the next step (same or different executable) before waiting on this
+/// one. [`PendingStep::wait_into`] blocks until done and copies the three
+/// outputs host-side.
 pub struct PendingStep {
-    bufs: Vec<Vec<xla::PjRtBuffer>>,
+    inner: PendingImpl,
     /// expected elements per output (bucket × dim)
     n: usize,
 }
 
 impl PendingStep {
-    /// Block until the device finishes, then copy `(x_prev, eps, x0)` into
-    /// the first `bucket*dim` elements of `out`. All three buffers are
-    /// validated together — a caller-constructed [`StepOutput`] with
-    /// mismatched `eps`/`x0` lengths is fixed up here rather than slipping
-    /// through to `literal_to_slice` — and they only ever *grow*: a
-    /// capacity-sized buffer stays put while sub-batches of different
-    /// buckets stream through it, keeping the hot loop allocation-free.
+    /// Land `(x_prev, eps, x0)` into the first `bucket*dim` elements of
+    /// `out`. All three buffers are validated together — a
+    /// caller-constructed [`StepOutput`] with mismatched `eps`/`x0`
+    /// lengths is fixed up here rather than slipping through — and they
+    /// only ever *grow*: a capacity-sized buffer stays put while
+    /// sub-batches of different buckets stream through it, keeping the hot
+    /// loop allocation-free.
     pub fn wait_into(self, out: &mut StepOutput) -> Result<()> {
-        let first = self
-            .bufs
-            .first()
-            .and_then(|r| r.first())
-            .ok_or_else(|| Error::Xla("execute returned no buffers".into()))?;
-        let tuple = first.to_literal_sync()?;
-        let parts = tuple.to_tuple()?;
-        if parts.len() != 3 {
-            return Err(Error::Xla(format!("expected 3 outputs, got {}", parts.len())));
-        }
         let n = self.n;
         for buf in [&mut out.x_prev, &mut out.eps, &mut out.x0] {
             if buf.len() < n {
                 buf.resize(n, 0.0);
             }
         }
-        literal_to_slice(&parts[0], &mut out.x_prev[..n])?;
-        literal_to_slice(&parts[1], &mut out.eps[..n])?;
-        literal_to_slice(&parts[2], &mut out.x0[..n])?;
-        Ok(())
+        match self.inner {
+            PendingImpl::Ref { x_prev, eps, x0 } => {
+                out.x_prev[..n].copy_from_slice(&x_prev);
+                out.eps[..n].copy_from_slice(&eps);
+                out.x0[..n].copy_from_slice(&x0);
+                Ok(())
+            }
+            #[cfg(feature = "xla")]
+            PendingImpl::Xla(pending) => pending.wait_into(out, n),
+        }
     }
 }
 
-/// One PJRT-loaded executable (dataset × bucket).
+enum ExecImpl {
+    Ref(RefExec),
+    #[cfg(feature = "xla")]
+    Xla(XlaExec),
+}
+
+/// One loaded executable (dataset × bucket), backend-dispatched.
 pub struct StepExecutable {
-    exe: xla::PjRtLoadedExecutable,
+    inner: ExecImpl,
     bucket: usize,
     dim: usize,
-    /// input literals, created once and refilled per call (§Perf: saves six
-    /// ~`bucket*dim*4`-byte allocations per step on the hot path)
-    inputs: std::cell::RefCell<Vec<xla::Literal>>,
-    /// number of `run` calls (metrics)
+    /// number of `submit` calls (metrics)
     pub calls: std::cell::Cell<u64>,
 }
 
 impl StepExecutable {
-    /// Load HLO text from `path` and compile it on `client`.
-    pub fn load(
+    /// Build a reference-backend executable over a synthetic ε-model.
+    pub fn reference(model: Arc<RefModel>, bucket: usize, dim: usize) -> Result<Self> {
+        if model.dim() != dim {
+            return Err(Error::Shape(format!(
+                "reference model dim {} vs executable dim {dim}",
+                model.dim()
+            )));
+        }
+        Ok(Self {
+            inner: ExecImpl::Ref(RefExec::new(model)),
+            bucket,
+            dim,
+            calls: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Compile HLO text from `path` on the PJRT client (`xla` feature).
+    #[cfg(feature = "xla")]
+    pub fn xla(
         client: &xla::PjRtClient,
-        path: &Path,
+        path: &std::path::Path,
         bucket: usize,
         dim: usize,
     ) -> Result<Self> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| Error::Artifact(format!("non-utf8 path {path:?}")))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp)?;
-        let img = (dim as f64).sqrt() as usize;
-        if img * img != dim {
-            return Err(Error::Shape(format!("sample dim {dim} is not square")));
-        }
-        let img_shape = [bucket, 1, img, img];
-        let vec_shape = [bucket];
-        let inputs = vec![
-            xla::Literal::create_from_shape(xla::PrimitiveType::F32, &img_shape),
-            xla::Literal::create_from_shape(xla::PrimitiveType::F32, &vec_shape),
-            xla::Literal::create_from_shape(xla::PrimitiveType::F32, &vec_shape),
-            xla::Literal::create_from_shape(xla::PrimitiveType::F32, &vec_shape),
-            xla::Literal::create_from_shape(xla::PrimitiveType::F32, &vec_shape),
-            xla::Literal::create_from_shape(xla::PrimitiveType::F32, &img_shape),
-        ];
         Ok(Self {
-            exe,
+            inner: ExecImpl::Xla(XlaExec::load(client, path, bucket, dim)?),
             bucket,
             dim,
-            inputs: std::cell::RefCell::new(inputs),
             calls: std::cell::Cell::new(0),
         })
     }
@@ -141,13 +153,14 @@ impl StepExecutable {
         self.bucket
     }
 
-    /// Hand one fused denoise step to the device without waiting for it.
+    /// Hand one fused denoise step to the backend without waiting for it.
     ///
     /// `x`, `noise`: `bucket*dim` f32; `t`, `alpha_t`, `alpha_prev`,
-    /// `sigma`: `bucket` f32. The input literals are snapshotted into
-    /// device buffers during this call, so they may be refilled for the
-    /// next submission while the returned [`PendingStep`] is still in
-    /// flight — this is what lets the pipelined executor keep the device
+    /// `sigma`: `bucket` f32. The inputs are snapshotted during this call
+    /// (copied into device literals, or consumed by the synchronous
+    /// reference computation), so the caller may refill its buffers for
+    /// the next submission while the returned [`PendingStep`] is still in
+    /// flight — this is what lets the pipelined executor keep the backend
     /// busy while the engine thread packs and retires lanes.
     pub fn submit(
         &self,
@@ -171,21 +184,27 @@ impl StepExecutable {
                 self.dim
             )));
         }
-        let mut lits = self.inputs.borrow_mut();
-        lits[0].copy_raw_from(x)?;
-        lits[1].copy_raw_from(t)?;
-        lits[2].copy_raw_from(alpha_t)?;
-        lits[3].copy_raw_from(alpha_prev)?;
-        lits[4].copy_raw_from(sigma)?;
-        lits[5].copy_raw_from(noise)?;
-        let bufs = self.exe.execute::<xla::Literal>(&lits)?;
+        let inner = match &self.inner {
+            ExecImpl::Ref(exec) => {
+                let (x_prev, eps, x0) =
+                    exec.compute(b, self.dim, x, t, alpha_t, alpha_prev, sigma, noise);
+                PendingImpl::Ref { x_prev, eps, x0 }
+            }
+            #[cfg(feature = "xla")]
+            ExecImpl::Xla(exec) => {
+                PendingImpl::Xla(exec.submit(x, t, alpha_t, alpha_prev, sigma, noise)?)
+            }
+        };
         self.calls.set(self.calls.get() + 1);
-        Ok(PendingStep { bufs, n: b * self.dim })
+        Ok(PendingStep { inner, n: b * self.dim })
     }
 
     /// Execute one fused denoise step synchronously: [`StepExecutable::submit`]
     /// + [`PendingStep::wait_into`]. Outputs are written into `out` (reused
-    /// across calls by the engine — zero steady-state allocation).
+    /// across calls by the engine — zero steady-state allocation on the
+    /// compiled path; the reference backend allocates its pending buffers
+    /// per call, an accepted cost for a testing backend).
+    #[allow(clippy::too_many_arguments)]
     pub fn run(
         &self,
         x: &[f32],
@@ -197,5 +216,80 @@ impl StepExecutable {
         out: &mut StepOutput,
     ) -> Result<()> {
         self.submit(x, t, alpha_t, alpha_prev, sigma, noise)?.wait_into(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifacts::DatasetInfo;
+
+    fn exe(bucket: usize, dim: usize) -> StepExecutable {
+        let info = DatasetInfo { hlo: vec![], params: 7, final_loss: 0.1, ref_n: 8 };
+        let model = Arc::new(RefModel::from_manifest("t", &info, dim, 400));
+        StepExecutable::reference(model, bucket, dim).unwrap()
+    }
+
+    #[test]
+    fn submit_validates_input_lengths() {
+        let e = exe(2, 4);
+        let img = vec![0.0f32; 8];
+        let vec2 = vec![0.5f32; 2];
+        assert!(e.submit(&img, &vec2, &vec2, &vec2, &vec2, &img).is_ok());
+        assert!(e.submit(&img[..7], &vec2, &vec2, &vec2, &vec2, &img).is_err());
+        assert!(e.submit(&img, &vec2[..1], &vec2, &vec2, &vec2, &img).is_err());
+        assert_eq!(e.calls.get(), 1, "failed submits must not count");
+        assert_eq!(e.bucket(), 2);
+    }
+
+    #[test]
+    fn wait_into_grows_undersized_buffers_together() {
+        let e = exe(2, 4);
+        let img = vec![0.25f32; 8];
+        let vec2 = vec![0.5f32; 2];
+        let pending = e.submit(&img, &vec2, &vec2, &vec2, &vec2, &img).unwrap();
+        let mut out = StepOutput::zeros(3); // deliberately too small
+        out.eps = vec![0.0; 1]; // and internally inconsistent
+        pending.wait_into(&mut out).unwrap();
+        assert_eq!(out.x_prev.len(), 8);
+        assert_eq!(out.eps.len(), 8);
+        assert_eq!(out.x0.len(), 8);
+        // capacity-sized buffers stay put (grow-only contract)
+        let pending = e.submit(&img, &vec2, &vec2, &vec2, &vec2, &img).unwrap();
+        let mut big = StepOutput::zeros(32);
+        pending.wait_into(&mut big).unwrap();
+        assert_eq!(big.x_prev.len(), 32);
+    }
+
+    #[test]
+    fn submit_before_wait_allows_reuse_of_caller_buffers() {
+        // the pipelined executor's contract: two pending steps can be in
+        // flight from the same executable, inputs re-filled in between,
+        // and each lands its own results
+        let e = exe(1, 2);
+        let v1 = vec![1.0f32; 2];
+        let v0 = vec![0.5f32; 1];
+        let p1 = e.submit(&v1, &v0, &v0, &v0, &v0, &[0.0, 0.0]).unwrap();
+        let v2 = vec![-1.0f32; 2];
+        let p2 = e.submit(&v2, &v0, &v0, &v0, &v0, &[0.0, 0.0]).unwrap();
+        let (mut o1, mut o2) = (StepOutput::zeros(2), StepOutput::zeros(2));
+        p1.wait_into(&mut o1).unwrap();
+        p2.wait_into(&mut o2).unwrap();
+        assert_ne!(o1.x_prev, o2.x_prev, "each pending step lands its own inputs' result");
+        assert!(o1.x_prev.iter().chain(&o2.x_prev).all(|v| v.is_finite()));
+        assert_eq!(e.calls.get(), 2);
+    }
+
+    #[test]
+    fn lane_view_slices_every_output() {
+        let out = StepOutput {
+            x_prev: vec![1.0, 2.0, 3.0, 4.0],
+            eps: vec![5.0, 6.0, 7.0, 8.0],
+            x0: vec![9.0, 10.0, 11.0, 12.0],
+        };
+        let lane = out.lane(1, 2);
+        assert_eq!(lane.x_prev, &[3.0, 4.0]);
+        assert_eq!(lane.eps, &[7.0, 8.0]);
+        assert_eq!(lane.x0, &[11.0, 12.0]);
     }
 }

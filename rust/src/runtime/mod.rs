@@ -1,45 +1,135 @@
-//! Runtime layer: wraps the `xla` crate's PJRT CPU client to load the
-//! AOT-compiled `denoise_step` HLO-text modules and execute them from the
-//! coordinator's hot loop.
+//! Runtime layer: loads the artifact bundle (manifest + ᾱ table) and
+//! serves `denoise_step` executables to the coordinator's hot loop through
+//! one of two step backends:
+//!
+//! - [`BackendKind::Reference`] (default, always compiled): a pure-Rust
+//!   synthetic ε-model ([`reference`]) — deterministic, hermetic, runs the
+//!   whole serving stack on CPU with no XLA and no compiled artifacts.
+//! - [`BackendKind::Xla`] (cargo feature `xla`, off by default): the
+//!   PJRT/XLA path ([`xla`]) over AOT-lowered HLO text.
 //!
 //! One [`StepExecutable`] per (dataset × batch bucket); the [`Runtime`]
-//! compiles them lazily and caches them. Interchange is HLO *text* (see
-//! `python/compile/aot.py` for why not serialized protos).
+//! builds them lazily and caches them. Everything above this module is
+//! backend-agnostic.
 
 mod executable;
+#[cfg(feature = "xla")]
 mod literal;
+pub mod reference;
+#[cfg(feature = "xla")]
+mod xla;
 
 pub use executable::{LaneStep, PendingStep, StepExecutable, StepOutput};
+#[cfg(feature = "xla")]
 pub use literal::{literal_to_slice, vec_to_literal};
+pub use reference::RefModel;
 
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::artifacts::Manifest;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::schedule::AlphaTable;
 
-/// Loaded artifact bundle + PJRT client + executable cache.
+/// Which step backend a [`Runtime`] executes on (`--backend ref|xla`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Pure-Rust reference backend (synthetic ε-model) — the hermetic
+    /// default: tier-1 CI runs the full stack on it.
+    #[default]
+    Reference,
+    /// PJRT/XLA over compiled HLO artifacts. Requires the `xla` cargo
+    /// feature; selecting it on a default build fails loudly at load.
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "ref" | "reference" => Ok(BackendKind::Reference),
+            "xla" => Ok(BackendKind::Xla),
+            other => Err(Error::Request(format!("unknown backend '{other}' (want ref | xla)"))),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendKind::Reference => "ref",
+            BackendKind::Xla => "xla",
+        }
+    }
+
+    /// `DDIM_BACKEND=ref|xla` override, else the hermetic default. This is
+    /// what parameterless [`Runtime::load`] uses, so benches and examples
+    /// switch backends without re-plumbing flags.
+    pub fn from_env() -> Result<Self> {
+        match std::env::var("DDIM_BACKEND") {
+            Ok(v) => Self::parse(&v),
+            Err(_) => Ok(Self::default()),
+        }
+    }
+}
+
+/// Backend-specific load-time state.
+enum Backend {
+    /// Synthetic per-dataset ε-models, derived lazily from the manifest.
+    Reference { models: HashMap<String, Arc<RefModel>> },
+    #[cfg(feature = "xla")]
+    Xla { client: ::xla::PjRtClient },
+}
+
+/// Loaded artifact bundle + step backend + executable cache.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: Backend,
+    kind: BackendKind,
     manifest: Manifest,
     alphas: AlphaTable,
-    // (dataset, bucket) -> compiled executable
+    // (dataset, bucket) -> built executable
     cache: HashMap<(String, usize), StepExecutable>,
-    /// cumulative time spent in `client.compile` (startup cost accounting)
+    /// cumulative time spent building executables (startup cost accounting;
+    /// PJRT compilation on the xla backend, ~free on the reference backend)
     pub compile_seconds: f64,
 }
 
 impl Runtime {
-    /// Create a runtime over an artifact directory (`artifacts/` by default).
+    /// Create a runtime over an artifact directory (`artifacts/` by
+    /// default) on the `DDIM_BACKEND` env backend, defaulting to the
+    /// hermetic reference backend.
     pub fn load(artifact_root: impl AsRef<Path>) -> Result<Self> {
+        Self::load_with(artifact_root, BackendKind::from_env()?)
+    }
+
+    /// Create a runtime on an explicit step backend (`cfg.backend` /
+    /// `--backend`).
+    pub fn load_with(artifact_root: impl AsRef<Path>, kind: BackendKind) -> Result<Self> {
         let manifest = Manifest::load(&artifact_root)?;
         let alphas = AlphaTable::from_artifact(artifact_root.as_ref().join("alphas.json"))?;
         alphas.validate()?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Self { client, manifest, alphas, cache: HashMap::new(), compile_seconds: 0.0 })
+        let backend = match kind {
+            BackendKind::Reference => Backend::Reference { models: HashMap::new() },
+            #[cfg(feature = "xla")]
+            BackendKind::Xla => Backend::Xla { client: ::xla::PjRtClient::cpu()? },
+            #[cfg(not(feature = "xla"))]
+            BackendKind::Xla => {
+                return Err(Error::Xla(
+                    "this binary was built without the 'xla' cargo feature; \
+                     rebuild with `--features xla` (and a real PJRT wrapper \
+                     in place of third_party/xla-stub) or use --backend ref"
+                        .into(),
+                ))
+            }
+        };
+        Ok(Self {
+            backend,
+            kind,
+            manifest,
+            alphas,
+            cache: HashMap::new(),
+            compile_seconds: 0.0,
+        })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -50,7 +140,12 @@ impl Runtime {
         &self.alphas
     }
 
-    /// Get (compiling if needed) the executable for `dataset` at `bucket`.
+    /// Which backend this runtime executes steps on.
+    pub fn backend_kind(&self) -> BackendKind {
+        self.kind
+    }
+
+    /// Get (building if needed) the executable for `dataset` at `bucket`.
     /// Single-probe via the entry API — this runs once per engine tick, so
     /// the old `contains_key` → `insert` → `get` triple probe (plus a
     /// second key clone on the miss path) was hot-loop waste. The one
@@ -62,21 +157,37 @@ impl Runtime {
             Entry::Vacant(e) => {
                 let ds = self.manifest.dataset(dataset)?;
                 let idx = self.manifest.bucket_index(bucket)?;
-                let path = self.manifest.hlo_path(ds, idx);
+                let dim = self.manifest.sample_dim();
                 let t0 = Instant::now();
-                let exe = StepExecutable::load(
-                    &self.client,
-                    &path,
-                    bucket,
-                    self.manifest.sample_dim(),
-                )?;
+                let exe = match &mut self.backend {
+                    Backend::Reference { models } => {
+                        let model = match models.entry(dataset.to_string()) {
+                            Entry::Occupied(m) => m.get().clone(),
+                            Entry::Vacant(m) => m
+                                .insert(Arc::new(RefModel::from_manifest(
+                                    dataset,
+                                    ds,
+                                    dim,
+                                    self.manifest.t_max,
+                                )))
+                                .clone(),
+                        };
+                        StepExecutable::reference(model, bucket, dim)?
+                    }
+                    #[cfg(feature = "xla")]
+                    Backend::Xla { client } => {
+                        let path = self.manifest.hlo_path(ds, idx);
+                        StepExecutable::xla(client, &path, bucket, dim)?
+                    }
+                };
+                let _ = idx; // used by the xla arm only
                 self.compile_seconds += t0.elapsed().as_secs_f64();
                 Ok(e.insert(exe))
             }
         }
     }
 
-    /// Eagerly compile every bucket for `dataset` (benches / server startup).
+    /// Eagerly build every bucket for `dataset` (benches / server startup).
     pub fn warmup(&mut self, dataset: &str) -> Result<()> {
         for b in self.manifest.buckets.clone() {
             self.executable(dataset, b)?;
@@ -84,8 +195,50 @@ impl Runtime {
         Ok(())
     }
 
-    /// Number of executables compiled so far.
+    /// Number of executables built so far.
     pub fn compiled_count(&self) -> usize {
         self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses_and_labels() {
+        assert_eq!(BackendKind::parse("ref").unwrap(), BackendKind::Reference);
+        assert_eq!(BackendKind::parse("reference").unwrap(), BackendKind::Reference);
+        assert_eq!(BackendKind::parse("xla").unwrap(), BackendKind::Xla);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(BackendKind::default(), BackendKind::Reference);
+        for k in [BackendKind::Reference, BackendKind::Xla] {
+            assert_eq!(BackendKind::parse(k.label()).unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn runtime_loads_fixtures_and_caches_executables() {
+        let root = crate::testing::fixtures::root();
+        let mut rt = Runtime::load_with(&root, BackendKind::Reference).unwrap();
+        assert_eq!(rt.backend_kind(), BackendKind::Reference);
+        assert_eq!(rt.compiled_count(), 0);
+        let b = rt.manifest().buckets[0];
+        rt.executable("sprites", b).unwrap();
+        rt.executable("sprites", b).unwrap();
+        assert_eq!(rt.compiled_count(), 1, "second probe must hit the cache");
+        assert!(rt.executable("no_such_dataset", b).is_err());
+        let bad_bucket = rt.manifest().buckets.iter().max().unwrap() + 1;
+        assert!(rt.executable("sprites", bad_bucket).is_err());
+        rt.warmup("sprites").unwrap();
+        assert_eq!(rt.compiled_count(), rt.manifest().buckets.len());
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn xla_backend_fails_loudly_without_the_feature() {
+        let root = crate::testing::fixtures::root();
+        let err = Runtime::load_with(&root, BackendKind::Xla).unwrap_err();
+        assert!(err.to_string().contains("xla"), "{err}");
     }
 }

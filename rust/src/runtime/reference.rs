@@ -1,0 +1,247 @@
+//! The hermetic reference backend: a pure-Rust `denoise_step` that stands
+//! in for the AOT-compiled executable so the entire serving stack —
+//! `Runtime`, `Engine`, `Router`, planner, pipelined executor — runs
+//! deterministically on CPU with no XLA and no `artifacts/` tree.
+//!
+//! The trick (same as Watson et al. 2022's sampler-validation setup): the
+//! DDIM generative step (Song et al., Eq. 12) is closed-form *given* ε_θ,
+//! so any deterministic ε-model exercises every line of the serving path.
+//! We use the Bayes-optimal denoiser for synthetic per-pixel Gaussian data
+//! x₀ ~ N(0, diag(scale²)):
+//!
+//!   ε(x, t, ᾱ)ᵢ = √(1−ᾱ) · xᵢ / (ᾱ·scaleᵢ² + (1−ᾱ))
+//!                 + biasᵢ · sin(π t / T)
+//!
+//! with `scale`/`bias` fields derived deterministically from the manifest's
+//! per-dataset weights (name, param count, final loss) — two datasets give
+//! two genuinely different models. The bias term makes ε depend on the
+//! model timestep `t`, like a real time-embedded U-Net.
+//!
+//! Why this ε and not something fancier: it is elementwise (lane
+//! independence is exact, which is what makes padding sound), smooth in t
+//! and ᾱ (so PF-ODE/AB2 host integration converges to the DDIM solution as
+//! S grows — Sec. 4.3's small-step limit), and analytically well-behaved
+//! at both schedule ends (ᾱ = 1 ⇒ the data term vanishes; the denominator
+//! is bounded below by min(scale², 1−ᾱ+ᾱ·scale²) > 0).
+//!
+//! The step composition mirrors `python/compile/kernels/ddim_step.py`
+//! exactly (and therefore [`crate::sampler::ddim_update_host_sigma`]):
+//!
+//!   x0   = (x − √(1−ᾱ_t) ε) / √ᾱ_t
+//!   out  = √ᾱ_p x0 + √max(1−ᾱ_p−σ², 0) ε + σ·noise
+//!
+//! computed in f64 per element and narrowed to f32 on readback, like the
+//! compiled graph's f32 pipeline to within ~1e-7.
+
+use std::sync::Arc;
+
+use crate::artifacts::DatasetInfo;
+use crate::rng::Pcg64;
+
+/// One dataset's synthetic ε-model: per-pixel data scale and time-bias
+/// fields, deterministically derived from its manifest entry.
+#[derive(Debug)]
+pub struct RefModel {
+    scale: Vec<f64>,
+    bias: Vec<f64>,
+    t_max: f64,
+}
+
+/// FNV-1a over a string — the seed-derivation primitive shared by the
+/// reference model and the fixture generator's per-dataset streams.
+pub fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl RefModel {
+    /// Derive the model from a dataset's manifest weights. The seed folds
+    /// in the dataset name (FNV-1a), the trained parameter count, and the
+    /// final-loss bits, so editing any of them yields a different model —
+    /// "weights" in the only sense a manifest carries them.
+    pub fn from_manifest(name: &str, info: &DatasetInfo, dim: usize, t_max: usize) -> Self {
+        let seed = fnv1a(name) ^ info.params ^ info.final_loss.to_bits();
+        let mut rng = Pcg64::seeded(seed);
+        let scale = (0..dim).map(|_| rng.uniform(0.7, 1.3)).collect();
+        let bias = (0..dim).map(|_| rng.uniform(-0.05, 0.05)).collect();
+        Self { scale, bias, t_max: t_max as f64 }
+    }
+
+    /// ε_θ at pixel `i` for state `x`, model timestep `t`, cumulative ᾱ `a`.
+    #[inline]
+    pub fn eps(&self, i: usize, x: f64, t: f64, a: f64) -> f64 {
+        let om = (1.0 - a).max(0.0);
+        om.sqrt() * x / (a * self.scale[i] * self.scale[i] + om)
+            + self.bias[i] * (std::f64::consts::PI * t / self.t_max).sin()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.scale.len()
+    }
+}
+
+/// Reference-backend executable for one (dataset × bucket): computes the
+/// batched denoise step synchronously on the calling thread. Stateless
+/// between calls; all per-call state lives in the returned pending buffers,
+/// which is what gives it the same submit-before-wait semantics as the
+/// compiled executable (the pipelined executor relies on that).
+pub struct RefExec {
+    model: Arc<RefModel>,
+}
+
+impl RefExec {
+    pub fn new(model: Arc<RefModel>) -> Self {
+        Self { model }
+    }
+
+    /// Compute the three outputs for `bucket` lanes of `dim` elements.
+    /// Caller (the `StepExecutable` wrapper) has validated input lengths.
+    #[allow(clippy::too_many_arguments)]
+    pub fn compute(
+        &self,
+        bucket: usize,
+        dim: usize,
+        x: &[f32],
+        t: &[f32],
+        alpha_t: &[f32],
+        alpha_prev: &[f32],
+        sigma: &[f32],
+        noise: &[f32],
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let n = bucket * dim;
+        let mut out_prev = vec![0.0f32; n];
+        let mut out_eps = vec![0.0f32; n];
+        let mut out_x0 = vec![0.0f32; n];
+        for slot in 0..bucket {
+            let a = alpha_t[slot] as f64;
+            let ap = alpha_prev[slot] as f64;
+            let sg = sigma[slot] as f64;
+            let tm = t[slot] as f64;
+            let dir = (1.0 - ap - sg * sg).max(0.0).sqrt();
+            let sq_ap = ap.sqrt();
+            let sq_om = (1.0 - a).max(0.0).sqrt();
+            let inv_sq_a = 1.0 / a.sqrt();
+            for i in 0..dim {
+                let idx = slot * dim + i;
+                let xv = x[idx] as f64;
+                let e = self.model.eps(i, xv, tm, a);
+                let x0 = (xv - sq_om * e) * inv_sq_a;
+                let xp = sq_ap * x0 + dir * e + sg * noise[idx] as f64;
+                out_eps[idx] = e as f32;
+                out_x0[idx] = x0 as f32;
+                out_prev[idx] = xp as f32;
+            }
+        }
+        (out_prev, out_eps, out_x0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::ddim_update_host_sigma;
+
+    fn info(params: u64, loss: f64) -> DatasetInfo {
+        DatasetInfo { hlo: vec![], params, final_loss: loss, ref_n: 64 }
+    }
+
+    fn model() -> Arc<RefModel> {
+        Arc::new(RefModel::from_manifest("sprites", &info(123456, 0.0421), 16, 400))
+    }
+
+    #[test]
+    fn model_is_deterministic_and_weight_sensitive() {
+        let a = RefModel::from_manifest("sprites", &info(1, 0.5), 8, 400);
+        let b = RefModel::from_manifest("sprites", &info(1, 0.5), 8, 400);
+        let c = RefModel::from_manifest("blobs", &info(1, 0.5), 8, 400);
+        let d = RefModel::from_manifest("sprites", &info(2, 0.5), 8, 400);
+        assert_eq!(a.eps(3, 0.7, 100.0, 0.5), b.eps(3, 0.7, 100.0, 0.5));
+        assert_ne!(a.eps(3, 0.7, 100.0, 0.5), c.eps(3, 0.7, 100.0, 0.5));
+        assert_ne!(a.eps(3, 0.7, 100.0, 0.5), d.eps(3, 0.7, 100.0, 0.5));
+        assert_eq!(a.dim(), 8);
+    }
+
+    #[test]
+    fn eps_is_finite_at_schedule_ends() {
+        let m = model();
+        for a in [1.0, 0.9999, 0.5, 1e-4, 1e-9] {
+            for x in [-3.0, 0.0, 3.0] {
+                let e = m.eps(0, x, 1.0, a);
+                assert!(e.is_finite(), "eps({x}, a={a}) = {e}");
+            }
+        }
+        // at abar = 1 the data term vanishes: eps is the pure bias field
+        let e1 = m.eps(2, 5.0, 200.0, 1.0);
+        let e2 = m.eps(2, -5.0, 200.0, 1.0);
+        assert_eq!(e1, e2);
+    }
+
+    #[test]
+    fn eps_depends_on_model_timestep() {
+        let m = model();
+        let a = m.eps(1, 0.5, 100.0, 0.3);
+        let b = m.eps(1, 0.5, 300.0, 0.3);
+        assert_ne!(a, b, "bias term must make eps t-dependent");
+    }
+
+    #[test]
+    fn compute_matches_host_eq12_composition() {
+        // the executable's (x_prev, eps, x0) must satisfy the host-side
+        // Eq.-12 arithmetic on its own eps output, per lane
+        let m = model();
+        let exec = RefExec::new(m);
+        let (bucket, dim) = (3usize, 16usize);
+        let mut rng = Pcg64::seeded(9);
+        let x: Vec<f32> = (0..bucket * dim).map(|_| rng.uniform(-1.5, 1.5) as f32).collect();
+        let noise: Vec<f32> = (0..bucket * dim).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let t = vec![120.0f32, 240.0, 360.0];
+        let a_t = vec![0.4f32, 0.15, 0.05];
+        let a_p = vec![0.7f32, 0.4, 0.15];
+        let sigma = vec![0.0f32, 0.1, 0.3];
+        let (xp, eps, x0) = exec.compute(bucket, dim, &x, &t, &a_t, &a_p, &sigma, &noise);
+        for slot in 0..bucket {
+            let r = slot * dim..(slot + 1) * dim;
+            let want = ddim_update_host_sigma(
+                &x[r.clone()],
+                &eps[r.clone()],
+                &noise[r.clone()],
+                a_t[slot] as f64,
+                a_p[slot] as f64,
+                sigma[slot] as f64,
+            );
+            for (got, want) in xp[r.clone()].iter().zip(&want) {
+                assert!((got - want).abs() < 1e-5, "lane {slot}: {got} vs {want}");
+            }
+            // x0 consistency: x = sqrt(a) x0 + sqrt(1-a) eps
+            for i in r.clone() {
+                let back = (a_t[slot] as f64).sqrt() * x0[i] as f64
+                    + (1.0 - a_t[slot] as f64).sqrt() * eps[i] as f64;
+                assert!((back - x[i] as f64).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_are_independent() {
+        let exec = RefExec::new(model());
+        let (bucket, dim) = (4usize, 16usize);
+        let lane0_x: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mk = |fill: f32| {
+            let mut v = vec![fill; bucket * dim];
+            v[..dim].copy_from_slice(&lane0_x);
+            v
+        };
+        let t = vec![100.0f32; bucket];
+        let a_t = vec![0.4f32; bucket];
+        let a_p = vec![0.8f32; bucket];
+        let sigma = vec![0.0f32; bucket];
+        let zeros = vec![0.0f32; bucket * dim];
+        let (p1, e1, _) = exec.compute(bucket, dim, &mk(1.3), &t, &a_t, &a_p, &sigma, &zeros);
+        let (p2, e2, _) = exec.compute(bucket, dim, &mk(-2.0), &t, &a_t, &a_p, &sigma, &zeros);
+        assert_eq!(&p1[..dim], &p2[..dim], "lane 0 depends on other lanes");
+        assert_eq!(&e1[..dim], &e2[..dim]);
+    }
+}

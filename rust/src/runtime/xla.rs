@@ -1,0 +1,108 @@
+//! The PJRT/XLA step backend (cargo feature `xla`, off by default): loads
+//! AOT-lowered HLO text from the artifact tree and executes it through the
+//! `xla` wrapper crate's PJRT CPU client.
+//!
+//! Signature (fixed by `python/compile/aot.py`):
+//!   inputs : x[B,1,H,W] f32, t[B], alpha_t[B], alpha_prev[B], sigma[B],
+//!            noise[B,1,H,W]
+//!   outputs: (x_prev, eps, x0_pred) each [B,1,H,W]
+//!
+//! The default build compiles against `third_party/xla-stub` (an API-shaped
+//! stub so `cargo check --features xla` works offline); production deploys
+//! patch the `xla` dependency to a real PJRT wrapper. See docs/testing.md.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::runtime::literal::literal_to_slice;
+use crate::runtime::StepOutput;
+
+/// One PJRT-loaded executable (dataset × bucket).
+pub struct XlaExec {
+    exe: xla::PjRtLoadedExecutable,
+    /// input literals, created once and refilled per call (§Perf: saves six
+    /// ~`bucket*dim*4`-byte allocations per step on the hot path)
+    inputs: std::cell::RefCell<Vec<xla::Literal>>,
+}
+
+/// Device buffers of a submitted-but-unread step.
+pub struct XlaPending {
+    bufs: Vec<Vec<xla::PjRtBuffer>>,
+}
+
+impl XlaExec {
+    /// Load HLO text from `path` and compile it on `client`.
+    pub fn load(
+        client: &xla::PjRtClient,
+        path: &Path,
+        bucket: usize,
+        dim: usize,
+    ) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Artifact(format!("non-utf8 path {path:?}")))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        let img = (dim as f64).sqrt() as usize;
+        if img * img != dim {
+            return Err(Error::Shape(format!("sample dim {dim} is not square")));
+        }
+        let img_shape = [bucket, 1, img, img];
+        let vec_shape = [bucket];
+        let inputs = vec![
+            xla::Literal::create_from_shape(xla::PrimitiveType::F32, &img_shape),
+            xla::Literal::create_from_shape(xla::PrimitiveType::F32, &vec_shape),
+            xla::Literal::create_from_shape(xla::PrimitiveType::F32, &vec_shape),
+            xla::Literal::create_from_shape(xla::PrimitiveType::F32, &vec_shape),
+            xla::Literal::create_from_shape(xla::PrimitiveType::F32, &vec_shape),
+            xla::Literal::create_from_shape(xla::PrimitiveType::F32, &img_shape),
+        ];
+        Ok(Self { exe, inputs: std::cell::RefCell::new(inputs) })
+    }
+
+    /// Hand one fused denoise step to the device without waiting for it.
+    /// The input literals are snapshotted into device buffers during this
+    /// call, so they may be refilled for the next submission while the
+    /// returned [`XlaPending`] is still in flight.
+    pub fn submit(
+        &self,
+        x: &[f32],
+        t: &[f32],
+        alpha_t: &[f32],
+        alpha_prev: &[f32],
+        sigma: &[f32],
+        noise: &[f32],
+    ) -> Result<XlaPending> {
+        let mut lits = self.inputs.borrow_mut();
+        lits[0].copy_raw_from(x)?;
+        lits[1].copy_raw_from(t)?;
+        lits[2].copy_raw_from(alpha_t)?;
+        lits[3].copy_raw_from(alpha_prev)?;
+        lits[4].copy_raw_from(sigma)?;
+        lits[5].copy_raw_from(noise)?;
+        let bufs = self.exe.execute::<xla::Literal>(&lits)?;
+        Ok(XlaPending { bufs })
+    }
+}
+
+impl XlaPending {
+    /// Block until the device finishes, then copy `(x_prev, eps, x0)` into
+    /// the first `n` elements of `out`'s (already-sized) buffers.
+    pub fn wait_into(self, out: &mut StepOutput, n: usize) -> Result<()> {
+        let first = self
+            .bufs
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| Error::Xla("execute returned no buffers".into()))?;
+        let tuple = first.to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != 3 {
+            return Err(Error::Xla(format!("expected 3 outputs, got {}", parts.len())));
+        }
+        literal_to_slice(&parts[0], &mut out.x_prev[..n])?;
+        literal_to_slice(&parts[1], &mut out.eps[..n])?;
+        literal_to_slice(&parts[2], &mut out.x0[..n])?;
+        Ok(())
+    }
+}

@@ -123,7 +123,7 @@ impl UpdateKernel {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sampler::ddim_update_host;
+    use crate::sampler::{ddim_update_host, pf_euler_update};
     use crate::schedule::AlphaTable;
 
     fn params(alpha_in: f64, alpha_out: f64) -> StepParams {

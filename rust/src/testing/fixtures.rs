@@ -1,0 +1,395 @@
+//! Synthetic-artifact generator: materialises a complete, valid artifact
+//! bundle (`manifest.json`, `alphas.json`, golden tensorfiles, reference
+//! feature statistics) in a tempdir, so `Runtime::load`, the engine, the
+//! router, the planner and the pipelined executor all run unmodified on
+//! the hermetic reference backend — no `make artifacts`, no python, no XLA.
+//!
+//! Layout mirrors what `python/compile/aot.py` writes:
+//!
+//! ```text
+//! <root>/manifest.json
+//! <root>/alphas.json
+//! <root>/<dataset>/goldens/b{1,4}_{x,t,alpha_t,alpha_prev,sigma,noise,
+//!                                  x_prev,eps,x0}.bin(+.json)
+//! <root>/<dataset>/goldens/{feat_imgs,feat_out}.bin(+.json)
+//! <root>/<dataset>/{ref_mu,ref_cov}.bin(+.json)
+//! ```
+//!
+//! The manifest's `hlo` entries point at files that are *not* created:
+//! the reference backend never reads them, and an accidental
+//! `--backend xla` run over fixtures fails loudly instead of silently.
+//!
+//! Step goldens are computed from the same [`RefModel`] the reference
+//! backend derives from this manifest, composed through the *host* Eq.-12
+//! arithmetic ([`crate::sampler::ddim_update_host_sigma`]) — so
+//! `tests/golden_step.rs` pins the executable path (Runtime → cache →
+//! submit/wait) against an independently-composed expectation.
+//!
+//! The horizon is T = 400 (not the paper's 1000): σ̄_T ≈ 7 instead of 158,
+//! which keeps the Eq.-13 vs Eq.-15 discretisation gap at S = 100 well
+//! inside the tolerance the §4.3 convergence tests pin, while preserving
+//! every qualitative property (kernels differ at S = 10, η = 1 is
+//! stochastic, encode→decode error shrinks with S). Real artifacts keep
+//! T = 1000; the `#[ignore]`d real-artifact tests cover that tier.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+
+use crate::error::{Error, Result};
+use crate::jobj;
+use crate::json::{self, Value};
+use crate::rng::{GaussianSource, Pcg64};
+use crate::runtime::reference::fnv1a;
+use crate::runtime::RefModel;
+use crate::sampler::ddim_update_host_sigma;
+use crate::schedule::{sigma_eta, AlphaTable};
+use crate::stats::{extract_features, GaussianFit};
+
+/// Image side length of the synthetic datasets (the feature extractor is
+/// hard-wired to 16×16, like the python build).
+pub const IMG: usize = 16;
+/// Diffusion horizon of the fixture schedule (see module docs).
+pub const T_FIXTURE: usize = 400;
+/// Compiled batch buckets, matching the real build's ladder.
+pub const BUCKETS: [usize; 5] = [1, 2, 4, 8, 16];
+/// Datasets in the fixture manifest: `(name, params, final_loss)`.
+pub const DATASETS: [(&str, u64, f64); 2] =
+    [("sprites", 123_456, 0.0421), ("blobs", 654_321, 0.0537)];
+
+/// The process-wide fixture tree, generated once on first use. Each test
+/// process writes its own copy under the OS tempdir (pid-keyed, a few tens
+/// of KB); parallel test threads share it through the `OnceLock`.
+///
+/// Panics if the tempdir is unwritable — fixtures back the test suite, and
+/// a skipped suite is exactly what this module exists to abolish.
+pub fn root() -> PathBuf {
+    static ROOT: OnceLock<PathBuf> = OnceLock::new();
+    ROOT.get_or_init(|| {
+        gc_stale_fixture_trees();
+        let dir = std::env::temp_dir().join(format!("ddim-fixtures-{}", std::process::id()));
+        write_into(&dir).unwrap_or_else(|e| panic!("fixture generation in {dir:?} failed: {e}"));
+        dir
+    })
+    .clone()
+}
+
+/// Best-effort GC: remove `ddim-fixtures-*` trees left by earlier test
+/// processes (pids differ per run, so without this every `cargo test`
+/// would leak a few dozen KB into the tempdir forever). Age-gated to an
+/// hour so concurrently-running test binaries never see their tree
+/// vanish mid-suite.
+fn gc_stale_fixture_trees() {
+    let Ok(entries) = fs::read_dir(std::env::temp_dir()) else { return };
+    for e in entries.flatten() {
+        if !e.file_name().to_string_lossy().starts_with("ddim-fixtures-") {
+            continue;
+        }
+        let stale = e
+            .metadata()
+            .ok()
+            .and_then(|m| m.modified().ok())
+            .and_then(|m| m.elapsed().ok())
+            .is_some_and(|age| age > std::time::Duration::from_secs(3600));
+        if stale {
+            let _ = fs::remove_dir_all(e.path());
+        }
+    }
+}
+
+/// [`root`] as a `String`, the form `ServeConfig.artifact_root` wants.
+pub fn root_string() -> String {
+    root().display().to_string()
+}
+
+/// Write a full fixture bundle into `dir` (created if absent, contents
+/// overwritten). Exposed so tests can build variant trees in their own
+/// tempdirs without fighting the shared one.
+pub fn write_into(dir: &Path) -> Result<()> {
+    fs::create_dir_all(dir)?;
+    let abar = AlphaTable::linear(T_FIXTURE);
+    write_manifest(dir)?;
+    write_alphas(dir, &abar)?;
+    for (name, params, final_loss) in DATASETS {
+        let ds_dir = dir.join(name);
+        fs::create_dir_all(ds_dir.join("goldens"))?;
+        let info = crate::artifacts::DatasetInfo {
+            hlo: hlo_paths(name),
+            params,
+            final_loss,
+            ref_n: 4096,
+        };
+        let model = RefModel::from_manifest(name, &info, IMG * IMG, T_FIXTURE);
+        write_step_goldens(&ds_dir.join("goldens"), name, &model, &abar)?;
+        write_feature_goldens(&ds_dir.join("goldens"), name)?;
+        write_ref_stats(&ds_dir, name)?;
+    }
+    Ok(())
+}
+
+fn hlo_paths(name: &str) -> Vec<String> {
+    BUCKETS.iter().map(|b| format!("{name}/b{b}.hlo.txt")).collect()
+}
+
+fn write_manifest(dir: &Path) -> Result<()> {
+    let mut datasets = std::collections::BTreeMap::new();
+    for (name, params, final_loss) in DATASETS {
+        datasets.insert(
+            name.to_string(),
+            jobj![
+                ("hlo", hlo_paths(name)),
+                ("params", params),
+                ("final_loss", final_loss),
+                ("ref_n", 4096usize),
+            ],
+        );
+    }
+    let manifest = jobj![
+        ("img", IMG),
+        ("channels", 1usize),
+        ("T", T_FIXTURE),
+        ("buckets", BUCKETS.to_vec()),
+        ("feat_dim", crate::stats::FEAT_DIM),
+        ("datasets", Value::Obj(datasets)),
+    ];
+    fs::write(dir.join("manifest.json"), json::to_string(&manifest))?;
+    Ok(())
+}
+
+fn write_alphas(dir: &Path, abar: &AlphaTable) -> Result<()> {
+    // the serializer prints floats in shortest exact form, so the loader's
+    // 1e-9 cross-check against the native table holds bit-for-bit
+    let alpha_bar: Vec<f64> = (0..=T_FIXTURE).map(|t| abar.abar(t)).collect();
+    let v = jobj![("T", T_FIXTURE), ("alpha_bar", alpha_bar)];
+    fs::write(dir.join("alphas.json"), json::to_string(&v))?;
+    Ok(())
+}
+
+/// Fixed step-golden inputs for one bucket: realistic schedule points,
+/// a stochastic lane mix (σ = 0, η = 1, σ̂-style), seeded states/noise.
+fn write_step_goldens(
+    goldens: &Path,
+    dataset: &str,
+    model: &RefModel,
+    abar: &AlphaTable,
+) -> Result<()> {
+    let dim = IMG * IMG;
+    let mut rng = GaussianSource::new(Pcg64::seeded(fnv1a(dataset) ^ 0x90_1d)); // per-dataset stream
+    for bucket in [1usize, 4] {
+        // schedule endpoints per lane: (t_cur, t_prev) pairs inside [1, T]
+        let pairs = [(360usize, 240usize), (240, 120), (120, 40), (40, 0)];
+        let mut x = vec![0.0f32; bucket * dim];
+        let mut noise = vec![0.0f32; bucket * dim];
+        let mut t = vec![0.0f32; bucket];
+        let mut a_t = vec![0.0f32; bucket];
+        let mut a_p = vec![0.0f32; bucket];
+        let mut sigma = vec![0.0f32; bucket];
+        for slot in 0..bucket {
+            let (tc, tp) = pairs[slot % pairs.len()];
+            t[slot] = tc as f32;
+            a_t[slot] = abar.abar(tc) as f32;
+            a_p[slot] = abar.abar(tp) as f32;
+            // lane 0 deterministic, lane 1 DDPM-style, others in between
+            let eta = [0.0, 1.0, 0.5, 0.25][slot % 4];
+            sigma[slot] = sigma_eta(abar, tc, tp, eta) as f32;
+            for i in 0..dim {
+                x[slot * dim + i] = rng.next() as f32;
+                noise[slot * dim + i] =
+                    if sigma[slot] > 0.0 { rng.next() as f32 } else { 0.0 };
+            }
+        }
+        // expected outputs: the model's ε on the f32-rounded inputs, then
+        // the host Eq.-12 composition (independent of the backend's code
+        // path through Runtime/StepExecutable)
+        let mut eps = vec![0.0f32; bucket * dim];
+        let mut x0 = vec![0.0f32; bucket * dim];
+        let mut x_prev = vec![0.0f32; bucket * dim];
+        for slot in 0..bucket {
+            let (a, ap, sg, tm) =
+                (a_t[slot] as f64, a_p[slot] as f64, sigma[slot] as f64, t[slot] as f64);
+            for i in 0..dim {
+                let idx = slot * dim + i;
+                let e = model.eps(i, x[idx] as f64, tm, a);
+                eps[idx] = e as f32;
+                x0[idx] = ((x[idx] as f64 - (1.0 - a).max(0.0).sqrt() * e) / a.sqrt()) as f32;
+            }
+            let r = slot * dim..(slot + 1) * dim;
+            x_prev[r.clone()].copy_from_slice(&ddim_update_host_sigma(
+                &x[r.clone()],
+                &eps[r.clone()],
+                &noise[r.clone()],
+                a,
+                ap,
+                sg,
+            ));
+        }
+        let img_shape = [bucket, 1, IMG, IMG];
+        let vec_shape = [bucket];
+        for (name, data, shape) in [
+            ("x", &x, &img_shape[..]),
+            ("noise", &noise, &img_shape[..]),
+            ("x_prev", &x_prev, &img_shape[..]),
+            ("eps", &eps, &img_shape[..]),
+            ("x0", &x0, &img_shape[..]),
+            ("t", &t, &vec_shape[..]),
+            ("alpha_t", &a_t, &vec_shape[..]),
+            ("alpha_prev", &a_p, &vec_shape[..]),
+            ("sigma", &sigma, &vec_shape[..]),
+        ] {
+            write_tensor_f32(&goldens.join(format!("b{bucket}_{name}.bin")), shape, data)?;
+        }
+    }
+    Ok(())
+}
+
+/// `feat_imgs` / `feat_out`: random images plus their extracted features,
+/// pinning the tensorfile round trip (f32 images, f64 features) and the
+/// extractor's stability against the on-disk interchange format.
+fn write_feature_goldens(goldens: &Path, dataset: &str) -> Result<()> {
+    let dim = IMG * IMG;
+    let n = 8usize;
+    let mut rng = GaussianSource::new(Pcg64::seeded(fnv1a(dataset) ^ 0xfea7));
+    let mut imgs = vec![0.0f32; n * dim];
+    for v in imgs.iter_mut() {
+        *v = (rng.next() * 0.5).clamp(-1.0, 1.0) as f32;
+    }
+    let mut feats = Vec::with_capacity(n * crate::stats::FEAT_DIM);
+    for i in 0..n {
+        feats.extend_from_slice(&extract_features(&imgs[i * dim..(i + 1) * dim]));
+    }
+    write_tensor_f32(&goldens.join("feat_imgs.bin"), &[n, dim], &imgs)?;
+    write_tensor_f64(&goldens.join("feat_out.bin"), &[n, crate::stats::FEAT_DIM], &feats)?;
+    Ok(())
+}
+
+/// Reference feature statistics: a gaussian fitted over smooth synthetic
+/// "blob" images (the shape the eval pipeline's proxy-FID discriminates),
+/// written as the f64 tensorfile pair `load_ref_stats` expects.
+fn write_ref_stats(ds_dir: &Path, dataset: &str) -> Result<()> {
+    let mut rng = Pcg64::seeded(fnv1a(dataset) ^ 0x5afe);
+    let mut fit = GaussianFit::new();
+    for _ in 0..256 {
+        let cx = rng.uniform(0.3, 0.7);
+        let cy = rng.uniform(0.3, 0.7);
+        let s = rng.uniform(0.05, 0.15);
+        let img: Vec<f32> = (0..IMG * IMG)
+            .map(|i| {
+                let x = (i % IMG) as f64 / IMG as f64;
+                let y = (i / IMG) as f64 / IMG as f64;
+                let d = ((x - cx).powi(2) + (y - cy).powi(2)) / (2.0 * s * s);
+                ((-d).exp() * 2.0 - 1.0) as f32
+            })
+            .collect();
+        fit.push(&extract_features(&img));
+    }
+    let cov = fit.covariance()?;
+    let fd = crate::stats::FEAT_DIM;
+    let mut cov_flat = Vec::with_capacity(fd * fd);
+    for i in 0..fd {
+        for j in 0..fd {
+            cov_flat.push(cov[(i, j)]);
+        }
+    }
+    write_tensor_f64(&ds_dir.join("ref_mu.bin"), &[fd], fit.mean())?;
+    write_tensor_f64(&ds_dir.join("ref_cov.bin"), &[fd, fd], &cov_flat)?;
+    Ok(())
+}
+
+fn write_sidecar(path: &Path, shape: &[usize], dtype: &str) -> Result<()> {
+    let mut side = path.as_os_str().to_os_string();
+    side.push(".json");
+    fs::write(side, json::to_string(&jobj![("shape", shape.to_vec()), ("dtype", dtype)]))?;
+    Ok(())
+}
+
+/// Write an f32 tensorfile (`.bin` + `.bin.json` sidecar).
+pub fn write_tensor_f32(path: &Path, shape: &[usize], data: &[f32]) -> Result<()> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        return Err(Error::Shape(format!(
+            "tensorfile {path:?}: shape {shape:?} vs {} elems",
+            data.len()
+        )));
+    }
+    let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+    fs::write(path, bytes)?;
+    write_sidecar(path, shape, "f32")
+}
+
+/// Write an f64 tensorfile (`.bin` + `.bin.json` sidecar).
+pub fn write_tensor_f64(path: &Path, shape: &[usize], data: &[f64]) -> Result<()> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        return Err(Error::Shape(format!(
+            "tensorfile {path:?}: shape {shape:?} vs {} elems",
+            data.len()
+        )));
+    }
+    let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+    fs::write(path, bytes)?;
+    write_sidecar(path, shape, "f64")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifacts::{read_tensor, read_tensor_f64, Manifest};
+
+    #[test]
+    fn fixture_tree_loads_as_a_valid_artifact_bundle() {
+        let dir = root();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.img, IMG);
+        assert_eq!(m.t_max, T_FIXTURE);
+        assert_eq!(m.buckets, BUCKETS.to_vec());
+        assert_eq!(m.datasets.len(), DATASETS.len());
+        for (name, ..) in DATASETS {
+            m.dataset(name).unwrap();
+        }
+        let abar = AlphaTable::from_artifact(dir.join("alphas.json")).unwrap();
+        abar.validate().unwrap();
+        assert_eq!(abar.t_max(), T_FIXTURE);
+    }
+
+    #[test]
+    fn goldens_and_stats_are_readable_and_shaped() {
+        let dir = root();
+        let m = Manifest::load(&dir).unwrap();
+        let dim = m.sample_dim();
+        for (name, ..) in DATASETS {
+            for bucket in [1usize, 4] {
+                let x = read_tensor(m.golden_path(name, &format!("b{bucket}_x"))).unwrap();
+                assert_eq!(x.data().len(), bucket * dim);
+                let t = read_tensor(m.golden_path(name, &format!("b{bucket}_t"))).unwrap();
+                assert_eq!(t.data().len(), bucket);
+                // schedule scalars must be inside the open unit interval
+                let a = read_tensor(m.golden_path(name, &format!("b{bucket}_alpha_t"))).unwrap();
+                assert!(a.data().iter().all(|&v| v > 0.0 && v < 1.0));
+            }
+            let (shape, _) = read_tensor_f64(m.golden_path(name, "feat_out")).unwrap();
+            assert_eq!(shape[1], crate::stats::FEAT_DIM);
+            let (mu_shape, _) = read_tensor_f64(m.ref_stats_paths(name).0).unwrap();
+            assert_eq!(mu_shape, vec![crate::stats::FEAT_DIM]);
+        }
+    }
+
+    #[test]
+    fn write_into_is_idempotent_and_relocatable() {
+        let dir = std::env::temp_dir()
+            .join(format!("ddim-fixtures-reloc-{}", std::process::id()));
+        write_into(&dir).unwrap();
+        write_into(&dir).unwrap(); // overwrite must succeed
+        assert!(Manifest::load(&dir).is_ok());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tensorfile_writers_validate_shape() {
+        let dir = std::env::temp_dir().join(format!("ddim-fixtures-shape-{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        assert!(write_tensor_f32(&p, &[3], &[0.0; 2]).is_err());
+        assert!(write_tensor_f64(&p, &[2, 2], &[0.0; 3]).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,9 +1,13 @@
-//! Mini property-testing harness (the offline build has no `proptest`).
+//! Test support: the mini property-testing harness (the offline build has
+//! no `proptest`) and the synthetic-artifact generator ([`fixtures`]) that
+//! lets the integration suite run hermetically on the reference backend.
 //!
 //! [`check`] runs a property over `n` seeded random cases; on failure it
 //! retries the failing case with progressively "smaller" generator budgets
 //! (a crude shrink) and reports the seed so the case is replayable:
 //! `CASE_SEED=<seed> cargo test <name>`.
+
+pub mod fixtures;
 
 use crate::rng::Pcg64;
 

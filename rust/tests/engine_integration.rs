@@ -1,30 +1,19 @@
-//! Engine integration tests over the real artifacts: correctness of
-//! continuous batching (batched == solo at η=0, bitwise), request
-//! lifecycle, encode/decode fidelity, and backpressure.
+//! Engine integration tests: correctness of continuous batching
+//! (batched == solo at η=0, bitwise), request lifecycle, encode/decode
+//! fidelity, and backpressure.
+//!
+//! Hermetic: every test runs on `testing::fixtures` synthetic artifacts
+//! over the reference backend — no `make artifacts`, no XLA, zero skips.
 
 use ddim_serve::config::ServeConfig;
 use ddim_serve::coordinator::request::{Request, RequestBody};
 use ddim_serve::coordinator::{Engine, ResponseBody};
 use ddim_serve::sampler::SamplerKind;
 use ddim_serve::schedule::{NoiseMode, TauKind};
-
-const ROOT: &str = env!("CARGO_MANIFEST_DIR");
+use ddim_serve::testing::fixtures;
 
 fn artifacts_root() -> String {
-    format!("{ROOT}/artifacts")
-}
-
-fn have_artifacts() -> bool {
-    std::path::Path::new(&artifacts_root()).join("manifest.json").exists()
-}
-
-macro_rules! require_artifacts {
-    () => {
-        if !have_artifacts() {
-            eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
-            return;
-        }
-    };
+    fixtures::root_string()
 }
 
 fn engine(max_batch: usize, queue_cap: usize, max_lanes: usize) -> Engine {
@@ -76,7 +65,6 @@ fn outputs(resp: &ddim_serve::coordinator::Response) -> Vec<Vec<f32>> {
 /// lane independence is exact (see `lanes_are_independent_bitwise`).
 #[test]
 fn batched_equals_solo_at_eta0() {
-    require_artifacts!();
     // solo: one request, max_batch 1 (forces bucket-1 executables)
     let mut solo = engine(1, 16, 16);
     let id = solo.submit(gen_request(6, NoiseMode::Eta(0.0), 1, 4242)).unwrap();
@@ -110,7 +98,6 @@ fn batched_equals_solo_at_eta0() {
 /// heterogeneous packing sound at all.
 #[test]
 fn lanes_are_independent_bitwise() {
-    require_artifacts!();
     use ddim_serve::runtime::{Runtime, StepOutput};
     let mut rt = Runtime::load(artifacts_root()).unwrap();
     let dim = rt.manifest().sample_dim();
@@ -148,7 +135,6 @@ fn lanes_are_independent_bitwise() {
 
 #[test]
 fn eta0_is_reproducible_across_runs_and_seeds_differ() {
-    require_artifacts!();
     let mut e = engine(8, 16, 32);
     let a = e.submit(gen_request(5, NoiseMode::Eta(0.0), 2, 1)).unwrap();
     let b = e.submit(gen_request(5, NoiseMode::Eta(0.0), 2, 1)).unwrap();
@@ -161,7 +147,6 @@ fn eta0_is_reproducible_across_runs_and_seeds_differ() {
 
 #[test]
 fn all_requests_complete_under_saturation() {
-    require_artifacts!();
     let mut e = engine(16, 64, 24);
     let mut ids = Vec::new();
     for i in 0..12 {
@@ -185,7 +170,6 @@ fn all_requests_complete_under_saturation() {
 
 #[test]
 fn encode_decode_round_trip_has_low_error() {
-    require_artifacts!();
     let mut e = engine(8, 16, 16);
     // generate a clean sample deterministically
     let gid = e.submit(gen_request(20, NoiseMode::Eta(0.0), 1, 77)).unwrap();
@@ -230,7 +214,6 @@ fn encode_decode_round_trip_has_low_error() {
 
 #[test]
 fn backpressure_rejects_when_queue_full() {
-    require_artifacts!();
     // queue capacity 2: admission happens at tick time, so the third
     // *submit* (queue already holding two) must be rejected immediately.
     let mut e = engine(4, 2, 4);
@@ -248,7 +231,6 @@ fn backpressure_rejects_when_queue_full() {
 
 #[test]
 fn submit_validates_requests() {
-    require_artifacts!();
     let mut e = engine(4, 8, 8);
     // wrong dataset
     let mut r = gen_request(3, NoiseMode::Eta(0.0), 1, 0);
@@ -282,7 +264,6 @@ fn submit_validates_requests() {
 /// ceil(active/max_batch) ticks.
 #[test]
 fn long_request_is_not_starved_by_short_churn() {
-    require_artifacts!();
     let mut e = engine(4, 64, 16);
     let long_steps = 12usize;
     let long_id = e.submit(gen_request(long_steps, NoiseMode::Eta(0.0), 1, 1)).unwrap();
@@ -307,7 +288,6 @@ fn long_request_is_not_starved_by_short_churn() {
 
 #[test]
 fn ddpm_same_seed_same_result_different_seed_differs() {
-    require_artifacts!();
     // stochastic path must also be reproducible (noise is seeded per lane)
     let mut e = engine(4, 8, 8);
     let a = e.submit(gen_request(5, NoiseMode::Eta(1.0), 1, 10)).unwrap();
@@ -326,7 +306,6 @@ fn ddpm_same_seed_same_result_different_seed_differs() {
 /// Eq.-15 discretisations converge onto the same ODE solution.
 #[test]
 fn kernels_differ_at_s10_and_agree_at_s100() {
-    require_artifacts!();
 
     let run = |steps: usize, sampler: SamplerKind| -> Vec<f32> {
         let mut e = engine(4, 8, 8);
@@ -369,7 +348,6 @@ fn kernels_differ_at_s10_and_agree_at_s100() {
 /// history survives the engine's swap_remove/round-robin shuffling.
 #[test]
 fn heterogeneous_kernels_batch_in_one_tick() {
-    require_artifacts!();
     let steps = 6usize;
     let solo = |sampler: SamplerKind| -> Vec<f32> {
         let mut e = engine(8, 8, 8);
@@ -424,7 +402,6 @@ fn heterogeneous_kernels_batch_in_one_tick() {
 /// off-bucket lane counts force multi-sub-batch ticks.
 #[test]
 fn pipelined_depth_matches_serial_bitwise() {
-    require_artifacts!();
     let run = |depth: usize| -> Vec<(u64, Vec<Vec<f32>>)> {
         let cfg = ServeConfig {
             artifact_root: artifacts_root(),
@@ -476,7 +453,6 @@ fn pipelined_depth_matches_serial_bitwise() {
 /// old single-bucket policy exactly.
 #[test]
 fn planner_raises_occupancy_at_off_bucket_counts() {
-    require_artifacts!();
     let run = |max_waste: f64| {
         let cfg = ServeConfig {
             artifact_root: artifacts_root(),
@@ -509,7 +485,6 @@ fn planner_raises_occupancy_at_off_bucket_counts() {
 /// request parses, admits, and completes through `run_until_idle`.
 #[test]
 fn ab2_json_request_runs_to_completion() {
-    require_artifacts!();
     let v = ddim_serve::json::parse(
         r#"{"op":"generate","dataset":"sprites","steps":8,"eta":0.0,
             "count":2,"seed":11,"sampler":"ab2","return_images":true}"#,

@@ -1,33 +1,28 @@
-//! Host-kernel ↔ AOT-graph drift guard: the fused executable's `x_prev`
-//! must match the host-side Eq.-12 arithmetic (`ddim_update_host` /
-//! `ddim_update_host_sigma`) lane by lane — padding lanes included — for
-//! every noise mode the serving path accepts (η=0, η=1, σ̂). The engine's
-//! PF-ODE/AB2 kernels re-integrate from the same executable's ε, so this
-//! single invariant is what keeps *all* update kernels and the compiled
-//! graph from drifting apart silently.
+//! Host-kernel ↔ executable drift guard, hermetic on fixture artifacts:
+//! the executable's `x_prev` must match the host-side Eq.-12 arithmetic
+//! (`ddim_update_host` / `ddim_update_host_sigma`) lane by lane — padding
+//! lanes included — for every noise mode the serving path accepts (η=0,
+//! η=1, σ̂). And the host-integrated kernels (PF-ODE Euler per Eq. 15, AB2
+//! per §7) must commit exactly what `pf_euler_update` / `Ab2State` compute
+//! from the executable's ε output. This single file is what keeps *all*
+//! update kernels and the step backend from drifting apart silently, on
+//! whichever backend the runtime loads.
 //!
 //! Inputs are packed through the shared `StepBatch` (the exact serving
 //! path), then read back via `StepBatch::packed` so the comparison uses
 //! precisely what the executable saw.
 
 use ddim_serve::runtime::Runtime;
-use ddim_serve::sampler::{ddim_update_host, ddim_update_host_sigma, StepBatch, Trajectory};
+use ddim_serve::sampler::{
+    ddim_update_host, ddim_update_host_sigma, pf_euler_update, Ab2State, SamplerKind, StepBatch,
+    Trajectory,
+};
 use ddim_serve::schedule::{NoiseMode, SamplePlan, TauKind};
-
-const ROOT: &str = env!("CARGO_MANIFEST_DIR");
-
-fn artifacts_root() -> String {
-    format!("{ROOT}/artifacts")
-}
+use ddim_serve::testing::fixtures;
 
 #[test]
 fn executable_x_prev_matches_host_ddim_update_across_modes() {
-    let root = artifacts_root();
-    if !std::path::Path::new(&root).join("manifest.json").exists() {
-        eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
-        return;
-    }
-    let mut rt = Runtime::load(&root).unwrap();
+    let mut rt = Runtime::load(fixtures::root()).unwrap();
     let dim = rt.manifest().sample_dim();
     let bucket = rt.manifest().bucket_for(4);
     let abar = rt.alphas().clone();
@@ -97,4 +92,64 @@ fn executable_x_prev_matches_host_ddim_update_across_modes() {
         }
         assert!(trajs.iter().all(|t| t.is_done()));
     }
+}
+
+/// The host-integrated kernels, pinned lane by lane through the full
+/// serving path: a PF-ODE lane's committed state must equal
+/// `pf_euler_update` on the executable's ε, and an AB2 lane must equal a
+/// reference `Ab2State` driven over the same (ε, ᾱ) sequence — padded
+/// slots present throughout, η=0 (the only plans these kernels accept).
+#[test]
+fn host_kernels_match_their_references_through_step_batch() {
+    let mut rt = Runtime::load(fixtures::root()).unwrap();
+    let dim = rt.manifest().sample_dim();
+    let bucket = rt.manifest().bucket_for(4);
+    let abar = rt.alphas().clone();
+    let plan = SamplePlan::generate(&abar, TauKind::Linear, 6, NoiseMode::Eta(0.0)).unwrap();
+
+    // lane 0: PF-ODE, lane 1: AB2 — heterogeneous kernels in one batch
+    let mut trajs = vec![
+        Trajectory::from_prior_with(plan.clone(), dim, 501, SamplerKind::PfOde),
+        Trajectory::from_prior_with(plan.clone(), dim, 502, SamplerKind::Ab2),
+    ];
+    let mut pf_state = trajs[0].state().to_vec();
+    let mut ab_state = trajs[1].state().to_vec();
+    let mut ab_ref = Ab2State::new();
+
+    let mut batch = StepBatch::new(bucket, dim);
+    for (step, params) in plan.steps().iter().enumerate() {
+        for (slot, tr) in trajs.iter_mut().enumerate() {
+            batch.pack(slot, tr).unwrap();
+        }
+        batch.pad(trajs.len(), bucket);
+        let exe = rt.executable("sprites", bucket).unwrap();
+        batch.run(exe, bucket).unwrap();
+
+        // host references computed from the executable's own ε readback
+        pf_state = pf_euler_update(
+            &pf_state,
+            batch.lane(0).eps,
+            params.alpha_in,
+            params.alpha_out,
+        );
+        ab_ref.step_inplace(&mut ab_state, batch.lane(1).eps, params.alpha_in, params.alpha_out);
+
+        for (slot, tr) in trajs.iter_mut().enumerate() {
+            tr.advance(batch.lane(slot)).unwrap();
+        }
+        assert_eq!(
+            trajs[0].state(),
+            &pf_state[..],
+            "step {step}: PF-ODE lane drifted from pf_euler_update"
+        );
+        assert_eq!(
+            trajs[1].state(),
+            &ab_state[..],
+            "step {step}: AB2 lane drifted from the reference Ab2State"
+        );
+    }
+    assert!(trajs.iter().all(|t| t.is_done()));
+    // the two kernels start from different priors AND integrate
+    // differently; identical results would mean a wiring bug
+    assert_ne!(trajs[0].state(), trajs[1].state());
 }

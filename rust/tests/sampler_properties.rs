@@ -123,17 +123,12 @@ fn prop_encode_plan_mirrors_generate() {
 }
 
 // ---------------------------------------------------------------------------
-// Artifact-backed agreement test: BatchRunner (homogeneous harness) and the
+// Fixture-backed agreement test: BatchRunner (homogeneous harness) and the
 // Engine (continuous batcher) must produce identical eta=0 samples.
-const ROOT: &str = env!("CARGO_MANIFEST_DIR");
 
 #[test]
 fn runner_and_engine_agree() {
-    let root = format!("{ROOT}/artifacts");
-    if !std::path::Path::new(&root).join("manifest.json").exists() {
-        eprintln!("SKIP: artifacts/ missing");
-        return;
-    }
+    let root = ddim_serve::testing::fixtures::root_string();
     use ddim_serve::config::ServeConfig;
     use ddim_serve::coordinator::request::{Request, RequestBody};
     use ddim_serve::coordinator::{Engine, ResponseBody};

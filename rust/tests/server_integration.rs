@@ -1,21 +1,17 @@
-//! End-to-end server test: real TCP, real engine, real artifacts. One
-//! process, ephemeral port, concurrent clients.
+//! End-to-end server test: real TCP, real engine, fixture artifacts on the
+//! hermetic reference backend. One process, ephemeral port, concurrent
+//! clients — no `make artifacts`, no XLA, zero skips.
 
 use ddim_serve::config::ServeConfig;
 use ddim_serve::coordinator::server::Client;
 use ddim_serve::coordinator::Server;
 use ddim_serve::jobj;
 use ddim_serve::json::Value;
-
-const ROOT: &str = env!("CARGO_MANIFEST_DIR");
+use ddim_serve::testing::fixtures;
 
 #[test]
 fn server_serves_generate_metrics_and_rejects_garbage() {
-    let root = format!("{ROOT}/artifacts");
-    if !std::path::Path::new(&root).join("manifest.json").exists() {
-        eprintln!("SKIP: artifacts/ missing");
-        return;
-    }
+    let root = fixtures::root_string();
     let cfg = ServeConfig {
         artifact_root: root,
         dataset: "sprites".into(),
@@ -151,11 +147,7 @@ fn server_serves_generate_metrics_and_rejects_garbage() {
 /// every shard.
 #[test]
 fn lazy_bring_up_spawns_sharded_pools() {
-    let root = format!("{ROOT}/artifacts");
-    if !std::path::Path::new(&root).join("manifest.json").exists() {
-        eprintln!("SKIP: artifacts/ missing");
-        return;
-    }
+    let root = fixtures::root_string();
     let cfg = ServeConfig {
         artifact_root: root,
         dataset: "sprites".into(),
@@ -218,11 +210,7 @@ fn lazy_bring_up_spawns_sharded_pools() {
 /// an explicit "shutting down" error — the waiter is never abandoned.
 #[test]
 fn shutdown_answers_inflight_waiters() {
-    let root = format!("{ROOT}/artifacts");
-    if !std::path::Path::new(&root).join("manifest.json").exists() {
-        eprintln!("SKIP: artifacts/ missing");
-        return;
-    }
+    let root = fixtures::root_string();
     let cfg = ServeConfig {
         artifact_root: root,
         dataset: "sprites".into(),
@@ -265,11 +253,7 @@ fn shutdown_answers_inflight_waiters() {
 /// rejected on the wire.
 #[test]
 fn sampler_field_round_trips_through_sharded_server() {
-    let root = format!("{ROOT}/artifacts");
-    if !std::path::Path::new(&root).join("manifest.json").exists() {
-        eprintln!("SKIP: artifacts/ missing");
-        return;
-    }
+    let root = fixtures::root_string();
     let cfg = ServeConfig {
         artifact_root: root,
         dataset: "sprites".into(),

@@ -1,0 +1,191 @@
+//! Offline stand-in for the PJRT/XLA wrapper crate (`xla`).
+//!
+//! The serving crate's `xla` cargo feature compiles against exactly this
+//! API surface. Host-side pieces ([`Literal`]) are genuinely functional so
+//! literal-marshalling code and its tests work; device-side pieces
+//! ([`PjRtClient`], [`PjRtLoadedExecutable`]) return [`Error::Stub`] at
+//! runtime — selecting `--backend xla` on a stub build fails loudly with
+//! an actionable message instead of pretending to execute.
+//!
+//! To deploy on real XLA, override this dependency with a real wrapper
+//! exposing the same items, e.g. in the workspace `Cargo.toml`:
+//!
+//! ```toml
+//! [patch.crates-io]            # or a direct path/git override
+//! xla = { git = "https://github.com/LaurentMazare/xla-rs" }
+//! ```
+
+use std::fmt;
+
+/// Errors surfaced by the wrapper.
+#[derive(Debug)]
+pub enum Error {
+    /// Raised by every device entry point of the stub build.
+    Stub(&'static str),
+    /// Host-side misuse (shape mismatches in literal marshalling).
+    Shape(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Stub(what) => write!(
+                f,
+                "xla stub: {what} is unavailable in this build — replace \
+                 third_party/xla-stub with a real PJRT wrapper to use --backend xla"
+            ),
+            Error::Shape(m) => write!(f, "xla literal: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the serving crate uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+}
+
+/// Host tensor: fully functional (shape + f32 storage), so marshalling
+/// code round-trips for real even on the stub build.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Literal {
+    pub fn create_from_shape(ty: PrimitiveType, dims: &[usize]) -> Literal {
+        let PrimitiveType::F32 = ty;
+        let n = dims.iter().product();
+        Literal { dims: dims.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn copy_raw_from(&mut self, src: &[f32]) -> Result<()> {
+        if src.len() != self.data.len() {
+            return Err(Error::Shape(format!(
+                "copy_raw_from: {} elements into literal of {}",
+                src.len(),
+                self.data.len()
+            )));
+        }
+        self.data.copy_from_slice(src);
+        Ok(())
+    }
+
+    pub fn copy_raw_to(&self, dst: &mut [f32]) -> Result<()> {
+        if dst.len() != self.data.len() {
+            return Err(Error::Shape(format!(
+                "copy_raw_to: literal of {} into {} elements",
+                self.data.len(),
+                dst.len()
+            )));
+        }
+        dst.copy_from_slice(&self.data);
+        Ok(())
+    }
+
+    /// Decompose a tuple literal. The stub has no device to produce tuple
+    /// literals, so this is unreachable in practice and errs defensively.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::Stub("Literal::to_tuple (device output decomposition)"))
+    }
+}
+
+/// Parsed HLO module (device-side: stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::Stub("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation handle (device-side: stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device buffer handle (device-side: stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Stub("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle (device-side: stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Stub("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client (device-side: stub).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Stub("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Stub("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trips_on_the_host() {
+        let mut lit = Literal::create_from_shape(PrimitiveType::F32, &[2, 3]);
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(lit.shape(), &[2, 3]);
+        let data = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        lit.copy_raw_from(&data).unwrap();
+        let mut back = [0.0f32; 6];
+        lit.copy_raw_to(&mut back).unwrap();
+        assert_eq!(back, data);
+        assert!(lit.copy_raw_from(&data[..3]).is_err());
+    }
+
+    #[test]
+    fn device_entry_points_fail_loudly() {
+        let err = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("stub"), "{err}");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
