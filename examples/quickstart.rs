@@ -37,6 +37,7 @@ fn main() -> ddim_serve::Result<()> {
         sampler: SamplerKind::parse(args.get_or("sampler", "ddim"))?,
         body: RequestBody::Generate { count: 16, seed },
         return_images: true,
+        cache: ddim_serve::coordinator::CacheMode::Use,
     })?;
     let responses = engine.run_until_idle()?;
     let resp = responses.iter().find(|r| r.id == id).unwrap();

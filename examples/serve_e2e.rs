@@ -1,23 +1,71 @@
 //! End-to-end serving driver (the DESIGN.md §4 validation run): start the
-//! full stack — TCP server, engine thread, continuous batcher, AOT
-//! executables — and fire an open-loop Poisson workload of mixed requests
-//! at it from concurrent client connections. Reports client-side latency
-//! percentiles, server-side metrics, and batch occupancy.
+//! full stack — TCP server, shard pool, continuous batcher, sample cache —
+//! and fire an open-loop Poisson workload of mixed requests at it from
+//! concurrent client connections. Reports client-side latency percentiles,
+//! server-side metrics, batch occupancy, and cache effectiveness.
 //!
 //!     cargo run --release --example serve_e2e -- --requests 60 --rate 4
+//!     cargo run --release --example serve_e2e -- --requests 120 --rate 20 \
+//!         --seed-pool 8 --zipf 1.1          # Zipf-hot: exercises the cache
 //!
 //! Flags: --artifacts DIR --dataset NAME --requests N --rate HZ --seed K
+//!        --seed-pool N (0 = every request unique / cache-cold)
+//!        --zipf S (popularity skew of the seed pool; default 1.1)
+//!        --cache on|off --coalesce on|off
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
+use ddim_serve::artifacts::Manifest;
 use ddim_serve::cli::Args;
 use ddim_serve::config::ServeConfig;
 use ddim_serve::coordinator::server::Client;
-use ddim_serve::coordinator::{Histogram, Server};
+use ddim_serve::coordinator::{Histogram, RequestBody, Server};
 use ddim_serve::jobj;
+use ddim_serve::json::Value;
 use ddim_serve::schedule::NoiseMode;
 use ddim_serve::workload::Workload;
+
+/// Wire form of a workload request (all three body kinds).
+fn request_json(req: &ddim_serve::coordinator::Request) -> Value {
+    let eta = match req.mode {
+        NoiseMode::Eta(e) => Value::Num(e),
+        NoiseMode::SigmaHat => Value::Str("hat".into()),
+    };
+    let rows_json = |rows: &[Vec<f32>]| {
+        Value::Arr(
+            rows.iter()
+                .map(|r| Value::Arr(r.iter().map(|&x| Value::Num(x as f64)).collect()))
+                .collect(),
+        )
+    };
+    match &req.body {
+        RequestBody::Generate { count, seed } => jobj![
+            ("op", "generate"),
+            ("dataset", req.dataset.as_str()),
+            ("steps", req.steps),
+            ("eta", eta),
+            ("sampler", req.sampler.label()),
+            ("count", *count),
+            ("seed", *seed),
+        ],
+        RequestBody::Decode { latents } => jobj![
+            ("op", "decode"),
+            ("dataset", req.dataset.as_str()),
+            ("steps", req.steps),
+            ("eta", eta),
+            ("sampler", req.sampler.label()),
+            ("latents", rows_json(latents)),
+        ],
+        RequestBody::Encode { images } => jobj![
+            ("op", "encode"),
+            ("dataset", req.dataset.as_str()),
+            ("steps", req.steps),
+            ("sampler", req.sampler.label()),
+            ("images", rows_json(images)),
+        ],
+    }
+}
 
 fn main() -> ddim_serve::Result<()> {
     let args = Args::from_env()?;
@@ -25,9 +73,12 @@ fn main() -> ddim_serve::Result<()> {
     let n_requests = args.get_usize("requests", 60)?;
     let rate = args.get_f64("rate", 4.0)?;
     let seed = args.get_u64("seed", 1)?;
+    let pool = args.get_usize("seed-pool", 0)?;
+    let zipf_s = args.get_f64("zipf", 1.1)?;
 
-    let cfg = ServeConfig {
-        artifact_root: args.get_or("artifacts", "artifacts").to_string(),
+    let artifact_root = args.get_or("artifacts", "artifacts").to_string();
+    let mut cfg = ServeConfig {
+        artifact_root: artifact_root.clone(),
         dataset: dataset.clone(),
         listen: "127.0.0.1:0".into(),
         max_batch: 16,
@@ -35,39 +86,48 @@ fn main() -> ddim_serve::Result<()> {
         queue_capacity: 256,
         ..Default::default()
     };
+    if let Some(v) = args.get("cache") {
+        cfg.cache_enabled = ddim_serve::cli::parse_on_off("cache", v)?;
+    }
+    if let Some(v) = args.get("coalesce") {
+        cfg.coalesce_enabled = ddim_serve::cli::parse_on_off("coalesce", v)?;
+    }
     println!("starting server (compiling executables)...");
     let t_start = Instant::now();
     let server = Server::start(cfg)?;
     let addr = server.addr();
     println!("server up on {addr} in {:.1}s", t_start.elapsed().as_secs_f64());
 
-    // Build the open-loop workload: mixed S/eta/count classes at `rate` Hz.
-    let workload = Workload::standard(&dataset, rate);
+    // Build the open-loop workload: mixed S/eta/count/body classes at
+    // `rate` Hz. With a seed pool, identities are Zipf-hot and the
+    // decode/encode bodies are materialised from the model's sample_dim.
+    let workload = if pool > 0 {
+        let dim = Manifest::load(&artifact_root)?.sample_dim();
+        Workload::zipf(&dataset, rate, dim, pool, zipf_s)
+    } else {
+        Workload::standard(&dataset, rate)
+    };
     let plan = workload.generate(n_requests, seed);
     println!(
-        "workload: {n_requests} requests over {:.1}s ({} classes, open loop)",
+        "workload: {n_requests} requests over {:.1}s ({} classes, {}, open loop)",
         plan.last().map(|(t, _)| *t).unwrap_or(0.0),
-        workload.classes.len()
+        workload.classes.len(),
+        if pool > 0 {
+            format!("Zipf({zipf_s}) pool of {pool}")
+        } else {
+            "unique identities".into()
+        }
     );
 
     // Replay: one thread per request (arrival-time-faithful), results back
-    // over a channel.
-    let (tx, rx) = mpsc::channel::<(usize, f64, bool, usize)>();
+    // over a channel: (index, latency, ok, requested steps, cached).
+    let (tx, rx) = mpsc::channel::<(usize, f64, bool, usize, bool)>();
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for (i, (arrival, req)) in plan.into_iter().enumerate() {
         let tx = tx.clone();
-        let mode_s = match req.mode {
-            NoiseMode::Eta(e) => format!("{e}"),
-            NoiseMode::SigmaHat => "hat".into(),
-        };
-        let (count, rseed) = match req.body {
-            ddim_serve::coordinator::RequestBody::Generate { count, seed } => (count, seed),
-            _ => unreachable!(),
-        };
-        let steps = req.steps;
-        let sampler = req.sampler.label();
-        let ds = req.dataset.clone();
+        let line = request_json(&req);
+        let steps_requested = req.steps * req.lane_count();
         handles.push(std::thread::spawn(move || {
             // open loop: wait until this request's arrival time
             let now = t0.elapsed().as_secs_f64();
@@ -75,21 +135,19 @@ fn main() -> ddim_serve::Result<()> {
                 std::thread::sleep(Duration::from_secs_f64(arrival - now));
             }
             let sent = Instant::now();
-            let ok = (|| -> ddim_serve::Result<bool> {
+            let (ok, cached) = (|| -> ddim_serve::Result<(bool, bool)> {
                 let mut c = Client::connect(addr)?;
-                let resp = c.roundtrip(&jobj![
-                    ("op", "generate"),
-                    ("dataset", ds.as_str()),
-                    ("steps", steps),
-                    ("eta", mode_s.as_str()),
-                    ("sampler", sampler),
-                    ("count", count),
-                    ("seed", rseed),
-                ])?;
-                Ok(resp.get("ok").ok().and_then(|v| v.as_bool().ok()).unwrap_or(false))
+                let resp = c.roundtrip(&line)?;
+                let ok =
+                    resp.get("ok").ok().and_then(|v| v.as_bool().ok()).unwrap_or(false);
+                let cached = resp
+                    .get_opt("cached")
+                    .and_then(|v| v.as_bool().ok())
+                    .unwrap_or(false);
+                Ok((ok, cached))
             })()
-            .unwrap_or(false);
-            let _ = tx.send((i, sent.elapsed().as_secs_f64(), ok, steps * count));
+            .unwrap_or((false, false));
+            let _ = tx.send((i, sent.elapsed().as_secs_f64(), ok, steps_requested, cached));
         }));
     }
     drop(tx);
@@ -97,11 +155,13 @@ fn main() -> ddim_serve::Result<()> {
     let mut hist = Histogram::new();
     let mut failures = 0usize;
     let mut total_steps = 0usize;
+    let mut client_cached = 0usize;
     let mut done = 0usize;
-    for (_, latency, ok, steps) in rx {
+    for (_, latency, ok, steps, cached) in rx {
         if ok {
             hist.record(latency);
             total_steps += steps;
+            client_cached += cached as usize;
         } else {
             failures += 1;
         }
@@ -116,9 +176,13 @@ fn main() -> ddim_serve::Result<()> {
     let wall = t0.elapsed().as_secs_f64();
 
     println!("\n=== serve_e2e results ===");
-    println!("requests     : {n_requests} ({failures} failed)");
+    println!("requests     : {n_requests} ({failures} failed, {client_cached} served from cache)");
     println!("wall time    : {wall:.2}s");
-    println!("throughput   : {:.2} req/s, {:.1} model-steps/s", (n_requests - failures) as f64 / wall, total_steps as f64 / wall);
+    println!(
+        "throughput   : {:.2} req/s, {:.1} requested model-steps/s",
+        (n_requests - failures) as f64 / wall,
+        total_steps as f64 / wall
+    );
     println!(
         "client latency: p50 {:.0}ms  p95 {:.0}ms  p99 {:.0}ms  mean {:.0}ms  max {:.0}ms",
         hist.quantile(0.5) * 1e3,
@@ -141,6 +205,18 @@ fn main() -> ddim_serve::Result<()> {
         get("latency_p95_s") * 1e3,
         get("requests_rejected"),
     );
+    if let Ok(cache) = m.get("cache") {
+        let cget = |k: &str| cache.get(k).ok().and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+        println!(
+            "cache metrics : hits={} misses={} hit_rate={:.2} coalesced={} evictions={} bytes={}",
+            cget("hits"),
+            cget("misses"),
+            cget("hit_rate"),
+            cget("coalesced_waiters"),
+            cget("evictions"),
+            cget("bytes"),
+        );
+    }
     server.shutdown();
     println!("server shut down cleanly");
     if failures > 0 {

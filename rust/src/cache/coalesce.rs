@@ -1,0 +1,126 @@
+//! Single-flight coalescing: at most one execution per cache key at a
+//! time. The first arrival for a key becomes the **leader** and is
+//! dispatched to a shard; every concurrent identical request parks as a
+//! waiter. When the leader's engine response arrives, one fan-out answers
+//! everybody — each waiter gets its own response, tailored to its own
+//! `return_images`, with latency measured from its own arrival.
+//!
+//! The table holds waiters only; the eviction-pinned in-flight marker
+//! lives in the store ([`super::store`]) and the decision logic in
+//! [`super::CacheFront`]. Entries are created by `lead_or_park` and
+//! removed by exactly one `complete` call — the shard layer guarantees
+//! every dispatched request is answered exactly once (success, rejection,
+//! or shutdown error), so no entry can leak.
+
+use std::collections::HashMap;
+use std::sync::mpsc::Sender;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::cache::key::CacheKey;
+use crate::coordinator::request::Response;
+
+/// One parked client: where to answer it, whether it wants pixels, and
+/// when it arrived (for per-waiter latency).
+pub struct ParkedWaiter {
+    pub tx: Sender<Response>,
+    pub return_images: bool,
+    pub arrived: Instant,
+}
+
+/// Outcome of [`Coalescer::lead_or_park`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Caller is the first arrival: dispatch the execution.
+    Leader,
+    /// An identical execution is in flight; the waiter was parked.
+    Parked,
+}
+
+/// The single-flight table.
+#[derive(Default)]
+pub struct Coalescer {
+    table: Mutex<HashMap<u128, Vec<ParkedWaiter>>>,
+}
+
+impl Coalescer {
+    pub fn new() -> Coalescer {
+        Coalescer::default()
+    }
+
+    /// Atomically either register `waiter` as the leader of a new flight
+    /// (the leader's own waiter is parked too — the fan-out answers it
+    /// like any other) or append it to an existing flight.
+    pub fn lead_or_park(&self, key: CacheKey, waiter: ParkedWaiter) -> Role {
+        let mut table = self.table.lock().unwrap();
+        match table.entry(key.0) {
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                e.get_mut().push(waiter);
+                Role::Parked
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(vec![waiter]);
+                Role::Leader
+            }
+        }
+    }
+
+    /// Close the flight: remove the entry and hand back every waiter
+    /// (leader first, in arrival order) for fan-out.
+    pub fn complete(&self, key: CacheKey) -> Vec<ParkedWaiter> {
+        self.table.lock().unwrap().remove(&key.0).unwrap_or_default()
+    }
+
+    /// Flights currently open (metrics).
+    pub fn open_flights(&self) -> usize {
+        self.table.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn waiter() -> (ParkedWaiter, std::sync::mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        (ParkedWaiter { tx, return_images: false, arrived: Instant::now() }, rx)
+    }
+
+    #[test]
+    fn first_leads_rest_park_and_complete_drains() {
+        let co = Coalescer::new();
+        let k = CacheKey(42);
+        let (w1, _r1) = waiter();
+        let (w2, _r2) = waiter();
+        let (w3, _r3) = waiter();
+        assert_eq!(co.lead_or_park(k, w1), Role::Leader);
+        assert_eq!(co.lead_or_park(k, w2), Role::Parked);
+        assert_eq!(co.lead_or_park(k, w3), Role::Parked);
+        assert_eq!(co.open_flights(), 1);
+        let drained = co.complete(k);
+        assert_eq!(drained.len(), 3, "leader + both waiters come back");
+        assert_eq!(co.open_flights(), 0);
+        // the key is free again: a new arrival leads a fresh flight
+        let (w4, _r4) = waiter();
+        assert_eq!(co.lead_or_park(k, w4), Role::Leader);
+    }
+
+    #[test]
+    fn distinct_keys_are_independent_flights() {
+        let co = Coalescer::new();
+        let (w1, _r1) = waiter();
+        let (w2, _r2) = waiter();
+        assert_eq!(co.lead_or_park(CacheKey(1), w1), Role::Leader);
+        assert_eq!(co.lead_or_park(CacheKey(2), w2), Role::Leader);
+        assert_eq!(co.open_flights(), 2);
+        assert_eq!(co.complete(CacheKey(1)).len(), 1);
+        assert_eq!(co.complete(CacheKey(2)).len(), 1);
+    }
+
+    #[test]
+    fn complete_on_unknown_key_is_empty() {
+        let co = Coalescer::new();
+        assert!(co.complete(CacheKey(7)).is_empty());
+    }
+}

@@ -1,0 +1,227 @@
+//! Canonical cache keys: a 128-bit FNV-1a digest over every field that
+//! participates in the sampling function, and nothing else.
+//!
+//! The determinism contract (DDIM §4.3 extended to η > 0 by seeded PCG64
+//! noise streams) says a response is a pure function of:
+//!
+//!   (manifest digest, backend, dataset, steps, τ kind, η mode, sampler,
+//!    body kind + seed-or-state-bits)
+//!
+//! `return_images` is **explicitly excluded** — it only controls whether
+//! the outputs ride the wire, not what they are — as is the per-request
+//! `"cache"` directive itself. Provided states (decode latents / encode
+//! images) are hashed at full f32-bit fidelity: two latents that differ in
+//! one mantissa bit are different requests.
+//!
+//! Collisions: 128-bit FNV-1a ([`crate::rng::Fnv128`] — the hashing
+//! primitives live in the rng substrate) over tagged, length-prefixed
+//! fields. A digest collision would serve the wrong sample bitwise, so
+//! the key is twice the width a hash table would need.
+
+use crate::artifacts::Manifest;
+use crate::coordinator::request::{Request, RequestBody};
+use crate::rng::{Fnv128, Fnv64};
+use crate::runtime::BackendKind;
+use crate::schedule::{NoiseMode, TauKind};
+
+/// The canonical identity of one cacheable response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheKey(pub u128);
+
+/// Key-format version — bump when the field encoding changes so stale
+/// processes can never agree on a digest by accident.
+const KEY_VERSION: u8 = 1;
+
+impl CacheKey {
+    /// Digest every sampling-relevant field of `req`. `return_images` and
+    /// the request's own `"cache"` directive are deliberately not hashed.
+    pub fn of(req: &Request, manifest_digest: u64, backend: BackendKind) -> CacheKey {
+        let mut h = Fnv128::new();
+        h.byte(KEY_VERSION);
+        h.u64(manifest_digest);
+        h.byte(backend_tag(backend));
+        h.str(&req.dataset);
+        h.u64(req.steps as u64);
+        h.byte(tau_tag(req.tau));
+        match req.mode {
+            NoiseMode::Eta(e) => {
+                // normalise -0.0 (parseable from the wire) onto +0.0: both
+                // mean "deterministic" and must map to one key
+                let e = if e == 0.0 { 0.0 } else { e };
+                h.byte(0).u64(e.to_bits());
+            }
+            NoiseMode::SigmaHat => {
+                h.byte(1);
+            }
+        }
+        h.byte(req.sampler.index() as u8);
+        match &req.body {
+            RequestBody::Generate { count, seed } => {
+                h.byte(0).u64(*count as u64).u64(*seed);
+            }
+            RequestBody::Decode { latents } => {
+                h.byte(1);
+                hash_rows(&mut h, latents);
+            }
+            RequestBody::Encode { images } => {
+                h.byte(2);
+                hash_rows(&mut h, images);
+            }
+        }
+        CacheKey(h.finish())
+    }
+
+    /// Which store shard this key lives in (xor-folded to 64 bits first so
+    /// every digest bit participates).
+    pub fn shard(&self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let folded = (self.0 as u64) ^ ((self.0 >> 64) as u64);
+        (folded % n as u64) as usize
+    }
+}
+
+fn hash_rows(h: &mut Fnv128, rows: &[Vec<f32>]) {
+    h.u64(rows.len() as u64);
+    for row in rows {
+        h.u64(row.len() as u64);
+        for &v in row {
+            h.u32(v.to_bits());
+        }
+    }
+}
+
+fn backend_tag(b: BackendKind) -> u8 {
+    match b {
+        BackendKind::Reference => 0,
+        BackendKind::Xla => 1,
+    }
+}
+
+fn tau_tag(t: TauKind) -> u8 {
+    match t {
+        TauKind::Linear => 0,
+        TauKind::Quadratic => 1,
+    }
+}
+
+/// Digest of everything in the manifest that can change what a sample
+/// looks like: geometry, horizon, buckets, and the per-dataset model
+/// identity (HLO paths + trained-parameter fingerprint — the reference
+/// backend derives its synthetic ε-model from exactly these fields).
+/// Embedded in every [`CacheKey`], so entries minted against one artifact
+/// tree can never answer requests against another; the store is also
+/// flushed outright when the digest changes ([`super::CacheFront`]).
+pub fn manifest_digest(m: &Manifest) -> u64 {
+    let mut h = Fnv64::new();
+    h.u64(m.img as u64);
+    h.u64(m.channels as u64);
+    h.u64(m.t_max as u64);
+    h.u64(m.buckets.len() as u64);
+    for &b in &m.buckets {
+        h.u64(b as u64);
+    }
+    h.u64(m.datasets.len() as u64);
+    for (name, ds) in &m.datasets {
+        h.str(name);
+        h.u64(ds.params);
+        h.u64(ds.final_loss.to_bits());
+        h.u64(ds.ref_n as u64);
+        for p in &ds.hlo {
+            h.str(p);
+        }
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::CacheMode;
+    use crate::sampler::SamplerKind;
+
+    fn base_req() -> Request {
+        Request {
+            dataset: "sprites".into(),
+            steps: 20,
+            mode: NoiseMode::Eta(0.0),
+            tau: TauKind::Linear,
+            sampler: SamplerKind::Ddim,
+            body: RequestBody::Generate { count: 4, seed: 7 },
+            return_images: false,
+            cache: CacheMode::Use,
+        }
+    }
+
+    fn key(r: &Request) -> CacheKey {
+        CacheKey::of(r, 0xabcd, BackendKind::Reference)
+    }
+
+    #[test]
+    fn excluded_fields_do_not_change_the_key() {
+        let a = base_req();
+        let mut b = base_req();
+        b.return_images = true;
+        b.cache = CacheMode::Bypass;
+        assert_eq!(key(&a), key(&b));
+    }
+
+    #[test]
+    fn every_sampling_relevant_field_changes_the_key() {
+        let base = key(&base_req());
+        let perturbed: Vec<Request> = vec![
+            Request { dataset: "blobs".into(), ..base_req() },
+            Request { steps: 21, ..base_req() },
+            Request { mode: NoiseMode::Eta(0.5), ..base_req() },
+            Request { mode: NoiseMode::SigmaHat, ..base_req() },
+            Request { tau: TauKind::Quadratic, ..base_req() },
+            Request { sampler: SamplerKind::PfOde, ..base_req() },
+            Request { body: RequestBody::Generate { count: 5, seed: 7 }, ..base_req() },
+            Request { body: RequestBody::Generate { count: 4, seed: 8 }, ..base_req() },
+        ];
+        for p in &perturbed {
+            assert_ne!(key(p), base, "{p:?} should not collide with the base request");
+        }
+        // environment axes
+        assert_ne!(CacheKey::of(&base_req(), 0xabce, BackendKind::Reference), base);
+        assert_ne!(CacheKey::of(&base_req(), 0xabcd, BackendKind::Xla), base);
+    }
+
+    #[test]
+    fn eta_zero_is_canonical() {
+        let pos = Request { mode: NoiseMode::Eta(0.0), ..base_req() };
+        let neg = Request { mode: NoiseMode::Eta(-0.0), ..base_req() };
+        assert_eq!(key(&pos), key(&neg));
+    }
+
+    #[test]
+    fn state_bits_and_body_kind_are_keyed() {
+        let lat = vec![vec![0.5f32, -0.25], vec![1.0, 2.0]];
+        let dec = Request { body: RequestBody::Decode { latents: lat.clone() }, ..base_req() };
+        let enc = Request { body: RequestBody::Encode { images: lat.clone() }, ..base_req() };
+        assert_ne!(key(&dec), key(&enc), "decode and encode of the same matrix differ");
+        // one mantissa bit flip is a different request
+        let mut flipped = lat.clone();
+        flipped[1][0] = f32::from_bits(flipped[1][0].to_bits() ^ 1);
+        let dec2 = Request { body: RequestBody::Decode { latents: flipped }, ..base_req() };
+        assert_ne!(key(&dec), key(&dec2));
+        // row-boundary ambiguity: [[a,b],[c]] vs [[a],[b,c]]
+        let ragged1 = Request {
+            body: RequestBody::Decode { latents: vec![vec![1.0, 2.0], vec![3.0]] },
+            ..base_req()
+        };
+        let ragged2 = Request {
+            body: RequestBody::Decode { latents: vec![vec![1.0], vec![2.0, 3.0]] },
+            ..base_req()
+        };
+        assert_ne!(key(&ragged1), key(&ragged2));
+    }
+
+    #[test]
+    fn shard_is_stable_and_in_range() {
+        let k = key(&base_req());
+        for n in [1usize, 2, 8, 16] {
+            assert!(k.shard(n) < n);
+            assert_eq!(k.shard(n), k.shard(n));
+        }
+    }
+}

@@ -1,0 +1,593 @@
+//! Deterministic sample cache + in-flight request coalescing.
+//!
+//! DDIM's consistency property (§4.3) makes serving cacheable: with η = 0
+//! the map from (x_T, τ, kernel) to x_0 is a deterministic function, and
+//! this stack extends that determinism to η > 0 via seeded PCG64 noise
+//! streams — two requests with equal sampling-relevant fields produce
+//! bitwise-identical samples. So the coordinator never needs to compute
+//! the same sample twice:
+//!
+//! - [`key`]    — canonical 128-bit FNV-1a digest over the sampling-
+//!   relevant request fields (`return_images` excluded) plus the manifest
+//!   digest and backend kind;
+//! - [`store`]  — byte-budgeted sharded LRU over completed responses,
+//!   with in-flight placeholders pinned against eviction;
+//! - [`coalesce`] — single-flight table: the first arrival for a key
+//!   executes, concurrent identical requests park and share the result.
+//!
+//! [`CacheFront`] is the admission-path facade the router calls ahead of
+//! shard dispatch; results are published back on engine completion via
+//! the per-dispatch `on_done` callback. Executions admitted through the
+//! front run with `return_images` forced on (the cache must hold the
+//! pixels to serve any later caller that wants them); each waiter's
+//! response is then filtered by its *own* `return_images`.
+
+pub mod coalesce;
+pub mod key;
+pub mod store;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::artifacts::Manifest;
+use crate::config::ServeConfig;
+use crate::coordinator::request::{CacheMode, Request, Response, ResponseBody};
+use crate::error::Result;
+use crate::jobj;
+use crate::json::Value;
+use crate::runtime::BackendKind;
+
+pub use coalesce::{Coalescer, ParkedWaiter, Role};
+pub use key::{manifest_digest, CacheKey};
+pub use store::{CacheStore, CachedSample, Probe};
+
+/// Completion callback a dispatched execution must be answered through
+/// (exactly once — the shard layer guarantees delivery even on shutdown).
+pub type DoneFn = Box<dyn FnOnce(Response) + Send>;
+
+/// What the admission path decided for one request.
+pub enum Admission {
+    /// Answered from the completed-sample cache; nothing to dispatch.
+    Served,
+    /// Parked behind an identical in-flight execution; the leader's
+    /// fan-out will answer it.
+    Parked,
+    /// Caller must dispatch `request` to a shard and deliver the engine's
+    /// response to `on_done`.
+    Execute { request: Request, on_done: DoneFn },
+}
+
+/// Point-in-time cache counters (the `"cache"` object in
+/// `{"op":"metrics"}`).
+#[derive(Debug, Clone, Default)]
+pub struct CacheMetrics {
+    pub enabled: bool,
+    pub coalesce_enabled: bool,
+    pub hits: u64,
+    pub misses: u64,
+    pub coalesced_waiters: u64,
+    pub bypassed: u64,
+    pub evictions: u64,
+    pub bytes: u64,
+    pub capacity_bytes: u64,
+    pub entries: u64,
+    pub inflight: u64,
+}
+
+impl CacheMetrics {
+    /// hits / (hits + misses); 0 when idle.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        jobj![
+            ("enabled", self.enabled),
+            ("coalesce", self.coalesce_enabled),
+            ("hits", self.hits),
+            ("misses", self.misses),
+            ("hit_rate", self.hit_rate()),
+            ("coalesced_waiters", self.coalesced_waiters),
+            ("bypassed", self.bypassed),
+            ("evictions", self.evictions),
+            ("bytes", self.bytes),
+            ("capacity_bytes", self.capacity_bytes),
+            ("entries", self.entries),
+            ("inflight", self.inflight),
+        ]
+    }
+}
+
+/// The admission-path facade: store + single-flight table + counters.
+/// Either half can be disabled independently (`--cache off` keeps
+/// coalescing; `--coalesce off` keeps the store, at the cost of duplicate
+/// concurrent executions racing to publish the same key).
+pub struct CacheFront {
+    store: Option<CacheStore>,
+    coalesce: Option<Coalescer>,
+    backend: BackendKind,
+    /// Digest of the manifest the keys are minted against; swapped (and
+    /// the store flushed) by [`CacheFront::refresh_manifest`].
+    digest: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    coalesced: AtomicU64,
+    bypassed: AtomicU64,
+}
+
+impl CacheFront {
+    /// Build from serving config. Reads `manifest.json` under
+    /// `cfg.artifact_root` for the key digest when any half is enabled;
+    /// fully disabled fronts touch no disk and add one branch per submit.
+    pub fn from_config(cfg: &ServeConfig) -> Result<CacheFront> {
+        let active = cfg.cache_enabled || cfg.coalesce_enabled;
+        let digest = if active {
+            manifest_digest(&Manifest::load(&cfg.artifact_root)?)
+        } else {
+            0
+        };
+        Ok(CacheFront {
+            store: cfg.cache_enabled.then(|| CacheStore::new(cfg.cache_bytes)),
+            coalesce: cfg.coalesce_enabled.then(Coalescer::new),
+            backend: cfg.backend,
+            digest: AtomicU64::new(digest),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            bypassed: AtomicU64::new(0),
+        })
+    }
+
+    /// Both halves off?
+    pub fn is_inert(&self) -> bool {
+        self.store.is_none() && self.coalesce.is_none()
+    }
+
+    /// Re-read the manifest under `root` and, if its digest changed
+    /// (artifact reload), flush the store and mint future keys against
+    /// the new digest. Returns whether an invalidation happened. Old-
+    /// digest entries could never answer new-digest keys anyway (the
+    /// digest is hashed into every key) — the flush just stops dead
+    /// entries from squatting on the byte budget.
+    pub fn refresh_manifest(&self, root: &str) -> Result<bool> {
+        if self.is_inert() {
+            return Ok(false);
+        }
+        let new = manifest_digest(&Manifest::load(root)?);
+        let old = self.digest.swap(new, Ordering::SeqCst);
+        if old != new {
+            if let Some(store) = &self.store {
+                store.clear();
+            }
+        }
+        Ok(old != new)
+    }
+
+    /// Decide one request's path. `tx` is the caller's response channel;
+    /// on `Served`/`Parked` it will receive its response without the
+    /// caller dispatching anything.
+    pub fn admit(self: &Arc<Self>, req: Request, tx: Sender<Response>) -> Admission {
+        if req.cache == CacheMode::Bypass || self.is_inert() {
+            if req.cache == CacheMode::Bypass {
+                self.bypassed.fetch_add(1, Ordering::Relaxed);
+            }
+            return Admission::Execute {
+                request: req,
+                on_done: Box::new(move |resp| {
+                    let _ = tx.send(resp);
+                }),
+            };
+        }
+        let minted = self.digest.load(Ordering::SeqCst);
+        let key = CacheKey::of(&req, minted, self.backend);
+        let arrived = Instant::now();
+        if let Some(store) = &self.store {
+            if let Some(sample) = store.get(key) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                // cached responses carry id 0 (no engine ever assigned one)
+                let _ = tx.send(sample.response_for(
+                    0,
+                    req.return_images,
+                    arrived.elapsed().as_secs_f64(),
+                    true,
+                ));
+                return Admission::Served;
+            }
+        }
+        let waiter = ParkedWaiter { tx, return_images: req.return_images, arrived };
+        // with coalescing the leader's waiter parks in the table beside
+        // everyone else; without it the leader carries its waiter in the
+        // completion closure and every concurrent miss executes
+        let leader_waiter = match &self.coalesce {
+            Some(co) => match co.lead_or_park(key, waiter) {
+                Role::Parked => {
+                    self.coalesced.fetch_add(1, Ordering::Relaxed);
+                    return Admission::Parked;
+                }
+                Role::Leader => {
+                    // close the lookup→lead race: if the previous flight
+                    // for this key completed in the gap, it published
+                    // *before* closing its flight ([`Self::finish`]), so a
+                    // second store probe now sees the sample — serve it
+                    // and fold the fresh flight instead of re-executing.
+                    // Only the leader counts as a hit here: any follower
+                    // drained with it was already counted in
+                    // `coalesced_waiters` when it parked — every request
+                    // lands in exactly one of {hit, miss, coalesced}.
+                    if let Some(store) = &self.store {
+                        if let Some(sample) = store.get(key) {
+                            self.hits.fetch_add(1, Ordering::Relaxed);
+                            for w in co.complete(key) {
+                                let _ = w.tx.send(sample.response_for(
+                                    0,
+                                    w.return_images,
+                                    w.arrived.elapsed().as_secs_f64(),
+                                    true,
+                                ));
+                            }
+                            return Admission::Served;
+                        }
+                    }
+                    None
+                }
+            },
+            None => Some(waiter),
+        };
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        if let Some(store) = &self.store {
+            store.reserve(key);
+        }
+        let mut request = req;
+        request.return_images = true; // the cache needs the pixels
+        let front = self.clone();
+        Admission::Execute {
+            request,
+            on_done: Box::new(move |resp| front.finish(key, minted, leader_waiter, resp)),
+        }
+    }
+
+    /// Publish an execution's outcome: store it (success) or drop the
+    /// in-flight pin (failure), then answer every waiter of the flight —
+    /// each filtered by its own `return_images`, timed from its own
+    /// arrival. Runs on the shard worker thread at completion delivery.
+    ///
+    /// `minted` is the manifest digest the key was minted under: if the
+    /// manifest was reloaded while this execution was in flight (the
+    /// store was flushed, the pin with it), the sample is *not* published
+    /// — no future key can name it, so storing it would only squat on the
+    /// byte budget. The waiters still get their result: their requests
+    /// were admitted (and executed) under the old manifest.
+    fn finish(&self, key: CacheKey, minted: u64, leader: Option<ParkedWaiter>, resp: Response) {
+        let id = resp.id;
+        let (sample, error) = match resp.body {
+            ResponseBody::Ok { outputs } => (
+                Some(Arc::new(CachedSample { outputs, steps_executed: resp.steps_executed })),
+                None,
+            ),
+            ResponseBody::Error { message } => (None, Some(message)),
+        };
+        // publish BEFORE closing the flight: any thread that missed the
+        // store but finds the flight already closed is guaranteed to see
+        // the sample on its leader re-probe — with the store on, a key
+        // can never execute twice concurrently
+        if let Some(store) = &self.store {
+            match &sample {
+                Some(s) if self.digest.load(Ordering::SeqCst) == minted => {
+                    store.publish(key, s.clone());
+                }
+                // error, or manifest reloaded mid-flight (stale sample):
+                // don't store, and drop the in-flight pin — including one
+                // a reserve() racing the invalidation flush may have
+                // re-inserted (cancel never touches Ready entries)
+                _ => store.cancel(key),
+            }
+        }
+        let waiters = match (&self.coalesce, leader) {
+            (Some(co), None) => co.complete(key),
+            (_, Some(w)) => vec![w],
+            (None, None) => Vec::new(),
+        };
+        for w in waiters {
+            let latency_s = w.arrived.elapsed().as_secs_f64();
+            let resp = match (&sample, &error) {
+                (Some(s), _) => s.response_for(id, w.return_images, latency_s, false),
+                (None, Some(message)) => Response {
+                    id,
+                    body: ResponseBody::Error { message: message.clone() },
+                    latency_s,
+                    steps_executed: 0,
+                    cached: false,
+                },
+                (None, None) => unreachable!("response is Ok or Error"),
+            };
+            let _ = w.tx.send(resp);
+        }
+    }
+
+    pub fn metrics(&self) -> CacheMetrics {
+        CacheMetrics {
+            enabled: self.store.is_some(),
+            coalesce_enabled: self.coalesce.is_some(),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            coalesced_waiters: self.coalesced.load(Ordering::Relaxed),
+            bypassed: self.bypassed.load(Ordering::Relaxed),
+            evictions: self.store.as_ref().map(CacheStore::evictions).unwrap_or(0),
+            bytes: self.store.as_ref().map(|s| s.bytes() as u64).unwrap_or(0),
+            capacity_bytes: self.store.as_ref().map(|s| s.budget_bytes() as u64).unwrap_or(0),
+            entries: self.store.as_ref().map(|s| s.entries() as u64).unwrap_or(0),
+            inflight: self.store.as_ref().map(|s| s.inflight() as u64).unwrap_or(0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::SamplerKind;
+    use crate::schedule::{NoiseMode, TauKind};
+    use std::sync::mpsc;
+
+    fn front(cache: bool, coalesce: bool) -> Arc<CacheFront> {
+        Arc::new(CacheFront {
+            store: cache.then(|| CacheStore::new(1 << 20)),
+            coalesce: coalesce.then(Coalescer::new),
+            backend: BackendKind::Reference,
+            digest: AtomicU64::new(0x5eed),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            bypassed: AtomicU64::new(0),
+        })
+    }
+
+    fn req(seed: u64, return_images: bool, cache: CacheMode) -> Request {
+        Request {
+            dataset: "sprites".into(),
+            steps: 5,
+            mode: NoiseMode::Eta(0.0),
+            tau: TauKind::Linear,
+            sampler: SamplerKind::Ddim,
+            body: crate::coordinator::request::RequestBody::Generate { count: 1, seed },
+            return_images,
+            cache,
+        }
+    }
+
+    fn ok_resp(id: u64, outputs: Vec<Vec<f32>>) -> Response {
+        Response {
+            id,
+            body: ResponseBody::Ok { outputs },
+            latency_s: 0.25,
+            steps_executed: 5,
+            cached: false,
+        }
+    }
+
+    #[test]
+    fn miss_execute_publish_then_hit() {
+        let f = front(true, true);
+        let (tx1, rx1) = mpsc::channel();
+        let Admission::Execute { request, on_done } = f.admit(req(7, false, CacheMode::Use), tx1)
+        else {
+            panic!("first arrival must execute");
+        };
+        assert!(request.return_images, "executions behind the cache keep pixels");
+        on_done(ok_resp(3, vec![vec![1.0, 2.0]]));
+        let leader = rx1.recv().unwrap();
+        assert!(!leader.cached);
+        match &leader.body {
+            // the leader asked for no pixels: filtered out despite forcing
+            ResponseBody::Ok { outputs } => assert!(outputs.is_empty()),
+            other => panic!("{other:?}"),
+        }
+        // identical request now hits, and DOES get pixels if it asks
+        let (tx2, rx2) = mpsc::channel();
+        assert!(matches!(f.admit(req(7, true, CacheMode::Use), tx2), Admission::Served));
+        let hit = rx2.recv().unwrap();
+        assert!(hit.cached);
+        assert_eq!(hit.steps_executed, 5);
+        match &hit.body {
+            ResponseBody::Ok { outputs } => assert_eq!(outputs, &vec![vec![1.0, 2.0]]),
+            other => panic!("{other:?}"),
+        }
+        let m = f.metrics();
+        assert_eq!((m.hits, m.misses, m.coalesced_waiters), (1, 1, 0));
+        assert!((m.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn concurrent_identical_requests_coalesce_onto_one_execution() {
+        let f = front(true, true);
+        let (tx1, rx1) = mpsc::channel();
+        let (tx2, rx2) = mpsc::channel();
+        let (tx3, rx3) = mpsc::channel();
+        let Admission::Execute { on_done, .. } = f.admit(req(9, true, CacheMode::Use), tx1)
+        else {
+            panic!("leader executes");
+        };
+        assert!(matches!(f.admit(req(9, false, CacheMode::Use), tx2), Admission::Parked));
+        assert!(matches!(f.admit(req(9, true, CacheMode::Use), tx3), Admission::Parked));
+        on_done(ok_resp(11, vec![vec![0.5]]));
+        let (r1, r2, r3) = (rx1.recv().unwrap(), rx2.recv().unwrap(), rx3.recv().unwrap());
+        for r in [&r1, &r2, &r3] {
+            assert!(!r.cached);
+            assert_eq!(r.steps_executed, 5);
+        }
+        match (&r1.body, &r2.body, &r3.body) {
+            (
+                ResponseBody::Ok { outputs: a },
+                ResponseBody::Ok { outputs: b },
+                ResponseBody::Ok { outputs: c },
+            ) => {
+                assert_eq!(a, &vec![vec![0.5f32]]);
+                assert!(b.is_empty(), "parked waiter did not ask for pixels");
+                assert_eq!(c, a, "pixel-wanting waiter shares the leader's outputs");
+            }
+            other => panic!("{other:?}"),
+        }
+        let m = f.metrics();
+        assert_eq!((m.hits, m.misses, m.coalesced_waiters), (0, 1, 2));
+    }
+
+    #[test]
+    fn bypass_skips_everything() {
+        let f = front(true, true);
+        // prime the store
+        let (tx, rx) = mpsc::channel();
+        let Admission::Execute { on_done, .. } = f.admit(req(1, true, CacheMode::Use), tx)
+        else {
+            panic!()
+        };
+        on_done(ok_resp(1, vec![vec![1.0]]));
+        rx.recv().unwrap();
+        // bypass: same key, but must execute again and not coalesce
+        let (tx, rx) = mpsc::channel();
+        let Admission::Execute { request, on_done } = f.admit(req(1, true, CacheMode::Bypass), tx)
+        else {
+            panic!("bypass must execute");
+        };
+        assert!(request.return_images);
+        on_done(ok_resp(2, vec![vec![9.0]]));
+        let r = rx.recv().unwrap();
+        assert!(!r.cached);
+        let m = f.metrics();
+        assert_eq!(m.bypassed, 1);
+        assert_eq!(m.hits, 0);
+    }
+
+    #[test]
+    fn error_responses_are_fanned_out_and_never_cached() {
+        let f = front(true, true);
+        let (tx1, rx1) = mpsc::channel();
+        let (tx2, rx2) = mpsc::channel();
+        let Admission::Execute { on_done, .. } = f.admit(req(5, false, CacheMode::Use), tx1)
+        else {
+            panic!()
+        };
+        assert!(matches!(f.admit(req(5, false, CacheMode::Use), tx2), Admission::Parked));
+        on_done(Response {
+            id: 0,
+            body: ResponseBody::Error { message: "queue full".into() },
+            latency_s: 0.0,
+            steps_executed: 0,
+            cached: false,
+        });
+        for rx in [rx1, rx2] {
+            let r = rx.recv().unwrap();
+            assert!(matches!(r.body, ResponseBody::Error { .. }));
+            assert!(!r.cached);
+        }
+        // the failed key is unpinned and free: next arrival executes fresh
+        let (tx3, _rx3) = mpsc::channel();
+        assert!(matches!(
+            f.admit(req(5, false, CacheMode::Use), tx3),
+            Admission::Execute { .. }
+        ));
+        assert_eq!(f.metrics().entries, 0);
+        assert_eq!(f.metrics().inflight, 0);
+    }
+
+    #[test]
+    fn coalesce_off_executes_every_concurrent_miss() {
+        let f = front(true, false);
+        let (tx1, rx1) = mpsc::channel();
+        let (tx2, rx2) = mpsc::channel();
+        let Admission::Execute { on_done: d1, .. } = f.admit(req(2, true, CacheMode::Use), tx1)
+        else {
+            panic!()
+        };
+        let Admission::Execute { on_done: d2, .. } = f.admit(req(2, true, CacheMode::Use), tx2)
+        else {
+            panic!("coalesce off: concurrent identical misses both execute");
+        };
+        d1(ok_resp(1, vec![vec![3.0]]));
+        d2(ok_resp(2, vec![vec![3.0]]));
+        assert!(!rx1.recv().unwrap().cached);
+        assert!(!rx2.recv().unwrap().cached);
+        let m = f.metrics();
+        assert_eq!((m.misses, m.coalesced_waiters, m.entries), (2, 0, 1));
+        // and the store still serves the published result
+        let (tx3, rx3) = mpsc::channel();
+        assert!(matches!(f.admit(req(2, true, CacheMode::Use), tx3), Admission::Served));
+        assert!(rx3.recv().unwrap().cached);
+    }
+
+    #[test]
+    fn cache_off_coalesce_on_single_flights_without_storing() {
+        let f = front(false, true);
+        let (tx1, rx1) = mpsc::channel();
+        let (tx2, rx2) = mpsc::channel();
+        let Admission::Execute { on_done, .. } = f.admit(req(4, true, CacheMode::Use), tx1)
+        else {
+            panic!()
+        };
+        assert!(matches!(f.admit(req(4, true, CacheMode::Use), tx2), Admission::Parked));
+        on_done(ok_resp(1, vec![vec![7.0]]));
+        assert!(!rx1.recv().unwrap().cached);
+        assert!(!rx2.recv().unwrap().cached);
+        // no store: the next identical request executes again
+        let (tx3, _rx3) = mpsc::channel();
+        assert!(matches!(
+            f.admit(req(4, true, CacheMode::Use), tx3),
+            Admission::Execute { .. }
+        ));
+        let m = f.metrics();
+        assert!(!m.enabled && m.coalesce_enabled);
+        assert_eq!((m.hits, m.coalesced_waiters), (0, 1));
+    }
+
+    #[test]
+    fn stale_digest_execution_is_not_published() {
+        let f = front(true, true);
+        let (tx, rx) = mpsc::channel();
+        let Admission::Execute { on_done, .. } = f.admit(req(8, true, CacheMode::Use), tx)
+        else {
+            panic!()
+        };
+        // manifest reload lands while the execution is in flight: the
+        // store is flushed and future keys mint under the new digest
+        f.digest.store(0x9999, Ordering::SeqCst);
+        if let Some(store) = &f.store {
+            store.clear();
+        }
+        on_done(ok_resp(1, vec![vec![2.5]]));
+        // the waiter still gets its (old-manifest) result...
+        let r = rx.recv().unwrap();
+        assert!(!r.cached);
+        match &r.body {
+            ResponseBody::Ok { outputs } => assert_eq!(outputs, &vec![vec![2.5f32]]),
+            other => panic!("{other:?}"),
+        }
+        // ...but nothing unreachable squats on the byte budget
+        let m = f.metrics();
+        assert_eq!((m.entries, m.inflight, m.bytes), (0, 0, 0));
+        // and the same request under the new digest executes fresh
+        let (tx2, _rx2) = mpsc::channel();
+        assert!(matches!(
+            f.admit(req(8, true, CacheMode::Use), tx2),
+            Admission::Execute { .. }
+        ));
+    }
+
+    #[test]
+    fn inert_front_passes_through() {
+        let f = front(false, false);
+        assert!(f.is_inert());
+        let (tx, rx) = mpsc::channel();
+        let Admission::Execute { request, on_done } = f.admit(req(6, false, CacheMode::Use), tx)
+        else {
+            panic!()
+        };
+        assert!(!request.return_images, "inert front must not rewrite the request");
+        on_done(ok_resp(1, Vec::new()));
+        assert!(!rx.recv().unwrap().cached);
+    }
+}

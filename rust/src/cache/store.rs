@@ -1,0 +1,410 @@
+//! Byte-budgeted sharded LRU over completed samples.
+//!
+//! Layout: N shards, each its own mutex — a hit on one shard never
+//! contends with a publish on another (the coordinator's connection
+//! threads all race through here). The total byte budget is divided
+//! evenly across shards, so the global invariant `bytes() <= budget`
+//! holds without a cross-shard lock.
+//!
+//! Entries are either **ready** (a completed [`CachedSample`], accounted
+//! against the budget, tracked in strict recency order) or **in-flight**
+//! (a pinned placeholder some leader is currently computing — zero bytes,
+//! *never* evicted; the single-flight table in [`super::coalesce`] holds
+//! the waiters, this marker only protects the slot from pressure).
+//! Eviction is strict LRU over ready entries: recency is a
+//! `BTreeMap<stamp, key>` (stamp = per-shard monotone counter, refreshed
+//! on every hit), so the evictee is always the least-recently-used ready
+//! entry — property-tested against a model in `tests/cache_properties.rs`.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
+
+use crate::cache::key::CacheKey;
+use crate::coordinator::request::{Response, ResponseBody};
+
+/// One completed execution, as stored: the full per-lane outputs
+/// (executions behind the cache always run with `return_images` forced
+/// on) plus the executable-step cost the original run paid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CachedSample {
+    pub outputs: Vec<Vec<f32>>,
+    pub steps_executed: usize,
+}
+
+/// Fixed per-entry / per-row bookkeeping estimate added on top of the raw
+/// f32 payload when charging the budget (map entry, recency node, Vec
+/// headers). An estimate, not an allocator audit — the invariant that
+/// matters is that the charge is monotone in payload size and consistent.
+const ENTRY_OVERHEAD: usize = 96;
+const ROW_OVERHEAD: usize = 32;
+
+impl CachedSample {
+    /// Bytes this sample charges against the store budget.
+    pub fn cost_bytes(&self) -> usize {
+        ENTRY_OVERHEAD
+            + self
+                .outputs
+                .iter()
+                .map(|r| r.len() * std::mem::size_of::<f32>() + ROW_OVERHEAD)
+                .sum::<usize>()
+    }
+
+    /// Materialise a wire response from the cached sample. `return_images`
+    /// is applied per caller — the sample always holds the outputs, each
+    /// waiter only gets them if it asked.
+    pub fn response_for(
+        &self,
+        id: u64,
+        return_images: bool,
+        latency_s: f64,
+        cached: bool,
+    ) -> Response {
+        Response {
+            id,
+            body: ResponseBody::Ok {
+                outputs: if return_images { self.outputs.clone() } else { Vec::new() },
+            },
+            latency_s,
+            steps_executed: self.steps_executed,
+            cached,
+        }
+    }
+}
+
+/// What a non-touching probe sees (test / metrics support).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Probe {
+    Absent,
+    InFlight,
+    Ready,
+}
+
+enum Slot {
+    /// Pinned placeholder: a leader is executing this key right now.
+    InFlight,
+    Ready(Arc<CachedSample>),
+}
+
+struct Entry {
+    slot: Slot,
+    /// Recency stamp (key into `Shard::recency`); unused for in-flight.
+    stamp: u64,
+    bytes: usize,
+}
+
+#[derive(Default)]
+struct Shard {
+    map: HashMap<u128, Entry>,
+    /// stamp -> key, ready entries only, ascending = least recent first.
+    recency: BTreeMap<u64, u128>,
+    next_stamp: u64,
+    bytes: usize,
+    evictions: u64,
+}
+
+impl Shard {
+    fn touch(&mut self, key: u128) {
+        let stamp = self.next_stamp;
+        self.next_stamp += 1;
+        match self.map.get_mut(&key) {
+            Some(e) if matches!(e.slot, Slot::Ready(_)) => {
+                self.recency.remove(&e.stamp);
+                e.stamp = stamp;
+                self.recency.insert(stamp, key);
+            }
+            _ => {}
+        }
+    }
+
+    fn evict_to(&mut self, budget: usize) {
+        while self.bytes > budget {
+            // least-recent ready entry; in-flight entries are not in the
+            // recency index, so pressure can never evict them
+            let Some((&stamp, &key)) = self.recency.iter().next() else { break };
+            self.recency.remove(&stamp);
+            let e = self.map.remove(&key).expect("recency entry has a map entry");
+            self.bytes -= e.bytes;
+            self.evictions += 1;
+        }
+    }
+}
+
+/// The sharded store. All methods take `&self`; shared behind an `Arc`.
+pub struct CacheStore {
+    shards: Vec<Mutex<Shard>>,
+    /// Per-shard byte budget (total budget / shard count).
+    shard_budget: usize,
+    total_budget: usize,
+}
+
+/// Default shard count — enough to keep connection threads off each
+/// other's locks without shrinking per-shard budgets into uselessness.
+pub const DEFAULT_STORE_SHARDS: usize = 8;
+
+/// Minimum bytes a shard should command before it is worth splitting the
+/// budget further: below this, sharding would make ordinary samples
+/// "oversize" for their shard and the cache silently inert.
+const MIN_SHARD_BUDGET: usize = 64 << 10;
+
+impl CacheStore {
+    /// Build with the default shard count, scaled *down* for small
+    /// budgets so each shard can still hold real samples — a
+    /// `--cache-bytes 4096` cache stores 4 KiB samples in one shard
+    /// instead of rejecting everything over 512 bytes across eight.
+    pub fn new(budget_bytes: usize) -> CacheStore {
+        let shards = (budget_bytes / MIN_SHARD_BUDGET).clamp(1, DEFAULT_STORE_SHARDS);
+        Self::with_shards(budget_bytes, shards)
+    }
+
+    /// Explicit shard count (tests use 1 to pin strict global LRU order).
+    pub fn with_shards(budget_bytes: usize, shards: usize) -> CacheStore {
+        let shards = shards.max(1);
+        CacheStore {
+            shards: (0..shards).map(|_| Mutex::new(Shard::default())).collect(),
+            shard_budget: budget_bytes / shards,
+            total_budget: budget_bytes,
+        }
+    }
+
+    fn shard(&self, key: CacheKey) -> std::sync::MutexGuard<'_, Shard> {
+        self.shards[key.shard(self.shards.len())].lock().unwrap()
+    }
+
+    /// Look up a completed sample; a hit refreshes its recency.
+    pub fn get(&self, key: CacheKey) -> Option<Arc<CachedSample>> {
+        let mut s = self.shard(key);
+        let sample = match s.map.get(&key.0) {
+            Some(Entry { slot: Slot::Ready(sample), .. }) => sample.clone(),
+            _ => return None,
+        };
+        s.touch(key.0);
+        Some(sample)
+    }
+
+    /// Pin `key` as in-flight (a leader is about to execute it). No-op if
+    /// the key is already present — an existing ready entry is *not*
+    /// clobbered (the racing leader will simply re-publish over it).
+    pub fn reserve(&self, key: CacheKey) {
+        let mut s = self.shard(key);
+        s.map
+            .entry(key.0)
+            .or_insert_with(|| Entry { slot: Slot::InFlight, stamp: 0, bytes: 0 });
+    }
+
+    /// Replace the in-flight marker with the completed sample and evict
+    /// LRU entries down to the shard budget. A sample too large for the
+    /// budget is not stored at all (the marker is dropped); publish over
+    /// an existing ready entry just refreshes it.
+    pub fn publish(&self, key: CacheKey, sample: Arc<CachedSample>) {
+        let cost = sample.cost_bytes();
+        let mut s = self.shard(key);
+        if cost > self.shard_budget {
+            // un-storable: drop the marker so the slot doesn't pin forever
+            if matches!(s.map.get(&key.0), Some(Entry { slot: Slot::InFlight, .. })) {
+                s.map.remove(&key.0);
+            }
+            return;
+        }
+        let stamp = s.next_stamp;
+        s.next_stamp += 1;
+        if let Some(old) = s.map.remove(&key.0) {
+            if matches!(old.slot, Slot::Ready(_)) {
+                s.recency.remove(&old.stamp);
+                s.bytes -= old.bytes;
+            }
+        }
+        s.map.insert(key.0, Entry { slot: Slot::Ready(sample), stamp, bytes: cost });
+        s.recency.insert(stamp, key.0);
+        s.bytes += cost;
+        let budget = self.shard_budget;
+        s.evict_to(budget);
+    }
+
+    /// Drop an in-flight marker whose execution failed (ready entries are
+    /// left alone).
+    pub fn cancel(&self, key: CacheKey) {
+        let mut s = self.shard(key);
+        if matches!(s.map.get(&key.0), Some(Entry { slot: Slot::InFlight, .. })) {
+            s.map.remove(&key.0);
+        }
+    }
+
+    /// Flush every ready entry and in-flight marker (manifest-digest
+    /// invalidation). Eviction counters are preserved.
+    pub fn clear(&self) {
+        for shard in &self.shards {
+            let mut s = shard.lock().unwrap();
+            s.map.clear();
+            s.recency.clear();
+            s.bytes = 0;
+        }
+    }
+
+    /// Non-touching probe (tests, metrics) — never perturbs recency.
+    pub fn probe(&self, key: CacheKey) -> Probe {
+        let s = self.shard(key);
+        match s.map.get(&key.0) {
+            None => Probe::Absent,
+            Some(Entry { slot: Slot::InFlight, .. }) => Probe::InFlight,
+            Some(Entry { slot: Slot::Ready(_), .. }) => Probe::Ready,
+        }
+    }
+
+    /// Bytes currently charged across all shards (ready entries only).
+    pub fn bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().bytes).sum()
+    }
+
+    /// Ready entries resident right now.
+    pub fn entries(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().recency.len()).sum()
+    }
+
+    /// In-flight (pinned) markers resident right now.
+    pub fn inflight(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| {
+                let s = s.lock().unwrap();
+                s.map.len() - s.recency.len()
+            })
+            .sum()
+    }
+
+    /// Total evictions since construction.
+    pub fn evictions(&self) -> u64 {
+        self.shards.iter().map(|s| s.lock().unwrap().evictions).sum()
+    }
+
+    /// The configured total byte budget.
+    pub fn budget_bytes(&self) -> usize {
+        self.total_budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(n: u128) -> CacheKey {
+        CacheKey(n)
+    }
+
+    fn sample(rows: usize, row_len: usize) -> Arc<CachedSample> {
+        Arc::new(CachedSample {
+            outputs: (0..rows).map(|i| vec![i as f32; row_len]).collect(),
+            steps_executed: rows * 10,
+        })
+    }
+
+    #[test]
+    fn get_publish_round_trip_and_budget() {
+        let store = CacheStore::with_shards(10_000, 1);
+        assert!(store.get(k(1)).is_none());
+        store.reserve(k(1));
+        assert_eq!(store.probe(k(1)), Probe::InFlight);
+        assert_eq!(store.bytes(), 0, "in-flight markers charge nothing");
+        let s = sample(2, 64);
+        store.publish(k(1), s.clone());
+        assert_eq!(store.probe(k(1)), Probe::Ready);
+        assert_eq!(store.get(k(1)).unwrap().outputs, s.outputs);
+        assert_eq!(store.bytes(), s.cost_bytes());
+        assert_eq!(store.entries(), 1);
+        assert_eq!(store.inflight(), 0);
+    }
+
+    #[test]
+    fn strict_lru_eviction_with_touch() {
+        // budget fits exactly 3 of these samples
+        let s = sample(1, 64);
+        let store = CacheStore::with_shards(3 * s.cost_bytes(), 1);
+        for i in 1..=3u128 {
+            store.publish(k(i), sample(1, 64));
+        }
+        // touch 1 so 2 becomes the LRU
+        assert!(store.get(k(1)).is_some());
+        store.publish(k(4), sample(1, 64));
+        assert_eq!(store.probe(k(2)), Probe::Absent, "LRU (2) evicted, not touched (1)");
+        assert_eq!(store.probe(k(1)), Probe::Ready);
+        assert_eq!(store.probe(k(3)), Probe::Ready);
+        assert_eq!(store.probe(k(4)), Probe::Ready);
+        assert_eq!(store.evictions(), 1);
+        assert!(store.bytes() <= store.budget_bytes());
+    }
+
+    #[test]
+    fn inflight_markers_survive_pressure() {
+        let s = sample(1, 64);
+        let store = CacheStore::with_shards(2 * s.cost_bytes(), 1);
+        store.reserve(k(100));
+        for i in 1..=10u128 {
+            store.publish(k(i), sample(1, 64));
+        }
+        assert_eq!(store.probe(k(100)), Probe::InFlight, "pinned marker outlived pressure");
+        assert!(store.bytes() <= store.budget_bytes());
+        assert_eq!(store.inflight(), 1);
+        store.cancel(k(100));
+        assert_eq!(store.probe(k(100)), Probe::Absent);
+    }
+
+    #[test]
+    fn oversize_sample_is_not_stored_and_unpins() {
+        let store = CacheStore::with_shards(64, 1);
+        store.reserve(k(1));
+        store.publish(k(1), sample(4, 4096));
+        assert_eq!(store.probe(k(1)), Probe::Absent);
+        assert_eq!(store.bytes(), 0);
+    }
+
+    #[test]
+    fn tiny_budgets_scale_shards_down_instead_of_going_inert() {
+        // a 4 KiB cache must still be able to store a ~1.2 KiB sample —
+        // with the full 8-way split it could not (512 B per shard)
+        let store = CacheStore::new(4096);
+        let s = sample(1, 256); // 96 + 256*4 + 32 = 1152 bytes
+        assert!(s.cost_bytes() > 4096 / DEFAULT_STORE_SHARDS);
+        store.publish(k(1), s);
+        assert_eq!(store.probe(k(1)), Probe::Ready);
+        // large budgets keep the default shard count semantics: entries
+        // land and the global budget holds
+        let big = CacheStore::new(64 << 20);
+        big.publish(k(2), sample(4, 256));
+        assert_eq!(big.probe(k(2)), Probe::Ready);
+    }
+
+    #[test]
+    fn cancel_leaves_ready_entries_alone() {
+        let store = CacheStore::with_shards(10_000, 1);
+        store.publish(k(1), sample(1, 8));
+        store.cancel(k(1));
+        assert_eq!(store.probe(k(1)), Probe::Ready);
+    }
+
+    #[test]
+    fn clear_flushes_everything() {
+        let store = CacheStore::with_shards(10_000, 2);
+        store.publish(k(1), sample(1, 8));
+        store.reserve(k(2));
+        store.clear();
+        assert_eq!(store.bytes(), 0);
+        assert_eq!(store.entries(), 0);
+        assert_eq!(store.inflight(), 0);
+        assert_eq!(store.probe(k(1)), Probe::Absent);
+    }
+
+    #[test]
+    fn response_for_filters_outputs_per_caller() {
+        let s = sample(2, 4);
+        let with = s.response_for(0, true, 0.5, true);
+        let without = s.response_for(0, false, 0.5, true);
+        assert!(with.cached && without.cached);
+        assert_eq!(with.steps_executed, s.steps_executed);
+        match (&with.body, &without.body) {
+            (ResponseBody::Ok { outputs: a }, ResponseBody::Ok { outputs: b }) => {
+                assert_eq!(a, &s.outputs);
+                assert!(b.is_empty());
+            }
+            _ => panic!("expected Ok bodies"),
+        }
+    }
+}

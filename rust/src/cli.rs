@@ -87,6 +87,15 @@ impl Args {
     }
 }
 
+/// Parse an `on|off` toggle flag value (`--cache on`, `--coalesce off`).
+pub fn parse_on_off(flag: &str, s: &str) -> Result<bool> {
+    match s {
+        "on" => Ok(true),
+        "off" => Ok(false),
+        other => Err(Error::Request(format!("--{flag} wants on|off, got '{other}'"))),
+    }
+}
+
 /// Parse a `--placement` value: `dataset=shards[,dataset=shards...]`,
 /// e.g. `sprites=4,blobs=2`. Duplicate datasets are rejected here (and
 /// again by `ServeConfig::validate`, for placements built in code).
@@ -167,6 +176,16 @@ mod tests {
         );
         assert_eq!(parse_placement(" a = 1 ").unwrap(), vec![("a".to_string(), 1)]);
         assert!(parse_placement("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn on_off_parses() {
+        assert!(parse_on_off("cache", "on").unwrap());
+        assert!(!parse_on_off("cache", "off").unwrap());
+        for bad in ["true", "1", "ON", ""] {
+            let err = parse_on_off("coalesce", bad).unwrap_err().to_string();
+            assert!(err.contains("--coalesce"), "{err}");
+        }
     }
 
     #[test]

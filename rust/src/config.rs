@@ -57,6 +57,18 @@ pub struct ServeConfig {
     /// running one padded call. 0 splits maximally; 1 restores the old
     /// single-bucket policy.
     pub max_padding_waste: f64,
+    /// Completed-sample cache (`--cache on|off`): identical requests
+    /// (same dataset/steps/τ/η/sampler/seed-or-state, keyed by
+    /// [`crate::cache::key`]) are answered from memory without touching
+    /// any engine. Sound because sampling is a deterministic function of
+    /// those fields (η > 0 included — noise streams are request-seeded).
+    pub cache_enabled: bool,
+    /// Byte budget of the sample cache (`--cache-bytes`), split evenly
+    /// across the store's shards; strict LRU within the budget.
+    pub cache_bytes: usize,
+    /// Single-flight coalescing (`--coalesce on|off`): concurrent
+    /// identical requests share one execution instead of each running.
+    pub coalesce_enabled: bool,
 }
 
 impl Default for ServeConfig {
@@ -76,6 +88,9 @@ impl Default for ServeConfig {
             drain_timeout_ms: 2000,
             pipeline_depth: 1,
             max_padding_waste: DEFAULT_MAX_PADDING_WASTE,
+            cache_enabled: true,
+            cache_bytes: 64 << 20, // 64 MiB ≈ 60k cached 16×16 lanes
+            coalesce_enabled: true,
         }
     }
 }
@@ -112,6 +127,13 @@ impl ServeConfig {
                  and anything past ~3 only adds latency (max 8)",
                 self.pipeline_depth
             )));
+        }
+        if self.cache_enabled && self.cache_bytes == 0 {
+            return Err(Error::Coordinator(
+                "cache_bytes must be > 0 when the cache is enabled (use --cache off \
+                 to disable it instead of a zero budget)"
+                    .into(),
+            ));
         }
         if !(0.0..=1.0).contains(&self.max_padding_waste) {
             return Err(Error::Coordinator(format!(
@@ -166,6 +188,7 @@ mod tests {
             ServeConfig { shards: 0, ..Default::default() },
             ServeConfig { pipeline_depth: 0, ..Default::default() },
             ServeConfig { pipeline_depth: 9, ..Default::default() },
+            ServeConfig { cache_enabled: true, cache_bytes: 0, ..Default::default() },
             ServeConfig { max_padding_waste: -0.1, ..Default::default() },
             ServeConfig { max_padding_waste: 1.5, ..Default::default() },
             ServeConfig { max_padding_waste: f64::NAN, ..Default::default() },
@@ -187,6 +210,16 @@ mod tests {
             .validate()
             .unwrap();
         ServeConfig { max_padding_waste: 1.0, ..Default::default() }.validate().unwrap();
+    }
+
+    #[test]
+    fn cache_knobs_validate() {
+        // off + zero budget is fine (the budget is simply unused)
+        ServeConfig { cache_enabled: false, cache_bytes: 0, ..Default::default() }
+            .validate()
+            .unwrap();
+        ServeConfig { coalesce_enabled: false, ..Default::default() }.validate().unwrap();
+        ServeConfig { cache_bytes: 4096, ..Default::default() }.validate().unwrap();
     }
 
     #[test]

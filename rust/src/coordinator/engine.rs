@@ -340,12 +340,19 @@ impl Engine {
                         self.lanes.push(Lane { req: id, lane_idx: i, traj });
                     }
                 }
+                // caller-supplied-state lanes seed their noise streams from
+                // the *content* (FNV over the f32 bits), never from the
+                // engine-assigned id: identical requests must consume
+                // identical noise on any engine/shard/process — the
+                // determinism contract the sample cache serves under
+                // (stochastic decode included)
                 RequestBody::Decode { latents } => {
+                    let base = crate::rng::state_seed(1, &latents);
                     for (i, x) in latents.into_iter().enumerate() {
                         let traj = Trajectory::from_state_with(
                             plan.clone(),
                             x,
-                            id * 7919 + i as u64,
+                            base.wrapping_add(i as u64),
                             kernel,
                         );
                         self.lanes.push(Lane { req: id, lane_idx: i, traj });
@@ -353,11 +360,12 @@ impl Engine {
                 }
                 RequestBody::Encode { images } => {
                     debug_assert_eq!(plan.direction, Direction::Encode);
+                    let base = crate::rng::state_seed(2, &images);
                     for (i, x) in images.into_iter().enumerate() {
                         let traj = Trajectory::from_state_with(
                             plan.clone(),
                             x,
-                            id * 7919 + i as u64,
+                            base.wrapping_add(i as u64),
                             kernel,
                         );
                         self.lanes.push(Lane { req: id, lane_idx: i, traj });
@@ -604,6 +612,7 @@ impl Engine {
                     body: ResponseBody::Ok { outputs },
                     latency_s: latency,
                     steps_executed: inf.steps_total,
+                    cached: false,
                 });
             }
         }
@@ -659,6 +668,7 @@ impl Engine {
                 body: ResponseBody::Error { message: message.to_string() },
                 latency_s: p.submitted.elapsed().as_secs_f64(),
                 steps_executed: 0,
+                cached: false,
             });
             aborted += 1;
         }
@@ -670,6 +680,7 @@ impl Engine {
                 body: ResponseBody::Error { message: message.to_string() },
                 latency_s: inf.submitted.elapsed().as_secs_f64(),
                 steps_executed: 0,
+                cached: false,
             });
             aborted += 1;
         }

@@ -18,7 +18,8 @@
 //! - [`engine`]:  lanes + tick loop + bucket selection (the batcher)
 //! - [`shard`]:   one worker thread owning one engine + its tick loop
 //! - [`router`]:  per-dataset shard pools, least-loaded dispatch, merged
-//!   metrics, drain-on-shutdown
+//!   metrics, drain-on-shutdown — fronted by the sample cache +
+//!   single-flight coalescer ([`crate::cache`]) ahead of shard dispatch
 //! - [`metrics`]: latency histograms (mergeable), occupancy, counters
 //! - [`server`]:  std::net JSON-line transport over the router
 
@@ -35,7 +36,7 @@ pub use engine::Engine;
 pub use executor::PipelineExecutor;
 pub use metrics::{Histogram, MetricsSnapshot};
 pub use queue::BoundedQueue;
-pub use request::{Request, RequestBody, RequestId, Response, ResponseBody};
+pub use request::{CacheMode, Request, RequestBody, RequestId, Response, ResponseBody};
 pub use router::Router;
 pub use server::Server;
 pub use shard::{EngineShard, ShardStats};

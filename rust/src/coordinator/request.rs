@@ -15,6 +15,31 @@ use crate::schedule::{NoiseMode, TauKind};
 /// Monotonically increasing request identifier (assigned by the engine).
 pub type RequestId = u64;
 
+/// Per-request cache directive (the wire's `"cache"` field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CacheMode {
+    /// Normal path: serve from / publish to the sample cache, coalesce
+    /// onto identical in-flight executions.
+    #[default]
+    Use,
+    /// `"cache":"bypass"` — skip lookup, coalescing, and publication;
+    /// always execute. For clients probing the live engines (or refusing
+    /// a shared result on principle).
+    Bypass,
+}
+
+impl CacheMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "use" | "default" => Ok(CacheMode::Use),
+            "bypass" => Ok(CacheMode::Bypass),
+            other => Err(Error::Request(format!(
+                "unknown cache directive '{other}' (want use | bypass)"
+            ))),
+        }
+    }
+}
+
 /// What the request wants done.
 #[derive(Debug, Clone)]
 pub enum RequestBody {
@@ -42,6 +67,10 @@ pub struct Request {
     pub body: RequestBody,
     /// Return pixel data in the response (else just stats).
     pub return_images: bool,
+    /// Cache directive (`"cache":"bypass"` opts this request out of the
+    /// sample cache and coalescing). Not part of the cache key — like
+    /// `return_images`, it shapes delivery, not the sample.
+    pub cache: CacheMode,
 }
 
 impl Request {
@@ -86,6 +115,10 @@ impl Request {
             Some(s) => SamplerKind::parse(s.as_str()?)?,
             None => default_sampler,
         };
+        let cache = match v.get_opt("cache") {
+            Some(c) => CacheMode::parse(c.as_str()?)?,
+            None => CacheMode::Use,
+        };
         let parse_matrix = |key: &str| -> Result<Vec<Vec<f32>>> {
             v.get(key)?
                 .as_arr()?
@@ -113,7 +146,7 @@ impl Request {
             "encode" => RequestBody::Encode { images: parse_matrix("images")? },
             other => return Err(Error::Request(format!("unknown op '{other}'"))),
         };
-        let req = Request { dataset, steps, mode, tau, sampler, body, return_images };
+        let req = Request { dataset, steps, mode, tau, sampler, body, return_images, cache };
         if req.lane_count() == 0 {
             return Err(Error::Request("request has zero lanes".into()));
         }
@@ -137,8 +170,15 @@ pub struct Response {
     pub body: ResponseBody,
     /// queue-to-completion latency, seconds.
     pub latency_s: f64,
-    /// executable steps consumed by this request (count × dim(τ)).
+    /// Executable steps the *producing execution* consumed (count ×
+    /// dim(τ)). A cached response reports the original run's cost — it is
+    /// a property of the sample; `cached` says whether this request paid
+    /// it.
     pub steps_executed: usize,
+    /// Answered from the completed-sample cache (no engine touched)?
+    /// Coalesced waiters report `false`: their execution was shared, not
+    /// replayed from the store.
+    pub cached: bool,
 }
 
 /// Result payload.
@@ -164,6 +204,7 @@ impl Response {
                 jobj![
                     ("id", self.id),
                     ("ok", true),
+                    ("cached", self.cached),
                     ("latency_s", self.latency_s),
                     ("steps_executed", self.steps_executed),
                     ("outputs", Value::Arr(imgs)),
@@ -200,6 +241,27 @@ mod tests {
         assert_eq!(r.sampler, SamplerKind::Ddim);
         assert_eq!(r.lane_count(), 4);
         assert!(r.return_images);
+        assert_eq!(r.cache, CacheMode::Use);
+    }
+
+    #[test]
+    fn parse_cache_directive() {
+        let v = json::parse(
+            r#"{"op":"generate","dataset":"d","steps":5,"count":1,"seed":0,"cache":"bypass"}"#,
+        )
+        .unwrap();
+        assert_eq!(Request::from_json(&v).unwrap().cache, CacheMode::Bypass);
+        let v = json::parse(
+            r#"{"op":"generate","dataset":"d","steps":5,"count":1,"seed":0,"cache":"use"}"#,
+        )
+        .unwrap();
+        assert_eq!(Request::from_json(&v).unwrap().cache, CacheMode::Use);
+        let v = json::parse(
+            r#"{"op":"generate","dataset":"d","steps":5,"count":1,"seed":0,"cache":"never"}"#,
+        )
+        .unwrap();
+        let err = Request::from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("cache directive"), "{err}");
     }
 
     #[test]
@@ -312,10 +374,12 @@ mod tests {
             body: ResponseBody::Ok { outputs: vec![vec![0.5, -0.25]] },
             latency_s: 0.125,
             steps_executed: 20,
+            cached: true,
         };
         let v = json::parse(&r.to_json_line()).unwrap();
         assert!(v.get("ok").unwrap().as_bool().unwrap());
         assert_eq!(v.get("id").unwrap().as_usize().unwrap(), 3);
+        assert!(v.get("cached").unwrap().as_bool().unwrap());
         let outs = v.get("outputs").unwrap().as_arr().unwrap();
         assert_eq!(outs[0].as_f64_vec().unwrap(), vec![0.5, -0.25]);
         let e = Response {
@@ -323,6 +387,7 @@ mod tests {
             body: ResponseBody::Error { message: "queue full".into() },
             latency_s: 0.0,
             steps_executed: 0,
+            cached: false,
         };
         let v = json::parse(&e.to_json_line()).unwrap();
         assert!(!v.get("ok").unwrap().as_bool().unwrap());

@@ -25,9 +25,10 @@
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver};
-use std::sync::RwLock;
+use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
+use crate::cache::{Admission, CacheFront};
 use crate::config::ServeConfig;
 use crate::coordinator::metrics::{Histogram, MetricsSnapshot};
 use crate::coordinator::request::{Request, Response, ResponseBody};
@@ -65,6 +66,10 @@ pub struct Router {
     /// Monotonic shard id across all pools (stable in metrics output).
     next_shard_id: AtomicUsize,
     stopping: AtomicBool,
+    /// Sample cache + single-flight coalescer, consulted ahead of shard
+    /// dispatch (see [`crate::cache`]). Always present; inert when both
+    /// halves are disabled in config.
+    cache: Arc<CacheFront>,
 }
 
 /// Least-loaded pick with a rotating-cursor tie-break: scan indices in
@@ -91,10 +96,12 @@ impl Router {
     /// warmup, so compile/load failures surface here).
     pub fn start(cfg: ServeConfig) -> Result<Router> {
         cfg.validate()?;
+        let cache = Arc::new(CacheFront::from_config(&cfg)?);
         let router = Router {
             pools: RwLock::new(BTreeMap::new()),
             next_shard_id: AtomicUsize::new(0),
             stopping: AtomicBool::new(false),
+            cache,
             cfg,
         };
         let default = router.cfg.dataset.clone();
@@ -157,6 +164,13 @@ impl Router {
             return Ok(());
         }
         pools.insert(dataset.to_string(), Pool::new(shards));
+        drop(pools);
+        // a fresh pool just re-read the artifact tree: if the manifest was
+        // regenerated since the cache's keys were minted, flush them now
+        // (stale-digest entries could never be *served* — the digest is in
+        // every key — this frees their budget). Best-effort: the engines
+        // just loaded this same manifest successfully.
+        let _ = self.cache.refresh_manifest(&self.cfg.artifact_root);
         Ok(())
     }
 
@@ -168,8 +182,11 @@ impl Router {
         self.bring_up(dataset, true)
     }
 
-    /// Route one request. The returned channel yields exactly one
-    /// [`Response`] — success, rejection, or an explicit shutdown error.
+    /// Route one request through the cache front, then (on a miss that
+    /// leads its flight) to the least-loaded shard. The returned channel
+    /// yields exactly one [`Response`] — a cache hit, a shared coalesced
+    /// result, a fresh execution, a rejection, or an explicit shutdown
+    /// error.
     pub fn submit(&self, req: Request) -> Receiver<Response> {
         let (tx, rx) = mpsc::channel();
         let error = |msg: String| Response {
@@ -177,6 +194,7 @@ impl Router {
             body: ResponseBody::Error { message: msg },
             latency_s: 0.0,
             steps_executed: 0,
+            cached: false,
         };
         if self.stopping.load(Ordering::SeqCst) {
             let _ = tx.send(error("shutting down".into()));
@@ -186,15 +204,28 @@ impl Router {
             let _ = tx.send(error(e.to_string()));
             return rx;
         }
-        let pools = self.pools.read().unwrap();
-        match pools.get(&req.dataset) {
-            Some(pool) if !pool.shards.is_empty() => {
-                let loads: Vec<usize> = pool.shards.iter().map(EngineShard::load).collect();
-                let idx = pick_shard(&loads, pool.cursor.fetch_add(1, Ordering::SeqCst));
-                pool.shards[idx].dispatch(req, tx);
-            }
-            _ => {
-                let _ = tx.send(error(format!("no shards for dataset '{}'", req.dataset)));
+        match self.cache.admit(req, tx) {
+            // answered from the store / parked behind an identical
+            // in-flight execution: nothing reaches any shard
+            Admission::Served | Admission::Parked => {}
+            Admission::Execute { request, on_done } => {
+                let pools = self.pools.read().unwrap();
+                match pools.get(&request.dataset) {
+                    Some(pool) if !pool.shards.is_empty() => {
+                        let loads: Vec<usize> =
+                            pool.shards.iter().map(EngineShard::load).collect();
+                        let idx =
+                            pick_shard(&loads, pool.cursor.fetch_add(1, Ordering::SeqCst));
+                        pool.shards[idx].dispatch(request, on_done);
+                    }
+                    // the completion callback must fire exactly once even
+                    // when no shard exists, so coalesced waiters (if any)
+                    // are answered and the in-flight pin is released
+                    _ => on_done(error(format!(
+                        "no shards for dataset '{}'",
+                        request.dataset
+                    ))),
+                }
             }
         }
         rx
@@ -205,6 +236,18 @@ impl Router {
         self.submit(req)
             .recv()
             .map_err(|_| Error::Coordinator("request dropped during shutdown".into()))
+    }
+
+    /// The sample-cache front (metrics, tests, manual invalidation).
+    pub fn cache(&self) -> &Arc<CacheFront> {
+        &self.cache
+    }
+
+    /// Re-read the manifest from disk and flush the sample cache if its
+    /// digest changed (artifact reload). Returns whether an invalidation
+    /// happened.
+    pub fn refresh_cache_manifest(&self) -> Result<bool> {
+        self.cache.refresh_manifest(&self.cfg.artifact_root)
     }
 
     /// Merged view across every shard: summed counters, bucket-merged
@@ -314,6 +357,7 @@ impl Router {
             ("active_lanes", agg.active_lanes),
             ("queued", agg.queue_depth),
             ("queue_accepted", agg.queue_accepted),
+            ("cache", self.cache.metrics().to_json()),
             ("shards", Value::Arr(shards)),
         ])
     }

@@ -9,8 +9,10 @@
 //!
 //! This module is *pure transport*: connection threads parse a line, hand
 //! the request to the [`Router`], and write the response line back. All
-//! scheduling — shard placement, least-loaded dispatch, tick loops,
-//! drain-on-shutdown — lives in [`super::router`] / [`super::shard`].
+//! scheduling — the sample-cache/coalescing front ([`crate::cache`]),
+//! shard placement, least-loaded dispatch, tick loops, drain-on-shutdown
+//! — lives in [`super::router`] / [`super::shard`]. A request answered
+//! from the cache never leaves the connection thread's submit call.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};

@@ -20,15 +20,20 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::cache::DoneFn;
 use crate::config::ServeConfig;
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::{Histogram, MetricsSnapshot};
 use crate::coordinator::request::{Request, RequestId, Response, ResponseBody};
 use crate::error::{Error, Result};
 
-/// Commands a shard worker understands.
+/// Commands a shard worker understands. A submit carries its completion
+/// callback ([`DoneFn`]) — for plain requests it just sends on the
+/// waiter's channel; for cache-fronted requests it publishes the result
+/// to the sample cache and fans it out to every coalesced waiter, right
+/// here on the worker thread where the engine completed it.
 enum ShardCmd {
-    Submit(Request, Sender<Response>),
+    Submit(Request, DoneFn),
     Stats(Sender<ShardStats>),
 }
 
@@ -130,17 +135,18 @@ impl EngineShard {
         self.engine_load.load(Ordering::SeqCst) + self.pending.load(Ordering::SeqCst)
     }
 
-    /// Hand a request to the worker; `tx` receives exactly one [`Response`]
-    /// (success, rejection, or shutdown error) — never zero.
-    pub fn dispatch(&self, req: Request, tx: Sender<Response>) {
+    /// Hand a request to the worker; `done` is called with exactly one
+    /// [`Response`] (success, rejection, or shutdown error) — never zero,
+    /// never twice.
+    pub fn dispatch(&self, req: Request, done: DoneFn) {
         self.pending.fetch_add(lane_cost(&req), Ordering::SeqCst);
-        let sent = self.cmd_tx.lock().unwrap().send(ShardCmd::Submit(req, tx));
-        if let Err(mpsc::SendError(ShardCmd::Submit(_, tx))) = sent {
+        let sent = self.cmd_tx.lock().unwrap().send(ShardCmd::Submit(req, done));
+        if let Err(mpsc::SendError(ShardCmd::Submit(_, done))) = sent {
             // worker gone: answer the waiter directly. The pending bump is
             // deliberately NOT undone — the worker's exit-time store(0)
             // may already have run, and an underflowing gauge is worse
             // than a dead shard reading as loaded.
-            let _ = tx.send(shutdown_response());
+            done(shutdown_response());
         }
     }
 
@@ -186,12 +192,13 @@ fn shutdown_response() -> Response {
         body: ResponseBody::Error { message: "shutting down".into() },
         latency_s: 0.0,
         steps_executed: 0,
+        cached: false,
     }
 }
 
-fn deliver(waiters: &mut HashMap<RequestId, Sender<Response>>, resp: Response) {
-    if let Some(tx) = waiters.remove(&resp.id) {
-        let _ = tx.send(resp);
+fn deliver(waiters: &mut HashMap<RequestId, DoneFn>, resp: Response) {
+    if let Some(done) = waiters.remove(&resp.id) {
+        done(resp);
     }
 }
 
@@ -226,7 +233,7 @@ fn worker(args: WorkerArgs) {
             return;
         }
     };
-    let mut waiters: HashMap<RequestId, Sender<Response>> = HashMap::new();
+    let mut waiters: HashMap<RequestId, DoneFn> = HashMap::new();
 
     'run: while !stop.load(Ordering::SeqCst) {
         // drain pending commands; block briefly only when fully idle
@@ -286,8 +293,8 @@ fn worker(args: WorkerArgs) {
     // commands still sitting in the channel never reached the engine
     while let Ok(cmd) = cmd_rx.try_recv() {
         match cmd {
-            ShardCmd::Submit(_, tx) => {
-                let _ = tx.send(shutdown_response());
+            ShardCmd::Submit(_, done) => {
+                done(shutdown_response());
             }
             ShardCmd::Stats(tx) => {
                 let _ = tx.send(stats_of(id, &dataset, &engine));
@@ -312,19 +319,20 @@ fn handle_cmd(
     id: usize,
     dataset: &str,
     engine: &mut Engine,
-    waiters: &mut HashMap<RequestId, Sender<Response>>,
+    waiters: &mut HashMap<RequestId, DoneFn>,
 ) {
     match cmd {
-        ShardCmd::Submit(req, tx) => match engine.submit(req) {
+        ShardCmd::Submit(req, done) => match engine.submit(req) {
             Ok(req_id) => {
-                waiters.insert(req_id, tx);
+                waiters.insert(req_id, done);
             }
             Err(e) => {
-                let _ = tx.send(Response {
+                done(Response {
                     id: 0,
                     body: ResponseBody::Error { message: e.to_string() },
                     latency_s: 0.0,
                     steps_executed: 0,
+                    cached: false,
                 });
             }
         },

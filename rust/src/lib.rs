@@ -19,11 +19,13 @@
 //! - substrates: [`json`], [`tensor`], [`rng`], [`linalg`], [`stats`],
 //!   [`schedule`], [`artifacts`], [`testing`]
 //! - runtime: [`runtime`] (PJRT executables), [`sampler`] (trajectories)
-//! - the serving contribution: [`coordinator`]
+//! - the serving contribution: [`coordinator`], fronted by [`cache`]
+//!   (deterministic sample cache + single-flight request coalescing)
 //! - evaluation: [`eval`] (proxy-FID, consistency, reconstruction),
 //!   [`workload`] (request generators for benches/examples)
 
 pub mod artifacts;
+pub mod cache;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -30,6 +30,12 @@ COMMANDS
                 with device execution, bitwise-identical output)
               --max-padding-waste F (0..1; selections padding more than
                 this split into exact sub-batches on bucket boundaries)
+              --cache on|off (default on: identical requests are answered
+                from the deterministic sample cache without re-executing)
+              --cache-bytes N (byte budget of the sample cache, LRU;
+                default 67108864)
+              --coalesce on|off (default on: concurrent identical requests
+                share a single execution)
   generate    --artifacts D --dataset NAME --steps S --eta E|hat --tau linear|quadratic
               --sampler ddim|pf_ode|ab2 --count N --seed K --out FILE.pgm
   encode      --artifacts D --dataset NAME --steps S --seed K
@@ -92,6 +98,13 @@ fn config_from(args: &Args) -> Result<ServeConfig> {
     cfg.drain_timeout_ms = args.get_u64("drain-timeout-ms", cfg.drain_timeout_ms)?;
     cfg.pipeline_depth = args.get_usize("pipeline-depth", cfg.pipeline_depth)?;
     cfg.max_padding_waste = args.get_f64("max-padding-waste", cfg.max_padding_waste)?;
+    if let Some(v) = args.get("cache") {
+        cfg.cache_enabled = ddim_serve::cli::parse_on_off("cache", v)?;
+    }
+    if let Some(v) = args.get("coalesce") {
+        cfg.coalesce_enabled = ddim_serve::cli::parse_on_off("coalesce", v)?;
+    }
+    cfg.cache_bytes = args.get_usize("cache-bytes", cfg.cache_bytes)?;
     cfg.validate()?;
     Ok(cfg)
 }
@@ -99,12 +112,16 @@ fn config_from(args: &Args) -> Result<ServeConfig> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = config_from(args)?;
     println!(
-        "starting ddim-serve: dataset={} artifacts={} backend={} listen={} shards/dataset={}",
+        "starting ddim-serve: dataset={} artifacts={} backend={} listen={} shards/dataset={} \
+         cache={} ({} MiB) coalesce={}",
         cfg.dataset,
         cfg.artifact_root,
         cfg.backend.label(),
         cfg.listen,
-        cfg.shards_for(&cfg.dataset)
+        cfg.shards_for(&cfg.dataset),
+        if cfg.cache_enabled { "on" } else { "off" },
+        cfg.cache_bytes >> 20,
+        if cfg.coalesce_enabled { "on" } else { "off" },
     );
     let server = Server::start(cfg)?;
     println!("listening on {} (ctrl-c to stop)", server.addr());
@@ -133,6 +150,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         sampler,
         body: RequestBody::Generate { count, seed },
         return_images: true,
+        cache: ddim_serve::coordinator::CacheMode::Use,
     })?;
     let t0 = std::time::Instant::now();
     let responses = engine.run_until_idle()?;

@@ -1,0 +1,162 @@
+//! FNV-1a hashing primitives — the substrate's seed-derivation and
+//! content-digest tools. Consumers sit at every layer: the reference
+//! backend derives synthetic model weights from manifest fields
+//! ([`fnv1a`]), the engine seeds caller-supplied-state noise streams
+//! from content bits ([`state_seed`]), and the sample cache builds its
+//! canonical request keys over [`Fnv128`] ([`crate::cache::key`]). The
+//! FNV offset/prime constants live here and nowhere else.
+
+/// FNV-1a, 64-bit, streaming builder.
+#[derive(Debug, Clone)]
+pub struct Fnv64(u64);
+
+const FNV64_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV64_PRIME: u64 = 0x100000001b3;
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Fnv64(FNV64_OFFSET)
+    }
+
+    pub fn byte(&mut self, b: u8) -> &mut Self {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(FNV64_PRIME);
+        self
+    }
+
+    pub fn bytes(&mut self, bs: &[u8]) -> &mut Self {
+        for &b in bs {
+            self.byte(b);
+        }
+        self
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.bytes(&v.to_le_bytes())
+    }
+
+    /// Length-prefixed string (prefix-free against adjacent fields).
+    pub fn str(&mut self, s: &str) -> &mut Self {
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes())
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// FNV-1a, 128-bit, streaming builder (offset basis / prime per the FNV
+/// reference spec). Twice the width a hash table would need — used where
+/// a digest collision would be served as wrong *data*, not a slow probe.
+#[derive(Debug, Clone)]
+pub struct Fnv128(u128);
+
+const FNV128_OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+const FNV128_PRIME: u128 = 0x0000000001000000000000000000013B;
+
+impl Default for Fnv128 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv128 {
+    pub fn new() -> Self {
+        Fnv128(FNV128_OFFSET)
+    }
+
+    pub fn byte(&mut self, b: u8) -> &mut Self {
+        self.0 ^= b as u128;
+        self.0 = self.0.wrapping_mul(FNV128_PRIME);
+        self
+    }
+
+    pub fn bytes(&mut self, bs: &[u8]) -> &mut Self {
+        for &b in bs {
+            self.byte(b);
+        }
+        self
+    }
+
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.bytes(&v.to_le_bytes())
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.bytes(&v.to_le_bytes())
+    }
+
+    /// Length-prefixed string (prefix-free against adjacent fields).
+    pub fn str(&mut self, s: &str) -> &mut Self {
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes())
+    }
+
+    pub fn finish(&self) -> u128 {
+        self.0
+    }
+}
+
+/// FNV-1a over a string — the seed-derivation primitive shared by the
+/// reference model and the fixture generator's per-dataset streams.
+pub fn fnv1a(s: &str) -> u64 {
+    Fnv64::new().bytes(s.as_bytes()).finish()
+}
+
+/// Content-derived noise-seed base for caller-supplied-state requests
+/// (decode latents / encode images): FNV-64 over the f32 bits plus a
+/// direction tag. Lane `i` seeds its PCG64 stream with `base + i`, so two
+/// bitwise-identical requests consume bitwise-identical noise — the
+/// engine-assigned request id (which differs across engines, shards, and
+/// processes) never leaks into the sample. This is what makes stochastic
+/// (η > 0) decode a pure function of the request, and therefore cacheable
+/// by [`crate::cache`].
+pub fn state_seed(direction_tag: u8, rows: &[Vec<f32>]) -> u64 {
+    let mut h = Fnv64::new();
+    h.byte(direction_tag);
+    h.u64(rows.len() as u64);
+    for row in rows {
+        h.u64(row.len() as u64);
+        for &v in row {
+            h.bytes(&v.to_bits().to_le_bytes());
+        }
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_vectors() {
+        // FNV-1a reference vectors ("" and "a") for both widths.
+        assert_eq!(Fnv64::new().finish(), 0xcbf29ce484222325);
+        assert_eq!(Fnv64::new().byte(b'a').finish(), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a("a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(Fnv128::new().finish(), 0x6c62272e07bb014262b821756295c58d);
+        assert_eq!(
+            Fnv128::new().byte(b'a').finish(),
+            0xd228cb696f1a8caf78912b704e4a8964
+        );
+    }
+
+    #[test]
+    fn state_seed_is_content_determined() {
+        let a = vec![vec![0.5f32, -0.25]];
+        let b = vec![vec![0.5f32, -0.25]];
+        assert_eq!(state_seed(1, &a), state_seed(1, &b));
+        assert_ne!(state_seed(1, &a), state_seed(2, &a), "direction tag separates streams");
+        let mut c = a.clone();
+        c[0][1] = f32::from_bits(c[0][1].to_bits() ^ 1);
+        assert_ne!(state_seed(1, &a), state_seed(1, &c));
+    }
+}

@@ -2,12 +2,15 @@
 //! per-step DDPM noise, workload arrival processes) flows through a
 //! deterministic, seedable PCG64 so that (a) η=0 trajectories are bitwise
 //! reproducible and (b) every experiment in EXPERIMENTS.md can be re-run
-//! exactly.
+//! exactly. [`fnv`] holds the FNV-1a seed-derivation / content-digest
+//! primitives those seeds are built from.
 
+mod fnv;
 mod gaussian;
 mod pcg;
 mod slerp;
 
+pub use fnv::{fnv1a, state_seed, Fnv128, Fnv64};
 pub use gaussian::GaussianSource;
 pub use pcg::Pcg64;
 pub use slerp::slerp;

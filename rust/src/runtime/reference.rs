@@ -49,13 +49,9 @@ pub struct RefModel {
 
 /// FNV-1a over a string — the seed-derivation primitive shared by the
 /// reference model and the fixture generator's per-dataset streams.
-pub fn fnv1a(s: &str) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
-    for b in s.bytes() {
-        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
-    }
-    h
-}
+/// Re-exported from the rng substrate, where the FNV constants live in
+/// exactly one place.
+pub use crate::rng::fnv1a;
 
 impl RefModel {
     /// Derive the model from a dataset's manifest weights. The seed folds

@@ -1,11 +1,29 @@
 //! Workload generation for `serve_e2e` and the coordinator benches: a
 //! Poisson (exponential inter-arrival) open-loop generator over a mix of
 //! request classes — the standard serving-evaluation setup.
+//!
+//! Classes cover all three body kinds (Generate / Decode / Encode), and a
+//! workload can draw its request identities from a finite **seed pool**
+//! under a Zipf popularity model — the canonical cache-evaluation shape:
+//! a small set of hot requests recurs, so the sample cache and the
+//! single-flight coalescer actually have something to hit. `seed_pool:
+//! None` reproduces the old behavior (every request unique, cache-cold).
 
-use crate::coordinator::request::{Request, RequestBody};
-use crate::rng::Pcg64;
+use crate::coordinator::request::{CacheMode, Request, RequestBody};
+use crate::rng::{GaussianSource, Pcg64};
 use crate::sampler::SamplerKind;
 use crate::schedule::{NoiseMode, TauKind};
+
+/// Which request body a class emits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClassKind {
+    /// `count` fresh samples from the prior, seeded from the pool.
+    Generate,
+    /// Caller-supplied latents (drawn ~N(0,1) from the pooled seed).
+    Decode,
+    /// Caller-supplied images (drawn uniform [-1,1] from the pooled seed).
+    Encode,
+}
 
 /// One request class in the mix.
 #[derive(Debug, Clone)]
@@ -16,6 +34,16 @@ pub struct RequestClass {
     pub mode: NoiseMode,
     pub sampler: SamplerKind,
     pub count: usize,
+    pub kind: ClassKind,
+}
+
+/// Finite request-identity pool with Zipf(s) popularity: identity `k`
+/// (0-based popularity rank) is drawn with weight `1/(k+1)^s`. `s = 0`
+/// is uniform over the pool; `s ≈ 1` is the classic web-traffic skew.
+#[derive(Debug, Clone)]
+pub struct SeedPool {
+    pub size: usize,
+    pub exponent: f64,
 }
 
 /// Open-loop Poisson workload over a class mix.
@@ -25,6 +53,12 @@ pub struct Workload {
     pub classes: Vec<RequestClass>,
     /// mean arrivals per second
     pub rate_hz: f64,
+    /// `Some` draws request identities Zipf-distributed from a finite
+    /// pool (repeats → cache hits); `None` makes every request unique.
+    pub seed_pool: Option<SeedPool>,
+    /// Elements per lane for Decode/Encode bodies (a workload with such
+    /// classes must set this to the model's `sample_dim`).
+    pub sample_dim: usize,
 }
 
 fn class(
@@ -33,27 +67,61 @@ fn class(
     mode: NoiseMode,
     sampler: SamplerKind,
     count: usize,
+    kind: ClassKind,
 ) -> RequestClass {
-    RequestClass { weight, steps, mode, sampler, count }
+    RequestClass { weight, steps, mode, sampler, count, kind }
 }
 
 impl Workload {
     /// The default mixed workload used in EXPERIMENTS.md: interactive
     /// low-step DDIM requests, batch high-quality requests, a few
     /// stochastic DDPM ones, and a slice of the alternative update
-    /// kernels (PF-ODE / AB2) now that they are first-class scenarios.
+    /// kernels (PF-ODE / AB2). Generate-only, unique seeds (cache-cold).
     pub fn standard(dataset: &str, rate_hz: f64) -> Self {
+        let d = SamplerKind::Ddim;
+        let g = ClassKind::Generate;
+        Self {
+            dataset: dataset.to_string(),
+            rate_hz,
+            seed_pool: None,
+            sample_dim: 0,
+            classes: vec![
+                class(0.4, 10, NoiseMode::Eta(0.0), d, 1, g),
+                class(0.25, 20, NoiseMode::Eta(0.0), d, 4, g),
+                class(0.15, 50, NoiseMode::Eta(0.0), d, 1, g),
+                class(0.1, 20, NoiseMode::Eta(1.0), d, 1, g),
+                class(0.05, 10, NoiseMode::Eta(0.0), SamplerKind::PfOde, 1, g),
+                class(0.05, 10, NoiseMode::Eta(0.0), SamplerKind::Ab2, 1, g),
+            ],
+        }
+    }
+
+    /// A cache-evaluation workload: the standard interactive/batch split
+    /// plus Decode and Encode classes, all drawing identities from a
+    /// Zipf(`exponent`) pool of `pool_size` seeds — repeated identities
+    /// make cache hits (and, at high rates, coalesced flights) reachable
+    /// from `serve_e2e` and the benches. `sample_dim` is the model's
+    /// elements-per-sample (decode/encode bodies are materialised here).
+    pub fn zipf(
+        dataset: &str,
+        rate_hz: f64,
+        sample_dim: usize,
+        pool_size: usize,
+        exponent: f64,
+    ) -> Self {
         let d = SamplerKind::Ddim;
         Self {
             dataset: dataset.to_string(),
             rate_hz,
+            seed_pool: Some(SeedPool { size: pool_size.max(1), exponent }),
+            sample_dim,
             classes: vec![
-                class(0.4, 10, NoiseMode::Eta(0.0), d, 1),
-                class(0.25, 20, NoiseMode::Eta(0.0), d, 4),
-                class(0.15, 50, NoiseMode::Eta(0.0), d, 1),
-                class(0.1, 20, NoiseMode::Eta(1.0), d, 1),
-                class(0.05, 10, NoiseMode::Eta(0.0), SamplerKind::PfOde, 1),
-                class(0.05, 10, NoiseMode::Eta(0.0), SamplerKind::Ab2, 1),
+                class(0.35, 10, NoiseMode::Eta(0.0), d, 1, ClassKind::Generate),
+                class(0.2, 20, NoiseMode::Eta(0.0), d, 4, ClassKind::Generate),
+                class(0.1, 20, NoiseMode::Eta(1.0), d, 1, ClassKind::Generate),
+                class(0.2, 10, NoiseMode::Eta(0.0), d, 1, ClassKind::Decode),
+                class(0.1, 20, NoiseMode::Eta(0.0), d, 1, ClassKind::Encode),
+                class(0.05, 10, NoiseMode::Eta(0.0), SamplerKind::PfOde, 1, ClassKind::Decode),
             ],
         }
     }
@@ -62,6 +130,19 @@ impl Workload {
     pub fn generate(&self, n: usize, seed: u64) -> Vec<(f64, Request)> {
         let mut rng = Pcg64::seeded(seed);
         let total_w: f64 = self.classes.iter().map(|c| c.weight).sum();
+        // Zipf CDF over popularity ranks, precomputed once
+        let zipf_cum: Vec<f64> = match &self.seed_pool {
+            Some(pool) => {
+                let mut acc = 0.0;
+                (0..pool.size)
+                    .map(|k| {
+                        acc += 1.0 / ((k + 1) as f64).powf(pool.exponent);
+                        acc
+                    })
+                    .collect()
+            }
+            None => Vec::new(),
+        };
         let mut t = 0.0f64;
         let mut out = Vec::with_capacity(n);
         for i in 0..n {
@@ -78,6 +159,29 @@ impl Workload {
                     break;
                 }
             }
+            // request identity: Zipf rank from the pool, or unique
+            let req_seed = match &self.seed_pool {
+                Some(_) => {
+                    let u = rng.next_f64() * zipf_cum.last().copied().unwrap_or(1.0);
+                    let rank = zipf_cum.partition_point(|&c| c < u);
+                    // identity depends on (workload seed, rank) only — the
+                    // same rank recurs with the same body bits, which is
+                    // exactly what makes it cacheable
+                    seed.wrapping_mul(7919).wrapping_add(rank as u64)
+                }
+                None => seed * 1000 + i as u64,
+            };
+            let body = match class.kind {
+                ClassKind::Generate => {
+                    RequestBody::Generate { count: class.count, seed: req_seed }
+                }
+                ClassKind::Decode => RequestBody::Decode {
+                    latents: latent_rows(req_seed, class.count, self.sample_dim),
+                },
+                ClassKind::Encode => RequestBody::Encode {
+                    images: image_rows(req_seed, class.count, self.sample_dim),
+                },
+            };
             out.push((
                 t,
                 Request {
@@ -86,13 +190,38 @@ impl Workload {
                     mode: class.mode,
                     tau: TauKind::Linear,
                     sampler: class.sampler,
-                    body: RequestBody::Generate { count: class.count, seed: seed * 1000 + i as u64 },
+                    body,
                     return_images: false,
+                    cache: CacheMode::Use,
                 },
             ));
         }
         out
     }
+}
+
+/// Deterministic ~N(0,1) latents for a pooled decode identity: same
+/// (seed, count, dim) → bitwise-identical rows, on any machine.
+pub fn latent_rows(seed: u64, count: usize, dim: usize) -> Vec<Vec<f32>> {
+    assert!(dim > 0, "decode/encode workload classes need sample_dim set");
+    (0..count)
+        .map(|lane| {
+            let mut root = Pcg64::seeded(seed);
+            GaussianSource::new(root.fork(lane as u64)).vec(dim)
+        })
+        .collect()
+}
+
+/// Deterministic uniform [-1, 1] images for a pooled encode identity.
+pub fn image_rows(seed: u64, count: usize, dim: usize) -> Vec<Vec<f32>> {
+    assert!(dim > 0, "decode/encode workload classes need sample_dim set");
+    (0..count)
+        .map(|lane| {
+            let mut root = Pcg64::seeded(seed);
+            let mut rng = root.fork(lane as u64);
+            (0..dim).map(|_| rng.uniform(-1.0, 1.0) as f32).collect()
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -130,6 +259,18 @@ mod tests {
         assert!((host_kernels - 0.1).abs() < 0.03, "pf_ode+ab2 fraction {host_kernels}");
         // the mix never pairs a host kernel with a stochastic plan
         assert!(reqs.iter().all(|(_, r)| r.sampler.supports(r.mode)));
+        // standard stays cache-cold: every generate seed is unique
+        let mut seeds: Vec<u64> = reqs
+            .iter()
+            .filter_map(|(_, r)| match r.body {
+                RequestBody::Generate { seed, .. } => Some(seed),
+                _ => None,
+            })
+            .collect();
+        let n = seeds.len();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), n, "standard workload must not repeat seeds");
     }
 
     #[test]
@@ -141,5 +282,72 @@ mod tests {
             assert_eq!(ta, tb);
             assert_eq!(ra.steps, rb.steps);
         }
+    }
+
+    #[test]
+    fn zipf_pool_repeats_identities_and_skews_hot() {
+        let w = Workload::zipf("sprites", 50.0, 16, 8, 1.1);
+        let reqs = w.generate(400, 5);
+        assert_eq!(reqs.len(), 400);
+        // identities come from a pool of 8 → heavy reuse
+        let mut gen_seeds: Vec<u64> = reqs
+            .iter()
+            .filter_map(|(_, r)| match r.body {
+                RequestBody::Generate { seed, .. } => Some(seed),
+                _ => None,
+            })
+            .collect();
+        assert!(!gen_seeds.is_empty());
+        let total = gen_seeds.len();
+        gen_seeds.sort_unstable();
+        gen_seeds.dedup();
+        assert!(gen_seeds.len() <= 8, "at most pool-size identities");
+        assert!(gen_seeds.len() < total, "identities must repeat");
+        // Zipf skew: the hottest identity (rank 0 = seed*7919) dominates
+        let hot = 5u64.wrapping_mul(7919);
+        let hot_n = reqs
+            .iter()
+            .filter(|(_, r)| {
+                matches!(r.body, RequestBody::Generate { seed, .. } if seed == hot)
+            })
+            .count();
+        let uniform_share = total / 8;
+        assert!(
+            hot_n > uniform_share,
+            "rank-0 identity ({hot_n} hits) should beat the uniform share ({uniform_share})"
+        );
+    }
+
+    #[test]
+    fn decode_and_encode_bodies_are_pool_deterministic() {
+        let w = Workload::zipf("sprites", 50.0, 16, 4, 1.0);
+        let reqs = w.generate(300, 9);
+        let mut decodes: Vec<&Vec<Vec<f32>>> = Vec::new();
+        let mut encodes = 0usize;
+        for (_, r) in &reqs {
+            match &r.body {
+                RequestBody::Decode { latents } => {
+                    assert!(latents.iter().all(|row| row.len() == 16));
+                    decodes.push(latents);
+                }
+                RequestBody::Encode { images } => {
+                    assert!(images.iter().all(|row| row.len() == 16));
+                    assert!(images.iter().flatten().all(|v| (-1.0..=1.0).contains(v)));
+                    encodes += 1;
+                }
+                RequestBody::Generate { .. } => {}
+            }
+            assert!(r.sampler.supports(r.mode));
+        }
+        assert!(!decodes.is_empty() && encodes > 0, "mixed body kinds present");
+        // pooled identities ⇒ some pair of decode bodies is bitwise equal
+        let repeated = decodes
+            .iter()
+            .enumerate()
+            .any(|(i, a)| decodes[..i].iter().any(|b| b == a));
+        assert!(repeated, "pool of 4 over {} decodes must repeat a body", decodes.len());
+        // and the rows really are ~N(0,1) latents, not junk
+        let flat: Vec<f32> = decodes[0].iter().flatten().copied().collect();
+        assert!(flat.iter().all(|v| v.is_finite()));
     }
 }

@@ -1,0 +1,260 @@
+//! End-to-end cache + coalescing behavior through the router on fixture
+//! artifacts (hermetic reference backend):
+//!
+//! - N identical concurrent requests execute **once** (engine step
+//!   counters prove it), every response is bitwise-identical, and the
+//!   `hits`/`coalesced_waiters` metrics account for all N−1 followers;
+//! - a repeated identical request is a pure store hit: no engine is
+//!   touched, the wire says `cached:true`, and the bytes equal the
+//!   uncached path's;
+//! - `"cache":"bypass"` re-executes;
+//! - stochastic (η > 0) requests are request-deterministic (seeded PCG64,
+//!   content-derived decode noise seeds) and therefore cacheable;
+//! - a manifest rewrite (artifact reload) invalidates the store.
+
+use std::sync::{Arc, Barrier};
+
+use ddim_serve::config::ServeConfig;
+use ddim_serve::coordinator::request::{CacheMode, Request, RequestBody};
+use ddim_serve::coordinator::{ResponseBody, Router};
+use ddim_serve::sampler::SamplerKind;
+use ddim_serve::schedule::{NoiseMode, TauKind};
+use ddim_serve::testing::fixtures;
+
+fn cfg(cache: bool, coalesce: bool, shards: usize) -> ServeConfig {
+    ServeConfig {
+        artifact_root: fixtures::root_string(),
+        dataset: "sprites".into(),
+        max_batch: 8,
+        max_lanes: 64,
+        queue_capacity: 256,
+        shards,
+        cache_enabled: cache,
+        coalesce_enabled: coalesce,
+        ..Default::default()
+    }
+}
+
+fn gen_request(
+    steps: usize,
+    mode: NoiseMode,
+    count: usize,
+    seed: u64,
+    cache: CacheMode,
+) -> Request {
+    Request {
+        dataset: "sprites".into(),
+        steps,
+        mode,
+        tau: TauKind::Linear,
+        sampler: SamplerKind::Ddim,
+        body: RequestBody::Generate { count, seed },
+        return_images: true,
+        cache,
+    }
+}
+
+fn outputs_of(resp: &ddim_serve::coordinator::Response) -> &Vec<Vec<f32>> {
+    match &resp.body {
+        ResponseBody::Ok { outputs } => outputs,
+        ResponseBody::Error { message } => panic!("request failed: {message}"),
+    }
+}
+
+#[test]
+fn concurrent_identical_requests_execute_once_and_match_uncached_bitwise() {
+    const N: usize = 6;
+    const STEPS: usize = 40;
+    const COUNT: usize = 4;
+
+    // ground truth: the same request through a cache-less router
+    let plain = Router::start(cfg(false, false, 1)).unwrap();
+    let truth = plain
+        .call(gen_request(STEPS, NoiseMode::Eta(0.0), COUNT, 77, CacheMode::Use))
+        .unwrap();
+    assert!(!truth.cached);
+    let truth_outputs = outputs_of(&truth).clone();
+    assert_eq!(truth_outputs.len(), COUNT);
+    plain.shutdown();
+
+    // cached router, 2 shards: coalescing must hold across the pool
+    let router = Arc::new(Router::start(cfg(true, true, 2)).unwrap());
+    let barrier = Arc::new(Barrier::new(N));
+    let mut handles = Vec::new();
+    for _ in 0..N {
+        let router = router.clone();
+        let barrier = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            router
+                .call(gen_request(STEPS, NoiseMode::Eta(0.0), COUNT, 77, CacheMode::Use))
+                .unwrap()
+        }));
+    }
+    let responses: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for r in &responses {
+        assert_eq!(outputs_of(r), &truth_outputs, "every waiter gets the uncached bits");
+        assert_eq!(r.steps_executed, STEPS * COUNT);
+    }
+
+    // exactly one engine execution, proven by the step counters
+    let (agg, _) = router.aggregate();
+    assert_eq!(
+        agg.steps_executed,
+        (STEPS * COUNT) as u64,
+        "N identical concurrent requests must execute once"
+    );
+    assert_eq!(agg.queue_accepted, 1, "only the leader reached an admission queue");
+    let m = router.cache().metrics();
+    assert_eq!(m.misses, 1);
+    assert_eq!(
+        m.hits + m.coalesced_waiters,
+        (N - 1) as u64,
+        "every follower was a hit or a coalesced waiter: {m:?}"
+    );
+
+    // a repeated identical request is a pure store hit: cached:true and
+    // still bitwise-equal, with no new engine work
+    let hit = router
+        .call(gen_request(STEPS, NoiseMode::Eta(0.0), COUNT, 77, CacheMode::Use))
+        .unwrap();
+    assert!(hit.cached, "repeat must be served from the store");
+    assert_eq!(outputs_of(&hit), &truth_outputs);
+    assert_eq!(hit.steps_executed, STEPS * COUNT, "reports the producing run's cost");
+    let (agg2, _) = router.aggregate();
+    assert_eq!(agg2.steps_executed, agg.steps_executed, "no engine touched on a hit");
+    assert_eq!(agg2.queue_accepted, agg.queue_accepted);
+    assert_eq!(router.cache().metrics().hits, m.hits + 1);
+
+    // a return_images:false variant is the same key — still a hit, with
+    // the pixels filtered out of the response
+    let mut quiet = gen_request(STEPS, NoiseMode::Eta(0.0), COUNT, 77, CacheMode::Use);
+    quiet.return_images = false;
+    let r = router.call(quiet).unwrap();
+    assert!(r.cached);
+    assert!(outputs_of(&r).is_empty());
+
+    // "cache":"bypass" re-executes on a live engine
+    let bypass = router
+        .call(gen_request(STEPS, NoiseMode::Eta(0.0), COUNT, 77, CacheMode::Bypass))
+        .unwrap();
+    assert!(!bypass.cached);
+    assert_eq!(
+        outputs_of(&bypass),
+        &truth_outputs,
+        "determinism: bypass recomputes the same bits"
+    );
+    let (agg3, _) = router.aggregate();
+    assert_eq!(
+        agg3.steps_executed,
+        agg.steps_executed + (STEPS * COUNT) as u64,
+        "bypass must re-execute"
+    );
+    assert_eq!(router.cache().metrics().bypassed, 1);
+
+    router.shutdown();
+}
+
+#[test]
+fn stochastic_requests_are_request_deterministic_and_cacheable() {
+    // η=1 generate: the noise stream is seeded by the request seed, so
+    // two *separate* cache-less routers produce identical bits
+    let a = Router::start(cfg(false, false, 1)).unwrap();
+    let b = Router::start(cfg(false, false, 1)).unwrap();
+    let req = || gen_request(12, NoiseMode::Eta(1.0), 2, 31, CacheMode::Use);
+    let ra = a.call(req()).unwrap();
+    let rb = b.call(req()).unwrap();
+    assert_eq!(outputs_of(&ra), outputs_of(&rb), "η=1 generate is request-deterministic");
+
+    // stochastic decode: noise seeds derive from the latent *content*
+    // (not the engine-assigned request id), so identical requests match
+    // even when their engine ids differ
+    let latents = vec![vec![0.25f32; 256], vec![-0.5f32; 256]];
+    let dec = |cache: CacheMode| Request {
+        dataset: "sprites".into(),
+        steps: 9,
+        mode: NoiseMode::Eta(1.0),
+        tau: TauKind::Linear,
+        sampler: SamplerKind::Ddim,
+        body: RequestBody::Decode { latents: latents.clone() },
+        return_images: true,
+        cache,
+    };
+    let d1 = a.call(dec(CacheMode::Use)).unwrap();
+    let d2 = a.call(dec(CacheMode::Use)).unwrap();
+    assert_ne!(d1.id, d2.id, "distinct engine ids...");
+    assert_eq!(outputs_of(&d1), outputs_of(&d2), "...same stochastic decode bits");
+    a.shutdown();
+    b.shutdown();
+
+    // and therefore the cache may serve it: second identical decode hits
+    let cached = Router::start(cfg(true, true, 1)).unwrap();
+    let c1 = cached.call(dec(CacheMode::Use)).unwrap();
+    let c2 = cached.call(dec(CacheMode::Use)).unwrap();
+    assert!(!c1.cached && c2.cached);
+    assert_eq!(outputs_of(&c1), outputs_of(&d1), "cached path == uncached path bitwise");
+    assert_eq!(outputs_of(&c2), outputs_of(&d1));
+    let (agg, _) = cached.aggregate();
+    assert_eq!(agg.steps_executed, 18, "2 lanes × 9 steps, executed once");
+    cached.shutdown();
+}
+
+#[test]
+fn manifest_rewrite_invalidates_the_store() {
+    // private artifact tree this test may mutate
+    let dir = std::env::temp_dir()
+        .join(format!("ddim-cache-invalidate-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    fixtures::write_into(&dir).unwrap();
+
+    let mut config = cfg(true, true, 1);
+    config.artifact_root = dir.to_string_lossy().into_owned();
+    let router = Router::start(config).unwrap();
+
+    // prime the store
+    let r1 = router
+        .call(gen_request(6, NoiseMode::Eta(0.0), 1, 5, CacheMode::Use))
+        .unwrap();
+    assert!(!r1.cached);
+    assert_eq!(router.cache().metrics().entries, 1);
+    // same tree on disk: refresh is a no-op
+    assert!(!router.refresh_cache_manifest().unwrap());
+    assert_eq!(router.cache().metrics().entries, 1);
+
+    // rewrite the manifest with a changed model fingerprint (params) —
+    // the digest moves, so the refresh must flush everything
+    let manifest_path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&manifest_path).unwrap();
+    let v = ddim_serve::json::parse(&text).unwrap();
+    let ddim_serve::json::Value::Obj(mut top) = v else { panic!("manifest is an object") };
+    let Some(ddim_serve::json::Value::Obj(datasets)) = top.get_mut("datasets") else {
+        panic!("manifest has datasets")
+    };
+    let Some(ddim_serve::json::Value::Obj(ds)) = datasets.get_mut("sprites") else {
+        panic!("sprites dataset present")
+    };
+    ds.insert("params".into(), ddim_serve::json::Value::Num(999_999.0));
+    std::fs::write(
+        &manifest_path,
+        ddim_serve::json::to_string(&ddim_serve::json::Value::Obj(top)),
+    )
+    .unwrap();
+
+    assert!(router.refresh_cache_manifest().unwrap(), "digest change detected");
+    let m = router.cache().metrics();
+    assert_eq!(m.entries, 0, "stale entries flushed");
+    assert_eq!(m.bytes, 0);
+
+    // the old result can no longer be served: the request re-executes
+    let (before, _) = router.aggregate();
+    let r2 = router
+        .call(gen_request(6, NoiseMode::Eta(0.0), 1, 5, CacheMode::Use))
+        .unwrap();
+    assert!(!r2.cached);
+    let (after, _) = router.aggregate();
+    assert!(after.steps_executed > before.steps_executed);
+
+    router.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

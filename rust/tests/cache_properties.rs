@@ -1,0 +1,378 @@
+//! Property tests for the sample-cache subsystem: key sensitivity (every
+//! sampling-relevant field perturbs the digest; delivery-shaping fields
+//! never do) and LRU store invariants (byte budget never exceeded, strict
+//! recency eviction, pinned in-flight entries survive pressure) — checked
+//! against an executable model.
+
+use std::sync::Arc;
+
+use ddim_serve::cache::{CacheKey, CacheStore, CachedSample, Probe};
+use ddim_serve::coordinator::request::{CacheMode, Request, RequestBody};
+use ddim_serve::runtime::BackendKind;
+use ddim_serve::sampler::SamplerKind;
+use ddim_serve::schedule::{NoiseMode, TauKind};
+use ddim_serve::testing::{check, Gen};
+
+// ---------------------------------------------------------------- keys
+
+fn rand_rows(g: &mut Gen) -> Vec<Vec<f32>> {
+    let rows = g.int_in(1, 4).max(1);
+    let dim = g.int_in(1, 16).max(1);
+    (0..rows).map(|_| g.vec_f32(dim, -2.0, 2.0)).collect()
+}
+
+fn rand_request(g: &mut Gen) -> Request {
+    let dataset = (*g.choose(&["sprites", "blobs", "digits"])).to_string();
+    let mode = match g.int_in(0, 3) {
+        0 => NoiseMode::Eta(0.0),
+        1 => NoiseMode::Eta(g.f64_in(0.0, 2.0)),
+        2 => NoiseMode::SigmaHat,
+        _ => NoiseMode::Eta(1.0),
+    };
+    let body = match g.int_in(0, 2) {
+        0 => RequestBody::Generate {
+            count: g.int_in(1, 8).max(1),
+            seed: g.rng.next_u64() >> 12,
+        },
+        1 => RequestBody::Decode { latents: rand_rows(g) },
+        _ => RequestBody::Encode { images: rand_rows(g) },
+    };
+    Request {
+        dataset,
+        steps: g.int_in(1, 100).max(1),
+        mode,
+        tau: *g.choose(&[TauKind::Linear, TauKind::Quadratic]),
+        sampler: *g.choose(&SamplerKind::ALL),
+        body,
+        return_images: g.bool(),
+        cache: CacheMode::Use,
+    }
+}
+
+/// Apply one sampling-relevant perturbation; returns what changed.
+fn perturb(g: &mut Gen, req: &mut Request) -> &'static str {
+    loop {
+        match g.int_in(0, 7) {
+            0 => {
+                req.dataset.push('x');
+                return "dataset";
+            }
+            1 => {
+                req.steps += 1;
+                return "steps";
+            }
+            2 => {
+                req.mode = match req.mode {
+                    NoiseMode::Eta(e) => {
+                        if e < 1.5 {
+                            NoiseMode::Eta(e + 0.125)
+                        } else {
+                            NoiseMode::SigmaHat
+                        }
+                    }
+                    NoiseMode::SigmaHat => NoiseMode::Eta(0.5),
+                };
+                return "mode";
+            }
+            3 => {
+                req.tau = match req.tau {
+                    TauKind::Linear => TauKind::Quadratic,
+                    TauKind::Quadratic => TauKind::Linear,
+                };
+                return "tau";
+            }
+            4 => {
+                let cur = req.sampler;
+                req.sampler = *SamplerKind::ALL
+                    .iter()
+                    .find(|&&k| k != cur)
+                    .expect("three kernels exist");
+                return "sampler";
+            }
+            5 => match &mut req.body {
+                RequestBody::Generate { seed, .. } => {
+                    *seed ^= 1;
+                    return "seed";
+                }
+                RequestBody::Decode { latents } | RequestBody::Encode { images: latents } => {
+                    let r = g.int_in(0, latents.len() - 1);
+                    let c = g.int_in(0, latents[r].len() - 1);
+                    latents[r][c] = f32::from_bits(latents[r][c].to_bits() ^ 1);
+                    return "state bit";
+                }
+            },
+            6 => match &mut req.body {
+                RequestBody::Generate { count, .. } => {
+                    *count += 1;
+                    return "count";
+                }
+                RequestBody::Decode { latents } | RequestBody::Encode { images: latents } => {
+                    latents.push(vec![0.25; latents[0].len()]);
+                    return "row count";
+                }
+            },
+            7 => {
+                // flip the body *kind* while keeping the payload bits
+                req.body = match std::mem::replace(
+                    &mut req.body,
+                    RequestBody::Generate { count: 1, seed: 0 },
+                ) {
+                    RequestBody::Decode { latents } => RequestBody::Encode { images: latents },
+                    RequestBody::Encode { images } => RequestBody::Decode { latents: images },
+                    original @ RequestBody::Generate { .. } => {
+                        req.body = original;
+                        continue; // not applicable; redraw
+                    }
+                };
+                return "body kind";
+            }
+            _ => unreachable!(),
+        }
+    }
+}
+
+#[test]
+fn property_key_changes_with_every_sampling_relevant_field() {
+    check("cache_key_sensitivity", 200, |g| {
+        let base = rand_request(g);
+        let digest = g.rng.next_u64();
+        let backend = *g.choose(&[BackendKind::Reference, BackendKind::Xla]);
+        let base_key = CacheKey::of(&base, digest, backend);
+
+        // delivery-shaping fields are excluded from the digest
+        let mut delivery = base.clone();
+        delivery.return_images = !delivery.return_images;
+        delivery.cache = CacheMode::Bypass;
+        if CacheKey::of(&delivery, digest, backend) != base_key {
+            return Err("return_images / cache directive leaked into the key".into());
+        }
+
+        // any sampling-relevant perturbation must move the digest
+        let mut p = base.clone();
+        let what = perturb(g, &mut p);
+        if CacheKey::of(&p, digest, backend) == base_key {
+            return Err(format!("perturbing {what} did not change the key: {p:?}"));
+        }
+
+        // environment axes count too
+        if CacheKey::of(&base, digest ^ 1, backend) == base_key {
+            return Err("manifest digest did not change the key".into());
+        }
+        let other_backend = match backend {
+            BackendKind::Reference => BackendKind::Xla,
+            BackendKind::Xla => BackendKind::Reference,
+        };
+        if CacheKey::of(&base, digest, other_backend) == base_key {
+            return Err("backend kind did not change the key".into());
+        }
+        Ok(())
+    });
+}
+
+// --------------------------------------------------------------- store
+
+/// Executable model of one LRU shard: ready entries carry (bytes, stamp),
+/// in-flight entries are pinned. Mirrors the store's documented policy
+/// exactly; the property asserts the real store never diverges.
+#[derive(Default)]
+struct Model {
+    entries: Vec<(u128, ModelSlot)>,
+    bytes: usize,
+    stamp: u64,
+}
+
+enum ModelSlot {
+    InFlight,
+    Ready { bytes: usize, stamp: u64 },
+}
+
+impl Model {
+    fn find(&self, key: u128) -> Option<usize> {
+        self.entries.iter().position(|(k, _)| *k == key)
+    }
+
+    fn reserve(&mut self, key: u128) {
+        if self.find(key).is_none() {
+            self.entries.push((key, ModelSlot::InFlight));
+        }
+    }
+
+    fn publish(&mut self, key: u128, cost: usize, budget: usize) {
+        if cost > budget {
+            if let Some(i) = self.find(key) {
+                if matches!(self.entries[i].1, ModelSlot::InFlight) {
+                    self.entries.remove(i);
+                }
+            }
+            return;
+        }
+        let stamp = self.stamp;
+        self.stamp += 1;
+        if let Some(i) = self.find(key) {
+            if let ModelSlot::Ready { bytes, .. } = self.entries[i].1 {
+                self.bytes -= bytes;
+            }
+            self.entries.remove(i);
+        }
+        self.entries.push((key, ModelSlot::Ready { bytes: cost, stamp }));
+        self.bytes += cost;
+        while self.bytes > budget {
+            // strict recency: evict the ready entry with the oldest stamp
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .filter_map(|(i, (_, s))| match s {
+                    ModelSlot::Ready { stamp, .. } => Some((*stamp, i)),
+                    ModelSlot::InFlight => None,
+                })
+                .min()
+                .map(|(_, i)| i)
+                .expect("bytes > 0 implies a ready entry");
+            if let ModelSlot::Ready { bytes, .. } = self.entries[victim].1 {
+                self.bytes -= bytes;
+            }
+            self.entries.remove(victim);
+        }
+    }
+
+    fn get(&mut self, key: u128) -> bool {
+        let stamp = self.stamp;
+        match self.find(key) {
+            Some(i) => match &mut self.entries[i].1 {
+                ModelSlot::Ready { stamp: s, .. } => {
+                    *s = stamp;
+                    self.stamp += 1;
+                    true
+                }
+                ModelSlot::InFlight => false,
+            },
+            None => false,
+        }
+    }
+
+    fn cancel(&mut self, key: u128) {
+        if let Some(i) = self.find(key) {
+            if matches!(self.entries[i].1, ModelSlot::InFlight) {
+                self.entries.remove(i);
+            }
+        }
+    }
+
+    fn probe(&self, key: u128) -> Probe {
+        match self.find(key) {
+            None => Probe::Absent,
+            Some(i) => match self.entries[i].1 {
+                ModelSlot::InFlight => Probe::InFlight,
+                ModelSlot::Ready { .. } => Probe::Ready,
+            },
+        }
+    }
+}
+
+fn sample_of_rows(rows: usize, dim: usize) -> Arc<CachedSample> {
+    Arc::new(CachedSample {
+        outputs: (0..rows).map(|r| vec![r as f32 * 0.5; dim]).collect(),
+        steps_executed: rows * dim,
+    })
+}
+
+#[test]
+fn property_single_shard_store_matches_lru_model_exactly() {
+    check("cache_store_lru_model", 150, |g| {
+        // budget sized so a handful of samples fit — eviction is frequent
+        let unit = sample_of_rows(1, 8).cost_bytes();
+        let budget = unit * g.int_in(1, 6).max(1);
+        let store = CacheStore::with_shards(budget, 1);
+        let mut model = Model::default();
+        let universe: Vec<u128> = (0..8).collect();
+        let ops = g.int_in(10, 200);
+        for step in 0..ops {
+            let key = *g.choose(&universe);
+            match g.int_in(0, 3) {
+                0 => {
+                    store.reserve(CacheKey(key));
+                    model.reserve(key);
+                }
+                1 => {
+                    let rows = g.int_in(1, 4).max(1);
+                    let sample = sample_of_rows(rows, 8);
+                    model.publish(key, sample.cost_bytes(), budget);
+                    store.publish(CacheKey(key), sample);
+                }
+                2 => {
+                    let got = store.get(CacheKey(key)).is_some();
+                    let want = model.get(key);
+                    if got != want {
+                        return Err(format!("op {step}: get({key}) = {got}, model {want}"));
+                    }
+                }
+                _ => {
+                    store.cancel(CacheKey(key));
+                    model.cancel(key);
+                }
+            }
+            if store.bytes() > budget {
+                return Err(format!(
+                    "op {step}: bytes {} exceeded budget {budget}",
+                    store.bytes()
+                ));
+            }
+            if store.bytes() != model.bytes {
+                return Err(format!(
+                    "op {step}: bytes {} diverged from model {}",
+                    store.bytes(),
+                    model.bytes
+                ));
+            }
+            for &k in &universe {
+                let got = store.probe(CacheKey(k));
+                let want = model.probe(k);
+                if got != want {
+                    return Err(format!("op {step}: probe({k}) = {got:?}, model {want:?}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_sharded_store_keeps_global_budget_and_pins() {
+    check("cache_store_sharded_budget", 100, |g| {
+        let unit = sample_of_rows(1, 16).cost_bytes();
+        let shards = g.int_in(2, 8).max(2);
+        let budget = unit * shards * g.int_in(1, 4).max(1);
+        let store = CacheStore::with_shards(budget, shards);
+        // pin a few in-flight keys up front
+        let pinned: Vec<u128> = (1000..1000 + g.int_in(1, 5).max(1) as u128).collect();
+        for &k in &pinned {
+            store.reserve(CacheKey(k));
+        }
+        let ops = g.int_in(20, 300);
+        for _ in 0..ops {
+            let key = g.rng.next_below(64) as u128;
+            let rows = g.int_in(1, 3).max(1);
+            store.publish(CacheKey(key), sample_of_rows(rows, 16));
+            if g.bool() {
+                let _ = store.get(CacheKey(g.rng.next_below(64) as u128));
+            }
+            if store.bytes() > budget {
+                return Err(format!("bytes {} > budget {budget}", store.bytes()));
+            }
+        }
+        for &k in &pinned {
+            if store.probe(CacheKey(k)) != Probe::InFlight {
+                return Err(format!("pinned in-flight key {k} was evicted under pressure"));
+            }
+        }
+        if store.inflight() != pinned.len() {
+            return Err(format!(
+                "inflight() {} != pinned {}",
+                store.inflight(),
+                pinned.len()
+            ));
+        }
+        Ok(())
+    });
+}

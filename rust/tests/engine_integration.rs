@@ -6,7 +6,7 @@
 //! over the reference backend — no `make artifacts`, no XLA, zero skips.
 
 use ddim_serve::config::ServeConfig;
-use ddim_serve::coordinator::request::{Request, RequestBody};
+use ddim_serve::coordinator::request::{CacheMode, Request, RequestBody};
 use ddim_serve::coordinator::{Engine, ResponseBody};
 use ddim_serve::sampler::SamplerKind;
 use ddim_serve::schedule::{NoiseMode, TauKind};
@@ -47,6 +47,7 @@ fn gen_request_with(
         sampler,
         body: RequestBody::Generate { count, seed },
         return_images: true,
+        cache: CacheMode::Use,
     }
 }
 
@@ -186,6 +187,7 @@ fn encode_decode_round_trip_has_low_error() {
             sampler: SamplerKind::Ddim,
             body: RequestBody::Encode { images: vec![img.clone()] },
             return_images: true,
+            cache: CacheMode::Use,
         })
         .unwrap();
     let resp = e.run_until_idle().unwrap();
@@ -204,6 +206,7 @@ fn encode_decode_round_trip_has_low_error() {
             sampler: SamplerKind::Ddim,
             body: RequestBody::Decode { latents: vec![latent] },
             return_images: true,
+            cache: CacheMode::Use,
         })
         .unwrap();
     let resp = e.run_until_idle().unwrap();
@@ -249,6 +252,7 @@ fn submit_validates_requests() {
         sampler: SamplerKind::Ddim,
         body: RequestBody::Decode { latents: vec![vec![0.0; 7]] },
         return_images: false,
+        cache: CacheMode::Use,
     };
     assert!(e.submit(bad).is_err());
     // host kernels on a stochastic plan are rejected at admission

@@ -157,6 +157,7 @@ fn runner_and_engine_agree() {
             sampler: SamplerKind::Ddim,
             body: RequestBody::Generate { count: 3, seed: 555 },
             return_images: true,
+            cache: ddim_serve::coordinator::CacheMode::Use,
         })
         .unwrap();
     let resp = engine.run_until_idle().unwrap();

@@ -64,7 +64,8 @@ fn server_serves_generate_metrics_and_rejects_garbage() {
     assert_eq!(r2.get("outputs").unwrap().as_arr().unwrap().len(), 0);
 
     // same request repeated must be byte-identical (eta=0 determinism over
-    // the full wire path)
+    // the full wire path) — and with the sample cache on by default, the
+    // repeat is served from the store without touching an engine
     let mut c3 = Client::connect(addr).unwrap();
     let req = jobj![
         ("op", "generate"),
@@ -82,6 +83,16 @@ fn server_serves_generate_metrics_and_rejects_garbage() {
         b.get("outputs").unwrap(),
         "wire-level determinism"
     );
+    assert!(!a.get("cached").unwrap().as_bool().unwrap(), "first execution is fresh");
+    assert!(b.get("cached").unwrap().as_bool().unwrap(), "repeat is a cache hit");
+    // "cache":"bypass" opts out: same bits, but freshly executed
+    let mut bypass_req = req.clone();
+    if let Value::Obj(m) = &mut bypass_req {
+        m.insert("cache".into(), Value::Str("bypass".into()));
+    }
+    let by = c3.roundtrip(&bypass_req).unwrap();
+    assert!(!by.get("cached").unwrap().as_bool().unwrap(), "bypass re-executes");
+    assert_eq!(a.get("outputs").unwrap(), by.get("outputs").unwrap());
 
     // malformed lines produce JSON errors, not disconnects
     let mut c4 = Client::connect(addr).unwrap();
@@ -94,12 +105,21 @@ fn server_serves_generate_metrics_and_rejects_garbage() {
     assert!(pong.get("ok").unwrap().as_bool().unwrap());
 
     // metrics reflect the work, with histogram-merged quantiles and the
-    // queue counters the engine always had but never exposed
+    // queue counters the engine always had but never exposed. Engine-side
+    // counters only see the *executed* requests — the cache hit above
+    // never reached one — while the "cache" object accounts for it.
     let m = c4.roundtrip(&jobj![("op", "metrics")]).unwrap();
     assert!(m.get("ok").unwrap().as_bool().unwrap());
-    assert!(m.get("requests_completed").unwrap().as_usize().unwrap() >= 4);
+    assert!(m.get("requests_completed").unwrap().as_usize().unwrap() >= 3);
     assert!(m.get("steps_executed").unwrap().as_usize().unwrap() >= 5 * 2 + 9);
-    assert!(m.get("queue_accepted").unwrap().as_usize().unwrap() >= 4);
+    assert!(m.get("queue_accepted").unwrap().as_usize().unwrap() >= 3);
+    let cache = m.get("cache").unwrap();
+    assert!(cache.get("enabled").unwrap().as_bool().unwrap());
+    assert!(cache.get("hits").unwrap().as_usize().unwrap() >= 1);
+    assert!(cache.get("misses").unwrap().as_usize().unwrap() >= 3);
+    assert!(cache.get("bypassed").unwrap().as_usize().unwrap() >= 1);
+    assert!(cache.get("entries").unwrap().as_usize().unwrap() >= 1);
+    assert!(cache.get("bytes").unwrap().as_usize().unwrap() > 0);
     assert!(m.get("latency_p50_s").unwrap().as_f64().unwrap() > 0.0);
     assert!(
         m.get("latency_p95_s").unwrap().as_f64().unwrap()
