@@ -1,0 +1,262 @@
+//! Reference-backend step-kernel bench: scalar baseline vs the
+//! structure-of-arrays kernel (fixed-width unrolling), vs the threaded
+//! worker-pool path, vs the f16-stored / f32-accumulated weight path.
+//!
+//! Needs no artifacts: the synthetic ε-model is built straight from a
+//! `DatasetInfo`, so this runs anywhere tier-1 runs. Besides the table it
+//! dumps `BENCH_reference.json` and — with `DDIM_BENCH_GATE=1` — compares
+//! the measured *speedup ratio* (optimized vs scalar, both measured in
+//! this same run, so the gate is hardware-portable) against the committed
+//! baseline and exits nonzero on a >30% regression.
+//!
+//! Correctness is asserted inline before anything is timed: the unrolled
+//! and threaded paths must be bitwise-identical to the scalar baseline,
+//! the f16 path tolerance-bounded, and the warm loop allocation-free.
+//!
+//!     cargo bench --bench reference_step
+//!     DDIM_BENCH_GATE=1 cargo bench --bench reference_step   # CI gate
+
+#[path = "common.rs"]
+mod common;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use ddim_serve::artifacts::DatasetInfo;
+use ddim_serve::jobj;
+use ddim_serve::json::{self, Value};
+use ddim_serve::rng::Pcg64;
+use ddim_serve::runtime::reference::{compute_scalar_into, UNROLL};
+use ddim_serve::runtime::{RefModel, RefPrecision, StepExecutable, StepOutput, WorkerPool};
+
+const RESULT_PATH: &str = "BENCH_reference.json";
+/// Gate threshold: fail if this run's speedup ratio drops below 70% of the
+/// committed baseline's (>30% regression).
+const GATE_MIN_RATIO: f64 = 0.7;
+const GATE_WARN_RATIO: f64 = 1.3;
+
+/// One packed problem instance: deterministic pseudo-random states and a
+/// heterogeneous schedule (η > 0 lanes included) at (bucket × dim).
+struct Problem {
+    bucket: usize,
+    dim: usize,
+    x: Vec<f32>,
+    t: Vec<f32>,
+    a_t: Vec<f32>,
+    a_p: Vec<f32>,
+    sigma: Vec<f32>,
+    noise: Vec<f32>,
+}
+
+impl Problem {
+    fn new(bucket: usize, dim: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::seeded(seed);
+        let n = bucket * dim;
+        Self {
+            bucket,
+            dim,
+            x: (0..n).map(|_| rng.uniform(-2.0, 2.0) as f32).collect(),
+            noise: (0..n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+            t: (0..bucket).map(|s| 37.0 + 11.0 * s as f32).collect(),
+            a_t: (0..bucket).map(|s| 0.92 - 0.05 * s as f32).collect(),
+            a_p: (0..bucket).map(|s| 0.96 - 0.04 * s as f32).collect(),
+            // every third lane stochastic, like a mixed serving tick
+            sigma: (0..bucket).map(|s| if s % 3 == 0 { 0.12 } else { 0.0 }).collect(),
+        }
+    }
+}
+
+fn model_for(dim: usize) -> Arc<RefModel> {
+    let info = DatasetInfo { hlo: vec![], params: 123_456, final_loss: 0.0421, ref_n: 64 };
+    Arc::new(RefModel::from_manifest("sprites", &info, dim, 1000))
+}
+
+/// ms per scalar-baseline call.
+fn time_scalar(m: &RefModel, p: &Problem, iters: usize) -> (f64, StepOutput) {
+    let mut out = StepOutput::zeros(p.bucket * p.dim);
+    let run = |out: &mut StepOutput| {
+        compute_scalar_into(
+            m, p.bucket, p.dim, &p.x, &p.t, &p.a_t, &p.a_p, &p.sigma, &p.noise, out,
+        )
+    };
+    run(&mut out); // warm
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        run(&mut out);
+    }
+    (t0.elapsed().as_secs_f64() * 1e3 / iters as f64, out)
+}
+
+/// ms per optimized-kernel call through the real `StepExecutable` path,
+/// asserting the warm loop allocates nothing.
+fn time_exec(exe: &StepExecutable, p: &Problem, iters: usize) -> (f64, StepOutput) {
+    let mut out = StepOutput::zeros(p.bucket * p.dim);
+    let run = |out: &mut StepOutput| {
+        exe.run(&p.x, &p.t, &p.a_t, &p.a_p, &p.sigma, &p.noise, out).expect("step")
+    };
+    run(&mut out); // warm
+    exe.take_ref_stats(); // discard cold-start growth
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        run(&mut out);
+    }
+    let ms = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+    let (_, bytes) = exe.take_ref_stats();
+    assert_eq!(bytes, 0, "warm bench loop must be allocation-free");
+    (ms, out)
+}
+
+fn exec_with(m: &Arc<RefModel>, p: &Problem, threads: usize, prec: RefPrecision) -> StepExecutable {
+    StepExecutable::reference_with(
+        Arc::clone(m),
+        p.bucket,
+        p.dim,
+        Arc::new(WorkerPool::new(threads)),
+        prec,
+    )
+    .expect("exe")
+}
+
+#[allow(clippy::type_complexity)]
+fn bench_cell(p: &Problem, threads: usize, iters: usize) -> (f64, f64, f64, f64, f64) {
+    let m = model_for(p.dim);
+    let (scalar_ms, scalar_out) = time_scalar(&m, p, iters);
+    let unrolled = exec_with(&m, p, 1, RefPrecision::F32);
+    let (unrolled_ms, unrolled_out) = time_exec(&unrolled, p, iters);
+    let threaded = exec_with(&m, p, threads, RefPrecision::F32);
+    let (threaded_ms, threaded_out) = time_exec(&threaded, p, iters);
+    let half = exec_with(&m, p, threads, RefPrecision::F16);
+    let (f16_ms, f16_out) = time_exec(&half, p, iters);
+
+    // correctness before speed: the non-negotiable invariant of the PR
+    assert_eq!(unrolled_out.x_prev, scalar_out.x_prev, "unrolled != scalar (x_prev)");
+    assert_eq!(unrolled_out.eps, scalar_out.eps, "unrolled != scalar (eps)");
+    assert_eq!(unrolled_out.x0, scalar_out.x0, "unrolled != scalar (x0)");
+    assert_eq!(threaded_out.x_prev, scalar_out.x_prev, "threaded != scalar (x_prev)");
+    assert_eq!(threaded_out.eps, scalar_out.eps, "threaded != scalar (eps)");
+    assert_eq!(threaded_out.x0, scalar_out.x0, "threaded != scalar (x0)");
+    let drift = f16_out
+        .x_prev
+        .iter()
+        .zip(&scalar_out.x_prev)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(drift < 5e-2, "f16 drift {drift} out of tolerance");
+
+    (scalar_ms, unrolled_ms, threaded_ms, f16_ms, drift as f64)
+}
+
+fn steps_per_s(bucket: usize, ms: f64) -> f64 {
+    bucket as f64 * 1e3 / ms
+}
+
+fn main() {
+    let threads = ddim_serve::runtime::RefOptions::default().resolved_threads();
+    let iters = if common::quick() { 20 } else { 200 };
+    let gate = std::env::var("DDIM_BENCH_GATE").as_deref() == Ok("1");
+
+    // the committed baseline must be read before this run overwrites it
+    let baseline_speedup: Option<f64> = std::fs::read_to_string(RESULT_PATH)
+        .ok()
+        .and_then(|s| json::parse(&s).ok())
+        .and_then(|v| {
+            v.get("main").ok().and_then(|m| m.get("speedup_total").ok()?.as_f64().ok())
+        });
+
+    println!("=== reference_step: scalar vs SoA-unrolled vs threaded vs f16 ===");
+    println!("unroll width {UNROLL}, worker pool {threads} threads, {iters} iters/cell\n");
+    println!(
+        "{:>6} | {:>6} | {:>10} | {:>10} | {:>10} | {:>10} | {:>7} | {:>7} | {:>7}",
+        "bucket", "dim", "scalar ms", "unroll ms", "thread ms", "f16 ms", "x unr", "x thr", "x f16"
+    );
+
+    // the acceptance cell first (bucket 16 × dim 3072), then a small sweep
+    // over odd shapes so layout regressions off the happy path show up
+    let cells = [(16usize, 3072usize), (4, 3072), (16, 257), (3, 63)];
+    let mut sweep: Vec<Value> = Vec::new();
+    let mut main_cell: Option<Value> = None;
+    let mut main_speedup = 0.0f64;
+    for (i, &(bucket, dim)) in cells.iter().enumerate() {
+        let p = Problem::new(bucket, dim, 7 + i as u64);
+        let (scalar_ms, unrolled_ms, threaded_ms, f16_ms, f16_drift) =
+            bench_cell(&p, threads, iters);
+        let (su, st, sf) =
+            (scalar_ms / unrolled_ms, scalar_ms / threaded_ms, scalar_ms / f16_ms);
+        println!(
+            "{bucket:>6} | {dim:>6} | {scalar_ms:>10.3} | {unrolled_ms:>10.3} | {threaded_ms:>10.3} | {f16_ms:>10.3} | {su:>6.2}x | {st:>6.2}x | {sf:>6.2}x"
+        );
+        let row = jobj![
+            ("bucket", bucket),
+            ("dim", dim),
+            ("scalar_ms", scalar_ms),
+            ("unrolled_ms", unrolled_ms),
+            ("threaded_ms", threaded_ms),
+            ("f16_ms", f16_ms),
+            ("scalar_steps_per_s", steps_per_s(bucket, scalar_ms)),
+            ("threaded_steps_per_s", steps_per_s(bucket, threaded_ms)),
+            ("speedup_unroll", su),
+            ("speedup_threads", st / su.max(1e-12)),
+            ("speedup_total", st),
+            ("speedup_f16", sf),
+            ("f16_max_drift", f16_drift),
+        ];
+        if i == 0 {
+            main_speedup = st;
+            main_cell = Some(row.clone());
+        }
+        sweep.push(row);
+    }
+
+    let dump = jobj![
+        ("bench", "reference_step"),
+        ("quick", common::quick()),
+        ("threads", threads),
+        ("unroll", UNROLL),
+        ("iters", iters),
+        ("main", main_cell.expect("main cell ran")),
+        ("sweep", Value::Arr(sweep)),
+    ];
+
+    println!(
+        "\nmain cell (16 x 3072): {main_speedup:.2}x total speedup over the scalar baseline \
+         ({} the 4x acceptance bar on a 4-core runner)",
+        if main_speedup >= 4.0 { "meets" } else { "below" }
+    );
+
+    let mut fail = false;
+    match (gate, baseline_speedup) {
+        (true, Some(base)) => {
+            let ratio = main_speedup / base;
+            println!(
+                "gate: measured speedup {main_speedup:.2}x vs committed baseline {base:.2}x \
+                 (ratio {ratio:.2}, floor {GATE_MIN_RATIO})"
+            );
+            if ratio < GATE_MIN_RATIO {
+                eprintln!(
+                    "GATE FAIL: reference-kernel speedup regressed >30% vs the committed \
+                     {RESULT_PATH}. If intentional, re-run the bench on a quiet machine and \
+                     commit the regenerated {RESULT_PATH}."
+                );
+                fail = true;
+            } else if ratio > GATE_WARN_RATIO {
+                println!(
+                    "gate: improvement >30% over the committed baseline — consider \
+                     committing the regenerated {RESULT_PATH} so the gate tracks it"
+                );
+            }
+        }
+        (true, None) => println!(
+            "gate: no committed {RESULT_PATH} baseline found — recording this run as the \
+             new baseline, nothing to compare against"
+        ),
+        (false, _) => {}
+    }
+
+    match std::fs::write(RESULT_PATH, json::to_string(&dump) + "\n") {
+        Ok(()) => println!("wrote machine-readable results to {RESULT_PATH}"),
+        Err(e) => eprintln!("WARN: could not write {RESULT_PATH}: {e}"),
+    }
+    if fail {
+        std::process::exit(1);
+    }
+}

@@ -3,7 +3,7 @@
 //! but everything the paper's experiments vary is a field here.
 
 use crate::error::{Error, Result};
-use crate::runtime::BackendKind;
+use crate::runtime::{BackendKind, RefOptions, RefPrecision};
 use crate::sampler::{SamplerKind, DEFAULT_MAX_PADDING_WASTE};
 
 /// Coordinator / server configuration.
@@ -69,6 +69,15 @@ pub struct ServeConfig {
     /// Single-flight coalescing (`--coalesce on|off`): concurrent
     /// identical requests share one execution instead of each running.
     pub coalesce_enabled: bool,
+    /// Reference-backend kernel threads per sub-batch (`--ref-threads`):
+    /// total compute threads the runtime's worker pool spreads a
+    /// sub-batch's slots over (slot-granular, bitwise-safe). 0 = available
+    /// parallelism. Ignored by the xla backend.
+    pub ref_threads: usize,
+    /// Reference-backend weight precision (`--ref-precision f32|f16`).
+    /// f32 (default) is bitwise-identical to the scalar composition; f16
+    /// stores the ε-model fields as binary16 and accumulates in f32.
+    pub ref_precision: RefPrecision,
 }
 
 impl Default for ServeConfig {
@@ -91,6 +100,14 @@ impl Default for ServeConfig {
             cache_enabled: true,
             cache_bytes: 64 << 20, // 64 MiB ≈ 60k cached 16×16 lanes
             coalesce_enabled: true,
+            // like `backend`, honour the env overrides (and fail loudly on
+            // garbage) so whole processes switch tuning without re-plumbing
+            ref_threads: RefOptions::from_env()
+                .expect("DDIM_REF_THREADS must be an integer")
+                .threads,
+            ref_precision: RefOptions::from_env()
+                .expect("DDIM_REF_PRECISION must be f32|f16")
+                .precision,
         }
     }
 }
@@ -141,6 +158,12 @@ impl ServeConfig {
                 self.max_padding_waste
             )));
         }
+        if self.ref_threads > 1024 {
+            return Err(Error::Coordinator(format!(
+                "ref_threads {} is absurd (max 1024; 0 = auto)",
+                self.ref_threads
+            )));
+        }
         for (i, (ds, n)) in self.placement.iter().enumerate() {
             if ds.is_empty() {
                 return Err(Error::Coordinator("placement has an empty dataset name".into()));
@@ -157,6 +180,12 @@ impl ServeConfig {
             }
         }
         Ok(())
+    }
+
+    /// Reference-backend tuning bundle handed to `Runtime::load_full` by
+    /// every engine / executor worker this config spawns.
+    pub fn ref_options(&self) -> RefOptions {
+        RefOptions { threads: self.ref_threads, precision: self.ref_precision }
     }
 
     /// How many shards serve `dataset`: the `placement` override if one
@@ -192,6 +221,7 @@ mod tests {
             ServeConfig { max_padding_waste: -0.1, ..Default::default() },
             ServeConfig { max_padding_waste: 1.5, ..Default::default() },
             ServeConfig { max_padding_waste: f64::NAN, ..Default::default() },
+            ServeConfig { ref_threads: 2000, ..Default::default() },
             ServeConfig { placement: vec![("sprites".into(), 0)], ..Default::default() },
             ServeConfig {
                 placement: vec![("a".into(), 1), ("a".into(), 2)],
@@ -220,6 +250,19 @@ mod tests {
             .unwrap();
         ServeConfig { coalesce_enabled: false, ..Default::default() }.validate().unwrap();
         ServeConfig { cache_bytes: 4096, ..Default::default() }.validate().unwrap();
+    }
+
+    #[test]
+    fn ref_knobs_validate_and_bundle() {
+        ServeConfig { ref_threads: 0, ..Default::default() }.validate().unwrap();
+        ServeConfig { ref_threads: 16, ..Default::default() }.validate().unwrap();
+        let c = ServeConfig {
+            ref_threads: 3,
+            ref_precision: RefPrecision::F16,
+            ..Default::default()
+        };
+        c.validate().unwrap();
+        assert_eq!(c.ref_options(), RefOptions { threads: 3, precision: RefPrecision::F16 });
     }
 
     #[test]

@@ -76,6 +76,12 @@ struct ExecCounters {
     wait_s: f64,
     /// execution-path seconds spent running sub-batches
     busy_s: f64,
+    /// seconds inside the reference step kernel (subset of `busy_s`;
+    /// 0 on the xla backend)
+    ref_compute_s: f64,
+    /// reference-backend bytes freshly allocated by step execution
+    /// (output-buffer growth; stops moving once buffers are warm)
+    ref_bytes: u64,
 }
 
 impl ExecCounters {
@@ -126,6 +132,9 @@ pub struct Engine {
     lanes_done: u64,
     requests_done: u64,
     ticks: u64,
+    /// reference-backend bytes allocated by the most recent working tick
+    /// — exactly 0 once the engine reaches steady state
+    ref_bytes_last_tick: u64,
 }
 
 impl Engine {
@@ -138,7 +147,7 @@ impl Engine {
             let (exec, manifest, alphas) = PipelineExecutor::spawn(&cfg)?;
             Self::build(ExecBackend::Pipelined(exec), manifest, alphas, cfg)
         } else {
-            let rt = Runtime::load_with(&cfg.artifact_root, cfg.backend)?;
+            let rt = Runtime::load_full(&cfg.artifact_root, cfg.backend, cfg.ref_options())?;
             Self::with_runtime(rt, cfg)
         }
     }
@@ -212,6 +221,7 @@ impl Engine {
             lanes_done: 0,
             requests_done: 0,
             ticks: 0,
+            ref_bytes_last_tick: 0,
             cfg,
         })
     }
@@ -428,6 +438,8 @@ impl Engine {
         let done = pipe.recv_done()?;
         ctr.wait_s += t0.elapsed().as_secs_f64();
         ctr.busy_s += done.busy_s;
+        ctr.ref_compute_s += done.ref_compute_s;
+        ctr.ref_bytes += done.ref_bytes;
         let SubBatchDone { job, result, .. } = done;
         let advanced = match &result {
             Ok(()) => {
@@ -477,6 +489,7 @@ impl Engine {
             &mut plan,
         );
         self.ticks += 1;
+        let ref_bytes_at_tick_start = self.ctr.ref_bytes;
 
         let mut finished: Vec<usize> = Vec::new();
         let mut first_err: Option<Error> = None;
@@ -492,17 +505,26 @@ impl Engine {
                     }
                     batch.pad(sb.lanes, sb.bucket);
                     let t0 = Instant::now();
-                    let ran = rt
-                        .executable(&self.cfg.dataset, sb.bucket)
-                        .and_then(|exe| batch.run(exe, sb.bucket));
+                    let ran = rt.executable(&self.cfg.dataset, sb.bucket).and_then(|exe| {
+                        batch.run(exe, sb.bucket)?;
+                        // the reference kernel's counters are complete once
+                        // run returns; harvest while the borrow is live
+                        Ok(exe.take_ref_stats())
+                    });
                     let dt = t0.elapsed().as_secs_f64();
                     // serial execution blocks this thread for the whole
                     // device call: busy == wait, overlap_frac == 0
                     self.ctr.busy_s += dt;
                     self.ctr.wait_s += dt;
-                    if let Err(e) = ran {
-                        first_err = Some(e);
-                        break 'subs;
+                    match ran {
+                        Ok((ref_s, ref_b)) => {
+                            self.ctr.ref_compute_s += ref_s;
+                            self.ctr.ref_bytes += ref_b;
+                        }
+                        Err(e) => {
+                            first_err = Some(e);
+                            break 'subs;
+                        }
                     }
                     self.ctr.record_call(sb.lanes, sb.bucket);
                     if let Err(e) = Self::advance_sub(
@@ -583,6 +605,7 @@ impl Engine {
             }
         }
         self.plan = plan;
+        self.ref_bytes_last_tick = self.ctr.ref_bytes - ref_bytes_at_tick_start;
 
         // --- retire finished lanes/requests, even on a partial tick —
         // a finished lane left resident would fail to pack next tick
@@ -702,6 +725,9 @@ impl Engine {
             padded_lanes: self.ctr.padded_lanes,
             pipeline_wait_s: self.ctr.wait_s,
             device_busy_s: self.ctr.busy_s,
+            ref_compute_s: self.ctr.ref_compute_s,
+            ref_bytes_allocated: self.ctr.ref_bytes,
+            ref_bytes_last_tick: self.ref_bytes_last_tick,
             latency_p50_s: self.latency.quantile(0.5),
             latency_p95_s: self.latency.quantile(0.95),
             latency_p99_s: self.latency.quantile(0.99),

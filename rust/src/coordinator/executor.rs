@@ -51,6 +51,12 @@ pub struct SubBatchDone {
     /// jobs in between is excluded, so summing `busy_s` across jobs never
     /// double-counts device time.
     pub busy_s: f64,
+    /// Reference-kernel seconds inside this sub-batch's submit (subset of
+    /// `busy_s`; 0 on the xla backend).
+    pub ref_compute_s: f64,
+    /// Reference-backend bytes freshly allocated by this sub-batch
+    /// (buffer growth; 0 in steady state and on the xla backend).
+    pub ref_bytes: u64,
     pub result: Result<()>,
 }
 
@@ -86,10 +92,13 @@ impl PipelineExecutor {
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(Manifest, AlphaTable)>>();
         let artifact_root = cfg.artifact_root.clone();
         let backend = cfg.backend;
+        let opts = cfg.ref_options();
         let dataset = cfg.dataset.clone();
         let handle = std::thread::Builder::new()
             .name(format!("ddim-exec-{dataset}"))
-            .spawn(move || worker(&artifact_root, backend, &dataset, cmd_rx, done_tx, ready_tx))
+            .spawn(move || {
+                worker(&artifact_root, backend, opts, &dataset, cmd_rx, done_tx, ready_tx)
+            })
             .map_err(Error::Io)?;
         let (manifest, alphas) = match ready_rx.recv() {
             Ok(Ok(pair)) => pair,
@@ -214,25 +223,29 @@ struct InFlight {
     pending: PendingStep,
     /// seconds already spent on this job (its submit call)
     busy_s: f64,
+    /// reference-kernel seconds / fresh bytes harvested at submit
+    ref_compute_s: f64,
+    ref_bytes: u64,
 }
 
 fn finish(done_tx: &Sender<SubBatchDone>, inflight: InFlight) {
-    let InFlight { mut job, pending, busy_s } = inflight;
+    let InFlight { mut job, pending, busy_s, ref_compute_s, ref_bytes } = inflight;
     let t0 = Instant::now();
     let result = job.batch.finish(pending);
     let busy_s = busy_s + t0.elapsed().as_secs_f64();
-    let _ = done_tx.send(SubBatchDone { job, busy_s, result });
+    let _ = done_tx.send(SubBatchDone { job, busy_s, ref_compute_s, ref_bytes, result });
 }
 
 fn worker(
     artifact_root: &str,
     backend: BackendKind,
+    opts: crate::runtime::RefOptions,
     dataset: &str,
     cmd_rx: Receiver<ExecCmd>,
     done_tx: Sender<SubBatchDone>,
     ready_tx: Sender<Result<(Manifest, AlphaTable)>>,
 ) {
-    let mut rt = match Runtime::load_with(artifact_root, backend) {
+    let mut rt = match Runtime::load_full(artifact_root, backend, opts) {
         Ok(rt) => {
             let _ = ready_tx.send(Ok((rt.manifest().clone(), rt.alphas().clone())));
             rt
@@ -262,9 +275,12 @@ fn worker(
         match cmd {
             Some(ExecCmd::Run(mut job)) => {
                 let t0 = Instant::now();
-                let submitted = rt
-                    .executable(dataset, job.bucket)
-                    .and_then(|exe| job.batch.submit(exe, job.bucket));
+                let submitted = rt.executable(dataset, job.bucket).and_then(|exe| {
+                    let p = job.batch.submit(exe, job.bucket)?;
+                    // the reference backend computes inside submit, so its
+                    // counters are complete here; harvest per sub-batch
+                    Ok((p, exe.take_ref_stats()))
+                });
                 // this job's own submit seconds; its readback wait is added
                 // in finish() — time spent finishing the *previous* job
                 // below is charged to neither
@@ -272,8 +288,14 @@ fn worker(
                 // complete the previous step only after the new one is on
                 // the device (order of Dones still matches submission)
                 match submitted {
-                    Ok(p) => {
-                        let next = InFlight { job, pending: p, busy_s: submit_s };
+                    Ok((p, (ref_compute_s, ref_bytes))) => {
+                        let next = InFlight {
+                            job,
+                            pending: p,
+                            busy_s: submit_s,
+                            ref_compute_s,
+                            ref_bytes,
+                        };
                         if let Some(prev) = pending.take() {
                             finish(&done_tx, prev);
                         }
@@ -286,6 +308,8 @@ fn worker(
                         let _ = done_tx.send(SubBatchDone {
                             job,
                             busy_s: submit_s,
+                            ref_compute_s: 0.0,
+                            ref_bytes: 0,
                             result: Err(e),
                         });
                     }

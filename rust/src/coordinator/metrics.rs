@@ -122,6 +122,17 @@ pub struct MetricsSnapshot {
     /// readback). Serial engines block for all of it (`overlap_frac` 0);
     /// pipelined engines hide part of it behind pack/advance work.
     pub device_busy_s: f64,
+    /// Seconds inside the reference step kernel proper (a subset of
+    /// `device_busy_s`; 0 on the xla backend). `device_busy_s` minus this
+    /// is packing/readback/channel overhead around the math.
+    pub ref_compute_s: f64,
+    /// Cumulative reference-backend bytes freshly allocated by step
+    /// execution (output-buffer growth). Grows only while buffers warm up,
+    /// then stays flat — the allocation-free-tick contract.
+    pub ref_bytes_allocated: u64,
+    /// Reference-backend bytes allocated by the most recent working tick.
+    /// Exactly 0 in steady state; nonzero means a buffer grew mid-flight.
+    pub ref_bytes_last_tick: u64,
     pub latency_p50_s: f64,
     pub latency_p95_s: f64,
     pub latency_p99_s: f64,
@@ -185,10 +196,20 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Fraction of execution-path time spent in the reference kernel
+    /// itself (vs packing/readback/channel overhead). 0 on xla.
+    pub fn ref_compute_frac(&self) -> f64 {
+        if self.device_busy_s <= 0.0 {
+            0.0
+        } else {
+            (self.ref_compute_s / self.device_busy_s).clamp(0.0, 1.0)
+        }
+    }
+
     /// One-line human summary for examples/benches.
     pub fn summary(&self) -> String {
         format!(
-            "req={} rej={} lanes={} calls={} steps={} (ddim/pf/ab2={}/{}/{}) occ={:.2} waste={:.2} sub/tick={:.2} ovl={:.2} p50={:.1}ms p95={:.1}ms p99={:.1}ms thr={:.1} steps/s",
+            "req={} rej={} lanes={} calls={} steps={} (ddim/pf/ab2={}/{}/{}) occ={:.2} waste={:.2} sub/tick={:.2} ovl={:.2} refc={:.2} alloc/tick={} p50={:.1}ms p95={:.1}ms p99={:.1}ms thr={:.1} steps/s",
             self.requests_completed,
             self.requests_rejected,
             self.lanes_completed,
@@ -201,6 +222,8 @@ impl MetricsSnapshot {
             self.padding_waste(),
             self.sub_batches_per_tick(),
             self.overlap_frac(),
+            self.ref_compute_frac(),
+            self.ref_bytes_last_tick,
             self.latency_p50_s * 1e3,
             self.latency_p95_s * 1e3,
             self.latency_p99_s * 1e3,
@@ -333,5 +356,29 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(serial.overlap_frac(), 0.0);
+    }
+
+    #[test]
+    fn reference_kernel_gauges() {
+        let empty = MetricsSnapshot::default();
+        assert_eq!(empty.ref_compute_frac(), 0.0);
+
+        let s = MetricsSnapshot {
+            device_busy_s: 4.0,
+            ref_compute_s: 3.0,
+            ref_bytes_allocated: 1 << 20,
+            ref_bytes_last_tick: 0,
+            ..Default::default()
+        };
+        assert!((s.ref_compute_frac() - 0.75).abs() < 1e-12);
+        assert!(s.summary().contains("alloc/tick=0"));
+
+        // clock jitter must never push the fraction past 1
+        let jitter = MetricsSnapshot {
+            device_busy_s: 4.0,
+            ref_compute_s: 4.00001,
+            ..Default::default()
+        };
+        assert_eq!(jitter.ref_compute_frac(), 1.0);
     }
 }

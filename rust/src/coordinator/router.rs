@@ -288,6 +288,9 @@ impl Router {
             agg.padded_lanes += m.padded_lanes;
             agg.pipeline_wait_s += m.pipeline_wait_s;
             agg.device_busy_s += m.device_busy_s;
+            agg.ref_compute_s += m.ref_compute_s;
+            agg.ref_bytes_allocated += m.ref_bytes_allocated;
+            agg.ref_bytes_last_tick += m.ref_bytes_last_tick;
             agg.queue_accepted += m.queue_accepted;
             agg.queue_depth += m.queue_depth;
             agg.active_lanes += m.active_lanes;
@@ -324,6 +327,8 @@ impl Router {
                     ("ticks", m.ticks),
                     ("sub_batches", m.sub_batches),
                     ("overlap_frac", m.overlap_frac()),
+                    ("ref_compute_s", m.ref_compute_s),
+                    ("ref_bytes_allocated_per_tick", m.ref_bytes_last_tick),
                     ("latency_p50_s", m.latency_p50_s),
                     ("latency_p95_s", m.latency_p95_s),
                     ("latency_p99_s", m.latency_p99_s),
@@ -350,6 +355,9 @@ impl Router {
             ("ticks", agg.ticks),
             ("sub_batches", agg.sub_batches),
             ("overlap_frac", agg.overlap_frac()),
+            ("ref_compute_s", agg.ref_compute_s),
+            ("ref_bytes_allocated", agg.ref_bytes_allocated),
+            ("ref_bytes_allocated_per_tick", agg.ref_bytes_last_tick),
             ("latency_p50_s", agg.latency_p50_s),
             ("latency_p95_s", agg.latency_p95_s),
             ("latency_p99_s", agg.latency_p99_s),

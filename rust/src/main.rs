@@ -36,6 +36,11 @@ COMMANDS
                 default 67108864)
               --coalesce on|off (default on: concurrent identical requests
                 share a single execution)
+              --ref-threads N (reference-backend kernel threads per
+                sub-batch; 0 = available parallelism, bitwise-identical at
+                any count)
+              --ref-precision f32|f16 (reference-backend weight storage;
+                f32 default is bitwise-exact, f16 halves weight bandwidth)
   generate    --artifacts D --dataset NAME --steps S --eta E|hat --tau linear|quadratic
               --sampler ddim|pf_ode|ab2 --count N --seed K --out FILE.pgm
   encode      --artifacts D --dataset NAME --steps S --seed K
@@ -105,6 +110,10 @@ fn config_from(args: &Args) -> Result<ServeConfig> {
         cfg.coalesce_enabled = ddim_serve::cli::parse_on_off("coalesce", v)?;
     }
     cfg.cache_bytes = args.get_usize("cache-bytes", cfg.cache_bytes)?;
+    cfg.ref_threads = args.get_usize("ref-threads", cfg.ref_threads)?;
+    if let Some(p) = args.get("ref-precision") {
+        cfg.ref_precision = ddim_serve::runtime::RefPrecision::parse(p)?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -185,7 +194,7 @@ fn cmd_encode(args: &Args) -> Result<()> {
     let cfg = config_from(args)?;
     let steps = args.get_usize("steps", 100)?;
     let seed = args.get_u64("seed", 0)?;
-    let mut rt = Runtime::load_with(&cfg.artifact_root, cfg.backend)?;
+    let mut rt = Runtime::load_full(&cfg.artifact_root, cfg.backend, cfg.ref_options())?;
     // generate a sample first, then encode and decode it back
     let gen_plan = SamplePlan::generate(rt.alphas(), TauKind::Linear, steps, NoiseMode::Eta(0.0))?;
     let enc_plan = SamplePlan::encode(rt.alphas(), TauKind::Linear, steps)?;

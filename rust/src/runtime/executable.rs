@@ -13,15 +13,16 @@
 //! only [`StepExecutable`] / [`PendingStep`] / [`StepOutput`]; which backend
 //! computes the step is decided once, at [`super::Runtime`] construction.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
-use crate::runtime::reference::{RefExec, RefModel};
+use crate::runtime::pool::WorkerPool;
+use crate::runtime::reference::{RefExec, RefModel, RefPrecision};
 #[cfg(feature = "xla")]
 use crate::runtime::xla::{XlaExec, XlaPending};
 
 /// Host-side output buffers of one step call (lengths = bucket × dim).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct StepOutput {
     pub x_prev: Vec<f32>,
     pub eps: Vec<f32>,
@@ -54,8 +55,10 @@ pub struct LaneStep<'a> {
 
 enum PendingImpl {
     /// Reference backend: the step was computed synchronously at submit
-    /// time; the buffers just wait to be landed.
-    Ref { x_prev: Vec<f32>, eps: Vec<f32>, x0: Vec<f32> },
+    /// time into a recycled buffer; `wait_into` lands it and sends the
+    /// buffer back to its `spare` home pool, so a steady-state
+    /// submit/wait pipeline allocates nothing.
+    Ref { out: StepOutput, spare: Arc<Mutex<Vec<StepOutput>>> },
     #[cfg(feature = "xla")]
     Xla(XlaPending),
 }
@@ -89,10 +92,13 @@ impl PendingStep {
             }
         }
         match self.inner {
-            PendingImpl::Ref { x_prev, eps, x0 } => {
-                out.x_prev[..n].copy_from_slice(&x_prev);
-                out.eps[..n].copy_from_slice(&eps);
-                out.x0[..n].copy_from_slice(&x0);
+            PendingImpl::Ref { out: computed, spare } => {
+                // the computed buffer may be larger than n after recycling
+                // across buckets (grow-only), so slice both sides
+                out.x_prev[..n].copy_from_slice(&computed.x_prev[..n]);
+                out.eps[..n].copy_from_slice(&computed.eps[..n]);
+                out.x0[..n].copy_from_slice(&computed.x0[..n]);
+                spare.lock().unwrap().push(computed);
                 Ok(())
             }
             #[cfg(feature = "xla")]
@@ -117,8 +123,23 @@ pub struct StepExecutable {
 }
 
 impl StepExecutable {
-    /// Build a reference-backend executable over a synthetic ε-model.
+    /// Build a reference-backend executable over a synthetic ε-model with
+    /// a private single-thread pool at default f32 precision — the
+    /// convenience constructor tests and tools use.
     pub fn reference(model: Arc<RefModel>, bucket: usize, dim: usize) -> Result<Self> {
+        Self::reference_with(model, bucket, dim, Arc::new(WorkerPool::new(1)), RefPrecision::F32)
+    }
+
+    /// Reference executable on a shared worker pool at an explicit weight
+    /// precision — what [`super::Runtime`] builds, so every executable of
+    /// a runtime threads its sub-batches over one machine-wide pool.
+    pub fn reference_with(
+        model: Arc<RefModel>,
+        bucket: usize,
+        dim: usize,
+        pool: Arc<WorkerPool>,
+        precision: RefPrecision,
+    ) -> Result<Self> {
         if model.dim() != dim {
             return Err(Error::Shape(format!(
                 "reference model dim {} vs executable dim {dim}",
@@ -126,7 +147,7 @@ impl StepExecutable {
             )));
         }
         Ok(Self {
-            inner: ExecImpl::Ref(RefExec::new(model)),
+            inner: ExecImpl::Ref(RefExec::new(model, pool, precision)),
             bucket,
             dim,
             calls: std::cell::Cell::new(0),
@@ -171,6 +192,84 @@ impl StepExecutable {
         sigma: &[f32],
         noise: &[f32],
     ) -> Result<PendingStep> {
+        self.validate(x, t, alpha_t, alpha_prev, sigma, noise)?;
+        let b = self.bucket;
+        let inner = match &self.inner {
+            ExecImpl::Ref(exec) => {
+                let (out, spare) =
+                    exec.compute_pooled(b, self.dim, x, t, alpha_t, alpha_prev, sigma, noise);
+                PendingImpl::Ref { out, spare }
+            }
+            #[cfg(feature = "xla")]
+            ExecImpl::Xla(exec) => {
+                PendingImpl::Xla(exec.submit(x, t, alpha_t, alpha_prev, sigma, noise)?)
+            }
+        };
+        self.calls.set(self.calls.get() + 1);
+        Ok(PendingStep { inner, n: b * self.dim })
+    }
+
+    /// Execute one fused denoise step synchronously into `out` (reused
+    /// across calls by the engine, grow-only). On the reference backend
+    /// this computes straight into the caller's buffers — no pending copy,
+    /// zero steady-state allocation; the compiled path is
+    /// [`StepExecutable::submit`] + [`PendingStep::wait_into`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &self,
+        x: &[f32],
+        t: &[f32],
+        alpha_t: &[f32],
+        alpha_prev: &[f32],
+        sigma: &[f32],
+        noise: &[f32],
+        out: &mut StepOutput,
+    ) -> Result<()> {
+        match &self.inner {
+            ExecImpl::Ref(exec) => {
+                self.validate(x, t, alpha_t, alpha_prev, sigma, noise)?;
+                exec.compute_into(
+                    self.bucket,
+                    self.dim,
+                    x,
+                    t,
+                    alpha_t,
+                    alpha_prev,
+                    sigma,
+                    noise,
+                    out,
+                );
+                self.calls.set(self.calls.get() + 1);
+                Ok(())
+            }
+            #[cfg(feature = "xla")]
+            ExecImpl::Xla(_) => {
+                self.submit(x, t, alpha_t, alpha_prev, sigma, noise)?.wait_into(out)
+            }
+        }
+    }
+
+    /// Drain the reference backend's perf counters accumulated since the
+    /// last harvest: (kernel seconds, bytes of fresh buffer growth). The
+    /// engine folds these into its `ExecCounters` after each sub-batch;
+    /// always zeros on the compiled backend.
+    pub fn take_ref_stats(&self) -> (f64, u64) {
+        match &self.inner {
+            ExecImpl::Ref(exec) => (exec.compute_s.take(), exec.bytes_allocated.take()),
+            #[cfg(feature = "xla")]
+            ExecImpl::Xla(_) => (0.0, 0),
+        }
+    }
+
+    fn validate(
+        &self,
+        x: &[f32],
+        t: &[f32],
+        alpha_t: &[f32],
+        alpha_prev: &[f32],
+        sigma: &[f32],
+        noise: &[f32],
+    ) -> Result<()> {
         let b = self.bucket;
         if x.len() != b * self.dim
             || noise.len() != b * self.dim
@@ -184,38 +283,7 @@ impl StepExecutable {
                 self.dim
             )));
         }
-        let inner = match &self.inner {
-            ExecImpl::Ref(exec) => {
-                let (x_prev, eps, x0) =
-                    exec.compute(b, self.dim, x, t, alpha_t, alpha_prev, sigma, noise);
-                PendingImpl::Ref { x_prev, eps, x0 }
-            }
-            #[cfg(feature = "xla")]
-            ExecImpl::Xla(exec) => {
-                PendingImpl::Xla(exec.submit(x, t, alpha_t, alpha_prev, sigma, noise)?)
-            }
-        };
-        self.calls.set(self.calls.get() + 1);
-        Ok(PendingStep { inner, n: b * self.dim })
-    }
-
-    /// Execute one fused denoise step synchronously: [`StepExecutable::submit`]
-    /// + [`PendingStep::wait_into`]. Outputs are written into `out` (reused
-    /// across calls by the engine — zero steady-state allocation on the
-    /// compiled path; the reference backend allocates its pending buffers
-    /// per call, an accepted cost for a testing backend).
-    #[allow(clippy::too_many_arguments)]
-    pub fn run(
-        &self,
-        x: &[f32],
-        t: &[f32],
-        alpha_t: &[f32],
-        alpha_prev: &[f32],
-        sigma: &[f32],
-        noise: &[f32],
-        out: &mut StepOutput,
-    ) -> Result<()> {
-        self.submit(x, t, alpha_t, alpha_prev, sigma, noise)?.wait_into(out)
+        Ok(())
     }
 }
 
@@ -278,6 +346,40 @@ mod tests {
         assert_ne!(o1.x_prev, o2.x_prev, "each pending step lands its own inputs' result");
         assert!(o1.x_prev.iter().chain(&o2.x_prev).all(|v| v.is_finite()));
         assert_eq!(e.calls.get(), 2);
+    }
+
+    #[test]
+    fn run_reference_fast_path_is_allocation_free_once_warm() {
+        let e = exe(2, 4);
+        let img = vec![0.25f32; 8];
+        let vec2 = vec![0.5f32; 2];
+        let mut out = StepOutput::zeros(8);
+        e.run(&img, &vec2, &vec2, &vec2, &vec2, &img, &mut out).unwrap();
+        e.take_ref_stats(); // discard cold-start numbers
+        e.run(&img, &vec2, &vec2, &vec2, &vec2, &img, &mut out).unwrap();
+        let (secs, bytes) = e.take_ref_stats();
+        assert!(secs >= 0.0);
+        assert_eq!(bytes, 0, "warm run must not allocate");
+        assert_eq!(e.calls.get(), 2);
+        // the fast path still validates shapes
+        assert!(e.run(&img[..7], &vec2, &vec2, &vec2, &vec2, &img, &mut out).is_err());
+        assert_eq!(e.calls.get(), 2, "failed runs must not count");
+    }
+
+    #[test]
+    fn pending_buffers_recycle_across_submit_wait_cycles() {
+        let e = exe(1, 2);
+        let v = vec![1.0f32; 2];
+        let s = vec![0.5f32; 1];
+        let mut out = StepOutput::zeros(2);
+        e.submit(&v, &s, &s, &s, &s, &v).unwrap().wait_into(&mut out).unwrap();
+        let (_, cold) = e.take_ref_stats();
+        assert!(cold > 0, "first submit allocates its pending buffer");
+        for _ in 0..3 {
+            e.submit(&v, &s, &s, &s, &s, &v).unwrap().wait_into(&mut out).unwrap();
+        }
+        let (_, warm) = e.take_ref_stats();
+        assert_eq!(warm, 0, "sequential submit/wait must reuse the spare buffer");
     }
 
     #[test]

@@ -15,6 +15,7 @@
 mod executable;
 #[cfg(feature = "xla")]
 mod literal;
+mod pool;
 pub mod reference;
 #[cfg(feature = "xla")]
 mod xla;
@@ -22,7 +23,8 @@ mod xla;
 pub use executable::{LaneStep, PendingStep, StepExecutable, StepOutput};
 #[cfg(feature = "xla")]
 pub use literal::{literal_to_slice, vec_to_literal};
-pub use reference::RefModel;
+pub use pool::WorkerPool;
+pub use reference::{RefModel, RefOptions, RefPrecision};
 
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
@@ -75,8 +77,14 @@ impl BackendKind {
 
 /// Backend-specific load-time state.
 enum Backend {
-    /// Synthetic per-dataset ε-models, derived lazily from the manifest.
-    Reference { models: HashMap<String, Arc<RefModel>> },
+    /// Synthetic per-dataset ε-models, derived lazily from the manifest,
+    /// plus the worker pool and weight precision every reference
+    /// executable of this runtime shares.
+    Reference {
+        models: HashMap<String, Arc<RefModel>>,
+        pool: Arc<WorkerPool>,
+        precision: RefPrecision,
+    },
     #[cfg(feature = "xla")]
     Xla { client: ::xla::PjRtClient },
 }
@@ -103,13 +111,29 @@ impl Runtime {
     }
 
     /// Create a runtime on an explicit step backend (`cfg.backend` /
-    /// `--backend`).
+    /// `--backend`), with reference tuning taken from the environment
+    /// (`DDIM_REF_THREADS` / `DDIM_REF_PRECISION`).
     pub fn load_with(artifact_root: impl AsRef<Path>, kind: BackendKind) -> Result<Self> {
+        Self::load_full(artifact_root, kind, RefOptions::from_env()?)
+    }
+
+    /// Fully explicit constructor: backend kind plus reference-backend
+    /// tuning (`--ref-threads` / `--ref-precision`). The worker pool is
+    /// created here, once per runtime, and shared by every executable.
+    pub fn load_full(
+        artifact_root: impl AsRef<Path>,
+        kind: BackendKind,
+        opts: RefOptions,
+    ) -> Result<Self> {
         let manifest = Manifest::load(&artifact_root)?;
         let alphas = AlphaTable::from_artifact(artifact_root.as_ref().join("alphas.json"))?;
         alphas.validate()?;
         let backend = match kind {
-            BackendKind::Reference => Backend::Reference { models: HashMap::new() },
+            BackendKind::Reference => Backend::Reference {
+                models: HashMap::new(),
+                pool: Arc::new(WorkerPool::new(opts.resolved_threads())),
+                precision: opts.precision,
+            },
             #[cfg(feature = "xla")]
             BackendKind::Xla => Backend::Xla { client: ::xla::PjRtClient::cpu()? },
             #[cfg(not(feature = "xla"))]
@@ -160,7 +184,7 @@ impl Runtime {
                 let dim = self.manifest.sample_dim();
                 let t0 = Instant::now();
                 let exe = match &mut self.backend {
-                    Backend::Reference { models } => {
+                    Backend::Reference { models, pool, precision } => {
                         let model = match models.entry(dataset.to_string()) {
                             Entry::Occupied(m) => m.get().clone(),
                             Entry::Vacant(m) => m
@@ -172,7 +196,13 @@ impl Runtime {
                                 )))
                                 .clone(),
                         };
-                        StepExecutable::reference(model, bucket, dim)?
+                        StepExecutable::reference_with(
+                            model,
+                            bucket,
+                            dim,
+                            Arc::clone(pool),
+                            *precision,
+                        )?
                     }
                     #[cfg(feature = "xla")]
                     Backend::Xla { client } => {
@@ -232,6 +262,21 @@ mod tests {
         assert!(rt.executable("sprites", bad_bucket).is_err());
         rt.warmup("sprites").unwrap();
         assert_eq!(rt.compiled_count(), rt.manifest().buckets.len());
+    }
+
+    #[test]
+    fn load_full_honours_ref_options() {
+        let root = crate::testing::fixtures::root();
+        let opts = RefOptions { threads: 2, precision: RefPrecision::F16 };
+        let mut rt = Runtime::load_full(&root, BackendKind::Reference, opts).unwrap();
+        let b = rt.manifest().buckets[0];
+        rt.executable("sprites", b).unwrap();
+        for p in [RefPrecision::F32, RefPrecision::F16] {
+            assert_eq!(RefPrecision::parse(p.label()).unwrap(), p);
+        }
+        assert!(RefPrecision::parse("bf16").is_err());
+        assert!(RefOptions::default().resolved_threads() >= 1, "0 resolves to the machine");
+        assert_eq!(RefOptions { threads: 3, ..Default::default() }.resolved_threads(), 3);
     }
 
     #[cfg(not(feature = "xla"))]

@@ -1,0 +1,254 @@
+//! Persistent chunked worker pool for the reference kernel.
+//!
+//! `std::thread::scope` would be the safe way to fan a borrowed closure out
+//! across threads, but it spawns OS threads per call — tens of microseconds
+//! against a kernel that finishes a sub-batch in a similar amount of time.
+//! This pool spawns its workers once and hands them borrowed work through a
+//! lifetime-erased pointer, amortizing thread creation to zero on the hot
+//! path (the whole point of ROADMAP item 4's "hardware-fast" goal).
+//!
+//! Protocol: [`WorkerPool::run`] publishes the task under the state mutex
+//! (bumping an epoch counter), every worker plus the caller claims chunk
+//! indices from a shared atomic cursor until the range is exhausted, and
+//! `run` blocks until the per-epoch `running` count drains back to zero.
+//! That final wait is the safety argument for the erased borrow: no worker
+//! can touch the task pointer after `run` returns.
+//!
+//! Chunk-claim order is nondeterministic. Callers must therefore hand in
+//! tasks whose chunks write disjoint data and depend only on their own
+//! index — which the reference kernel's slot-granular split satisfies
+//! exactly (lanes are elementwise-independent, see `reference.rs`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Lifetime-erased pointer to the closure of the live epoch.
+#[derive(Clone, Copy)]
+struct TaskPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointer is only dereferenced by workers between observing a
+// fresh epoch and decrementing `running`; `WorkerPool::run`, which owns the
+// underlying borrow, does not return until `running` is zero.
+unsafe impl Send for TaskPtr {}
+
+struct State {
+    /// Task of the live epoch (present from publish until `run` returns).
+    task: Option<TaskPtr>,
+    /// Number of chunks in the live epoch.
+    chunks: usize,
+    /// Bumped once per `run`; workers detect fresh work by comparing it
+    /// against the last epoch they served.
+    epoch: u64,
+    /// Workers still inside the live epoch.
+    running: usize,
+    /// Set once, by `Drop`.
+    stop: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Next unclaimed chunk index of the live epoch.
+    cursor: AtomicUsize,
+    work: Condvar,
+    done: Condvar,
+}
+
+/// A fixed set of worker threads that repeatedly execute borrowed
+/// `Fn(usize)` tasks over chunk ranges. One pool is shared by every
+/// reference executable of a `Runtime`, so a sub-batch uses the machine
+/// once, not once per (dataset × bucket).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Pool computing with `threads` total threads: `threads - 1` spawned
+    /// workers plus the calling thread, which participates in every
+    /// [`WorkerPool::run`]. `threads <= 1` spawns nothing and `run`
+    /// degenerates to an inline loop.
+    pub fn new(threads: usize) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                task: None,
+                chunks: 0,
+                epoch: 0,
+                running: 0,
+                stop: false,
+            }),
+            cursor: AtomicUsize::new(0),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let workers = (1..threads.max(1))
+            .map(|_| {
+                let sh = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&sh))
+            })
+            .collect();
+        Self { shared, workers }
+    }
+
+    /// Total compute threads (spawned workers + the caller).
+    pub fn threads(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    /// Run `task(chunk)` for every chunk in `0..chunks`, spread across the
+    /// pool, blocking until all chunks complete. Chunks must write disjoint
+    /// data and depend only on their own index: claim order across threads
+    /// is nondeterministic, and that is only sound (and bitwise-reproducible)
+    /// when no chunk reads another's output.
+    pub fn run(&self, chunks: usize, task: &(dyn Fn(usize) + Sync)) {
+        if self.workers.is_empty() || chunks <= 1 {
+            for c in 0..chunks {
+                task(c);
+            }
+            return;
+        }
+        // Erase the borrow's lifetime. Workers stop dereferencing the
+        // pointer strictly before the `running == 0` wait below completes,
+        // so the borrow outlives every use.
+        let ptr = TaskPtr(task as *const (dyn Fn(usize) + Sync));
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            self.shared.cursor.store(0, Ordering::Relaxed);
+            st.task = Some(ptr);
+            st.chunks = chunks;
+            st.epoch += 1;
+            st.running = self.workers.len();
+            self.shared.work.notify_all();
+        }
+        // the caller is a worker too — never idle while others compute
+        claim_chunks(&self.shared.cursor, chunks, task);
+        let mut st = self.shared.state.lock().unwrap();
+        st = self.shared.done.wait_while(st, |s| s.running > 0).unwrap();
+        st.task = None;
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.stop = true;
+            self.shared.work.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Claim-and-execute loop shared by workers and the publishing caller.
+fn claim_chunks(cursor: &AtomicUsize, chunks: usize, task: &(dyn Fn(usize) + Sync)) {
+    loop {
+        let c = cursor.fetch_add(1, Ordering::Relaxed);
+        if c >= chunks {
+            return;
+        }
+        task(c);
+    }
+}
+
+fn worker_loop(sh: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        let (ptr, chunks) = {
+            let st = sh.state.lock().unwrap();
+            let st = sh
+                .work
+                .wait_while(st, |s| !s.stop && s.epoch == seen)
+                .unwrap();
+            if st.stop {
+                return;
+            }
+            seen = st.epoch;
+            (st.task.expect("live epoch carries a task"), st.chunks)
+        };
+        // SAFETY: `run` published the pointer under the lock and blocks
+        // until `running` reaches zero, which happens strictly after this
+        // dereference; the closure is `Sync`, so concurrent calls are fine.
+        let task = unsafe { &*ptr.0 };
+        claim_chunks(&sh.cursor, chunks, task);
+        let mut st = sh.state.lock().unwrap();
+        st.running -= 1;
+        if st.running == 0 {
+            sh.done.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    fn counters(n: usize) -> Vec<AtomicU64> {
+        (0..n).map(|_| AtomicU64::new(0)).collect()
+    }
+
+    #[test]
+    fn every_chunk_runs_exactly_once() {
+        for threads in [1usize, 2, 4, 7] {
+            let pool = WorkerPool::new(threads);
+            assert_eq!(pool.threads(), threads.max(1));
+            let hits = counters(97);
+            pool.run(hits.len(), &|c| {
+                hits[c].fetch_add(1, Ordering::Relaxed);
+            });
+            for (c, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {c} at {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_epochs() {
+        let pool = WorkerPool::new(3);
+        let total = AtomicU64::new(0);
+        for _ in 0..500 {
+            pool.run(5, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 2500);
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_inline() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        let hits = counters(4);
+        pool.run(hits.len(), &|c| {
+            hits[c].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn single_chunk_runs_on_the_caller() {
+        // chunks <= 1 takes the inline path even on a threaded pool
+        let pool = WorkerPool::new(4);
+        let caller = std::thread::current().id();
+        let saw = Mutex::new(None);
+        pool.run(1, &|_| {
+            *saw.lock().unwrap() = Some(std::thread::current().id());
+        });
+        assert_eq!(*saw.lock().unwrap(), Some(caller));
+    }
+
+    #[test]
+    fn empty_range_is_a_noop() {
+        let pool = WorkerPool::new(2);
+        pool.run(0, &|_| panic!("no chunk to run"));
+    }
+
+    #[test]
+    fn drop_joins_workers_cleanly() {
+        let pool = WorkerPool::new(4);
+        pool.run(8, &|_| {});
+        drop(pool); // must not hang or leak panicking threads
+    }
+}

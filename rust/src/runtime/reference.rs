@@ -32,18 +32,204 @@
 //!
 //! computed in f64 per element and narrowed to f32 on readback, like the
 //! compiled graph's f32 pipeline to within ~1e-7.
+//!
+//! # Kernel layout (structure-of-arrays, see docs/performance.md)
+//!
+//! [`RefExec::compute_into`] is the hot path. Per slot it hoists every
+//! scalar that the naive composition recomputed per element — the schedule
+//! coefficients *and* the ε-model's `sin(πt/T)` phase and `scale²`
+//! denominator term (precomputed once at model construction) — then walks
+//! the lane in fixed-width [`UNROLL`]-element chunks whose constant trip
+//! count lets stable `rustc` unroll and auto-vectorize without bounds
+//! checks or `std::simd`. Slots are spread across a persistent
+//! [`WorkerPool`] (`--ref-threads`); because ε is elementwise, slot-granular
+//! splitting is *bitwise*-safe: every path — scalar baseline
+//! ([`compute_scalar_into`]), unrolled, 1 thread or N — produces identical
+//! bits at the default f32 precision (pinned by
+//! `rust/tests/reference_kernel.rs`). The optional `--ref-precision f16`
+//! path stores the weight fields as IEEE binary16 and accumulates in f32;
+//! it is tolerance-gated, not bitwise.
+//!
+//! Outputs land in caller-owned [`StepOutput`] buffers (grow-only), so a
+//! steady-state engine tick allocates nothing — tracked by the
+//! `ref_bytes_allocated` counter surfaced through the metrics op.
 
-use std::sync::Arc;
+use std::cell::Cell;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use crate::artifacts::DatasetInfo;
+use crate::error::{Error, Result};
 use crate::rng::Pcg64;
+use crate::runtime::executable::StepOutput;
+use crate::runtime::pool::WorkerPool;
+
+/// Fixed chunk width of the unrolled kernel. Eight f64 lanes span two
+/// AVX2 vectors (or four NEON ones) — wide enough to saturate the FMA
+/// ports, narrow enough that odd dims pay at most seven scalar-tail
+/// elements.
+pub const UNROLL: usize = 8;
+
+/// Weight-storage precision of the reference kernel (`--ref-precision`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RefPrecision {
+    /// Full-precision weights, f64 element math — bitwise-identical to the
+    /// scalar baseline composition. The default.
+    #[default]
+    F32,
+    /// Weights stored as IEEE binary16 bits, decoded and accumulated in
+    /// f32. Halves weight-table bandwidth; tolerance-gated, not bitwise.
+    F16,
+}
+
+impl RefPrecision {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(RefPrecision::F32),
+            "f16" => Ok(RefPrecision::F16),
+            other => Err(Error::Request(format!(
+                "unknown ref precision '{other}' (want f32 | f16)"
+            ))),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RefPrecision::F32 => "f32",
+            RefPrecision::F16 => "f16",
+        }
+    }
+}
+
+/// Reference-backend tuning knobs (`--ref-threads` / `--ref-precision`,
+/// env `DDIM_REF_THREADS` / `DDIM_REF_PRECISION`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RefOptions {
+    /// Total compute threads inside one sub-batch (the caller counts as
+    /// one); `0` means available parallelism.
+    pub threads: usize,
+    pub precision: RefPrecision,
+}
+
+impl Default for RefOptions {
+    fn default() -> Self {
+        Self { threads: 0, precision: RefPrecision::F32 }
+    }
+}
+
+impl RefOptions {
+    /// Env overrides, mirroring `DDIM_BACKEND`: `DDIM_REF_THREADS` and
+    /// `DDIM_REF_PRECISION`, else the defaults (auto threads, f32).
+    pub fn from_env() -> Result<Self> {
+        let mut opts = Self::default();
+        if let Ok(v) = std::env::var("DDIM_REF_THREADS") {
+            opts.threads = v.parse().map_err(|_| {
+                Error::Request(format!("DDIM_REF_THREADS must be an integer, got '{v}'"))
+            })?;
+        }
+        if let Ok(v) = std::env::var("DDIM_REF_PRECISION") {
+            opts.precision = RefPrecision::parse(&v)?;
+        }
+        Ok(opts)
+    }
+
+    /// Resolve `threads == 0` to the machine's available parallelism.
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        }
+    }
+}
+
+/// Encode an f32 as IEEE-754 binary16 bits, round-to-nearest-even.
+/// Hand-rolled because the hermetic build carries no `half` crate.
+pub fn f16_from_f32(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // inf / nan (keep a payload bit so nan stays nan)
+        return sign | 0x7c00 | (u16::from(mant != 0) << 9);
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if unbiased >= -14 {
+        // normal half: keep 10 mantissa bits, round to nearest even
+        let mut m = mant >> 13;
+        let rem = mant & 0x1fff;
+        if rem > 0x1000 || (rem == 0x1000 && m & 1 == 1) {
+            m += 1;
+        }
+        let mut e = (unbiased + 15) as u32;
+        if m == 0x400 {
+            // mantissa carry (1.111… rounded up): bump the exponent
+            m = 0;
+            e += 1;
+            if e >= 31 {
+                return sign | 0x7c00;
+            }
+        }
+        return sign | ((e as u16) << 10) | m as u16;
+    }
+    if unbiased < -25 {
+        return sign; // below half the smallest subnormal → ±0
+    }
+    // subnormal half: shift the explicit-leading-1 mantissa into place
+    let m = mant | 0x0080_0000;
+    let shift = (-1 - unbiased) as u32; // 13 + (-14 - unbiased), in 14..=24
+    let kept = m >> shift;
+    let rem = m & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    let mut s = kept;
+    if rem > half || (rem == half && kept & 1 == 1) {
+        s += 1; // a carry here lands on 0x0400, the smallest normal — fine
+    }
+    sign | s as u16
+}
+
+/// Decode IEEE-754 binary16 bits to f32 (exact: every half is an f32).
+pub fn f32_from_f16(h: u16) -> f32 {
+    let sign = u32::from(h & 0x8000) << 16;
+    let exp = u32::from(h >> 10) & 0x1f;
+    let mant = u32::from(h & 0x03ff);
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13) // inf / nan
+    } else if exp == 0 {
+        if mant == 0 {
+            sign // ±0
+        } else {
+            // subnormal half → normal f32: renormalize the mantissa
+            let mut e: i32 = -14;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (((e + 127) as u32) << 23) | ((m & 0x3ff) << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
 
 /// One dataset's synthetic ε-model: per-pixel data scale and time-bias
-/// fields, deterministically derived from its manifest entry.
+/// fields, deterministically derived from its manifest entry. The scale
+/// field enters ε only through its square, so `scale²` is precomputed here
+/// once (both in f64 and as f16 bits for the reduced-precision path)
+/// instead of being re-squared per element per step.
 #[derive(Debug)]
 pub struct RefModel {
-    scale: Vec<f64>,
+    scale_sq: Vec<f64>,
     bias: Vec<f64>,
+    /// IEEE binary16 bits of `scale_sq` / `bias` for [`RefPrecision::F16`].
+    scale_sq_f16: Vec<u16>,
+    bias_f16: Vec<u16>,
     t_max: f64,
 }
 
@@ -61,42 +247,293 @@ impl RefModel {
     pub fn from_manifest(name: &str, info: &DatasetInfo, dim: usize, t_max: usize) -> Self {
         let seed = fnv1a(name) ^ info.params ^ info.final_loss.to_bits();
         let mut rng = Pcg64::seeded(seed);
-        let scale = (0..dim).map(|_| rng.uniform(0.7, 1.3)).collect();
-        let bias = (0..dim).map(|_| rng.uniform(-0.05, 0.05)).collect();
-        Self { scale, bias, t_max: t_max as f64 }
+        let scale: Vec<f64> = (0..dim).map(|_| rng.uniform(0.7, 1.3)).collect();
+        let bias: Vec<f64> = (0..dim).map(|_| rng.uniform(-0.05, 0.05)).collect();
+        let scale_sq: Vec<f64> = scale.iter().map(|s| s * s).collect();
+        let scale_sq_f16 = scale_sq.iter().map(|&v| f16_from_f32(v as f32)).collect();
+        let bias_f16 = bias.iter().map(|&v| f16_from_f32(v as f32)).collect();
+        Self { scale_sq, bias, scale_sq_f16, bias_f16, t_max: t_max as f64 }
     }
 
     /// ε_θ at pixel `i` for state `x`, model timestep `t`, cumulative ᾱ `a`.
+    /// Scalar form of the kernel's element math — the unrolled paths must
+    /// stay bitwise-identical to compositions of this function.
     #[inline]
     pub fn eps(&self, i: usize, x: f64, t: f64, a: f64) -> f64 {
         let om = (1.0 - a).max(0.0);
-        om.sqrt() * x / (a * self.scale[i] * self.scale[i] + om)
+        om.sqrt() * x / (a * self.scale_sq[i] + om)
             + self.bias[i] * (std::f64::consts::PI * t / self.t_max).sin()
     }
 
     pub fn dim(&self) -> usize {
-        self.scale.len()
+        self.scale_sq.len()
     }
 }
 
+/// Per-slot scalars of Eq. 12, hoisted once per lane. The element loop
+/// sees only loads, multiplies, one divide and one narrowing store —
+/// everything t-, ᾱ- and σ-dependent (including the ε-model's sine phase,
+/// which the naive composition re-evaluated per pixel) lives here.
+#[derive(Clone, Copy)]
+struct SlotScalars {
+    a: f64,
+    om: f64,
+    sq_om: f64,
+    inv_sq_a: f64,
+    sq_ap: f64,
+    dir: f64,
+    sg: f64,
+    sin_t: f64,
+}
+
+impl SlotScalars {
+    fn hoist(t_max: f64, t: f32, a_t: f32, a_p: f32, sigma: f32) -> Self {
+        let a = a_t as f64;
+        let ap = a_p as f64;
+        let sg = sigma as f64;
+        let om = (1.0 - a).max(0.0);
+        Self {
+            a,
+            om,
+            sq_om: om.sqrt(),
+            inv_sq_a: 1.0 / a.sqrt(),
+            sq_ap: ap.sqrt(),
+            dir: (1.0 - ap - sg * sg).max(0.0).sqrt(),
+            sg,
+            sin_t: (std::f64::consts::PI * t as f64 / t_max).sin(),
+        }
+    }
+
+    fn narrow(&self) -> SlotScalars32 {
+        SlotScalars32 {
+            a: self.a as f32,
+            om: self.om as f32,
+            sq_om: self.sq_om as f32,
+            inv_sq_a: self.inv_sq_a as f32,
+            sq_ap: self.sq_ap as f32,
+            dir: self.dir as f32,
+            sg: self.sg as f32,
+            sin_t: self.sin_t as f32,
+        }
+    }
+}
+
+/// f32 twin of [`SlotScalars`] for the f16-weight path (scalars are still
+/// hoisted in f64, then narrowed once per slot).
+#[derive(Clone, Copy)]
+struct SlotScalars32 {
+    a: f32,
+    om: f32,
+    sq_om: f32,
+    inv_sq_a: f32,
+    sq_ap: f32,
+    dir: f32,
+    sg: f32,
+    sin_t: f32,
+}
+
+/// One slot's disjoint window of the three output buffers.
+struct SlotOut<'a> {
+    x_prev: &'a mut [f32],
+    eps: &'a mut [f32],
+    x0: &'a mut [f32],
+}
+
+/// Element math of the f64 path. Expression shapes are copied verbatim
+/// from [`RefModel::eps`] and the scalar Eq.-12 composition — bitwise
+/// identity across scalar/unrolled/threaded paths depends on it.
+#[inline(always)]
+fn lane_f64(s: &SlotScalars, scale_sq: f64, bias: f64, x: f32, noise: f32) -> (f32, f32, f32) {
+    let xv = x as f64;
+    let e = s.sq_om * xv / (s.a * scale_sq + s.om) + bias * s.sin_t;
+    let x0 = (xv - s.sq_om * e) * s.inv_sq_a;
+    let xp = s.sq_ap * x0 + s.dir * e + s.sg * noise as f64;
+    (e as f32, x0 as f32, xp as f32)
+}
+
+/// Element math of the f16-stored / f32-accumulated path.
+#[inline(always)]
+fn lane_f16(s: &SlotScalars32, scale_sq: u16, bias: u16, x: f32, noise: f32) -> (f32, f32, f32) {
+    let e = s.sq_om * x / (s.a * f32_from_f16(scale_sq) + s.om) + f32_from_f16(bias) * s.sin_t;
+    let x0 = (x - s.sq_om * e) * s.inv_sq_a;
+    let xp = s.sq_ap * x0 + s.dir * e + s.sg * noise;
+    (e, x0, xp)
+}
+
+fn slot_kernel_f64(
+    scale_sq: &[f64],
+    bias: &[f64],
+    s: SlotScalars,
+    x: &[f32],
+    noise: &[f32],
+    o: SlotOut<'_>,
+) {
+    let dim = x.len();
+    let main = dim - dim % UNROLL;
+    let mut i = 0;
+    while i < main {
+        // fixed-width chunks: the constant trip count lets the compiler
+        // unroll and vectorize with a single bounds check per array
+        let xs: &[f32; UNROLL] = x[i..i + UNROLL].try_into().unwrap();
+        let ns: &[f32; UNROLL] = noise[i..i + UNROLL].try_into().unwrap();
+        let ss: &[f64; UNROLL] = scale_sq[i..i + UNROLL].try_into().unwrap();
+        let bs: &[f64; UNROLL] = bias[i..i + UNROLL].try_into().unwrap();
+        let oe: &mut [f32; UNROLL] = (&mut o.eps[i..i + UNROLL]).try_into().unwrap();
+        let ox: &mut [f32; UNROLL] = (&mut o.x0[i..i + UNROLL]).try_into().unwrap();
+        let op: &mut [f32; UNROLL] = (&mut o.x_prev[i..i + UNROLL]).try_into().unwrap();
+        for k in 0..UNROLL {
+            let (e, x0, xp) = lane_f64(&s, ss[k], bs[k], xs[k], ns[k]);
+            oe[k] = e;
+            ox[k] = x0;
+            op[k] = xp;
+        }
+        i += UNROLL;
+    }
+    for k in main..dim {
+        let (e, x0, xp) = lane_f64(&s, scale_sq[k], bias[k], x[k], noise[k]);
+        o.eps[k] = e;
+        o.x0[k] = x0;
+        o.x_prev[k] = xp;
+    }
+}
+
+fn slot_kernel_f16(
+    scale_sq: &[u16],
+    bias: &[u16],
+    s: SlotScalars32,
+    x: &[f32],
+    noise: &[f32],
+    o: SlotOut<'_>,
+) {
+    let dim = x.len();
+    let main = dim - dim % UNROLL;
+    let mut i = 0;
+    while i < main {
+        let xs: &[f32; UNROLL] = x[i..i + UNROLL].try_into().unwrap();
+        let ns: &[f32; UNROLL] = noise[i..i + UNROLL].try_into().unwrap();
+        let ss: &[u16; UNROLL] = scale_sq[i..i + UNROLL].try_into().unwrap();
+        let bs: &[u16; UNROLL] = bias[i..i + UNROLL].try_into().unwrap();
+        let oe: &mut [f32; UNROLL] = (&mut o.eps[i..i + UNROLL]).try_into().unwrap();
+        let ox: &mut [f32; UNROLL] = (&mut o.x0[i..i + UNROLL]).try_into().unwrap();
+        let op: &mut [f32; UNROLL] = (&mut o.x_prev[i..i + UNROLL]).try_into().unwrap();
+        for k in 0..UNROLL {
+            let (e, x0, xp) = lane_f16(&s, ss[k], bs[k], xs[k], ns[k]);
+            oe[k] = e;
+            ox[k] = x0;
+            op[k] = xp;
+        }
+        i += UNROLL;
+    }
+    for k in main..dim {
+        let (e, x0, xp) = lane_f16(&s, scale_sq[k], bias[k], x[k], noise[k]);
+        o.eps[k] = e;
+        o.x0[k] = x0;
+        o.x_prev[k] = xp;
+    }
+}
+
+/// Grow the three output buffers to hold `n` elements (grow-only, zeros),
+/// returning the number of freshly allocated bytes (0 in steady state).
+fn ensure_len(out: &mut StepOutput, n: usize) -> u64 {
+    let mut grown = 0u64;
+    for buf in [&mut out.x_prev, &mut out.eps, &mut out.x0] {
+        if buf.len() < n {
+            grown += ((n - buf.len()) * std::mem::size_of::<f32>()) as u64;
+            buf.resize(n, 0.0);
+        }
+    }
+    grown
+}
+
+/// The pre-optimization scalar composition: per-slot coefficient hoisting
+/// only, [`RefModel::eps`] called per element. Kept as the baseline that
+/// `benches/reference_step.rs` measures against and that the property
+/// tests pin the unrolled/threaded kernel to, bitwise.
+#[allow(clippy::too_many_arguments)]
+pub fn compute_scalar_into(
+    model: &RefModel,
+    bucket: usize,
+    dim: usize,
+    x: &[f32],
+    t: &[f32],
+    alpha_t: &[f32],
+    alpha_prev: &[f32],
+    sigma: &[f32],
+    noise: &[f32],
+    out: &mut StepOutput,
+) {
+    ensure_len(out, bucket * dim);
+    for slot in 0..bucket {
+        let a = alpha_t[slot] as f64;
+        let ap = alpha_prev[slot] as f64;
+        let sg = sigma[slot] as f64;
+        let tm = t[slot] as f64;
+        let dir = (1.0 - ap - sg * sg).max(0.0).sqrt();
+        let sq_ap = ap.sqrt();
+        let sq_om = (1.0 - a).max(0.0).sqrt();
+        let inv_sq_a = 1.0 / a.sqrt();
+        for i in 0..dim {
+            let idx = slot * dim + i;
+            let xv = x[idx] as f64;
+            let e = model.eps(i, xv, tm, a);
+            let x0 = (xv - sq_om * e) * inv_sq_a;
+            let xp = sq_ap * x0 + dir * e + sg * noise[idx] as f64;
+            out.eps[idx] = e as f32;
+            out.x0[idx] = x0 as f32;
+            out.x_prev[idx] = xp as f32;
+        }
+    }
+}
+
+/// Raw output base pointer, smuggled into the slot task. Slots write
+/// disjoint `dim`-wide windows, and the pool joins every worker before the
+/// publishing call returns, so shared access is sound.
+#[derive(Clone, Copy)]
+struct RawF32(*mut f32);
+
+// SAFETY: see `RawF32` — disjoint writes, pool-join synchronization.
+unsafe impl Send for RawF32 {}
+unsafe impl Sync for RawF32 {}
+
 /// Reference-backend executable for one (dataset × bucket): computes the
-/// batched denoise step synchronously on the calling thread. Stateless
-/// between calls; all per-call state lives in the returned pending buffers,
-/// which is what gives it the same submit-before-wait semantics as the
-/// compiled executable (the pipelined executor relies on that).
+/// batched denoise step synchronously on the calling thread (plus the
+/// shared worker pool). All per-call output state lives in caller-owned or
+/// pool-recycled buffers, which is what gives it the same submit-before-wait
+/// semantics as the compiled executable (the pipelined executor relies on
+/// that) without per-call allocation.
 pub struct RefExec {
     model: Arc<RefModel>,
+    pool: Arc<WorkerPool>,
+    precision: RefPrecision,
+    /// Recycled pending-output buffers for the submit/wait path; the
+    /// population is bounded by the executor's pipeline depth. `Arc`
+    /// because each `PendingStep` carries a handle home — it must outlive
+    /// (and stay independent of) the executable that produced it.
+    spare: Arc<Mutex<Vec<StepOutput>>>,
+    /// Seconds spent inside the kernel since the last harvest.
+    pub(crate) compute_s: Cell<f64>,
+    /// Bytes of fresh buffer growth since the last harvest (0 once warm).
+    pub(crate) bytes_allocated: Cell<u64>,
 }
 
 impl RefExec {
-    pub fn new(model: Arc<RefModel>) -> Self {
-        Self { model }
+    pub fn new(model: Arc<RefModel>, pool: Arc<WorkerPool>, precision: RefPrecision) -> Self {
+        Self {
+            model,
+            pool,
+            precision,
+            spare: Arc::new(Mutex::new(Vec::new())),
+            compute_s: Cell::new(0.0),
+            bytes_allocated: Cell::new(0),
+        }
     }
 
-    /// Compute the three outputs for `bucket` lanes of `dim` elements.
-    /// Caller (the `StepExecutable` wrapper) has validated input lengths.
+    /// Compute the three outputs for `bucket` lanes of `dim` elements
+    /// straight into `out` (grown if undersized, never shrunk — zero
+    /// allocation in steady state). Caller (the `StepExecutable` wrapper)
+    /// has validated input lengths.
     #[allow(clippy::too_many_arguments)]
-    pub fn compute(
+    pub fn compute_into(
         &self,
         bucket: usize,
         dim: usize,
@@ -106,32 +543,65 @@ impl RefExec {
         alpha_prev: &[f32],
         sigma: &[f32],
         noise: &[f32],
-    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-        let n = bucket * dim;
-        let mut out_prev = vec![0.0f32; n];
-        let mut out_eps = vec![0.0f32; n];
-        let mut out_x0 = vec![0.0f32; n];
-        for slot in 0..bucket {
-            let a = alpha_t[slot] as f64;
-            let ap = alpha_prev[slot] as f64;
-            let sg = sigma[slot] as f64;
-            let tm = t[slot] as f64;
-            let dir = (1.0 - ap - sg * sg).max(0.0).sqrt();
-            let sq_ap = ap.sqrt();
-            let sq_om = (1.0 - a).max(0.0).sqrt();
-            let inv_sq_a = 1.0 / a.sqrt();
-            for i in 0..dim {
-                let idx = slot * dim + i;
-                let xv = x[idx] as f64;
-                let e = self.model.eps(i, xv, tm, a);
-                let x0 = (xv - sq_om * e) * inv_sq_a;
-                let xp = sq_ap * x0 + dir * e + sg * noise[idx] as f64;
-                out_eps[idx] = e as f32;
-                out_x0[idx] = x0 as f32;
-                out_prev[idx] = xp as f32;
+        out: &mut StepOutput,
+    ) {
+        let grown = ensure_len(out, bucket * dim);
+        self.bytes_allocated.set(self.bytes_allocated.get() + grown);
+        let t0 = Instant::now();
+        let model = &*self.model;
+        let precision = self.precision;
+        let t_max = model.t_max;
+        let xp = RawF32(out.x_prev.as_mut_ptr());
+        let oe = RawF32(out.eps.as_mut_ptr());
+        let ox = RawF32(out.x0.as_mut_ptr());
+        let task = |slot: usize| {
+            let base = slot * dim;
+            // SAFETY: slot windows are disjoint, `ensure_len` guaranteed
+            // `bucket * dim` elements, and `pool.run` joins every worker
+            // before returning (RawF32's contract).
+            let o = unsafe {
+                SlotOut {
+                    x_prev: std::slice::from_raw_parts_mut(xp.0.add(base), dim),
+                    eps: std::slice::from_raw_parts_mut(oe.0.add(base), dim),
+                    x0: std::slice::from_raw_parts_mut(ox.0.add(base), dim),
+                }
+            };
+            let xs = &x[base..base + dim];
+            let ns = &noise[base..base + dim];
+            let s =
+                SlotScalars::hoist(t_max, t[slot], alpha_t[slot], alpha_prev[slot], sigma[slot]);
+            match precision {
+                RefPrecision::F32 => {
+                    slot_kernel_f64(&model.scale_sq, &model.bias, s, xs, ns, o);
+                }
+                RefPrecision::F16 => {
+                    slot_kernel_f16(&model.scale_sq_f16, &model.bias_f16, s.narrow(), xs, ns, o);
+                }
             }
-        }
-        (out_prev, out_eps, out_x0)
+        };
+        self.pool.run(bucket, &task);
+        self.compute_s.set(self.compute_s.get() + t0.elapsed().as_secs_f64());
+    }
+
+    /// Submit-path variant: compute into a recycled spare buffer and hand
+    /// it out together with the home pool the pending step returns it to
+    /// on `wait_into`. Steady state pops a warm buffer; only a cold start
+    /// (or a bucket larger than anything seen) allocates.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn compute_pooled(
+        &self,
+        bucket: usize,
+        dim: usize,
+        x: &[f32],
+        t: &[f32],
+        alpha_t: &[f32],
+        alpha_prev: &[f32],
+        sigma: &[f32],
+        noise: &[f32],
+    ) -> (StepOutput, Arc<Mutex<Vec<StepOutput>>>) {
+        let mut out = self.spare.lock().unwrap().pop().unwrap_or_default();
+        self.compute_into(bucket, dim, x, t, alpha_t, alpha_prev, sigma, noise, &mut out);
+        (out, Arc::clone(&self.spare))
     }
 }
 
@@ -146,6 +616,27 @@ mod tests {
 
     fn model() -> Arc<RefModel> {
         Arc::new(RefModel::from_manifest("sprites", &info(123456, 0.0421), 16, 400))
+    }
+
+    fn exec(threads: usize, precision: RefPrecision) -> RefExec {
+        RefExec::new(model(), Arc::new(WorkerPool::new(threads)), precision)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_compute(
+        e: &RefExec,
+        bucket: usize,
+        dim: usize,
+        x: &[f32],
+        t: &[f32],
+        a_t: &[f32],
+        a_p: &[f32],
+        sigma: &[f32],
+        noise: &[f32],
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut out = StepOutput::zeros(bucket * dim);
+        e.compute_into(bucket, dim, x, t, a_t, a_p, sigma, noise, &mut out);
+        (out.x_prev, out.eps, out.x0)
     }
 
     #[test]
@@ -187,8 +678,7 @@ mod tests {
     fn compute_matches_host_eq12_composition() {
         // the executable's (x_prev, eps, x0) must satisfy the host-side
         // Eq.-12 arithmetic on its own eps output, per lane
-        let m = model();
-        let exec = RefExec::new(m);
+        let exec = exec(1, RefPrecision::F32);
         let (bucket, dim) = (3usize, 16usize);
         let mut rng = Pcg64::seeded(9);
         let x: Vec<f32> = (0..bucket * dim).map(|_| rng.uniform(-1.5, 1.5) as f32).collect();
@@ -197,7 +687,7 @@ mod tests {
         let a_t = vec![0.4f32, 0.15, 0.05];
         let a_p = vec![0.7f32, 0.4, 0.15];
         let sigma = vec![0.0f32, 0.1, 0.3];
-        let (xp, eps, x0) = exec.compute(bucket, dim, &x, &t, &a_t, &a_p, &sigma, &noise);
+        let (xp, eps, x0) = run_compute(&exec, bucket, dim, &x, &t, &a_t, &a_p, &sigma, &noise);
         for slot in 0..bucket {
             let r = slot * dim..(slot + 1) * dim;
             let want = ddim_update_host_sigma(
@@ -222,7 +712,7 @@ mod tests {
 
     #[test]
     fn lanes_are_independent() {
-        let exec = RefExec::new(model());
+        let exec = exec(1, RefPrecision::F32);
         let (bucket, dim) = (4usize, 16usize);
         let lane0_x: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.37).sin()).collect();
         let mk = |fill: f32| {
@@ -235,9 +725,114 @@ mod tests {
         let a_p = vec![0.8f32; bucket];
         let sigma = vec![0.0f32; bucket];
         let zeros = vec![0.0f32; bucket * dim];
-        let (p1, e1, _) = exec.compute(bucket, dim, &mk(1.3), &t, &a_t, &a_p, &sigma, &zeros);
-        let (p2, e2, _) = exec.compute(bucket, dim, &mk(-2.0), &t, &a_t, &a_p, &sigma, &zeros);
+        let (p1, e1, _) =
+            run_compute(&exec, bucket, dim, &mk(1.3), &t, &a_t, &a_p, &sigma, &zeros);
+        let (p2, e2, _) =
+            run_compute(&exec, bucket, dim, &mk(-2.0), &t, &a_t, &a_p, &sigma, &zeros);
         assert_eq!(&p1[..dim], &p2[..dim], "lane 0 depends on other lanes");
         assert_eq!(&e1[..dim], &e2[..dim]);
+    }
+
+    #[test]
+    fn unrolled_and_threaded_match_scalar_bitwise() {
+        // quick in-module smoke; the exhaustive odd-shape sweep lives in
+        // rust/tests/reference_kernel.rs
+        let m = model();
+        let (bucket, dim) = (5usize, 16usize);
+        let mut rng = Pcg64::seeded(41);
+        let x: Vec<f32> = (0..bucket * dim).map(|_| rng.uniform(-2.0, 2.0) as f32).collect();
+        let noise: Vec<f32> = (0..bucket * dim).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let t: Vec<f32> = (0..bucket).map(|s| 40.0 * (s as f32 + 1.0)).collect();
+        let a_t: Vec<f32> = (0..bucket).map(|s| 0.9 - 0.15 * s as f32).collect();
+        let a_p: Vec<f32> = (0..bucket).map(|s| 0.95 - 0.1 * s as f32).collect();
+        let sigma: Vec<f32> = (0..bucket).map(|s| 0.05 * s as f32).collect();
+        let mut want = StepOutput::zeros(bucket * dim);
+        compute_scalar_into(&m, bucket, dim, &x, &t, &a_t, &a_p, &sigma, &noise, &mut want);
+        for threads in [1usize, 4] {
+            let e = RefExec::new(m.clone(), Arc::new(WorkerPool::new(threads)), RefPrecision::F32);
+            let (xp, eps, x0) = run_compute(&e, bucket, dim, &x, &t, &a_t, &a_p, &sigma, &noise);
+            assert_eq!(xp, want.x_prev, "x_prev at {threads} threads");
+            assert_eq!(eps, want.eps, "eps at {threads} threads");
+            assert_eq!(x0, want.x0, "x0 at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn f16_conversion_round_trips() {
+        // exactly representable halves survive the round trip bit-for-bit
+        for v in [0.0f32, 1.0, -1.0, 0.5, 0.25, 1.5, -0.75, 2048.0, 65504.0] {
+            assert_eq!(f32_from_f16(f16_from_f32(v)), v, "{v}");
+        }
+        // general values land within half-epsilon relative error
+        for v in [0.49f32, 1.69, 0.0421, -0.05, 0.7, 1.3, 3.14159] {
+            let back = f32_from_f16(f16_from_f32(v));
+            assert!((back - v).abs() / v.abs() < 1e-3, "{v} → {back}");
+        }
+        // overflow and specials
+        assert_eq!(f32_from_f16(f16_from_f32(1e6)), f32::INFINITY);
+        assert_eq!(f32_from_f16(f16_from_f32(-1e6)), f32::NEG_INFINITY);
+        assert_eq!(f32_from_f16(f16_from_f32(f32::INFINITY)), f32::INFINITY);
+        assert!(f32_from_f16(f16_from_f32(f32::NAN)).is_nan());
+        assert_eq!(f16_from_f32(65520.0), 0x7c00, "ties-to-even rounds max half up to inf");
+        // subnormal halves
+        let tiny = 1e-5f32;
+        let back = f32_from_f16(f16_from_f32(tiny));
+        assert!((back - tiny).abs() / tiny < 5e-3, "{tiny} → {back}");
+        assert_eq!(f32_from_f16(f16_from_f32(1e-12)), 0.0, "below half range → 0");
+    }
+
+    #[test]
+    fn f16_path_tracks_f32_path() {
+        let (bucket, dim) = (2usize, 32usize);
+        let mut rng = Pcg64::seeded(17);
+        let x: Vec<f32> = (0..bucket * dim).map(|_| rng.uniform(-1.5, 1.5) as f32).collect();
+        let noise = vec![0.0f32; bucket * dim];
+        let t = vec![100.0f32, 300.0];
+        let a_t = vec![0.5f32, 0.2];
+        let a_p = vec![0.8f32, 0.5];
+        let sigma = vec![0.0f32; 2];
+        let full = exec(1, RefPrecision::F32);
+        let half = exec(1, RefPrecision::F16);
+        let (xp32, ..) = run_compute(&full, bucket, dim, &x, &t, &a_t, &a_p, &sigma, &noise);
+        let (xp16, ..) = run_compute(&half, bucket, dim, &x, &t, &a_t, &a_p, &sigma, &noise);
+        let max = xp32.iter().zip(&xp16).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(max < 5e-2, "f16 drift {max}");
+        assert!(max > 0.0, "f16 path must actually quantize (else it is untested)");
+    }
+
+    #[test]
+    fn compute_into_is_allocation_free_once_warm() {
+        let e = exec(2, RefPrecision::F32);
+        let (bucket, dim) = (4usize, 16usize);
+        let x = vec![0.3f32; bucket * dim];
+        let noise = vec![0.1f32; bucket * dim];
+        let sc = vec![0.5f32; bucket];
+        let t = vec![100.0f32; bucket];
+        let mut out = StepOutput::default();
+        e.compute_into(bucket, dim, &x, &t, &sc, &sc, &sc, &noise, &mut out);
+        let (s1, b1) = (e.compute_s.take(), e.bytes_allocated.take());
+        assert!(s1 >= 0.0);
+        assert_eq!(b1, (3 * bucket * dim * 4) as u64, "cold start grows all three buffers");
+        for _ in 0..5 {
+            e.compute_into(bucket, dim, &x, &t, &sc, &sc, &sc, &noise, &mut out);
+        }
+        let (_, b2) = (e.compute_s.take(), e.bytes_allocated.take());
+        assert_eq!(b2, 0, "warm ticks must not allocate");
+    }
+
+    #[test]
+    fn pooled_buffers_recycle() {
+        let e = exec(1, RefPrecision::F32);
+        let (bucket, dim) = (2usize, 8usize);
+        let x = vec![0.2f32; bucket * dim];
+        let noise = vec![0.0f32; bucket * dim];
+        let sc = vec![0.6f32; bucket];
+        let t = vec![50.0f32; bucket];
+        let (out, home) = e.compute_pooled(bucket, dim, &x, &t, &sc, &sc, &sc, &noise);
+        assert!(e.bytes_allocated.take() > 0, "cold submit allocates its buffer");
+        home.lock().unwrap().push(out);
+        let (out, home) = e.compute_pooled(bucket, dim, &x, &t, &sc, &sc, &sc, &noise);
+        assert_eq!(e.bytes_allocated.take(), 0, "recycled submit must not allocate");
+        home.lock().unwrap().push(out);
     }
 }

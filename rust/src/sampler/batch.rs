@@ -117,11 +117,22 @@ impl StepBatch {
         pending.wait_into(&mut self.out)
     }
 
-    /// Execute `exe` over the first `bucket` packed slots synchronously
-    /// ([`StepBatch::submit`] + [`StepBatch::finish`]).
+    /// Execute `exe` over the first `bucket` packed slots synchronously.
+    /// Goes through the executable's one-shot run path, which on the
+    /// reference backend writes straight into this batch's output buffers
+    /// — no pending copy, no allocation — and is equivalent to
+    /// [`StepBatch::submit`] + [`StepBatch::finish`] on every backend.
     pub fn run(&mut self, exe: &StepExecutable, bucket: usize) -> Result<()> {
-        let pending = self.submit(exe, bucket)?;
-        self.finish(pending)
+        let d = self.dim;
+        exe.run(
+            &self.x[..bucket * d],
+            &self.t[..bucket],
+            &self.a_in[..bucket],
+            &self.a_out[..bucket],
+            &self.sigma[..bucket],
+            &self.noise[..bucket * d],
+            &mut self.out,
+        )
     }
 
     /// Output view of `slot` from the last [`StepBatch::run`].
