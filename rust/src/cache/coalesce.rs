@@ -13,17 +13,19 @@
 //! or shutdown error), so no entry can leak.
 
 use std::collections::HashMap;
-use std::sync::mpsc::Sender;
 use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::cache::key::CacheKey;
-use crate::coordinator::request::Response;
+use crate::cache::DoneFn;
 
-/// One parked client: where to answer it, whether it wants pixels, and
-/// when it arrived (for per-waiter latency).
+/// One parked client: how to answer it, whether it wants pixels, and
+/// when it arrived (for per-waiter latency). Delivery is a callback, not
+/// a channel: callers that block on a channel wrap one themselves, while
+/// event-loop callers (the v2 transport reactors) hand the response
+/// straight to the owning reactor without any thread parked waiting.
 pub struct ParkedWaiter {
-    pub tx: Sender<Response>,
+    pub deliver: DoneFn,
     pub return_images: bool,
     pub arrived: Instant,
 }
@@ -80,11 +82,15 @@ impl Coalescer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::Response;
     use std::sync::mpsc;
 
     fn waiter() -> (ParkedWaiter, std::sync::mpsc::Receiver<Response>) {
         let (tx, rx) = mpsc::channel();
-        (ParkedWaiter { tx, return_images: false, arrived: Instant::now() }, rx)
+        let deliver: DoneFn = Box::new(move |r| {
+            let _ = tx.send(r);
+        });
+        (ParkedWaiter { deliver, return_images: false, arrived: Instant::now() }, rx)
     }
 
     #[test]

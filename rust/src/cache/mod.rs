@@ -27,7 +27,6 @@ pub mod key;
 pub mod store;
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -170,20 +169,18 @@ impl CacheFront {
         Ok(old != new)
     }
 
-    /// Decide one request's path. `tx` is the caller's response channel;
-    /// on `Served`/`Parked` it will receive its response without the
-    /// caller dispatching anything.
-    pub fn admit(self: &Arc<Self>, req: Request, tx: Sender<Response>) -> Admission {
+    /// Decide one request's path. `deliver` is the caller's completion
+    /// callback; on `Served`/`Parked` it is (or will be) invoked without
+    /// the caller dispatching anything. Callers that want to block wrap a
+    /// channel sender; the event-loop transport hands responses to the
+    /// owning reactor instead — nothing in this layer ever blocks on the
+    /// consumer.
+    pub fn admit(self: &Arc<Self>, req: Request, deliver: DoneFn) -> Admission {
         if req.cache == CacheMode::Bypass || self.is_inert() {
             if req.cache == CacheMode::Bypass {
                 self.bypassed.fetch_add(1, Ordering::Relaxed);
             }
-            return Admission::Execute {
-                request: req,
-                on_done: Box::new(move |resp| {
-                    let _ = tx.send(resp);
-                }),
-            };
+            return Admission::Execute { request: req, on_done: deliver };
         }
         let minted = self.digest.load(Ordering::SeqCst);
         let key = CacheKey::of(&req, minted, self.backend);
@@ -192,7 +189,7 @@ impl CacheFront {
             if let Some(sample) = store.get(key) {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 // cached responses carry id 0 (no engine ever assigned one)
-                let _ = tx.send(sample.response_for(
+                deliver(sample.response_for(
                     0,
                     req.return_images,
                     arrived.elapsed().as_secs_f64(),
@@ -201,7 +198,7 @@ impl CacheFront {
                 return Admission::Served;
             }
         }
-        let waiter = ParkedWaiter { tx, return_images: req.return_images, arrived };
+        let waiter = ParkedWaiter { deliver, return_images: req.return_images, arrived };
         // with coalescing the leader's waiter parks in the table beside
         // everyone else; without it the leader carries its waiter in the
         // completion closure and every concurrent miss executes
@@ -225,7 +222,7 @@ impl CacheFront {
                         if let Some(sample) = store.get(key) {
                             self.hits.fetch_add(1, Ordering::Relaxed);
                             for w in co.complete(key) {
-                                let _ = w.tx.send(sample.response_for(
+                                (w.deliver)(sample.response_for(
                                     0,
                                     w.return_images,
                                     w.arrived.elapsed().as_secs_f64(),
@@ -307,7 +304,7 @@ impl CacheFront {
                 },
                 (None, None) => unreachable!("response is Ok or Error"),
             };
-            let _ = w.tx.send(resp);
+            (w.deliver)(resp);
         }
     }
 
@@ -334,6 +331,17 @@ mod tests {
     use crate::sampler::SamplerKind;
     use crate::schedule::{NoiseMode, TauKind};
     use std::sync::mpsc;
+
+    /// Channel-backed DoneFn: what a blocking caller wraps around admit.
+    fn chan() -> (DoneFn, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Box::new(move |r| {
+                let _ = tx.send(r);
+            }),
+            rx,
+        )
+    }
 
     fn front(cache: bool, coalesce: bool) -> Arc<CacheFront> {
         Arc::new(CacheFront {
@@ -374,7 +382,7 @@ mod tests {
     #[test]
     fn miss_execute_publish_then_hit() {
         let f = front(true, true);
-        let (tx1, rx1) = mpsc::channel();
+        let (tx1, rx1) = chan();
         let Admission::Execute { request, on_done } = f.admit(req(7, false, CacheMode::Use), tx1)
         else {
             panic!("first arrival must execute");
@@ -389,7 +397,7 @@ mod tests {
             other => panic!("{other:?}"),
         }
         // identical request now hits, and DOES get pixels if it asks
-        let (tx2, rx2) = mpsc::channel();
+        let (tx2, rx2) = chan();
         assert!(matches!(f.admit(req(7, true, CacheMode::Use), tx2), Admission::Served));
         let hit = rx2.recv().unwrap();
         assert!(hit.cached);
@@ -406,9 +414,9 @@ mod tests {
     #[test]
     fn concurrent_identical_requests_coalesce_onto_one_execution() {
         let f = front(true, true);
-        let (tx1, rx1) = mpsc::channel();
-        let (tx2, rx2) = mpsc::channel();
-        let (tx3, rx3) = mpsc::channel();
+        let (tx1, rx1) = chan();
+        let (tx2, rx2) = chan();
+        let (tx3, rx3) = chan();
         let Admission::Execute { on_done, .. } = f.admit(req(9, true, CacheMode::Use), tx1)
         else {
             panic!("leader executes");
@@ -441,7 +449,7 @@ mod tests {
     fn bypass_skips_everything() {
         let f = front(true, true);
         // prime the store
-        let (tx, rx) = mpsc::channel();
+        let (tx, rx) = chan();
         let Admission::Execute { on_done, .. } = f.admit(req(1, true, CacheMode::Use), tx)
         else {
             panic!()
@@ -449,7 +457,7 @@ mod tests {
         on_done(ok_resp(1, vec![vec![1.0]]));
         rx.recv().unwrap();
         // bypass: same key, but must execute again and not coalesce
-        let (tx, rx) = mpsc::channel();
+        let (tx, rx) = chan();
         let Admission::Execute { request, on_done } = f.admit(req(1, true, CacheMode::Bypass), tx)
         else {
             panic!("bypass must execute");
@@ -466,8 +474,8 @@ mod tests {
     #[test]
     fn error_responses_are_fanned_out_and_never_cached() {
         let f = front(true, true);
-        let (tx1, rx1) = mpsc::channel();
-        let (tx2, rx2) = mpsc::channel();
+        let (tx1, rx1) = chan();
+        let (tx2, rx2) = chan();
         let Admission::Execute { on_done, .. } = f.admit(req(5, false, CacheMode::Use), tx1)
         else {
             panic!()
@@ -486,7 +494,7 @@ mod tests {
             assert!(!r.cached);
         }
         // the failed key is unpinned and free: next arrival executes fresh
-        let (tx3, _rx3) = mpsc::channel();
+        let (tx3, _rx3) = chan();
         assert!(matches!(
             f.admit(req(5, false, CacheMode::Use), tx3),
             Admission::Execute { .. }
@@ -498,8 +506,8 @@ mod tests {
     #[test]
     fn coalesce_off_executes_every_concurrent_miss() {
         let f = front(true, false);
-        let (tx1, rx1) = mpsc::channel();
-        let (tx2, rx2) = mpsc::channel();
+        let (tx1, rx1) = chan();
+        let (tx2, rx2) = chan();
         let Admission::Execute { on_done: d1, .. } = f.admit(req(2, true, CacheMode::Use), tx1)
         else {
             panic!()
@@ -515,7 +523,7 @@ mod tests {
         let m = f.metrics();
         assert_eq!((m.misses, m.coalesced_waiters, m.entries), (2, 0, 1));
         // and the store still serves the published result
-        let (tx3, rx3) = mpsc::channel();
+        let (tx3, rx3) = chan();
         assert!(matches!(f.admit(req(2, true, CacheMode::Use), tx3), Admission::Served));
         assert!(rx3.recv().unwrap().cached);
     }
@@ -523,8 +531,8 @@ mod tests {
     #[test]
     fn cache_off_coalesce_on_single_flights_without_storing() {
         let f = front(false, true);
-        let (tx1, rx1) = mpsc::channel();
-        let (tx2, rx2) = mpsc::channel();
+        let (tx1, rx1) = chan();
+        let (tx2, rx2) = chan();
         let Admission::Execute { on_done, .. } = f.admit(req(4, true, CacheMode::Use), tx1)
         else {
             panic!()
@@ -534,7 +542,7 @@ mod tests {
         assert!(!rx1.recv().unwrap().cached);
         assert!(!rx2.recv().unwrap().cached);
         // no store: the next identical request executes again
-        let (tx3, _rx3) = mpsc::channel();
+        let (tx3, _rx3) = chan();
         assert!(matches!(
             f.admit(req(4, true, CacheMode::Use), tx3),
             Admission::Execute { .. }
@@ -547,7 +555,7 @@ mod tests {
     #[test]
     fn stale_digest_execution_is_not_published() {
         let f = front(true, true);
-        let (tx, rx) = mpsc::channel();
+        let (tx, rx) = chan();
         let Admission::Execute { on_done, .. } = f.admit(req(8, true, CacheMode::Use), tx)
         else {
             panic!()
@@ -570,7 +578,7 @@ mod tests {
         let m = f.metrics();
         assert_eq!((m.entries, m.inflight, m.bytes), (0, 0, 0));
         // and the same request under the new digest executes fresh
-        let (tx2, _rx2) = mpsc::channel();
+        let (tx2, _rx2) = chan();
         assert!(matches!(
             f.admit(req(8, true, CacheMode::Use), tx2),
             Admission::Execute { .. }
@@ -581,7 +589,7 @@ mod tests {
     fn inert_front_passes_through() {
         let f = front(false, false);
         assert!(f.is_inert());
-        let (tx, rx) = mpsc::channel();
+        let (tx, rx) = chan();
         let Admission::Execute { request, on_done } = f.admit(req(6, false, CacheMode::Use), tx)
         else {
             panic!()

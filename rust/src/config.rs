@@ -78,6 +78,16 @@ pub struct ServeConfig {
     /// f32 (default) is bitwise-identical to the scalar composition; f16
     /// stores the ε-model fields as binary16 and accumulates in f32.
     pub ref_precision: RefPrecision,
+    /// Transport event-loop threads (`--reactors`): each multiplexes a
+    /// slice of the accepted connections over epoll. The transport is
+    /// I/O-bound — a handful of reactors carries thousands of
+    /// connections — so the default is min(4, cores), not cores.
+    pub reactors: usize,
+}
+
+/// Default reactor count: min(4, available cores).
+pub fn default_reactors() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4)
 }
 
 impl Default for ServeConfig {
@@ -108,6 +118,7 @@ impl Default for ServeConfig {
             ref_precision: RefOptions::from_env()
                 .expect("DDIM_REF_PRECISION must be f32|f16")
                 .precision,
+            reactors: default_reactors(),
         }
     }
 }
@@ -162,6 +173,16 @@ impl ServeConfig {
             return Err(Error::Coordinator(format!(
                 "ref_threads {} is absurd (max 1024; 0 = auto)",
                 self.ref_threads
+            )));
+        }
+        if self.reactors == 0 {
+            return Err(Error::Coordinator("reactors must be > 0".into()));
+        }
+        if self.reactors > 256 {
+            return Err(Error::Coordinator(format!(
+                "reactors {} is absurd: each is a whole event-loop thread \
+                 and a handful multiplexes thousands of connections (max 256)",
+                self.reactors
             )));
         }
         for (i, (ds, n)) in self.placement.iter().enumerate() {
@@ -222,6 +243,8 @@ mod tests {
             ServeConfig { max_padding_waste: 1.5, ..Default::default() },
             ServeConfig { max_padding_waste: f64::NAN, ..Default::default() },
             ServeConfig { ref_threads: 2000, ..Default::default() },
+            ServeConfig { reactors: 0, ..Default::default() },
+            ServeConfig { reactors: 257, ..Default::default() },
             ServeConfig { placement: vec![("sprites".into(), 0)], ..Default::default() },
             ServeConfig {
                 placement: vec![("a".into(), 1), ("a".into(), 2)],
@@ -263,6 +286,14 @@ mod tests {
         };
         c.validate().unwrap();
         assert_eq!(c.ref_options(), RefOptions { threads: 3, precision: RefPrecision::F16 });
+    }
+
+    #[test]
+    fn reactor_knob_validates() {
+        assert!(default_reactors() >= 1);
+        assert!(default_reactors() <= 4);
+        ServeConfig { reactors: 1, ..Default::default() }.validate().unwrap();
+        ServeConfig { reactors: 256, ..Default::default() }.validate().unwrap();
     }
 
     #[test]

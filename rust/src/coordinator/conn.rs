@@ -1,0 +1,344 @@
+//! Per-connection state machine for the event-loop transport: line
+//! framing over byte streams, bounded read buffering, and a shared write
+//! buffer that interleaves streamed frames with final responses without
+//! ever corrupting framing.
+//!
+//! Pure by construction — no sockets, no syscalls, no clocks. The reactor
+//! ([`super::reactor`]) feeds raw bytes in via [`ConnState::ingest`] and
+//! drains [`ConnState::pending_write`] when the socket is writable; every
+//! framing rule is unit- and property-testable right here.
+//!
+//! Two safety rules the wire depends on:
+//! - **Bounded lines.** A request line longer than `max_line` switches the
+//!   reader into discard mode: one [`ConnEvent::Overlong`] is emitted (the
+//!   transport answers it with a typed `"line too long"` error), bytes are
+//!   thrown away until the next newline, and the connection then resyncs —
+//!   one hostile client can cost at most `max_line` bytes of buffer, never
+//!   unbounded memory.
+//! - **Atomic lines out.** Writers only append *whole* `\n`-terminated
+//!   lines; the reactor consumes any prefix. A streamed preview frame is
+//!   droppable under backpressure ([`ConnState::queue_frame`] past the
+//!   soft cap), but a final response ([`ConnState::queue_line`]) is always
+//!   queued — slow clients lose previews, never answers.
+
+/// Default bound on one request line (bytes, newline excluded).
+pub const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// Default soft cap on the per-connection write buffer: beyond this,
+/// best-effort frames are dropped (final responses still append).
+pub const WRITE_SOFT_CAP: usize = 4 << 20;
+
+/// What [`ConnState::ingest`] extracted from a chunk of bytes.
+#[derive(Debug, PartialEq, Eq)]
+pub enum ConnEvent {
+    /// One complete line (newline stripped, trailing `\r` trimmed).
+    Line(String),
+    /// The current line exceeded `max_line`; its bytes are being
+    /// discarded until the next newline. Emitted exactly once per
+    /// overlong line, at the moment the bound is crossed.
+    Overlong,
+}
+
+/// Framing + buffering state for one connection.
+pub struct ConnState {
+    /// Partial line accumulated across reads.
+    rbuf: Vec<u8>,
+    /// Inside an overlong line, discarding until `\n`.
+    discarding: bool,
+    /// Outgoing bytes; `wpos..` is the unsent suffix.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    max_line: usize,
+    soft_cap: usize,
+    /// Frames dropped because the write buffer was over the soft cap.
+    pub frames_dropped: u64,
+    /// Overlong lines rejected.
+    pub lines_overlong: u64,
+}
+
+impl ConnState {
+    pub fn new(max_line: usize, soft_cap: usize) -> ConnState {
+        ConnState {
+            rbuf: Vec::new(),
+            discarding: false,
+            wbuf: Vec::new(),
+            wpos: 0,
+            max_line,
+            soft_cap,
+            frames_dropped: 0,
+            lines_overlong: 0,
+        }
+    }
+
+    /// Feed raw bytes from the socket; extracted events append to `out`.
+    /// Handles arbitrary fragmentation: a line may arrive one byte per
+    /// call (slow loris) or many lines per call — the events are the same.
+    pub fn ingest(&mut self, mut data: &[u8], out: &mut Vec<ConnEvent>) {
+        while !data.is_empty() {
+            match data.iter().position(|&b| b == b'\n') {
+                Some(nl) => {
+                    let (head, rest) = (&data[..nl], &data[nl + 1..]);
+                    if self.discarding {
+                        // overlong line ends here; resync on the next one
+                        self.discarding = false;
+                        self.rbuf.clear();
+                    } else if self.rbuf.len() + head.len() > self.max_line {
+                        self.lines_overlong += 1;
+                        self.rbuf.clear();
+                        out.push(ConnEvent::Overlong);
+                    } else {
+                        self.rbuf.extend_from_slice(head);
+                        let mut line = std::mem::take(&mut self.rbuf);
+                        if line.last() == Some(&b'\r') {
+                            line.pop();
+                        }
+                        // the wire is JSON (ASCII in practice); junk bytes
+                        // become replacement chars and fail JSON parsing
+                        // upstream with a normal parse error
+                        out.push(ConnEvent::Line(
+                            String::from_utf8_lossy(&line).into_owned(),
+                        ));
+                    }
+                    data = rest;
+                }
+                None => {
+                    if !self.discarding {
+                        if self.rbuf.len() + data.len() > self.max_line {
+                            // crossing the bound mid-line: reject now and
+                            // discard until the newline eventually arrives
+                            self.lines_overlong += 1;
+                            self.discarding = true;
+                            self.rbuf.clear();
+                            out.push(ConnEvent::Overlong);
+                        } else {
+                            self.rbuf.extend_from_slice(data);
+                        }
+                    }
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Append one final-response line (newline added). Always queued —
+    /// a response may not be dropped, whatever the buffer looks like.
+    pub fn queue_line(&mut self, line: &str) {
+        self.compact();
+        self.wbuf.extend_from_slice(line.as_bytes());
+        self.wbuf.push(b'\n');
+    }
+
+    /// Append one best-effort frame line. Returns `false` (and counts the
+    /// drop) when the unsent backlog is already past the soft cap — a
+    /// slow client loses previews, not answers, and the buffer stays
+    /// bounded by `soft_cap` + the frames/responses already accepted.
+    pub fn queue_frame(&mut self, line: &str) -> bool {
+        if self.write_backlog() > self.soft_cap {
+            self.frames_dropped += 1;
+            return false;
+        }
+        self.queue_line(line);
+        true
+    }
+
+    /// Unsent outgoing bytes.
+    pub fn pending_write(&self) -> &[u8] {
+        &self.wbuf[self.wpos..]
+    }
+
+    /// Record `n` bytes as written to the socket.
+    pub fn consume_written(&mut self, n: usize) {
+        self.wpos += n;
+        debug_assert!(self.wpos <= self.wbuf.len());
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        }
+    }
+
+    /// Anything left to write?
+    pub fn wants_write(&self) -> bool {
+        self.wpos < self.wbuf.len()
+    }
+
+    /// Unsent byte count (the backpressure signal).
+    pub fn write_backlog(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+
+    /// Over the soft cap? The reactor pauses *reading* from such a
+    /// connection, so a client that won't drain its socket stops being
+    /// able to submit more work (read-side backpressure).
+    pub fn over_cap(&self) -> bool {
+        self.write_backlog() > self.soft_cap
+    }
+
+    /// Reclaim the written prefix once it dominates the buffer, so a
+    /// long-lived connection's write buffer doesn't grow monotonically.
+    fn compact(&mut self) {
+        if self.wpos >= 4096 && self.wpos * 2 >= self.wbuf.len() {
+            self.wbuf.drain(..self.wpos);
+            self.wpos = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lines(st: &mut ConnState, data: &[u8]) -> Vec<ConnEvent> {
+        let mut out = Vec::new();
+        st.ingest(data, &mut out);
+        out
+    }
+
+    #[test]
+    fn whole_and_split_lines_frame_identically() {
+        let mut a = ConnState::new(64, 1024);
+        let got = lines(&mut a, b"{\"op\":\"ping\"}\n{\"x\":1}\n");
+        assert_eq!(
+            got,
+            vec![
+                ConnEvent::Line("{\"op\":\"ping\"}".into()),
+                ConnEvent::Line("{\"x\":1}".into())
+            ]
+        );
+        // the same bytes one at a time (slow loris) — identical events
+        let mut b = ConnState::new(64, 1024);
+        let mut got = Vec::new();
+        for byte in b"{\"op\":\"ping\"}\n{\"x\":1}\n" {
+            b.ingest(&[*byte], &mut got);
+        }
+        assert_eq!(
+            got,
+            vec![
+                ConnEvent::Line("{\"op\":\"ping\"}".into()),
+                ConnEvent::Line("{\"x\":1}".into())
+            ]
+        );
+    }
+
+    #[test]
+    fn crlf_is_trimmed_and_partial_tail_is_held() {
+        let mut st = ConnState::new(64, 1024);
+        assert_eq!(lines(&mut st, b"abc\r\nde"), vec![ConnEvent::Line("abc".into())]);
+        // the partial "de" waits for its newline
+        assert_eq!(lines(&mut st, b"f\n"), vec![ConnEvent::Line("def".into())]);
+    }
+
+    #[test]
+    fn overlong_line_is_rejected_once_and_resyncs() {
+        let mut st = ConnState::new(8, 1024);
+        // 20 bytes dribbled in: one Overlong at the crossing, then silence
+        let mut out = Vec::new();
+        for _ in 0..20 {
+            st.ingest(b"xx", &mut out);
+        }
+        assert_eq!(out, vec![ConnEvent::Overlong]);
+        assert_eq!(st.lines_overlong, 1);
+        // buffer stays bounded while discarding
+        assert!(st.rbuf.is_empty());
+        // the newline ends the poison line; the next line parses fine
+        out.clear();
+        st.ingest(b"yyy\nok\n", &mut out);
+        assert_eq!(out, vec![ConnEvent::Line("ok".into())]);
+    }
+
+    #[test]
+    fn overlong_detected_at_newline_too() {
+        // a line that fits per-chunk but crosses the bound exactly when
+        // its newline arrives in the same chunk
+        let mut st = ConnState::new(4, 1024);
+        let got = lines(&mut st, b"abcdefgh\nok\n");
+        assert_eq!(got, vec![ConnEvent::Overlong, ConnEvent::Line("ok".into())]);
+    }
+
+    #[test]
+    fn frames_drop_past_soft_cap_but_lines_never_do() {
+        let mut st = ConnState::new(64, 16);
+        st.queue_line("final-1");
+        assert!(st.queue_frame("frame-1"), "under cap: accepted");
+        // 8 + 8 bytes queued > 16-byte cap: next frame drops
+        assert!(!st.queue_frame("frame-2"));
+        assert_eq!(st.frames_dropped, 1);
+        // a final response still appends
+        st.queue_line("final-2");
+        let s = String::from_utf8(st.pending_write().to_vec()).unwrap();
+        assert_eq!(s, "final-1\nframe-1\nfinal-2\n");
+    }
+
+    #[test]
+    fn partial_writes_consume_and_compact() {
+        let mut st = ConnState::new(64, 1 << 20);
+        st.queue_line("hello");
+        st.queue_line("world");
+        assert_eq!(st.pending_write(), b"hello\nworld\n");
+        st.consume_written(7);
+        assert_eq!(st.pending_write(), b"orld\n");
+        assert!(st.wants_write());
+        st.consume_written(5);
+        assert!(!st.wants_write());
+        assert_eq!(st.write_backlog(), 0);
+    }
+
+    #[test]
+    fn property_interleaved_frames_never_corrupt_framing() {
+        // Shared-buffer property: any interleaving of queue_line /
+        // queue_frame, drained in arbitrary chunk sizes and re-ingested
+        // by a fresh reader, yields (a) intact whole lines only, (b) every
+        // final line in order, (c) frames a subsequence of what was
+        // accepted.
+        crate::testing::check("conn_shared_buffer_framing", 200, |g| {
+            let mut st = ConnState::new(1 << 16, g.int_in(8, 256));
+            let mut wire = Vec::new();
+            let mut sent_finals = Vec::new();
+            let mut sent_frames = Vec::new();
+            let n = g.int_in(1, 40);
+            for i in 0..n {
+                if g.int_in(0, 1) == 0 {
+                    let line = format!("{{\"id\":{i},\"ok\":true}}");
+                    st.queue_line(&line);
+                    sent_finals.push(line);
+                } else {
+                    let line = format!("{{\"id\":{i},\"frame\":\"x0_preview\"}}");
+                    if st.queue_frame(&line) {
+                        sent_frames.push(line);
+                    }
+                }
+                let take = g.int_in(0, st.write_backlog());
+                wire.extend_from_slice(&st.pending_write()[..take]);
+                st.consume_written(take);
+            }
+            while st.wants_write() {
+                let take = g.int_in(1, st.write_backlog());
+                wire.extend_from_slice(&st.pending_write()[..take]);
+                st.consume_written(take);
+            }
+            // a reader on the other end sees only whole, uncorrupted lines
+            let mut reader = ConnState::new(1 << 16, 0);
+            let mut events = Vec::new();
+            reader.ingest(&wire, &mut events);
+            let mut got_finals = Vec::new();
+            let mut got_frames = Vec::new();
+            for e in events {
+                match e {
+                    ConnEvent::Line(l) if l.contains("frame") => got_frames.push(l),
+                    ConnEvent::Line(l) => got_finals.push(l),
+                    ConnEvent::Overlong => return Err("reader saw overlong".into()),
+                }
+            }
+            if got_finals != sent_finals {
+                return Err(format!(
+                    "finals corrupted: sent {sent_finals:?}, got {got_finals:?}"
+                ));
+            }
+            if got_frames != sent_frames {
+                return Err(format!(
+                    "frames corrupted: accepted {sent_frames:?}, got {got_frames:?}"
+                ));
+            }
+            Ok(())
+        });
+    }
+}

@@ -22,6 +22,7 @@
 //! engines for multi-model serving.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::artifacts::Manifest;
@@ -36,10 +37,25 @@ use crate::sampler::planner::{plan_sub_batches, SubBatch};
 use crate::sampler::{StepBatch, Trajectory};
 use crate::schedule::{AlphaTable, Direction, SamplePlan};
 
+/// Streaming preview hook (wire v2 `"stream":{"every":K}`): after each
+/// committed step of a subscribed lane whose step index is a multiple of
+/// `every`, the engine calls `on_step` with `(lane_idx, step, total_steps,
+/// predicted_x0)` — the Eq. 12 x̂₀ the update kernel already materialises
+/// in [`crate::runtime::executable::StepOutput`] and previously discarded.
+/// The final step is excluded (its x₀ ships in the response itself).
+/// Fires on the engine's worker thread; implementations must be cheap and
+/// non-blocking — the v2 transport hands the frame to the owning reactor
+/// and returns.
+pub struct ProgressSink {
+    pub every: usize,
+    pub on_step: Box<dyn Fn(usize, usize, usize, &[f32]) + Send + Sync>,
+}
+
 struct Lane {
     req: RequestId,
     lane_idx: usize,
     traj: Trajectory,
+    progress: Option<Arc<ProgressSink>>,
 }
 
 struct Inflight {
@@ -55,6 +71,7 @@ struct Pending {
     request: Request,
     plan: SamplePlan,
     submitted: Instant,
+    progress: Option<Arc<ProgressSink>>,
 }
 
 /// Execution counters shared by the inline and pipelined paths,
@@ -247,6 +264,17 @@ impl Engine {
     /// Validate + enqueue a request. Errors are immediate (backpressure,
     /// unknown dataset, bad schedule) — nothing is silently dropped.
     pub fn submit(&mut self, request: Request) -> Result<RequestId> {
+        self.submit_with(request, None)
+    }
+
+    /// [`Engine::submit`] with an optional streaming preview sink; the
+    /// sink is shared by every lane of the request and fired from
+    /// [`Engine::tick`] as steps commit.
+    pub fn submit_with(
+        &mut self,
+        request: Request,
+        progress: Option<Arc<ProgressSink>>,
+    ) -> Result<RequestId> {
         if request.dataset != self.cfg.dataset {
             return Err(Error::Coordinator(format!(
                 "engine serves '{}', request wants '{}'",
@@ -296,7 +324,8 @@ impl Engine {
         let id = self.next_id;
         self.next_id += 1;
         let lanes = request.lane_count();
-        self.queue.push(Pending { id, request, plan, submitted: Instant::now() }, lanes)?;
+        self.queue
+            .push(Pending { id, request, plan, submitted: Instant::now(), progress }, lanes)?;
         Ok(id)
     }
 
@@ -334,7 +363,7 @@ impl Engine {
                 break;
             }
             let p = self.queue.pop().unwrap();
-            let Pending { id, request, plan, submitted } = p;
+            let Pending { id, request, plan, submitted, progress } = p;
             let steps_total = plan.len() * request.lane_count();
             let n = request.lane_count();
             let kernel = request.sampler;
@@ -347,7 +376,12 @@ impl Engine {
                             seed + i as u64,
                             kernel,
                         );
-                        self.lanes.push(Lane { req: id, lane_idx: i, traj });
+                        self.lanes.push(Lane {
+                            req: id,
+                            lane_idx: i,
+                            traj,
+                            progress: progress.clone(),
+                        });
                     }
                 }
                 // caller-supplied-state lanes seed their noise streams from
@@ -365,7 +399,12 @@ impl Engine {
                             base.wrapping_add(i as u64),
                             kernel,
                         );
-                        self.lanes.push(Lane { req: id, lane_idx: i, traj });
+                        self.lanes.push(Lane {
+                            req: id,
+                            lane_idx: i,
+                            traj,
+                            progress: progress.clone(),
+                        });
                     }
                 }
                 RequestBody::Encode { images } => {
@@ -378,7 +417,12 @@ impl Engine {
                             base.wrapping_add(i as u64),
                             kernel,
                         );
-                        self.lanes.push(Lane { req: id, lane_idx: i, traj });
+                        self.lanes.push(Lane {
+                            req: id,
+                            lane_idx: i,
+                            traj,
+                            progress: progress.clone(),
+                        });
                     }
                 }
             }
@@ -419,6 +463,15 @@ impl Engine {
             kernel_steps[lane.traj.kernel_kind().index()] += 1;
             if lane.traj.is_done() {
                 finished.push(li);
+            } else if let Some(sink) = &lane.progress {
+                // stream the predicted x̂₀ (Eq. 12) the kernel just produced;
+                // only real executions reach here, so cache hits and
+                // coalesced waiters never emit frames
+                let step = lane.traj.steps_done();
+                if sink.every > 0 && step % sink.every == 0 {
+                    let total = lane.traj.plan().len();
+                    (sink.on_step)(lane.lane_idx, step, total, batch.lane(slot).x0);
+                }
             }
         }
         Ok(())

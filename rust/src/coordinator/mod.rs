@@ -21,12 +21,17 @@
 //!   metrics, drain-on-shutdown — fronted by the sample cache +
 //!   single-flight coalescer ([`crate::cache`]) ahead of shard dispatch
 //! - [`metrics`]: latency histograms (mergeable), occupancy, counters
-//! - [`server`]:  std::net JSON-line transport over the router
+//! - [`conn`]:    per-connection framing/backpressure state machine
+//! - [`reactor`]: epoll event loop (N reactors multiplex all connections)
+//! - [`server`]:  non-blocking JSON-line transport v2 over the router
+//!   (acceptor + reactors, pipelined `"id"`s, streamed x̂₀ previews)
 
+pub mod conn;
 pub mod engine;
 pub mod executor;
 pub mod metrics;
 pub mod queue;
+pub mod reactor;
 pub mod request;
 pub mod router;
 pub mod server;
@@ -36,6 +41,7 @@ pub use engine::Engine;
 pub use executor::PipelineExecutor;
 pub use metrics::{Histogram, MetricsSnapshot};
 pub use queue::BoundedQueue;
+pub use reactor::{raise_nofile_limit, PollEvent, Poller, ReactorStats};
 pub use request::{CacheMode, Request, RequestBody, RequestId, Response, ResponseBody};
 pub use router::Router;
 pub use server::Server;

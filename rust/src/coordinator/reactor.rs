@@ -1,0 +1,710 @@
+//! Event-loop reactors for the v2 transport: N threads, each multiplexing
+//! many connections over a [`Poller`] (raw `epoll` on Linux via a
+//! libc-free syscall shim; a sleep-poll fallback elsewhere so the crate
+//! still builds and tests off-Linux).
+//!
+//! Division of labour with the rest of the transport:
+//! - [`super::conn::ConnState`] owns framing and buffering (pure, no I/O).
+//! - A [`Reactor`] owns the sockets: it reads bytes into the state
+//!   machine, hands complete lines to the protocol handler installed by
+//!   [`super::server::Server`], and drains write buffers when sockets go
+//!   writable — it never blocks on any one client.
+//! - Completed requests arrive from engine-shard threads as
+//!   [`Completion`]s pushed onto the owning reactor's inbox; the producer
+//!   wakes the reactor through a loopback socket pair (the zero-dep
+//!   stand-in for an eventfd), and the reactor writes the line out when
+//!   the client socket accepts it. A slow client therefore delays only
+//!   itself: frames get dropped past the write-buffer soft cap and reads
+//!   pause while the backlog is over the cap, but final responses are
+//!   never dropped.
+//!
+//! Tokens are per-reactor, monotonically increasing, and never reused, so
+//! a completion racing a disconnect can only miss (dropped response for a
+//! gone client), never hit a recycled connection.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::conn::{ConnEvent, ConnState, MAX_LINE_BYTES, WRITE_SOFT_CAP};
+
+/// Token reserved for the wake channel's read end.
+const WAKE_TOKEN: u64 = 0;
+
+/// One readiness event out of [`Poller::wait`].
+#[derive(Debug, Clone, Copy)]
+pub struct PollEvent {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// Protocol hook installed by the server: called once per complete
+/// request line, on the reactor thread. Immediate replies go straight
+/// into the [`ConnState`] write buffer; deferred ones come back later as
+/// [`Completion`]s addressed by token.
+pub(crate) type LineHandler = Arc<dyn Fn(u64, &str, &mut ConnState) + Send + Sync>;
+
+/// One outbound line for a connection owned by some reactor.
+pub(crate) struct Completion {
+    pub token: u64,
+    pub line: String,
+    /// Best-effort frame (droppable under backpressure) vs final
+    /// response (never dropped).
+    pub frame: bool,
+}
+
+#[derive(Default)]
+struct Inbox {
+    conns: Vec<TcpStream>,
+    completions: Vec<Completion>,
+}
+
+/// Per-reactor counters, read by the metrics endpoint.
+#[derive(Default)]
+pub struct ReactorStats {
+    pub wakeups: AtomicU64,
+    pub connections: AtomicU64,
+    pub frames_streamed: AtomicU64,
+    pub frames_dropped: AtomicU64,
+    pub lines_overlong: AtomicU64,
+}
+
+/// The handle other threads use to feed a reactor: push work, then wake.
+pub(crate) struct ReactorShared {
+    inbox: Mutex<Inbox>,
+    wake_tx: TcpStream,
+    wake_pending: AtomicBool,
+    pub stats: ReactorStats,
+}
+
+impl ReactorShared {
+    pub fn push_conn(&self, stream: TcpStream) {
+        self.inbox.lock().expect("reactor inbox poisoned").conns.push(stream);
+        self.wake();
+    }
+
+    pub fn push_completion(&self, c: Completion) {
+        self.inbox
+            .lock()
+            .expect("reactor inbox poisoned")
+            .completions
+            .push(c);
+        self.wake();
+    }
+
+    /// Wake the reactor's poller. Coalesced: while a wake byte is already
+    /// in flight, producers skip the write — the reactor clears the flag
+    /// *before* draining its inbox, so nothing pushed after the clear can
+    /// be missed.
+    pub fn wake(&self) {
+        if !self.wake_pending.swap(true, Ordering::AcqRel) {
+            let _ = (&self.wake_tx).write(&[1u8]);
+        }
+    }
+}
+
+/// One connection owned by a reactor.
+struct Slot {
+    stream: TcpStream,
+    state: ConnState,
+    /// Interests currently registered with the poller.
+    reg_read: bool,
+    reg_write: bool,
+}
+
+/// One event-loop thread plus its poller and wake channel.
+pub(crate) struct Reactor {
+    id: usize,
+    poller: Poller,
+    wake_rx: TcpStream,
+    shared: Arc<ReactorShared>,
+}
+
+impl Reactor {
+    /// Build the poller + wake channel and the shared handle producers
+    /// will use. The thread itself starts in [`Reactor::start`].
+    pub fn new(id: usize) -> io::Result<(Reactor, Arc<ReactorShared>)> {
+        let poller = Poller::new()?;
+        let (wake_tx, wake_rx) = wake_pair()?;
+        wake_rx.set_nonblocking(true)?;
+        poller.add(&wake_rx, WAKE_TOKEN, true, false)?;
+        let shared = Arc::new(ReactorShared {
+            inbox: Mutex::new(Inbox::default()),
+            wake_tx,
+            wake_pending: AtomicBool::new(false),
+            stats: ReactorStats::default(),
+        });
+        Ok((Reactor { id, poller, wake_rx, shared: shared.clone() }, shared))
+    }
+
+    pub fn start(
+        self,
+        handler: LineHandler,
+        stop: Arc<AtomicBool>,
+        open_gauge: Arc<AtomicU64>,
+    ) -> io::Result<JoinHandle<()>> {
+        std::thread::Builder::new()
+            .name(format!("ddim-reactor-{}", self.id))
+            .spawn(move || self.run(handler, stop, open_gauge))
+    }
+
+    fn run(self, handler: LineHandler, stop: Arc<AtomicBool>, open_gauge: Arc<AtomicU64>) {
+        let mut conns: HashMap<u64, Slot> = HashMap::new();
+        let mut next_token: u64 = WAKE_TOKEN + 1;
+        let mut events: Vec<PollEvent> = Vec::with_capacity(128);
+        let mut rdbuf = [0u8; 16 * 1024];
+        let mut line_events: Vec<ConnEvent> = Vec::new();
+        while !stop.load(Ordering::Acquire) {
+            if let Err(e) = self.poller.wait(&mut events, 50) {
+                // poller failure is unrecoverable for this reactor; don't
+                // spin silently
+                eprintln!("ddim-reactor-{}: poll failed: {e}", self.id);
+                break;
+            }
+            let mut woken = false;
+            for ev in events.drain(..) {
+                if ev.token == WAKE_TOKEN {
+                    woken = true;
+                    continue;
+                }
+                let Some(slot) = conns.get_mut(&ev.token) else {
+                    continue; // closed earlier this iteration
+                };
+                let mut dead = false;
+                if ev.writable && slot.state.wants_write() {
+                    dead = !flush(slot);
+                }
+                if ev.readable && !dead && slot.reg_read {
+                    dead = !read_into(slot, &mut rdbuf, &mut line_events);
+                    for le in line_events.drain(..) {
+                        match le {
+                            ConnEvent::Line(l) => {
+                                if !l.trim().is_empty() {
+                                    handler(ev.token, &l, &mut slot.state);
+                                }
+                            }
+                            ConnEvent::Overlong => {
+                                self.shared
+                                    .stats
+                                    .lines_overlong
+                                    .fetch_add(1, Ordering::Relaxed);
+                                slot.state.queue_line(
+                                    "{\"ok\":false,\"error\":\"line too long\"}",
+                                );
+                            }
+                        }
+                    }
+                    if !dead {
+                        dead = !flush(slot);
+                    }
+                }
+                if dead {
+                    self.close(&mut conns, ev.token, &open_gauge);
+                } else {
+                    self.update_interest(conns.get_mut(&ev.token).expect("live slot"), ev.token);
+                }
+            }
+            if woken {
+                // drain the wake bytes, then clear the pending flag BEFORE
+                // taking the inbox (see ReactorShared::wake)
+                let mut junk = [0u8; 64];
+                while matches!((&self.wake_rx).read(&mut junk), Ok(n) if n > 0) {}
+                self.shared.wake_pending.store(false, Ordering::Release);
+                self.shared.stats.wakeups.fetch_add(1, Ordering::Relaxed);
+            }
+            // always drain the inbox — cheap when empty, and it makes the
+            // loop robust to a lost wake byte
+            let (new_conns, completions) = {
+                let mut inbox = self.shared.inbox.lock().expect("reactor inbox poisoned");
+                (
+                    std::mem::take(&mut inbox.conns),
+                    std::mem::take(&mut inbox.completions),
+                )
+            };
+            for stream in new_conns {
+                let token = next_token;
+                next_token += 1;
+                if self.adopt(&mut conns, token, stream).is_err() {
+                    // couldn't register: drop the socket (client sees EOF)
+                    open_gauge.fetch_sub(1, Ordering::Relaxed);
+                    continue;
+                }
+                self.shared.stats.connections.fetch_add(1, Ordering::Relaxed);
+            }
+            for c in completions {
+                let Some(slot) = conns.get_mut(&c.token) else {
+                    continue; // client disconnected while the request ran
+                };
+                if c.frame {
+                    if slot.state.queue_frame(&c.line) {
+                        self.shared
+                            .stats
+                            .frames_streamed
+                            .fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        self.shared
+                            .stats
+                            .frames_dropped
+                            .fetch_add(1, Ordering::Relaxed);
+                    }
+                } else {
+                    slot.state.queue_line(&c.line);
+                }
+                if flush(slot) {
+                    self.update_interest(slot, c.token);
+                } else {
+                    self.close(&mut conns, c.token, &open_gauge);
+                }
+            }
+        }
+        // drain on stop: the router finishes answering waiters *before*
+        // the stop flag is set, so completions may still be sitting in the
+        // inbox (pushed between our last drain and the stop check) — take
+        // them now or an in-flight client would see EOF instead of its
+        // "shutting down" answer
+        let (late_conns, late_completions) = {
+            let mut inbox = self.shared.inbox.lock().expect("reactor inbox poisoned");
+            (std::mem::take(&mut inbox.conns), std::mem::take(&mut inbox.completions))
+        };
+        for _ in late_conns {
+            // accepted but never served: closing the socket is the answer
+            open_gauge.fetch_sub(1, Ordering::Relaxed);
+        }
+        for c in late_completions {
+            if let Some(slot) = conns.get_mut(&c.token) {
+                if !c.frame {
+                    slot.state.queue_line(&c.line);
+                }
+            }
+        }
+        // give pending responses one bounded, non-blocking chance to reach
+        // their sockets, then close everything
+        let deadline = Instant::now() + Duration::from_millis(100);
+        while Instant::now() < deadline {
+            let mut pending = false;
+            for slot in conns.values_mut() {
+                if slot.state.wants_write() {
+                    flush(slot);
+                    pending |= slot.state.wants_write();
+                }
+            }
+            if !pending {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let n = conns.len() as u64;
+        for (token, slot) in conns.drain() {
+            let _ = self.poller.del(&slot.stream, token);
+        }
+        open_gauge.fetch_sub(n, Ordering::Relaxed);
+        self.shared.stats.connections.store(0, Ordering::Relaxed);
+    }
+
+    fn adopt(
+        &self,
+        conns: &mut HashMap<u64, Slot>,
+        token: u64,
+        stream: TcpStream,
+    ) -> io::Result<()> {
+        stream.set_nonblocking(true)?;
+        let _ = stream.set_nodelay(true);
+        self.poller.add(&stream, token, true, false)?;
+        conns.insert(
+            token,
+            Slot {
+                stream,
+                state: ConnState::new(MAX_LINE_BYTES, WRITE_SOFT_CAP),
+                reg_read: true,
+                reg_write: false,
+            },
+        );
+        Ok(())
+    }
+
+    fn close(&self, conns: &mut HashMap<u64, Slot>, token: u64, open_gauge: &AtomicU64) {
+        if let Some(slot) = conns.remove(&token) {
+            let _ = self.poller.del(&slot.stream, token);
+            self.shared.stats.connections.fetch_sub(1, Ordering::Relaxed);
+            open_gauge.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Re-register the poller interests to match the slot's state:
+    /// write interest iff bytes are pending, read interest unless the
+    /// write backlog is over the soft cap (read-side backpressure — an
+    /// un-drained client stops being able to submit more work).
+    fn update_interest(&self, slot: &mut Slot, token: u64) {
+        let want_write = slot.state.wants_write();
+        let want_read = !slot.state.over_cap();
+        if want_write != slot.reg_write || want_read != slot.reg_read {
+            slot.reg_write = want_write;
+            slot.reg_read = want_read;
+            let _ = self.poller.modify(&slot.stream, token, want_read, want_write);
+        }
+    }
+}
+
+/// Read until `WouldBlock`/EOF, feeding the state machine. Returns
+/// `false` when the connection is dead (EOF or hard error).
+fn read_into(slot: &mut Slot, buf: &mut [u8], out: &mut Vec<ConnEvent>) -> bool {
+    loop {
+        match slot.stream.read(buf) {
+            Ok(0) => return false,
+            Ok(n) => {
+                slot.state.ingest(&buf[..n], out);
+                if slot.state.over_cap() {
+                    // stop pulling more requests until the client drains
+                    return true;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+}
+
+/// Write as much of the pending buffer as the socket accepts. Returns
+/// `false` when the connection is dead.
+fn flush(slot: &mut Slot) -> bool {
+    while slot.state.wants_write() {
+        match slot.stream.write(slot.state.pending_write()) {
+            Ok(0) => return false,
+            Ok(n) => slot.state.consume_written(n),
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    true
+}
+
+/// Loopback socket pair standing in for an eventfd: portable, zero-dep,
+/// and its read end registers with the poller like any other socket.
+fn wake_pair() -> io::Result<(TcpStream, TcpStream)> {
+    let listener = TcpListener::bind(("127.0.0.1", 0))?;
+    let addr = listener.local_addr()?;
+    let tx = TcpStream::connect(addr)?;
+    let (rx, _) = listener.accept()?;
+    tx.set_nodelay(true)?;
+    Ok((tx, rx))
+}
+
+// ---------------------------------------------------------------------------
+// Poller: raw epoll on Linux (no libc — direct syscalls), sleep-poll
+// readiness hints elsewhere. Correctness never depends on edge accuracy:
+// sockets are nonblocking and the reactor tolerates spurious readiness
+// (reads return WouldBlock, writes no-op), so the fallback merely burns
+// more CPU. Linux is the production path.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+pub use linux::{raise_nofile_limit, Poller};
+
+#[cfg(not(target_os = "linux"))]
+pub use fallback::{raise_nofile_limit, Poller};
+
+#[cfg(target_os = "linux")]
+mod linux {
+    use super::PollEvent;
+    use std::io;
+    use std::net::TcpStream;
+    use std::os::unix::io::AsRawFd;
+
+    // x86_64 declares epoll_event packed in the kernel ABI; every other
+    // arch uses natural alignment.
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLL_CTL_ADD: i64 = 1;
+    const EPOLL_CTL_DEL: i64 = 2;
+    const EPOLL_CTL_MOD: i64 = 3;
+    const EPOLL_CLOEXEC: i64 = 0x80000;
+    const EINTR: i64 = 4;
+    const RLIMIT_NOFILE: i64 = 7;
+
+    #[cfg(target_arch = "x86_64")]
+    mod nr {
+        pub const CLOSE: i64 = 3;
+        pub const EPOLL_CTL: i64 = 233;
+        pub const EPOLL_PWAIT: i64 = 281;
+        pub const EPOLL_CREATE1: i64 = 291;
+        pub const PRLIMIT64: i64 = 302;
+    }
+    #[cfg(target_arch = "aarch64")]
+    mod nr {
+        pub const CLOSE: i64 = 57;
+        pub const EPOLL_CTL: i64 = 21;
+        pub const EPOLL_PWAIT: i64 = 22;
+        pub const EPOLL_CREATE1: i64 = 20;
+        pub const PRLIMIT64: i64 = 261;
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[inline]
+    unsafe fn syscall6(n: i64, a1: i64, a2: i64, a3: i64, a4: i64, a5: i64, a6: i64) -> i64 {
+        let ret: i64;
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") n => ret,
+            in("rdi") a1,
+            in("rsi") a2,
+            in("rdx") a3,
+            in("r10") a4,
+            in("r8") a5,
+            in("r9") a6,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    #[inline]
+    unsafe fn syscall6(n: i64, a1: i64, a2: i64, a3: i64, a4: i64, a5: i64, a6: i64) -> i64 {
+        let ret: i64;
+        core::arch::asm!(
+            "svc 0",
+            in("x8") n,
+            inlateout("x0") a1 => ret,
+            in("x1") a2,
+            in("x2") a3,
+            in("x3") a4,
+            in("x4") a5,
+            in("x5") a6,
+            options(nostack),
+        );
+        ret
+    }
+
+    /// Kernel return convention: [-4095, -1] is -errno.
+    fn check(ret: i64) -> io::Result<i64> {
+        if (-4095..0).contains(&ret) {
+            Err(io::Error::from_raw_os_error(-ret as i32))
+        } else {
+            Ok(ret)
+        }
+    }
+
+    /// Level-triggered epoll instance; the fd closes on drop.
+    pub struct Poller {
+        ep: i64,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            let ep = check(unsafe {
+                syscall6(nr::EPOLL_CREATE1, EPOLL_CLOEXEC, 0, 0, 0, 0, 0)
+            })?;
+            Ok(Poller { ep })
+        }
+
+        fn ctl(&self, op: i64, fd: i64, events: u32, token: u64) -> io::Result<()> {
+            let ev = EpollEvent { events, data: token };
+            check(unsafe {
+                syscall6(nr::EPOLL_CTL, self.ep, op, fd, &ev as *const EpollEvent as i64, 0, 0)
+            })
+            .map(|_| ())
+        }
+
+        pub fn add(&self, s: &TcpStream, token: u64, read: bool, write: bool) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, s.as_raw_fd() as i64, interest(read, write), token)
+        }
+
+        pub fn modify(
+            &self,
+            s: &TcpStream,
+            token: u64,
+            read: bool,
+            write: bool,
+        ) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, s.as_raw_fd() as i64, interest(read, write), token)
+        }
+
+        pub fn del(&self, s: &TcpStream, _token: u64) -> io::Result<()> {
+            // the event ptr must be non-null for pre-2.6.9 kernels; reuse
+            // a dummy
+            self.ctl(EPOLL_CTL_DEL, s.as_raw_fd() as i64, 0, 0)
+        }
+
+        /// Wait up to `timeout_ms` and decode readiness into `out`
+        /// (cleared first). EINTR is retried.
+        pub fn wait(&self, out: &mut Vec<PollEvent>, timeout_ms: i32) -> io::Result<()> {
+            out.clear();
+            let mut evs = [EpollEvent { events: 0, data: 0 }; 128];
+            let n = loop {
+                // epoll_pwait(epfd, events, maxevents, timeout, sigmask=NULL, sigsetsize)
+                // (aarch64 has no plain epoll_wait syscall)
+                let r = unsafe {
+                    syscall6(
+                        nr::EPOLL_PWAIT,
+                        self.ep,
+                        evs.as_mut_ptr() as i64,
+                        evs.len() as i64,
+                        timeout_ms as i64,
+                        0,
+                        8,
+                    )
+                };
+                if r == -EINTR {
+                    continue;
+                }
+                break check(r)? as usize;
+            };
+            for ev in evs.iter().take(n) {
+                let e = *ev;
+                let bits = e.events;
+                out.push(PollEvent {
+                    token: e.data,
+                    // errors/hangups surface as readable: the next read
+                    // returns 0/Err and the reactor closes the slot
+                    readable: bits & (EPOLLIN | EPOLLERR | EPOLLHUP) != 0,
+                    writable: bits & (EPOLLOUT | EPOLLERR | EPOLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe {
+                syscall6(nr::CLOSE, self.ep, 0, 0, 0, 0, 0);
+            }
+        }
+    }
+
+    fn interest(read: bool, write: bool) -> u32 {
+        let mut e = 0;
+        if read {
+            e |= EPOLLIN;
+        }
+        if write {
+            e |= EPOLLOUT;
+        }
+        e
+    }
+
+    #[repr(C)]
+    struct Rlimit64 {
+        cur: u64,
+        max: u64,
+    }
+
+    /// Raise the soft RLIMIT_NOFILE to the hard limit (the bench opens
+    /// thousands of sockets in one process). Returns the resulting soft
+    /// limit; never fails harder than "returns the old limit".
+    pub fn raise_nofile_limit() -> u64 {
+        let mut old = Rlimit64 { cur: 0, max: 0 };
+        let got = unsafe {
+            syscall6(
+                nr::PRLIMIT64,
+                0,
+                RLIMIT_NOFILE,
+                0,
+                &mut old as *mut Rlimit64 as i64,
+                0,
+                0,
+            )
+        };
+        if check(got).is_err() {
+            return 1024;
+        }
+        if old.cur >= old.max {
+            return old.cur;
+        }
+        let want = Rlimit64 { cur: old.max, max: old.max };
+        let set = unsafe {
+            syscall6(
+                nr::PRLIMIT64,
+                0,
+                RLIMIT_NOFILE,
+                &want as *const Rlimit64 as i64,
+                0,
+                0,
+                0,
+            )
+        };
+        if check(set).is_ok() {
+            old.max
+        } else {
+            old.cur
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod fallback {
+    use super::PollEvent;
+    use std::collections::HashMap;
+    use std::io;
+    use std::net::TcpStream;
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    /// Portability fallback: no readiness signal, so `wait` sleeps
+    /// briefly and reports every registered token as ready for its
+    /// interests. Nonblocking sockets make spurious readiness harmless;
+    /// this just polls harder than epoll would.
+    pub struct Poller {
+        interests: Mutex<HashMap<u64, (bool, bool)>>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller { interests: Mutex::new(HashMap::new()) })
+        }
+
+        pub fn add(&self, _s: &TcpStream, token: u64, read: bool, write: bool) -> io::Result<()> {
+            self.interests.lock().unwrap().insert(token, (read, write));
+            Ok(())
+        }
+
+        pub fn modify(
+            &self,
+            _s: &TcpStream,
+            token: u64,
+            read: bool,
+            write: bool,
+        ) -> io::Result<()> {
+            self.interests.lock().unwrap().insert(token, (read, write));
+            Ok(())
+        }
+
+        pub fn del(&self, _s: &TcpStream, token: u64) -> io::Result<()> {
+            self.interests.lock().unwrap().remove(&token);
+            Ok(())
+        }
+
+        pub fn wait(&self, out: &mut Vec<PollEvent>, timeout_ms: i32) -> io::Result<()> {
+            out.clear();
+            std::thread::sleep(Duration::from_millis((timeout_ms.max(1) as u64).min(3)));
+            for (&token, &(read, write)) in self.interests.lock().unwrap().iter() {
+                if read || write {
+                    out.push(PollEvent { token, readable: read, writable: write });
+                }
+            }
+            Ok(())
+        }
+    }
+
+    pub fn raise_nofile_limit() -> u64 {
+        1024
+    }
+}

@@ -28,8 +28,9 @@ use std::sync::mpsc::{self, Receiver};
 use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
-use crate::cache::{Admission, CacheFront};
+use crate::cache::{Admission, CacheFront, DoneFn};
 use crate::config::ServeConfig;
+use crate::coordinator::engine::ProgressSink;
 use crate::coordinator::metrics::{Histogram, MetricsSnapshot};
 use crate::coordinator::request::{Request, Response, ResponseBody};
 use crate::coordinator::shard::{EngineShard, ShardStats};
@@ -189,6 +190,25 @@ impl Router {
     /// error.
     pub fn submit(&self, req: Request) -> Receiver<Response> {
         let (tx, rx) = mpsc::channel();
+        self.submit_with(
+            req,
+            Box::new(move |resp| {
+                let _ = tx.send(resp);
+            }),
+            None,
+        );
+        rx
+    }
+
+    /// Callback-form submission, the primitive `submit` wraps: `done` is
+    /// invoked with exactly one [`Response`], on whatever thread completes
+    /// the request (cache hit: this one; execution: the shard worker).
+    /// `progress` optionally streams per-step predicted-x₀ previews from
+    /// the engine; it only takes effect when this request actually
+    /// executes — cache hits and coalesced waiters get no frames (their
+    /// steps ran elsewhere, or not at all). Event-loop callers hand both
+    /// callbacks to the owning reactor, so nothing here ever blocks.
+    pub fn submit_with(&self, req: Request, done: DoneFn, progress: Option<Arc<ProgressSink>>) {
         let error = |msg: String| Response {
             id: 0,
             body: ResponseBody::Error { message: msg },
@@ -197,14 +217,14 @@ impl Router {
             cached: false,
         };
         if self.stopping.load(Ordering::SeqCst) {
-            let _ = tx.send(error("shutting down".into()));
-            return rx;
+            done(error("shutting down".into()));
+            return;
         }
         if let Err(e) = self.bring_up(&req.dataset, false) {
-            let _ = tx.send(error(e.to_string()));
-            return rx;
+            done(error(e.to_string()));
+            return;
         }
-        match self.cache.admit(req, tx) {
+        match self.cache.admit(req, done) {
             // answered from the store / parked behind an identical
             // in-flight execution: nothing reaches any shard
             Admission::Served | Admission::Parked => {}
@@ -216,7 +236,7 @@ impl Router {
                             pool.shards.iter().map(EngineShard::load).collect();
                         let idx =
                             pick_shard(&loads, pool.cursor.fetch_add(1, Ordering::SeqCst));
-                        pool.shards[idx].dispatch(request, on_done);
+                        pool.shards[idx].dispatch(request, on_done, progress);
                     }
                     // the completion callback must fire exactly once even
                     // when no shard exists, so coalesced waiters (if any)
@@ -228,7 +248,6 @@ impl Router {
                 }
             }
         }
-        rx
     }
 
     /// Submit and block for the response (examples / benches).
@@ -304,9 +323,10 @@ impl Router {
         (agg, per_shard)
     }
 
-    /// The `{"op":"metrics"}` reply: merged totals + `"shards": [...]`
-    /// breakdown.
-    pub fn metrics_json(&self) -> String {
+    /// The `{"op":"metrics"}` reply as a [`Value`]: merged totals +
+    /// `"shards": [...]` breakdown. The transport layer injects its own
+    /// section (`"transport"`) before serializing.
+    pub fn metrics_value(&self) -> Value {
         let (agg, per_shard) = self.aggregate();
         let shards: Vec<Value> = per_shard
             .iter()
@@ -338,7 +358,7 @@ impl Router {
                 ]
             })
             .collect();
-        json::to_string(&jobj![
+        jobj![
             ("ok", true),
             ("engines", per_shard.len()),
             ("datasets", self.datasets().len()),
@@ -367,7 +387,12 @@ impl Router {
             ("queue_accepted", agg.queue_accepted),
             ("cache", self.cache.metrics().to_json()),
             ("shards", Value::Arr(shards)),
-        ])
+        ]
+    }
+
+    /// [`Router::metrics_value`] serialized to one line.
+    pub fn metrics_json(&self) -> String {
+        json::to_string(&self.metrics_value())
     }
 
     /// Graceful shutdown: refuse new submissions, signal every shard (so

@@ -1,61 +1,125 @@
-//! JSON-line TCP front end (std::net + threads; the offline build has no
-//! tokio — a thread-per-connection design is plenty when the real
-//! concurrency lives in the shard pool).
+//! Transport v2: a multiplexed JSON-line TCP front end (std::net + raw
+//! epoll; the offline build has no tokio).
 //!
-//! Protocol: one JSON request per line (see [`super::request`]), one JSON
-//! response per line, in order. `{"op":"metrics"}` returns a merged
-//! snapshot with a per-shard breakdown; `{"op":"ping"}` returns
-//! `{"ok":true}`. See `docs/serving.md` for the full wire format.
+//! One acceptor thread hands sockets round-robin to N event-loop
+//! reactors ([`super::reactor`]); each reactor multiplexes its slice of
+//! the connections through a [`super::conn::ConnState`] framing machine
+//! and never blocks on any one client. Requests may carry an optional
+//! `"id"` — echoed verbatim on the response — so a client can pipeline
+//! many requests on one connection and match completions as they arrive
+//! **out of order**. An opt-in `"stream":{"every":K}` directive streams
+//! `{"frame":"x0_preview",...}` lines while the request runs: the
+//! predicted x̂₀ of Eq. 12 every K committed steps (see
+//! [`super::engine::ProgressSink`]).
 //!
-//! This module is *pure transport*: connection threads parse a line, hand
-//! the request to the [`Router`], and write the response line back. All
-//! scheduling — the sample-cache/coalescing front ([`crate::cache`]),
-//! shard placement, least-loaded dispatch, tick loops, drain-on-shutdown
-//! — lives in [`super::router`] / [`super::shard`]. A request answered
-//! from the cache never leaves the connection thread's submit call.
+//! Wire protocol (one JSON value per line, see `docs/serving.md`):
+//! - `{"op":"ping"}` → `{"ok":true,"pong":true}`
+//! - `{"op":"metrics"}` → merged router snapshot + a `"transport"`
+//!   section (connections, accept errors, frames streamed/dropped)
+//! - `{"op":"generate"|"decode"|"encode",...}` → one final response
+//!   line; with `"id"`, pipelined; with `"stream"`, preview frames
+//!   interleave ahead of it. `"id"` and `"stream"` shape *delivery*
+//!   only — they are parsed here at the transport and never enter
+//!   [`Request`], so the sample cache key cannot depend on them.
+//!
+//! This module is *pure transport*: reactors parse lines, hand requests
+//! to the [`Router`], and queue response lines. All scheduling — the
+//! sample-cache/coalescing front ([`crate::cache`]), shard placement,
+//! least-loaded dispatch, tick loops, drain-on-shutdown — lives in
+//! [`super::router`] / [`super::shard`]. A request answered from the
+//! cache never leaves the reactor's submit call.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{self, BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use crate::cache::DoneFn;
 use crate::config::ServeConfig;
+use crate::coordinator::conn::ConnState;
+use crate::coordinator::engine::ProgressSink;
+use crate::coordinator::reactor::{Completion, LineHandler, Reactor, ReactorShared};
 use crate::coordinator::request::Request;
 use crate::coordinator::router::Router;
 use crate::error::{Error, Result};
 use crate::jobj;
 use crate::json::{self, Value};
 
-/// A running server: listener thread + router-owned shard threads.
+/// Acceptor-side counters plus the open-connection gauge the reactors
+/// keep honest (decremented on every close path, including drops during
+/// reactor shutdown).
+#[derive(Default)]
+struct TransportStats {
+    accepted: AtomicU64,
+    accept_errors: AtomicU64,
+    open: Arc<AtomicU64>,
+}
+
+/// A running server: acceptor thread + N reactor threads + router-owned
+/// shard threads.
 pub struct Server {
     addr: SocketAddr,
-    stop: Arc<AtomicBool>,
+    accept_stop: Arc<AtomicBool>,
+    reactor_stop: Arc<AtomicBool>,
     accept_handle: Option<JoinHandle<()>>,
+    reactor_handles: Vec<JoinHandle<()>>,
+    reactors: Vec<Arc<ReactorShared>>,
     router: Option<Arc<Router>>,
 }
 
 impl Server {
     /// Bind `cfg.listen` (use port 0 for ephemeral), bring up the default
-    /// dataset's shard pool (compiling executables), and start accepting.
+    /// dataset's shard pool (compiling executables), start `cfg.reactors`
+    /// event loops, and start accepting.
     pub fn start(cfg: ServeConfig) -> Result<Server> {
         cfg.validate()?;
+        let n_reactors = cfg.reactors;
         let listener = TcpListener::bind(&cfg.listen)?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        let stop = Arc::new(AtomicBool::new(false));
 
         let router = Arc::new(Router::start(cfg)?);
+        let stats = Arc::new(TransportStats::default());
 
-        let accept_stop = stop.clone();
-        let accept_router = router.clone();
-        let accept_handle = std::thread::Builder::new()
-            .name("ddim-accept".into())
-            .spawn(move || accept_loop(listener, accept_router, accept_stop))
-            .map_err(Error::Io)?;
+        let reactor_stop = Arc::new(AtomicBool::new(false));
+        let mut pairs = Vec::with_capacity(n_reactors);
+        for i in 0..n_reactors {
+            pairs.push(Reactor::new(i).map_err(Error::Io)?);
+        }
+        let shareds: Vec<Arc<ReactorShared>> = pairs.iter().map(|(_, s)| s.clone()).collect();
+        let all = Arc::new(shareds.clone());
+        let mut reactor_handles = Vec::with_capacity(n_reactors);
+        for (reactor, shared) in pairs {
+            let handler = make_handler(router.clone(), shared, all.clone(), stats.clone());
+            reactor_handles.push(
+                reactor
+                    .start(handler, reactor_stop.clone(), stats.open.clone())
+                    .map_err(Error::Io)?,
+            );
+        }
 
-        Ok(Server { addr, stop, accept_handle: Some(accept_handle), router: Some(router) })
+        let accept_stop = Arc::new(AtomicBool::new(false));
+        let accept_handle = {
+            let reactors = shareds.clone();
+            let stats = stats.clone();
+            let stop = accept_stop.clone();
+            std::thread::Builder::new()
+                .name("ddim-accept".into())
+                .spawn(move || accept_loop(listener, reactors, stats, stop))
+                .map_err(Error::Io)?
+        };
+
+        Ok(Server {
+            addr,
+            accept_stop,
+            reactor_stop,
+            accept_handle: Some(accept_handle),
+            reactor_handles,
+            reactors: shareds,
+            router: Some(router),
+        })
     }
 
     /// Bound address (useful with ephemeral ports).
@@ -69,88 +133,251 @@ impl Server {
         self.router.as_ref()
     }
 
-    /// Graceful shutdown: stop accepting, then drain the shard pool —
-    /// in-flight lanes get up to `drain_timeout_ms` to finish and every
-    /// remaining waiter is answered with `Error { message: "shutting
-    /// down" }` before the threads are joined.
+    /// Graceful shutdown, in dependency order: stop accepting, drain the
+    /// shard pool (in-flight lanes get up to `drain_timeout_ms`; every
+    /// remaining waiter is answered with a "shutting down" error) **while
+    /// the reactors are still running** so those answers reach their
+    /// sockets, then stop and join the reactors — which give pending
+    /// write buffers one bounded flush before closing every connection.
+    /// No connection thread outlives this call: the reactors own all
+    /// sockets and are joined here.
     pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        // poke accept loop
-        let _ = TcpStream::connect(self.addr);
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.accept_stop.store(true, Ordering::SeqCst);
         if let Some(h) = self.accept_handle.take() {
             let _ = h.join();
         }
         if let Some(router) = self.router.take() {
             router.shutdown();
         }
+        self.reactor_stop.store(true, Ordering::SeqCst);
+        for r in &self.reactors {
+            r.wake();
+        }
+        for h in self.reactor_handles.drain(..) {
+            let _ = h.join();
+        }
     }
 }
 
-fn accept_loop(listener: TcpListener, router: Arc<Router>, stop: Arc<AtomicBool>) {
+impl Drop for Server {
+    /// Dropping a server that was not shut down explicitly still joins
+    /// every thread and closes every socket (idempotent: after
+    /// [`Server::shutdown`] all handles are already taken).
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Accept loop: round-robin sockets over the reactors. Transient errors
+/// (fd exhaustion, aborted handshakes, signals) are counted and retried
+/// — never a silent exit; only the stop flag ends the loop.
+fn accept_loop(
+    listener: TcpListener,
+    reactors: Vec<Arc<ReactorShared>>,
+    stats: Arc<TransportStats>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut rr = 0usize;
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _)) => {
-                let conn_router = router.clone();
-                let _ = std::thread::Builder::new()
-                    .name("ddim-conn".into())
-                    .spawn(move || {
-                        let _ = handle_conn(stream, conn_router);
-                    });
+                stats.accepted.fetch_add(1, Ordering::Relaxed);
+                stats.open.fetch_add(1, Ordering::Relaxed);
+                reactors[rr % reactors.len()].push_conn(stream);
+                rr += 1;
             }
-            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+            Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(5));
             }
-            Err(_) => break,
-        }
-    }
-}
-
-fn handle_conn(stream: TcpStream, router: Arc<Router>) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut stream = stream;
-    let mut line = String::new();
-    loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
-        }
-        let trimmed = line.trim();
-        if trimmed.is_empty() {
-            continue;
-        }
-        let reply = dispatch_line(trimmed, &router);
-        stream.write_all(reply.as_bytes())?;
-        stream.write_all(b"\n")?;
-        stream.flush()?;
-    }
-}
-
-fn dispatch_line(line: &str, router: &Router) -> String {
-    let err = |msg: String| json::to_string(&jobj![("ok", false), ("error", msg)]);
-    let v = match json::parse(line) {
-        Ok(v) => v,
-        Err(e) => return err(format!("parse: {e}")),
-    };
-    match v.get_opt("op").and_then(|o| o.as_str().ok().map(str::to_string)) {
-        Some(op) if op == "ping" => json::to_string(&jobj![("ok", true), ("pong", true)]),
-        Some(op) if op == "metrics" => router.metrics_json(),
-        Some(_) => {
-            let req = match Request::from_json_with(&v, router.config().default_sampler) {
-                Ok(r) => r,
-                Err(e) => return err(e.to_string()),
-            };
-            match router.submit(req).recv() {
-                Ok(resp) => resp.to_json_line(),
-                Err(_) => err("request dropped during shutdown".into()),
+            Err(ref e) if transient_accept_error(e) => {
+                stats.accept_errors.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                // unexpected: count it, say so, back off, keep serving —
+                // the old loop's silent `break` left a zombie server
+                stats.accept_errors.fetch_add(1, Ordering::Relaxed);
+                eprintln!("ddim-accept: accept failed: {e}");
+                std::thread::sleep(Duration::from_millis(50));
             }
         }
-        None => err("missing op".into()),
     }
 }
 
-/// Minimal blocking client for examples, benches and tests: send one JSON
-/// line, read one JSON line back, over a persistent connection.
+/// Errors `accept(2)` emits under load that mean "try again", not "the
+/// listener is broken": per-process/system fd exhaustion (EMFILE=24 /
+/// ENFILE=23 — no stable `ErrorKind`, matched by errno), connections
+/// that died in the backlog, and signal interruptions.
+fn transient_accept_error(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::ConnectionAborted
+            | io::ErrorKind::ConnectionReset
+            | io::ErrorKind::Interrupted
+    ) || matches!(e.raw_os_error(), Some(23) | Some(24))
+}
+
+/// Build the protocol handler one reactor runs for every complete line:
+/// captures that reactor's own inbox (completions must come back to the
+/// thread that owns the socket) plus the full reactor list and acceptor
+/// counters for the metrics op.
+fn make_handler(
+    router: Arc<Router>,
+    own: Arc<ReactorShared>,
+    all: Arc<Vec<Arc<ReactorShared>>>,
+    stats: Arc<TransportStats>,
+) -> LineHandler {
+    Arc::new(move |token, line, state| {
+        handle_line(token, line, state, &router, &own, &all, &stats)
+    })
+}
+
+fn handle_line(
+    token: u64,
+    line: &str,
+    state: &mut ConnState,
+    router: &Arc<Router>,
+    own: &Arc<ReactorShared>,
+    all: &[Arc<ReactorShared>],
+    stats: &TransportStats,
+) {
+    let v = match json::parse(line.trim()) {
+        Ok(v) => v,
+        Err(e) => return queue_err(state, None, format!("parse: {e}")),
+    };
+    // the pipelining id is any JSON value, echoed verbatim on every line
+    // this request produces (frames included)
+    let client_id = v.get_opt("id").cloned();
+    let Some(op) = v.get_opt("op").and_then(|o| o.as_str().ok().map(str::to_string)) else {
+        return queue_err(state, client_id.as_ref(), "missing op".into());
+    };
+    match op.as_str() {
+        "ping" => {
+            let mut r = jobj![("ok", true), ("pong", true)];
+            if let Some(id) = &client_id {
+                let _ = r.set("id", id.clone());
+            }
+            state.queue_line(&json::to_string(&r));
+        }
+        "metrics" => {
+            let mut m = router.metrics_value();
+            let _ = m.set("transport", transport_value(stats, all));
+            if let Some(id) = &client_id {
+                let _ = m.set("id", id.clone());
+            }
+            state.queue_line(&json::to_string(&m));
+        }
+        _ => {
+            let every = match parse_stream(&v) {
+                Ok(e) => e,
+                Err(e) => return queue_err(state, client_id.as_ref(), e.to_string()),
+            };
+            // `"id"`/`"stream"` were peeled off above; the Request parser
+            // ignores unknown fields, so neither can reach the cache key
+            let req = match Request::from_json_with(&v, router.config().default_sampler) {
+                Ok(r) => r,
+                Err(e) => return queue_err(state, client_id.as_ref(), e.to_string()),
+            };
+            let progress = every.map(|every| {
+                let sh = own.clone();
+                let cid = client_id.clone();
+                Arc::new(ProgressSink {
+                    every,
+                    on_step: Box::new(move |lane, step, total, x0| {
+                        let mut f = jobj![
+                            ("frame", "x0_preview"),
+                            ("lane", lane),
+                            ("step", step),
+                            ("total_steps", total),
+                            (
+                                "x0",
+                                Value::Arr(
+                                    x0.iter().map(|&x| Value::Num(x as f64)).collect()
+                                )
+                            ),
+                        ];
+                        if let Some(id) = &cid {
+                            let _ = f.set("id", id.clone());
+                        }
+                        sh.push_completion(Completion {
+                            token,
+                            line: json::to_string(&f),
+                            frame: true,
+                        });
+                    }),
+                })
+            });
+            let sh = own.clone();
+            let done: DoneFn = Box::new(move |resp| {
+                let mut r = resp.to_json();
+                if let Some(id) = client_id {
+                    let _ = r.set("id", id);
+                }
+                sh.push_completion(Completion {
+                    token,
+                    line: json::to_string(&r),
+                    frame: false,
+                });
+            });
+            // may complete synchronously (cache hit) — the completion
+            // lands in our own inbox and is drained this same loop pass
+            router.submit_with(req, done, progress);
+        }
+    }
+}
+
+/// Parse the opt-in streaming directive `{"stream":{"every":K}}`.
+fn parse_stream(v: &Value) -> Result<Option<usize>> {
+    let Some(s) = v.get_opt("stream") else {
+        return Ok(None);
+    };
+    let every = s.get("every")?.as_usize()?;
+    if every == 0 {
+        return Err(Error::Request("stream.every must be >= 1".into()));
+    }
+    Ok(Some(every))
+}
+
+fn queue_err(state: &mut ConnState, id: Option<&Value>, msg: String) {
+    let mut e = jobj![("ok", false), ("error", msg)];
+    if let Some(id) = id {
+        let _ = e.set("id", id.clone());
+    }
+    state.queue_line(&json::to_string(&e));
+}
+
+/// The `"transport"` section of the metrics response.
+fn transport_value(stats: &TransportStats, reactors: &[Arc<ReactorShared>]) -> Value {
+    let mut wakeups = 0u64;
+    let mut frames_streamed = 0u64;
+    let mut frames_dropped = 0u64;
+    let mut lines_overlong = 0u64;
+    for r in reactors {
+        wakeups += r.stats.wakeups.load(Ordering::Relaxed);
+        frames_streamed += r.stats.frames_streamed.load(Ordering::Relaxed);
+        frames_dropped += r.stats.frames_dropped.load(Ordering::Relaxed);
+        lines_overlong += r.stats.lines_overlong.load(Ordering::Relaxed);
+    }
+    jobj![
+        ("reactors", reactors.len()),
+        ("connections_total", stats.accepted.load(Ordering::Relaxed)),
+        ("connections_open", stats.open.load(Ordering::Relaxed)),
+        ("accept_errors", stats.accept_errors.load(Ordering::Relaxed)),
+        ("wakeups", wakeups),
+        ("frames_streamed", frames_streamed),
+        ("frames_dropped", frames_dropped),
+        ("lines_overlong", lines_overlong),
+    ]
+}
+
+/// Minimal blocking client for examples, benches and tests, over a
+/// persistent connection. [`Client::roundtrip`] is the v1 serial shape;
+/// [`Client::submit`] + [`Client::recv_frame`] drive the v2 pipelined /
+/// streaming shape (tag requests with ids, read lines as they arrive).
 pub struct Client {
     reader: BufReader<TcpStream>,
     stream: TcpStream,
@@ -165,13 +392,32 @@ impl Client {
 
     /// Send one request line, wait for the response line.
     pub fn roundtrip(&mut self, v: &Value) -> Result<Value> {
-        self.stream.write_all(json::to_string(v).as_bytes())?;
-        self.stream.write_all(b"\n")?;
-        self.stream.flush()?;
+        self.send_line(v)?;
+        self.recv_frame()
+    }
+
+    /// Pipeline: tag `v` with `"id": id` and send it without waiting.
+    /// Completions arrive (out of order) via [`Client::recv_frame`].
+    pub fn submit(&mut self, id: u64, v: &Value) -> Result<()> {
+        let mut tagged = v.clone();
+        tagged.set("id", Value::from(id))?;
+        self.send_line(&tagged)
+    }
+
+    /// Read the next line the server sends: a final response or an
+    /// interleaved `"frame"` line.
+    pub fn recv_frame(&mut self) -> Result<Value> {
         let mut line = String::new();
         if self.reader.read_line(&mut line)? == 0 {
             return Err(Error::Coordinator("server closed connection".into()));
         }
         json::parse(line.trim())
+    }
+
+    fn send_line(&mut self, v: &Value) -> Result<()> {
+        self.stream.write_all(json::to_string(v).as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        self.stream.flush()?;
+        Ok(())
     }
 }

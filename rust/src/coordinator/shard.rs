@@ -22,7 +22,7 @@ use std::time::{Duration, Instant};
 
 use crate::cache::DoneFn;
 use crate::config::ServeConfig;
-use crate::coordinator::engine::Engine;
+use crate::coordinator::engine::{Engine, ProgressSink};
 use crate::coordinator::metrics::{Histogram, MetricsSnapshot};
 use crate::coordinator::request::{Request, RequestId, Response, ResponseBody};
 use crate::error::{Error, Result};
@@ -33,7 +33,7 @@ use crate::error::{Error, Result};
 /// to the sample cache and fans it out to every coalesced waiter, right
 /// here on the worker thread where the engine completed it.
 enum ShardCmd {
-    Submit(Request, DoneFn),
+    Submit(Request, DoneFn, Option<Arc<ProgressSink>>),
     Stats(Sender<ShardStats>),
 }
 
@@ -137,11 +137,13 @@ impl EngineShard {
 
     /// Hand a request to the worker; `done` is called with exactly one
     /// [`Response`] (success, rejection, or shutdown error) — never zero,
-    /// never twice.
-    pub fn dispatch(&self, req: Request, done: DoneFn) {
+    /// never twice. `progress` (if any) streams per-step x₀ previews from
+    /// the engine while the request runs; it is best-effort and fires on
+    /// the worker thread.
+    pub fn dispatch(&self, req: Request, done: DoneFn, progress: Option<Arc<ProgressSink>>) {
         self.pending.fetch_add(lane_cost(&req), Ordering::SeqCst);
-        let sent = self.cmd_tx.lock().unwrap().send(ShardCmd::Submit(req, done));
-        if let Err(mpsc::SendError(ShardCmd::Submit(_, done))) = sent {
+        let sent = self.cmd_tx.lock().unwrap().send(ShardCmd::Submit(req, done, progress));
+        if let Err(mpsc::SendError(ShardCmd::Submit(_, done, _))) = sent {
             // worker gone: answer the waiter directly. The pending bump is
             // deliberately NOT undone — the worker's exit-time store(0)
             // may already have run, and an underflowing gauge is worse
@@ -252,7 +254,7 @@ fn worker(args: WorkerArgs) {
                 }
             };
             let Some(cmd) = cmd else { break };
-            if let ShardCmd::Submit(req, _) = &cmd {
+            if let ShardCmd::Submit(req, _, _) = &cmd {
                 // paired with the fetch_add in dispatch: this lane cost now
                 // moves from "pending" into the engine's own accounting
                 pending.fetch_sub(lane_cost(req), Ordering::SeqCst);
@@ -293,7 +295,7 @@ fn worker(args: WorkerArgs) {
     // commands still sitting in the channel never reached the engine
     while let Ok(cmd) = cmd_rx.try_recv() {
         match cmd {
-            ShardCmd::Submit(_, done) => {
+            ShardCmd::Submit(_, done, _) => {
                 done(shutdown_response());
             }
             ShardCmd::Stats(tx) => {
@@ -322,7 +324,7 @@ fn handle_cmd(
     waiters: &mut HashMap<RequestId, DoneFn>,
 ) {
     match cmd {
-        ShardCmd::Submit(req, done) => match engine.submit(req) {
+        ShardCmd::Submit(req, done, progress) => match engine.submit_with(req, progress) {
             Ok(req_id) => {
                 waiters.insert(req_id, done);
             }

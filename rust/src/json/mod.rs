@@ -124,6 +124,19 @@ impl Value {
     pub fn as_usize_vec(&self) -> Result<Vec<usize>> {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }
+
+    /// Insert (or replace) an object field in place. Errors on non-objects
+    /// — used by the transport to inject `"id"` / `"transport"` into
+    /// responses built by lower layers that know nothing about wire v2.
+    pub fn set(&mut self, key: &str, val: Value) -> Result<()> {
+        match self {
+            Value::Obj(m) => {
+                m.insert(key.to_string(), val);
+                Ok(())
+            }
+            _ => Err(Error::Json(format!("expected object setting '{key}'"))),
+        }
+    }
 }
 
 impl From<f64> for Value {
@@ -193,6 +206,15 @@ mod tests {
         assert!(matches!(v.get("n").unwrap(), Value::Null));
         assert!(v.get("zz").is_err());
         assert!(v.get("a").unwrap().as_str().is_err());
+    }
+
+    #[test]
+    fn set_inserts_replaces_and_rejects_non_objects() {
+        let mut v = parse(r#"{"a": 1}"#).unwrap();
+        v.set("b", Value::from("x")).unwrap();
+        v.set("a", Value::from(2.0)).unwrap();
+        assert_eq!(to_string(&v), r#"{"a":2,"b":"x"}"#);
+        assert!(Value::Null.set("k", Value::Bool(true)).is_err());
     }
 
     #[test]

@@ -41,6 +41,9 @@ COMMANDS
                 any count)
               --ref-precision f32|f16 (reference-backend weight storage;
                 f32 default is bitwise-exact, f16 halves weight bandwidth)
+              --reactors N (transport event-loop threads; each multiplexes
+                its share of the connections over epoll, default
+                min(4, cores))
   generate    --artifacts D --dataset NAME --steps S --eta E|hat --tau linear|quadratic
               --sampler ddim|pf_ode|ab2 --count N --seed K --out FILE.pgm
   encode      --artifacts D --dataset NAME --steps S --seed K
@@ -114,6 +117,7 @@ fn config_from(args: &Args) -> Result<ServeConfig> {
     if let Some(p) = args.get("ref-precision") {
         cfg.ref_precision = ddim_serve::runtime::RefPrecision::parse(p)?;
     }
+    cfg.reactors = args.get_usize("reactors", cfg.reactors)?;
     cfg.validate()?;
     Ok(cfg)
 }

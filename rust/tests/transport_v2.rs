@@ -1,0 +1,312 @@
+//! Transport v2 end-to-end: pipelined ids, streamed x̂₀ previews, framing
+//! robustness, payload equivalence with the v1 serial shape, and clean
+//! teardown. Real TCP against the epoll reactors, fixture artifacts on
+//! the hermetic reference backend — no `make artifacts`, no XLA, zero
+//! skips.
+
+use ddim_serve::config::ServeConfig;
+use ddim_serve::coordinator::server::Client;
+use ddim_serve::coordinator::Server;
+use ddim_serve::jobj;
+use ddim_serve::json::{self, Value};
+use ddim_serve::testing::fixtures;
+
+fn cfg() -> ServeConfig {
+    ServeConfig {
+        artifact_root: fixtures::root_string(),
+        dataset: "sprites".into(),
+        listen: "127.0.0.1:0".into(),
+        max_batch: 8,
+        ..Default::default()
+    }
+}
+
+fn gen(steps: f64, seed: f64) -> Value {
+    jobj![
+        ("op", "generate"),
+        ("dataset", "sprites"),
+        ("steps", steps),
+        ("eta", 0.0),
+        ("count", 1.0),
+        ("seed", seed),
+        ("cache", "bypass"),
+        ("return_images", true),
+    ]
+}
+
+/// Many in-flight ids on ONE connection, mixed short/long step counts:
+/// completions arrive out of order, every id is answered exactly once,
+/// and each response carries the payload its id's request asked for.
+#[test]
+fn pipelined_ids_complete_out_of_order() {
+    let server = Server::start(cfg()).unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+
+    // id 1 is long (S=40); ids 2..=6 are short (S=4) submitted after it.
+    // All lanes run concurrently in one engine, so the shorts must finish
+    // (and be delivered) before the long one — out-of-order by design.
+    c.submit(1, &gen(40.0, 100.0)).unwrap();
+    for id in 2..=6u64 {
+        c.submit(id, &gen(4.0, 100.0 + id as f64)).unwrap();
+    }
+    let mut seen = Vec::new();
+    for _ in 0..6 {
+        let r = c.recv_frame().unwrap();
+        assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
+        let id = r.get("id").unwrap().as_u64().unwrap();
+        let steps = r.get("steps_executed").unwrap().as_usize().unwrap();
+        assert_eq!(steps, if id == 1 { 40 } else { 4 }, "id {id} got the wrong payload");
+        assert_eq!(r.get("outputs").unwrap().as_arr().unwrap().len(), 1);
+        seen.push(id);
+    }
+    let mut sorted = seen.clone();
+    sorted.sort_unstable();
+    assert_eq!(sorted, vec![1, 2, 3, 4, 5, 6], "every id answered exactly once");
+    assert_ne!(seen[0], 1, "the 40-step request must not complete first: {seen:?}");
+    assert_eq!(*seen.last().unwrap(), 1, "the 40-step request completes last: {seen:?}");
+
+    // the connection is still healthy for ordinary serial traffic
+    let pong = c.roundtrip(&jobj![("op", "ping")]).unwrap();
+    assert!(pong.get("ok").unwrap().as_bool().unwrap());
+    server.shutdown();
+}
+
+/// `"stream":{"every":K}`: preview frames are well formed, cover exactly
+/// the non-final steps divisible by K for every lane, interleave ahead of
+/// the final response on the same connection, and echo the request id.
+/// A cache hit streams nothing (no execution, no x̂₀ to preview).
+#[test]
+fn streamed_x0_previews_are_well_formed() {
+    let server = Server::start(cfg()).unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+
+    let mut req = jobj![
+        ("op", "generate"),
+        ("dataset", "sprites"),
+        ("steps", 12.0),
+        ("eta", 0.0),
+        ("count", 2.0),
+        ("seed", 7.0),
+        ("cache", "bypass"),
+    ];
+    req.set("stream", jobj![("every", 3.0)]).unwrap();
+    c.submit(9, &req).unwrap();
+
+    let mut frames = Vec::new();
+    let fin = loop {
+        let v = c.recv_frame().unwrap();
+        if v.get_opt("frame").is_some() {
+            frames.push(v);
+        } else {
+            break v;
+        }
+    };
+    assert!(fin.get("ok").unwrap().as_bool().unwrap(), "{fin:?}");
+    assert_eq!(fin.get("id").unwrap().as_u64().unwrap(), 9);
+
+    // steps 3, 6, 9 for each of the 2 lanes (12 is the final step — its
+    // x₀ ships in the response, not as a frame)
+    let mut step_by_lane = vec![Vec::new(), Vec::new()];
+    for f in &frames {
+        assert_eq!(f.get("frame").unwrap().as_str().unwrap(), "x0_preview");
+        assert_eq!(f.get("id").unwrap().as_u64().unwrap(), 9);
+        assert_eq!(f.get("total_steps").unwrap().as_usize().unwrap(), 12);
+        let lane = f.get("lane").unwrap().as_usize().unwrap();
+        let step = f.get("step").unwrap().as_usize().unwrap();
+        assert!(lane < 2, "{f:?}");
+        assert_eq!(f.get("x0").unwrap().as_arr().unwrap().len(), 256);
+        step_by_lane[lane].push(step);
+    }
+    for lane in &mut step_by_lane {
+        lane.sort_unstable();
+        assert_eq!(*lane, vec![3, 6, 9], "every-3 previews of a 12-step plan");
+    }
+
+    // a cacheable repeat: first populate, then stream a hit — zero frames
+    let mut cached = jobj![
+        ("op", "generate"),
+        ("dataset", "sprites"),
+        ("steps", 6.0),
+        ("eta", 0.0),
+        ("count", 1.0),
+        ("seed", 31.0),
+    ];
+    let warm = c.roundtrip(&cached).unwrap();
+    assert!(!warm.get("cached").unwrap().as_bool().unwrap());
+    cached.set("stream", jobj![("every", 1.0)]).unwrap();
+    c.submit(10, &cached).unwrap();
+    let v = c.recv_frame().unwrap();
+    assert!(v.get_opt("frame").is_none(), "cache hits stream no frames: {v:?}");
+    assert!(v.get("cached").unwrap().as_bool().unwrap());
+    assert_eq!(v.get("id").unwrap().as_u64().unwrap(), 10);
+
+    // malformed stream directives are typed errors, not disconnects
+    let mut bad = gen(4.0, 1.0);
+    bad.set("stream", jobj![("every", 0.0)]).unwrap();
+    let e = c.roundtrip(&bad).unwrap();
+    assert!(!e.get("ok").unwrap().as_bool().unwrap());
+    assert!(e.get("error").unwrap().as_str().unwrap().contains("stream.every"));
+    server.shutdown();
+}
+
+/// The multiplexed path changes *delivery only*: the same request sent
+/// v1-serial (no id), pipelined (id), and streamed (id + frames) yields
+/// bitwise-identical sample payloads — `"id"`/`"stream"` never reach the
+/// cache key or the engine.
+#[test]
+fn pipelined_and_streamed_payloads_match_v1_serial() {
+    let server = Server::start(cfg()).unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+    let req = gen(6.0, 55.0);
+
+    let v1 = c.roundtrip(&req).unwrap();
+    assert!(v1.get("ok").unwrap().as_bool().unwrap(), "{v1:?}");
+
+    c.submit(2, &req).unwrap();
+    let piped = c.recv_frame().unwrap();
+    assert_eq!(piped.get("id").unwrap().as_u64().unwrap(), 2);
+
+    let mut streamed_req = req.clone();
+    streamed_req.set("stream", jobj![("every", 2.0)]).unwrap();
+    c.submit(3, &streamed_req).unwrap();
+    let streamed = loop {
+        let v = c.recv_frame().unwrap();
+        if v.get_opt("frame").is_none() {
+            break v;
+        }
+    };
+
+    // bitwise payload equality (serialized f64s are exact): the sample,
+    // its cost, and its cache disposition
+    for key in ["outputs", "steps_executed", "cached", "ok"] {
+        assert_eq!(
+            json::to_string(v1.get(key).unwrap()),
+            json::to_string(piped.get(key).unwrap()),
+            "pipelined '{key}' diverged from v1"
+        );
+        assert_eq!(
+            json::to_string(v1.get(key).unwrap()),
+            json::to_string(streamed.get(key).unwrap()),
+            "streamed '{key}' diverged from v1"
+        );
+    }
+    server.shutdown();
+}
+
+/// `"id"` and `"stream"` are transport fields: two wire forms differing
+/// only in them parse to requests with identical cache keys.
+#[test]
+fn cache_key_excludes_id_and_stream() {
+    use ddim_serve::cache::key::CacheKey;
+    use ddim_serve::coordinator::Request;
+    use ddim_serve::runtime::BackendKind;
+
+    let plain = json::parse(
+        r#"{"op":"generate","dataset":"d","steps":8,"eta":0.0,"count":1,"seed":3}"#,
+    )
+    .unwrap();
+    let tagged = json::parse(
+        r#"{"op":"generate","dataset":"d","steps":8,"eta":0.0,"count":1,"seed":3,
+            "id":"abc","stream":{"every":2}}"#,
+    )
+    .unwrap();
+    let a = Request::from_json(&plain).unwrap();
+    let b = Request::from_json(&tagged).unwrap();
+    assert_eq!(
+        CacheKey::of(&a, 0xD1D5, BackendKind::Reference),
+        CacheKey::of(&b, 0xD1D5, BackendKind::Reference),
+        "id/stream must not shape the cache key"
+    );
+}
+
+/// Framing robustness on a live socket: an overlong line gets the typed
+/// error and the connection survives (discard-to-newline resync); a
+/// slow-loris request dribbled byte-ranges apart still parses.
+#[test]
+fn overlong_lines_and_partial_frames() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    let server = Server::start(cfg()).unwrap();
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut stream = stream;
+
+    // 2 MiB of garbage on one line: typed error, no disconnect
+    let big = vec![b'x'; 2 << 20];
+    stream.write_all(&big).unwrap();
+    stream.write_all(b"\n").unwrap();
+    stream.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = json::parse(line.trim()).unwrap();
+    assert!(!v.get("ok").unwrap().as_bool().unwrap());
+    assert_eq!(v.get("error").unwrap().as_str().unwrap(), "line too long");
+
+    // slow loris: the next request arrives in three fragments with pauses
+    let req = b"{\"op\":\"ping\"}\n";
+    for chunk in req.chunks(5) {
+        stream.write_all(chunk).unwrap();
+        stream.flush().unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let v = json::parse(line.trim()).unwrap();
+    assert!(v.get("ok").unwrap().as_bool().unwrap(), "conn survived the overlong line");
+    assert!(v.get("pong").unwrap().as_bool().unwrap());
+    server.shutdown();
+}
+
+/// Shutdown leaks nothing: after serving real traffic over several
+/// connections, `shutdown` joins every thread (acceptor, reactors,
+/// shards) and closes every fd — process-wide counts return to their
+/// pre-start baseline. The v1 server leaked one thread per connection.
+#[cfg(target_os = "linux")]
+#[test]
+fn shutdown_releases_all_threads_and_fds() {
+    fn count_fds() -> usize {
+        std::fs::read_dir("/proc/self/fd").unwrap().count()
+    }
+    fn count_threads() -> usize {
+        let status = std::fs::read_to_string("/proc/self/status").unwrap();
+        status
+            .lines()
+            .find_map(|l| l.strip_prefix("Threads:"))
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap()
+    }
+
+    // fixtures are materialised once, before the baseline
+    let config = cfg();
+    let fd_base = count_fds();
+    let thread_base = count_threads();
+
+    {
+        let server = Server::start(config).unwrap();
+        let addr = server.addr();
+        let mut clients: Vec<Client> =
+            (0..8).map(|_| Client::connect(addr).unwrap()).collect();
+        for (i, c) in clients.iter_mut().enumerate() {
+            let r = c.roundtrip(&gen(4.0, i as f64)).unwrap();
+            assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
+        }
+        drop(clients);
+        server.shutdown();
+    }
+
+    // joins have happened; give the kernel a beat to retire fd table
+    // entries for the client sockets dropped just above
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    loop {
+        let (fds, threads) = (count_fds(), count_threads());
+        if fds <= fd_base && threads <= thread_base {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "leak: fds {fd_base} -> {fds}, threads {thread_base} -> {threads}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+}
