@@ -68,6 +68,22 @@ pub fn fid_cell(
     fid_of_images(&images, reference).expect("fid")
 }
 
+/// Like [`fid_cell`] but over an explicit τ subsequence (e.g. a
+/// DP-optimized schedule) instead of a closed-form kind.
+pub fn fid_cell_tau(
+    rt: &mut Runtime,
+    runner: &mut BatchRunner,
+    reference: &GaussianFit,
+    tau: Vec<usize>,
+    mode: NoiseMode,
+    n: usize,
+    seed: u64,
+) -> f64 {
+    let plan = SamplePlan::generate_with_tau(rt.alphas(), tau, mode).expect("plan");
+    let images = runner.generate(rt, &plan, n, seed).expect("generate");
+    fid_of_images(&images, reference).expect("fid")
+}
+
 pub fn reference_for(rt: &Runtime, dataset: &str) -> GaussianFit {
     load_ref_stats(rt.manifest(), dataset).expect("ref stats")
 }

@@ -30,12 +30,26 @@ pub struct CacheKey(pub u128);
 
 /// Key-format version — bump when the field encoding changes so stale
 /// processes can never agree on a digest by accident.
-const KEY_VERSION: u8 = 1;
+/// v2: `"tau":"opt"` requests additionally hash the optimized schedule's
+/// *content* digest (`opt_digest`).
+const KEY_VERSION: u8 = 2;
 
 impl CacheKey {
     /// Digest every sampling-relevant field of `req`. `return_images` and
     /// the request's own `"cache"` directive are deliberately not hashed.
-    pub fn of(req: &Request, manifest_digest: u64, backend: BackendKind) -> CacheKey {
+    ///
+    /// `opt_digest` is the content digest of the optimized schedule file
+    /// resolved for this request (0 unless `req.tau` is [`TauKind::Opt`]).
+    /// The kind tag alone is not enough for `opt`: re-optimizing a
+    /// (dataset, S) cell changes the sample a request produces while every
+    /// request field stays identical, so the key must hash what the
+    /// schedule *is*, not what it is called.
+    pub fn of(
+        req: &Request,
+        manifest_digest: u64,
+        backend: BackendKind,
+        opt_digest: u64,
+    ) -> CacheKey {
         let mut h = Fnv128::new();
         h.byte(KEY_VERSION);
         h.u64(manifest_digest);
@@ -43,6 +57,9 @@ impl CacheKey {
         h.str(&req.dataset);
         h.u64(req.steps as u64);
         h.byte(tau_tag(req.tau));
+        if req.tau == TauKind::Opt {
+            h.u64(opt_digest);
+        }
         match req.mode {
             NoiseMode::Eta(e) => {
                 // normalise -0.0 (parseable from the wire) onto +0.0: both
@@ -101,6 +118,7 @@ fn tau_tag(t: TauKind) -> u8 {
     match t {
         TauKind::Linear => 0,
         TauKind::Quadratic => 1,
+        TauKind::Opt => 2,
     }
 }
 
@@ -153,7 +171,7 @@ mod tests {
     }
 
     fn key(r: &Request) -> CacheKey {
-        CacheKey::of(r, 0xabcd, BackendKind::Reference)
+        CacheKey::of(r, 0xabcd, BackendKind::Reference, 0)
     }
 
     #[test]
@@ -182,8 +200,29 @@ mod tests {
             assert_ne!(key(p), base, "{p:?} should not collide with the base request");
         }
         // environment axes
-        assert_ne!(CacheKey::of(&base_req(), 0xabce, BackendKind::Reference), base);
-        assert_ne!(CacheKey::of(&base_req(), 0xabcd, BackendKind::Xla), base);
+        assert_ne!(CacheKey::of(&base_req(), 0xabce, BackendKind::Reference, 0), base);
+        assert_ne!(CacheKey::of(&base_req(), 0xabcd, BackendKind::Xla, 0), base);
+    }
+
+    #[test]
+    fn opt_schedule_content_is_keyed() {
+        let opt = Request { tau: TauKind::Opt, ..base_req() };
+        let a = CacheKey::of(&opt, 0xabcd, BackendKind::Reference, 111);
+        let b = CacheKey::of(&opt, 0xabcd, BackendKind::Reference, 222);
+        // same request, same kind tag — a re-optimized schedule file must
+        // still mint a fresh key
+        assert_ne!(a, b);
+        assert_eq!(a, CacheKey::of(&opt, 0xabcd, BackendKind::Reference, 111));
+        // opt requests never collide with the closed-form kinds
+        assert_ne!(a, key(&base_req()));
+        assert_ne!(a, key(&Request { tau: TauKind::Quadratic, ..base_req() }));
+        // the digest is inert for closed-form kinds (call sites pass 0,
+        // but a sloppy non-zero must not fork the key space)
+        let lin = base_req();
+        assert_eq!(
+            CacheKey::of(&lin, 0xabcd, BackendKind::Reference, 7),
+            CacheKey::of(&lin, 0xabcd, BackendKind::Reference, 0)
+        );
     }
 
     #[test]

@@ -27,7 +27,7 @@ pub mod key;
 pub mod store;
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
 use crate::artifacts::Manifest;
@@ -37,6 +37,7 @@ use crate::error::Result;
 use crate::jobj;
 use crate::json::Value;
 use crate::runtime::BackendKind;
+use crate::schedule::{OptSchedules, TauKind};
 
 pub use coalesce::{Coalescer, ParkedWaiter, Role};
 pub use key::{manifest_digest, CacheKey};
@@ -115,6 +116,10 @@ pub struct CacheFront {
     /// Digest of the manifest the keys are minted against; swapped (and
     /// the store flushed) by [`CacheFront::refresh_manifest`].
     digest: AtomicU64,
+    /// Optimized τ schedules under the current artifact root; their
+    /// *content* digests feed `"tau":"opt"` keys, so re-optimizing a cell
+    /// mints fresh keys even though every request field stays the same.
+    opt: RwLock<OptSchedules>,
     hits: AtomicU64,
     misses: AtomicU64,
     coalesced: AtomicU64,
@@ -127,16 +132,19 @@ impl CacheFront {
     /// fully disabled fronts touch no disk and add one branch per submit.
     pub fn from_config(cfg: &ServeConfig) -> Result<CacheFront> {
         let active = cfg.cache_enabled || cfg.coalesce_enabled;
-        let digest = if active {
-            manifest_digest(&Manifest::load(&cfg.artifact_root)?)
+        let (digest, opt) = if active {
+            let manifest = Manifest::load(&cfg.artifact_root)?;
+            let digest = manifest_digest(&manifest);
+            (digest, OptSchedules::load(&manifest.root, digest))
         } else {
-            0
+            (0, OptSchedules::default())
         };
         Ok(CacheFront {
             store: cfg.cache_enabled.then(|| CacheStore::new(cfg.cache_bytes)),
             coalesce: cfg.coalesce_enabled.then(Coalescer::new),
             backend: cfg.backend,
             digest: AtomicU64::new(digest),
+            opt: RwLock::new(opt),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             coalesced: AtomicU64::new(0),
@@ -159,7 +167,14 @@ impl CacheFront {
         if self.is_inert() {
             return Ok(false);
         }
-        let new = manifest_digest(&Manifest::load(root)?);
+        let manifest = Manifest::load(root)?;
+        let new = manifest_digest(&manifest);
+        // always reload the optimized-schedule registry — even when the
+        // manifest digest is unchanged: re-optimizing a (dataset, S) cell
+        // rewrites only its schedule file, and the new content digest must
+        // start feeding `"tau":"opt"` keys immediately (old-content entries
+        // age out of the LRU; no future key can name them)
+        *self.opt.write().expect("opt registry lock") = OptSchedules::load(&manifest.root, new);
         let old = self.digest.swap(new, Ordering::SeqCst);
         if old != new {
             if let Some(store) = &self.store {
@@ -183,7 +198,19 @@ impl CacheFront {
             return Admission::Execute { request: req, on_done: deliver };
         }
         let minted = self.digest.load(Ordering::SeqCst);
-        let key = CacheKey::of(&req, minted, self.backend);
+        // opt requests key on the resolved schedule's content digest; a
+        // missing cell keys on 0 — harmless, since the engine will reject
+        // the request with a typed schedule error before anything executes
+        let opt_digest = if req.tau == TauKind::Opt {
+            self.opt
+                .read()
+                .expect("opt registry lock")
+                .digest(&req.dataset, req.steps)
+                .unwrap_or(0)
+        } else {
+            0
+        };
+        let key = CacheKey::of(&req, minted, self.backend, opt_digest);
         let arrived = Instant::now();
         if let Some(store) = &self.store {
             if let Some(sample) = store.get(key) {
@@ -349,6 +376,7 @@ mod tests {
             coalesce: coalesce.then(Coalescer::new),
             backend: BackendKind::Reference,
             digest: AtomicU64::new(0x5eed),
+            opt: RwLock::new(OptSchedules::default()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             coalesced: AtomicU64::new(0),

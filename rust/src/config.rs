@@ -5,6 +5,7 @@
 use crate::error::{Error, Result};
 use crate::runtime::{BackendKind, RefOptions, RefPrecision};
 use crate::sampler::{SamplerKind, DEFAULT_MAX_PADDING_WASTE};
+use crate::schedule::TauKind;
 
 /// Coordinator / server configuration.
 #[derive(Debug, Clone)]
@@ -35,6 +36,11 @@ pub struct ServeConfig {
     /// Update kernel used when a wire request omits `"sampler"`
     /// (`--default-sampler ddim|pf_ode|ab2`).
     pub default_sampler: SamplerKind,
+    /// τ selection used when a wire request omits `"tau"`
+    /// (`--tau linear|quadratic|opt`). `opt` serves the pre-optimized
+    /// schedules from the artifact bundle; requests whose (dataset, S)
+    /// cell has no schedule get a typed error.
+    pub default_tau: TauKind,
     /// Engine shards (worker threads, each with its own runtime) per
     /// dataset, unless overridden by `placement`.
     pub shards: usize,
@@ -102,6 +108,7 @@ impl Default for ServeConfig {
             listen: "127.0.0.1:7878".into(),
             default_steps: 20,
             default_sampler: SamplerKind::Ddim,
+            default_tau: TauKind::Linear,
             shards: 1,
             placement: Vec::new(),
             drain_timeout_ms: 2000,

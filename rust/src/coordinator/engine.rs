@@ -35,7 +35,7 @@ use crate::error::{Error, Result};
 use crate::runtime::Runtime;
 use crate::sampler::planner::{plan_sub_batches, SubBatch};
 use crate::sampler::{StepBatch, Trajectory};
-use crate::schedule::{AlphaTable, Direction, SamplePlan};
+use crate::schedule::{AlphaTable, Direction, OptSchedules, SamplePlan, TauKind};
 
 /// Streaming preview hook (wire v2 `"stream":{"every":K}`): after each
 /// committed step of a subscribed lane whose step index is a multiple of
@@ -127,6 +127,8 @@ pub struct Engine {
     exec: ExecBackend,
     manifest: Manifest,
     alphas: AlphaTable,
+    /// Optimized τ schedules from the artifact bundle (`"tau":"opt"`).
+    opt: OptSchedules,
     cfg: ServeConfig,
     queue: BoundedQueue<Pending>,
     lanes: Vec<Lane>,
@@ -217,10 +219,12 @@ impl Engine {
         manifest.dataset(&cfg.dataset)?;
         let batch_capacity = manifest.bucket_for(cfg.max_batch);
         let dim = manifest.sample_dim();
+        let opt = OptSchedules::load(&manifest.root, crate::cache::manifest_digest(&manifest));
         Ok(Self {
             exec,
             manifest,
             alphas,
+            opt,
             queue: BoundedQueue::new(cfg.queue_capacity),
             lanes: Vec::new(),
             inflight: HashMap::new(),
@@ -289,9 +293,23 @@ impl Engine {
             )));
         }
         let abar = &self.alphas;
-        let plan = match &request.body {
-            RequestBody::Encode { .. } => SamplePlan::encode(abar, request.tau, request.steps)?,
-            _ => SamplePlan::generate(abar, request.tau, request.steps, request.mode)?,
+        let plan = if request.tau == TauKind::Opt {
+            // optimized schedules live in the artifact bundle, keyed by
+            // (dataset, S); a missing cell is a typed schedule error
+            let sched = self.opt.require(&request.dataset, request.steps)?;
+            match &request.body {
+                RequestBody::Encode { .. } => {
+                    SamplePlan::encode_with_tau(abar, sched.tau.clone())?
+                }
+                _ => SamplePlan::generate_with_tau(abar, sched.tau.clone(), request.mode)?,
+            }
+        } else {
+            match &request.body {
+                RequestBody::Encode { .. } => {
+                    SamplePlan::encode(abar, request.tau, request.steps)?
+                }
+                _ => SamplePlan::generate(abar, request.tau, request.steps, request.mode)?,
+            }
         };
         // host-integrated kernels re-derive x from ε and have no σ > 0 form:
         // validated against the materialised plan's mode (encode plans are

@@ -72,6 +72,10 @@ pub struct ReactorStats {
     pub frames_streamed: AtomicU64,
     pub frames_dropped: AtomicU64,
     pub lines_overlong: AtomicU64,
+    /// Write syscalls saved by batching a completion burst: queued lines
+    /// beyond the first per connection per drain ride the same contiguous
+    /// flush instead of each issuing their own `write`.
+    pub writes_coalesced: AtomicU64,
 }
 
 /// The handle other threads use to feed a reactor: push work, then wake.
@@ -236,12 +240,19 @@ impl Reactor {
                 }
                 self.shared.stats.connections.fetch_add(1, Ordering::Relaxed);
             }
+            // two-pass drain: queue every completion first, then flush each
+            // touched connection once. A burst of completions for one client
+            // (pipelined ids, streamed frames) previously issued one `write`
+            // per line; batching lets the backlog leave in one syscall.
+            let mut queued = 0usize;
+            let mut touched: Vec<u64> = Vec::with_capacity(completions.len());
             for c in completions {
                 let Some(slot) = conns.get_mut(&c.token) else {
                     continue; // client disconnected while the request ran
                 };
                 if c.frame {
                     if slot.state.queue_frame(&c.line) {
+                        queued += 1;
                         self.shared
                             .stats
                             .frames_streamed
@@ -254,11 +265,26 @@ impl Reactor {
                     }
                 } else {
                     slot.state.queue_line(&c.line);
+                    queued += 1;
                 }
+                touched.push(c.token);
+            }
+            touched.sort_unstable();
+            touched.dedup();
+            if queued > touched.len() {
+                self.shared
+                    .stats
+                    .writes_coalesced
+                    .fetch_add((queued - touched.len()) as u64, Ordering::Relaxed);
+            }
+            for token in touched {
+                let Some(slot) = conns.get_mut(&token) else {
+                    continue; // closed while queueing an earlier completion
+                };
                 if flush(slot) {
-                    self.update_interest(slot, c.token);
+                    self.update_interest(slot, token);
                 } else {
-                    self.close(&mut conns, c.token, &open_gauge);
+                    self.close(&mut conns, token, &open_gauge);
                 }
             }
         }

@@ -94,6 +94,17 @@ impl Request {
     /// back to `default_sampler` (the server passes its
     /// `--default-sampler` here).
     pub fn from_json_with(v: &Value, default_sampler: SamplerKind) -> Result<Self> {
+        Self::from_json_with_defaults(v, default_sampler, TauKind::Linear)
+    }
+
+    /// [`Request::from_json_with`] plus the server's `--tau` default: a
+    /// missing `"tau"` field falls back to `default_tau` (an explicit
+    /// field always wins).
+    pub fn from_json_with_defaults(
+        v: &Value,
+        default_sampler: SamplerKind,
+        default_tau: TauKind,
+    ) -> Result<Self> {
         let op = v.get("op")?.as_str()?.to_string();
         let dataset = v.get("dataset")?.as_str()?.to_string();
         let steps = v.get("steps")?.as_usize()?;
@@ -105,7 +116,7 @@ impl Request {
         };
         let tau = match v.get_opt("tau") {
             Some(t) => TauKind::parse(t.as_str()?)?,
-            None => TauKind::Linear,
+            None => default_tau,
         };
         let return_images = match v.get_opt("return_images") {
             Some(b) => b.as_bool()?,
@@ -287,6 +298,42 @@ mod tests {
             Request::from_json_with(&v, SamplerKind::Ab2).unwrap().sampler,
             SamplerKind::Ddim
         );
+    }
+
+    #[test]
+    fn parse_tau_field_and_default() {
+        let v = json::parse(
+            r#"{"op":"generate","dataset":"d","steps":10,"count":1,"seed":0,"tau":"opt"}"#,
+        )
+        .unwrap();
+        assert_eq!(Request::from_json(&v).unwrap().tau, TauKind::Opt);
+        // missing field falls back to the caller's default
+        let v = json::parse(r#"{"op":"generate","dataset":"d","steps":10,"count":1,"seed":0}"#)
+            .unwrap();
+        assert_eq!(
+            Request::from_json_with_defaults(&v, SamplerKind::Ddim, TauKind::Opt)
+                .unwrap()
+                .tau,
+            TauKind::Opt
+        );
+        // an explicit field beats the default
+        let v = json::parse(
+            r#"{"op":"generate","dataset":"d","steps":10,"count":1,"seed":0,"tau":"quadratic"}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            Request::from_json_with_defaults(&v, SamplerKind::Ddim, TauKind::Opt)
+                .unwrap()
+                .tau,
+            TauKind::Quadratic
+        );
+        // unknown kinds list the valid set
+        let v = json::parse(
+            r#"{"op":"generate","dataset":"d","steps":10,"count":1,"seed":0,"tau":"cubic"}"#,
+        )
+        .unwrap();
+        let err = Request::from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("opt") && err.contains("quadratic"), "{err}");
     }
 
     #[test]

@@ -278,7 +278,11 @@ fn handle_line(
             };
             // `"id"`/`"stream"` were peeled off above; the Request parser
             // ignores unknown fields, so neither can reach the cache key
-            let req = match Request::from_json_with(&v, router.config().default_sampler) {
+            let req = match Request::from_json_with_defaults(
+                &v,
+                router.config().default_sampler,
+                router.config().default_tau,
+            ) {
                 Ok(r) => r,
                 Err(e) => return queue_err(state, client_id.as_ref(), e.to_string()),
             };
@@ -356,11 +360,13 @@ fn transport_value(stats: &TransportStats, reactors: &[Arc<ReactorShared>]) -> V
     let mut frames_streamed = 0u64;
     let mut frames_dropped = 0u64;
     let mut lines_overlong = 0u64;
+    let mut writes_coalesced = 0u64;
     for r in reactors {
         wakeups += r.stats.wakeups.load(Ordering::Relaxed);
         frames_streamed += r.stats.frames_streamed.load(Ordering::Relaxed);
         frames_dropped += r.stats.frames_dropped.load(Ordering::Relaxed);
         lines_overlong += r.stats.lines_overlong.load(Ordering::Relaxed);
+        writes_coalesced += r.stats.writes_coalesced.load(Ordering::Relaxed);
     }
     jobj![
         ("reactors", reactors.len()),
@@ -371,6 +377,7 @@ fn transport_value(stats: &TransportStats, reactors: &[Arc<ReactorShared>]) -> V
         ("frames_streamed", frames_streamed),
         ("frames_dropped", frames_dropped),
         ("lines_overlong", lines_overlong),
+        ("writes_coalesced", writes_coalesced),
     ]
 }
 

@@ -1,10 +1,11 @@
 //! `ddim-serve` — leader binary: CLI over the coordinator.
 //!
 //! Subcommands:
-//!   serve     start the JSON-line TCP server
-//!   generate  sample images offline and write a PGM grid
-//!   encode    round-trip an image through encode→decode, print the MSE
-//!   info      print manifest / schedule / artifact summary
+//!   serve         start the JSON-line TCP server
+//!   generate      sample images offline and write a PGM grid
+//!   encode        round-trip an image through encode→decode, print the MSE
+//!   info          print manifest / schedule / artifact summary
+//!   optimize-tau  search an optimized τ schedule for one (dataset, S) cell
 
 use ddim_serve::cli::Args;
 use ddim_serve::config::ServeConfig;
@@ -44,12 +45,20 @@ COMMANDS
               --reactors N (transport event-loop threads; each multiplexes
                 its share of the connections over epoll, default
                 min(4, cores))
-  generate    --artifacts D --dataset NAME --steps S --eta E|hat --tau linear|quadratic
+              --tau linear|quadratic|opt (τ selection when a request omits
+                \"tau\"; opt serves the bundle's optimized schedules)
+  generate    --artifacts D --dataset NAME --steps S --eta E|hat
+              --tau linear|quadratic|opt
               --sampler ddim|pf_ode|ab2 --count N --seed K --out FILE.pgm
   encode      --artifacts D --dataset NAME --steps S --seed K
   info        --artifacts D
   fixtures    --out DIR   (materialise a synthetic artifact bundle for the
-              hermetic reference backend: manifest, alphas, goldens, stats)
+              hermetic reference backend: manifest, alphas, goldens, stats,
+              and optimized tau schedules)
+  optimize-tau --artifacts D --dataset NAME --steps S --out DIR
+              (beam-search an optimized τ for one (dataset, S) budget and
+              write schedules/opt_{dataset}_{S}.json; deterministic, runs
+              on the reference backend)
 ";
 
 fn main() {
@@ -66,6 +75,7 @@ fn main() {
         Some("encode") => run(cmd_encode(&args)),
         Some("info") => run(cmd_info(&args)),
         Some("fixtures") => run(cmd_fixtures(&args)),
+        Some("optimize-tau") => run(cmd_optimize_tau(&args)),
         _ => {
             println!("{HELP}");
             0
@@ -102,6 +112,9 @@ fn config_from(args: &Args) -> Result<ServeConfig> {
     }
     if let Some(s) = args.get("default-sampler") {
         cfg.default_sampler = SamplerKind::parse(s)?;
+    }
+    if let Some(t) = args.get("tau") {
+        cfg.default_tau = TauKind::parse(t)?;
     }
     cfg.drain_timeout_ms = args.get_u64("drain-timeout-ms", cfg.drain_timeout_ms)?;
     cfg.pipeline_depth = args.get_usize("pipeline-depth", cfg.pipeline_depth)?;
@@ -221,6 +234,36 @@ fn cmd_fixtures(args: &Args) -> Result<()> {
         rt.manifest().t_max,
         rt.manifest().buckets
     );
+    Ok(())
+}
+
+fn cmd_optimize_tau(args: &Args) -> Result<()> {
+    let root = args.get_or("artifacts", "artifacts").to_string();
+    let out = args.get_or("out", &root).to_string();
+    let dataset = args.get_or("dataset", "sprites").to_string();
+    let steps = args.get_usize("steps", 20)?;
+    // the optimizer's scores are part of the committed schedule bytes, so
+    // it always runs on the deterministic reference backend
+    let mut rt = Runtime::load_with(&root, ddim_serve::runtime::BackendKind::Reference)?;
+    let t0 = std::time::Instant::now();
+    let report = ddim_serve::schedule::optimize_tau(&mut rt, &dataset, steps)?;
+    let path =
+        ddim_serve::schedule::write_schedule(std::path::Path::new(&out), &report.schedule)?;
+    let s = &report.schedule;
+    println!(
+        "optimized {dataset} S={steps} in {:.2}s: frechet {:.5} \
+         (linear {:.5}, quadratic {:.5}) over {} candidates, \
+         {} delta pairs, {} trajectory evals",
+        t0.elapsed().as_secs_f64(),
+        s.score,
+        s.linear_score,
+        s.quadratic_score,
+        report.candidates,
+        report.pairs_scored,
+        report.evals,
+    );
+    println!("tau = {:?}", s.tau);
+    println!("wrote {}", path.display());
     Ok(())
 }
 

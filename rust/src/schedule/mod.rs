@@ -7,9 +7,14 @@
 //! drifting constant can never silently skew an experiment.
 
 mod alpha;
+mod optimize;
 mod plan;
 mod tau;
 
 pub use alpha::{AlphaTable, T_DEFAULT};
+pub use optimize::{
+    optimize_tau, optimizer_seed, schedule_path, schedule_rel_path, write_schedule,
+    OptSchedule, OptSchedules, OptimizeReport, EVAL_LANES,
+};
 pub use plan::{Direction, NoiseMode, SamplePlan, StepParams};
-pub use tau::{sigma_eta, sigma_hat, tau_subsequence, TauKind};
+pub use tau::{sigma_eta, sigma_hat, tau_subsequence, tau_subsequence_cached, TauKind};

@@ -6,7 +6,7 @@
 //! same fused executable serves both).
 
 use crate::error::{Error, Result};
-use crate::schedule::{sigma_eta, sigma_hat, tau_subsequence, AlphaTable, TauKind};
+use crate::schedule::{sigma_eta, sigma_hat, tau_subsequence_cached, AlphaTable, TauKind};
 
 /// How much stochasticity the generative process injects (paper Table 1's
 /// rows): `Eta(0.0)` is DDIM, `Eta(1.0)` is DDPM, `SigmaHat` is the larger
@@ -115,7 +115,19 @@ impl SamplePlan {
         s: usize,
         mode: NoiseMode,
     ) -> Result<Self> {
-        let tau = tau_subsequence(kind, s, abar.t_max())?;
+        let tau = tau_subsequence_cached(kind, s, abar.t_max())?;
+        Self::generate_with_tau(abar, tau, mode)
+    }
+
+    /// Build a generation plan over an *explicit* τ (an optimized schedule
+    /// from the artifact bundle, or the optimizer's own trial paths).
+    pub fn generate_with_tau(
+        abar: &AlphaTable,
+        tau: Vec<usize>,
+        mode: NoiseMode,
+    ) -> Result<Self> {
+        Self::validate_tau(&tau, abar.t_max())?;
+        let s = tau.len();
         let mut steps = Vec::with_capacity(s);
         // walk pairs (τ_i, τ_{i-1}) from i = S down to 1, τ_0 := 0
         for i in (0..s).rev() {
@@ -153,8 +165,14 @@ impl SamplePlan {
     /// evaluating ε at the left end of each interval (Euler on Eq. 14's
     /// reverse). `x_0 -> x_{τ_1} -> ... -> x_{τ_S}`.
     pub fn encode(abar: &AlphaTable, kind: TauKind, s: usize) -> Result<Self> {
-        let tau = tau_subsequence(kind, s, abar.t_max())?;
-        let mut steps = Vec::with_capacity(s);
+        let tau = tau_subsequence_cached(kind, s, abar.t_max())?;
+        Self::encode_with_tau(abar, tau)
+    }
+
+    /// Encoding plan over an explicit τ (see [`SamplePlan::generate_with_tau`]).
+    pub fn encode_with_tau(abar: &AlphaTable, tau: Vec<usize>) -> Result<Self> {
+        Self::validate_tau(&tau, abar.t_max())?;
+        let mut steps = Vec::with_capacity(tau.len());
         let mut t_prev = 0usize;
         for &t_next in &tau {
             steps.push(StepParams {
@@ -168,6 +186,52 @@ impl SamplePlan {
             t_prev = t_next;
         }
         Ok(Self { direction: Direction::Encode, tau, mode: NoiseMode::Eta(0.0), steps })
+    }
+
+    /// One deterministic DDIM step `t_cur -> t_prev` (σ = 0), as a
+    /// single-entry generation plan. The optimizer chains these to probe
+    /// per-step quality deltas through the real step backend, so each
+    /// probe step is bitwise-identical to the same step inside a full
+    /// serving plan.
+    pub fn single_step(abar: &AlphaTable, t_cur: usize, t_prev: usize) -> Result<Self> {
+        if t_cur == 0 || t_cur > abar.t_max() || t_prev >= t_cur {
+            return Err(Error::Schedule(format!(
+                "bad single step {t_cur} -> {t_prev} for T={}",
+                abar.t_max()
+            )));
+        }
+        let steps = vec![StepParams {
+            t_model: t_cur as f64,
+            alpha_in: abar.abar(t_cur),
+            alpha_out: abar.abar(t_prev),
+            sigma_dir: 0.0,
+            sigma_noise: 0.0,
+        }];
+        Ok(Self {
+            direction: Direction::Generate,
+            tau: vec![t_cur],
+            mode: NoiseMode::Eta(0.0),
+            steps,
+        })
+    }
+
+    /// An explicit τ must be non-empty and strictly increasing within
+    /// [1, T] — the same contract `tau_subsequence` guarantees.
+    pub fn validate_tau(tau: &[usize], t_max: usize) -> Result<()> {
+        if tau.is_empty() {
+            return Err(Error::Schedule("empty tau".into()));
+        }
+        if tau[0] < 1 || *tau.last().unwrap() > t_max {
+            return Err(Error::Schedule(format!(
+                "tau out of [1, {t_max}]: {}..{}",
+                tau[0],
+                tau.last().unwrap()
+            )));
+        }
+        if !tau.windows(2).all(|w| w[1] > w[0]) {
+            return Err(Error::Schedule("tau must be strictly increasing".into()));
+        }
+        Ok(())
     }
 
     pub fn steps(&self) -> &[StepParams] {
@@ -250,6 +314,46 @@ mod tests {
         for (a, b) in g_pairs.iter().zip(&e_pairs) {
             assert!((a.0 - b.0).abs() < 1e-15 && (a.1 - b.1).abs() < 1e-15);
         }
+    }
+
+    #[test]
+    fn explicit_tau_matches_kind_built_plan() {
+        use crate::schedule::tau_subsequence;
+        let t = abar();
+        let tau = tau_subsequence(TauKind::Quadratic, 15, 1000).unwrap();
+        let a = SamplePlan::generate(&t, TauKind::Quadratic, 15, NoiseMode::Eta(0.3)).unwrap();
+        let b = SamplePlan::generate_with_tau(&t, tau.clone(), NoiseMode::Eta(0.3)).unwrap();
+        assert_eq!(a.tau, b.tau);
+        assert_eq!(a.steps(), b.steps());
+        let ea = SamplePlan::encode(&t, TauKind::Quadratic, 15).unwrap();
+        let eb = SamplePlan::encode_with_tau(&t, tau).unwrap();
+        assert_eq!(ea.steps(), eb.steps());
+    }
+
+    #[test]
+    fn explicit_tau_is_validated() {
+        let t = abar();
+        for bad in [vec![], vec![0, 5], vec![5, 5, 9], vec![9, 5], vec![5, 1001]] {
+            assert!(
+                SamplePlan::generate_with_tau(&t, bad.clone(), NoiseMode::Eta(0.0)).is_err(),
+                "{bad:?}"
+            );
+            assert!(SamplePlan::encode_with_tau(&t, bad).is_err());
+        }
+    }
+
+    #[test]
+    fn single_step_matches_tail_of_full_plan() {
+        let t = abar();
+        let full = SamplePlan::generate(&t, TauKind::Linear, 10, NoiseMode::Eta(0.0)).unwrap();
+        let tau = full.tau.clone();
+        let single = SamplePlan::single_step(&t, tau[1], tau[0]).unwrap();
+        assert_eq!(single.len(), 1);
+        // the 2nd-to-last step of the full plan walks tau[1] -> tau[0]
+        assert_eq!(single.steps()[0], full.steps()[full.len() - 2]);
+        assert!(SamplePlan::single_step(&t, 0, 0).is_err());
+        assert!(SamplePlan::single_step(&t, 5, 9).is_err());
+        assert!(SamplePlan::single_step(&t, 1001, 0).is_err());
     }
 
     #[test]

@@ -6,10 +6,14 @@ use crate::schedule::AlphaTable;
 
 /// τ selection procedure (App. D.2). The paper uses quadratic for CIFAR10
 /// and linear elsewhere; our manifest picks per dataset the same way.
+/// `Opt` is our extension: a pre-optimized per-(dataset, S) schedule from
+/// [`crate::schedule::optimize_tau`], resolved from the artifact bundle at
+/// serve time — it has no closed form, so [`tau_subsequence`] rejects it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TauKind {
     Linear,
     Quadratic,
+    Opt,
 }
 
 impl TauKind {
@@ -17,8 +21,21 @@ impl TauKind {
         match s {
             "linear" => Ok(TauKind::Linear),
             "quadratic" => Ok(TauKind::Quadratic),
-            _ => Err(Error::Schedule(format!("unknown tau kind '{s}'"))),
+            "opt" => Ok(TauKind::Opt),
+            _ => Err(Error::Schedule(format!(
+                "unknown tau kind '{s}' (want linear | quadratic | opt)"
+            ))),
         }
+    }
+}
+
+impl std::fmt::Display for TauKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            TauKind::Linear => "linear",
+            TauKind::Quadratic => "quadratic",
+            TauKind::Opt => "opt",
+        })
     }
 }
 
@@ -27,6 +44,13 @@ impl TauKind {
 /// with c chosen so τ_S lands near T, then clamped into [1, T] and
 /// deduplicated upward to stay strictly increasing for small S/T corners.
 pub fn tau_subsequence(kind: TauKind, s: usize, t_max: usize) -> Result<Vec<usize>> {
+    if kind == TauKind::Opt {
+        return Err(Error::Schedule(
+            "tau kind 'opt' has no closed form; resolve it from the \
+             artifact bundle's optimized schedules"
+                .into(),
+        ));
+    }
     if s == 0 || s > t_max {
         return Err(Error::Schedule(format!("dim(tau)={s} out of range for T={t_max}")));
     }
@@ -35,6 +59,7 @@ pub fn tau_subsequence(kind: TauKind, s: usize, t_max: usize) -> Result<Vec<usiz
         let v = match kind {
             TauKind::Linear => (t_max as f64 / s as f64) * i as f64,
             TauKind::Quadratic => (t_max as f64 / (s * s) as f64) * (i * i) as f64,
+            TauKind::Opt => unreachable!("rejected above"),
         };
         tau.push((v.floor() as usize).clamp(1, t_max));
     }
@@ -49,6 +74,46 @@ pub fn tau_subsequence(kind: TauKind, s: usize, t_max: usize) -> Result<Vec<usiz
             "tau exceeded T after dedup: S={s} too dense for T={t_max}"
         )));
     }
+    Ok(tau)
+}
+
+/// Number of slots in the [`tau_subsequence_cached`] memo table.
+const TAU_MEMO_SLOTS: usize = 64;
+
+/// [`tau_subsequence`] behind a small lock-free memo table. Every plan
+/// build recomputes its τ grid; real serving traffic hits a handful of
+/// (kind, S, T) triples over and over, so a fixed array of [`OnceLock`]
+/// slots (keyed by FNV hash, verified by the full triple) removes the
+/// recomputation without any locking on the hit path. Slot collisions
+/// and errors simply fall through to the uncached function.
+pub fn tau_subsequence_cached(kind: TauKind, s: usize, t_max: usize) -> Result<Vec<usize>> {
+    use std::sync::OnceLock;
+    type Entry = (TauKind, usize, usize, Vec<usize>);
+    // rust 1.75: array-repeat of a `const` item (inline `const {}` blocks
+    // in array repeats need 1.79)
+    #[allow(clippy::declare_interior_mutable_const)]
+    const INIT: OnceLock<Entry> = OnceLock::new();
+    static MEMO: [OnceLock<Entry>; TAU_MEMO_SLOTS] = [INIT; TAU_MEMO_SLOTS];
+
+    let tag: u64 = match kind {
+        TauKind::Linear => 0,
+        TauKind::Quadratic => 1,
+        TauKind::Opt => return tau_subsequence(kind, s, t_max), // typed error
+    };
+    let slot = (crate::rng::Fnv64::new()
+        .u64(tag)
+        .u64(s as u64)
+        .u64(t_max as u64)
+        .finish()
+        % TAU_MEMO_SLOTS as u64) as usize;
+    if let Some((k, cs, ct, tau)) = MEMO[slot].get() {
+        if *k == kind && *cs == s && *ct == t_max {
+            return Ok(tau.clone());
+        }
+        return tau_subsequence(kind, s, t_max); // slot collision: recompute
+    }
+    let tau = tau_subsequence(kind, s, t_max)?; // only memoize successes
+    let _ = MEMO[slot].set((kind, s, t_max, tau.clone()));
     Ok(tau)
 }
 
@@ -111,6 +176,43 @@ mod tests {
     fn tau_rejects_invalid() {
         assert!(tau_subsequence(TauKind::Linear, 0, 1000).is_err());
         assert!(tau_subsequence(TauKind::Linear, 1001, 1000).is_err());
+    }
+
+    #[test]
+    fn tau_kind_display_parse_round_trip() {
+        for kind in [TauKind::Linear, TauKind::Quadratic, TauKind::Opt] {
+            assert_eq!(TauKind::parse(&kind.to_string()).unwrap(), kind);
+        }
+        let err = TauKind::parse("cubic").unwrap_err().to_string();
+        for valid in ["linear", "quadratic", "opt"] {
+            assert!(err.contains(valid), "error should list '{valid}': {err}");
+        }
+    }
+
+    #[test]
+    fn opt_kind_has_no_closed_form() {
+        let err = tau_subsequence(TauKind::Opt, 10, 1000).unwrap_err().to_string();
+        assert!(err.contains("opt"), "{err}");
+        assert!(tau_subsequence_cached(TauKind::Opt, 10, 1000).is_err());
+    }
+
+    #[test]
+    fn cached_tau_matches_uncached() {
+        for kind in [TauKind::Linear, TauKind::Quadratic] {
+            for (s, t) in [(1, 7), (10, 400), (20, 400), (50, 1000), (999, 1000)] {
+                assert_eq!(
+                    tau_subsequence_cached(kind, s, t).unwrap(),
+                    tau_subsequence(kind, s, t).unwrap(),
+                    "{kind} S={s} T={t}"
+                );
+                // second call exercises the hit path
+                assert_eq!(
+                    tau_subsequence_cached(kind, s, t).unwrap(),
+                    tau_subsequence(kind, s, t).unwrap()
+                );
+            }
+        }
+        assert!(tau_subsequence_cached(TauKind::Linear, 0, 400).is_err());
     }
 
     #[test]

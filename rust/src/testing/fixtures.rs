@@ -124,7 +124,38 @@ pub fn write_into(dir: &Path) -> Result<()> {
         write_feature_goldens(&ds_dir.join("goldens"), name)?;
         write_ref_stats(&ds_dir, name)?;
     }
+    for sched in opt_schedules_for(dir)? {
+        crate::schedule::write_schedule(dir, sched)?;
+    }
     Ok(())
+}
+
+/// Step budgets that get a DP-optimized τ schedule in the bundle
+/// (`schedules/opt_{dataset}_{S}.json`), matching the serve-time
+/// `"tau":"opt"` cells the tests and benches exercise.
+pub const OPT_STEPS: [usize; 3] = [10, 20, 50];
+
+/// Optimized schedules for the fixture manifest, computed once per process.
+///
+/// Every tree `write_into` produces has byte-identical `manifest.json` /
+/// `alphas.json`, hence the same manifest digest — so the DP search (the
+/// expensive part: probe trajectories + beam over per-step deltas) runs on
+/// the first bundle only and later variant trees just re-serialize the
+/// cached result.
+fn opt_schedules_for(dir: &Path) -> Result<&'static Vec<crate::schedule::OptSchedule>> {
+    static SCHEDS: OnceLock<Vec<crate::schedule::OptSchedule>> = OnceLock::new();
+    if let Some(s) = SCHEDS.get() {
+        return Ok(s);
+    }
+    let mut rt =
+        crate::runtime::Runtime::load_with(dir, crate::runtime::BackendKind::Reference)?;
+    let mut out = Vec::with_capacity(DATASETS.len() * OPT_STEPS.len());
+    for (name, ..) in DATASETS {
+        for s in OPT_STEPS {
+            out.push(crate::schedule::optimize_tau(&mut rt, name, s)?.schedule);
+        }
+    }
+    Ok(SCHEDS.get_or_init(|| out))
 }
 
 fn hlo_paths(name: &str) -> Vec<String> {

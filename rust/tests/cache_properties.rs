@@ -77,7 +77,7 @@ fn perturb(g: &mut Gen, req: &mut Request) -> &'static str {
             3 => {
                 req.tau = match req.tau {
                     TauKind::Linear => TauKind::Quadratic,
-                    TauKind::Quadratic => TauKind::Linear,
+                    TauKind::Quadratic | TauKind::Opt => TauKind::Linear,
                 };
                 return "tau";
             }
@@ -137,32 +137,32 @@ fn property_key_changes_with_every_sampling_relevant_field() {
         let base = rand_request(g);
         let digest = g.rng.next_u64();
         let backend = *g.choose(&[BackendKind::Reference, BackendKind::Xla]);
-        let base_key = CacheKey::of(&base, digest, backend);
+        let base_key = CacheKey::of(&base, digest, backend, 0);
 
         // delivery-shaping fields are excluded from the digest
         let mut delivery = base.clone();
         delivery.return_images = !delivery.return_images;
         delivery.cache = CacheMode::Bypass;
-        if CacheKey::of(&delivery, digest, backend) != base_key {
+        if CacheKey::of(&delivery, digest, backend, 0) != base_key {
             return Err("return_images / cache directive leaked into the key".into());
         }
 
         // any sampling-relevant perturbation must move the digest
         let mut p = base.clone();
         let what = perturb(g, &mut p);
-        if CacheKey::of(&p, digest, backend) == base_key {
+        if CacheKey::of(&p, digest, backend, 0) == base_key {
             return Err(format!("perturbing {what} did not change the key: {p:?}"));
         }
 
         // environment axes count too
-        if CacheKey::of(&base, digest ^ 1, backend) == base_key {
+        if CacheKey::of(&base, digest ^ 1, backend, 0) == base_key {
             return Err("manifest digest did not change the key".into());
         }
         let other_backend = match backend {
             BackendKind::Reference => BackendKind::Xla,
             BackendKind::Xla => BackendKind::Reference,
         };
-        if CacheKey::of(&base, digest, other_backend) == base_key {
+        if CacheKey::of(&base, digest, other_backend, 0) == base_key {
             return Err("backend kind did not change the key".into());
         }
         Ok(())
