@@ -38,13 +38,14 @@ fn main() -> ddim_serve::Result<()> {
         body: RequestBody::Generate { count: 16, seed },
         return_images: true,
         cache: ddim_serve::coordinator::CacheMode::Use,
+        qos: Default::default(),
     })?;
     let responses = engine.run_until_idle()?;
     let resp = responses.iter().find(|r| r.id == id).unwrap();
     let images = match &resp.body {
         ResponseBody::Ok { outputs } => outputs,
-        ResponseBody::Error { message } => {
-            return Err(ddim_serve::Error::Coordinator(format!("generation failed: {message}")))
+        other => {
+            return Err(ddim_serve::Error::Coordinator(format!("generation failed: {other:?}")))
         }
     };
 

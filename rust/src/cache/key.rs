@@ -167,6 +167,7 @@ mod tests {
             body: RequestBody::Generate { count: 4, seed: 7 },
             return_images: false,
             cache: CacheMode::Use,
+            qos: Default::default(),
         }
     }
 
@@ -180,6 +181,13 @@ mod tests {
         let mut b = base_req();
         b.return_images = true;
         b.cache = CacheMode::Bypass;
+        // QoS is delivery policy, not sampling input: an interactive
+        // request with a tight deadline wants the *same bits* as a
+        // best-effort one. (Degradation rewrites `steps` itself, which IS
+        // keyed, before admission — so degraded flights still fork keys.)
+        b.qos.priority = crate::coordinator::request::Priority::Interactive;
+        b.qos.deadline_ms = Some(250);
+        b.qos.arrived = Some(std::time::Instant::now());
         assert_eq!(key(&a), key(&b));
     }
 

@@ -211,7 +211,10 @@ impl CacheFront {
             0
         };
         let key = CacheKey::of(&req, minted, self.backend, opt_digest);
-        let arrived = Instant::now();
+        // latency anchor: the transport arrival instant when the request
+        // crossed a connection, so cache hits and coalesced waiters report
+        // client-observed latency too — not just time inside this layer
+        let arrived = req.qos.arrived.unwrap_or_else(Instant::now);
         if let Some(store) = &self.store {
             if let Some(sample) = store.get(key) {
                 self.hits.fetch_add(1, Ordering::Relaxed);
@@ -290,12 +293,16 @@ impl CacheFront {
     /// were admitted (and executed) under the old manifest.
     fn finish(&self, key: CacheKey, minted: u64, leader: Option<ParkedWaiter>, resp: Response) {
         let id = resp.id;
-        let (sample, error) = match resp.body {
+        let (sample, failure) = match resp.body {
             ResponseBody::Ok { outputs } => (
                 Some(Arc::new(CachedSample { outputs, steps_executed: resp.steps_executed })),
                 None,
             ),
-            ResponseBody::Error { message } => (None, Some(message)),
+            // errors AND typed rejections (overload, deadline expiry): the
+            // pin is dropped and nothing is published — a deadline-expired
+            // execution must never seed the cache — but the failure body is
+            // fanned out verbatim so every waiter sees the typed record
+            other => (None, Some(other)),
         };
         // publish BEFORE closing the flight: any thread that missed the
         // store but finds the flight already closed is guaranteed to see
@@ -320,19 +327,28 @@ impl CacheFront {
         };
         for w in waiters {
             let latency_s = w.arrived.elapsed().as_secs_f64();
-            let resp = match (&sample, &error) {
+            let resp = match (&sample, &failure) {
                 (Some(s), _) => s.response_for(id, w.return_images, latency_s, false),
-                (None, Some(message)) => Response {
+                (None, Some(body)) => Response {
                     id,
-                    body: ResponseBody::Error { message: message.clone() },
+                    body: body.clone(),
                     latency_s,
                     steps_executed: 0,
                     cached: false,
+                    degraded: None,
                 },
-                (None, None) => unreachable!("response is Ok or Error"),
+                (None, None) => unreachable!("response is Ok or a failure"),
             };
             (w.deliver)(resp);
         }
+    }
+
+    /// Does the optimized-schedule registry hold a cell for
+    /// `(dataset, steps)`? The router's degradation ladder asks before
+    /// rewriting a downgraded request to `"tau":"opt"` — a budget with no
+    /// pre-optimized cell keeps the request's original τ kind instead.
+    pub fn has_opt_cell(&self, dataset: &str, steps: usize) -> bool {
+        self.opt.read().expect("opt registry lock").get(dataset, steps).is_some()
     }
 
     pub fn metrics(&self) -> CacheMetrics {
@@ -394,6 +410,7 @@ mod tests {
             body: crate::coordinator::request::RequestBody::Generate { count: 1, seed },
             return_images,
             cache,
+            qos: Default::default(),
         }
     }
 
@@ -404,6 +421,7 @@ mod tests {
             latency_s: 0.25,
             steps_executed: 5,
             cached: false,
+            degraded: None,
         }
     }
 
@@ -515,6 +533,7 @@ mod tests {
             latency_s: 0.0,
             steps_executed: 0,
             cached: false,
+            degraded: None,
         });
         for rx in [rx1, rx2] {
             let r = rx.recv().unwrap();
@@ -529,6 +548,98 @@ mod tests {
         ));
         assert_eq!(f.metrics().entries, 0);
         assert_eq!(f.metrics().inflight, 0);
+    }
+
+    #[test]
+    fn queue_full_reject_fans_out_to_every_waiter_exactly_once() {
+        use crate::coordinator::request::{Reject, RejectReason};
+        let f = front(true, true);
+        let (tx1, rx1) = chan();
+        let (tx2, rx2) = chan();
+        let (tx3, rx3) = chan();
+        let Admission::Execute { on_done, .. } = f.admit(req(21, false, CacheMode::Use), tx1)
+        else {
+            panic!("leader executes");
+        };
+        assert!(matches!(f.admit(req(21, false, CacheMode::Use), tx2), Admission::Parked));
+        assert!(matches!(f.admit(req(21, true, CacheMode::Use), tx3), Admission::Parked));
+        // the shard's queue rejected the leader: a typed overload response
+        on_done(Response {
+            id: 0,
+            body: ResponseBody::Reject(Reject {
+                reason: RejectReason::Overload,
+                queued_lanes: 40,
+                message: "queue full (capacity 4)".into(),
+            }),
+            latency_s: 0.0,
+            steps_executed: 0,
+            cached: false,
+            degraded: None,
+        });
+        // every waiter is answered exactly once, with the typed body intact
+        for rx in [&rx1, &rx2, &rx3] {
+            let r = rx.recv().unwrap();
+            match &r.body {
+                ResponseBody::Reject(rej) => {
+                    assert_eq!(rej.reason, RejectReason::Overload);
+                    assert_eq!(rej.queued_lanes, 40);
+                }
+                other => panic!("want typed reject, got {other:?}"),
+            }
+            assert!(!r.cached);
+        }
+        for rx in [rx1, rx2, rx3] {
+            assert!(rx.try_recv().is_err(), "waiter answered twice");
+        }
+        // nothing published, nothing pinned: the next arrival executes fresh
+        assert_eq!((f.metrics().entries, f.metrics().inflight), (0, 0));
+        let (tx4, _rx4) = chan();
+        assert!(matches!(
+            f.admit(req(21, false, CacheMode::Use), tx4),
+            Admission::Execute { .. }
+        ));
+    }
+
+    #[test]
+    fn deadline_expired_execution_is_never_published() {
+        use crate::coordinator::request::{Reject, RejectReason};
+        let f = front(true, true);
+        let (tx1, rx1) = chan();
+        let (tx2, rx2) = chan();
+        let Admission::Execute { on_done, .. } = f.admit(req(33, true, CacheMode::Use), tx1)
+        else {
+            panic!()
+        };
+        assert!(matches!(f.admit(req(33, true, CacheMode::Use), tx2), Admission::Parked));
+        // the engine cancelled the work at its pre-publish deadline check
+        on_done(Response {
+            id: 0,
+            body: ResponseBody::Reject(Reject {
+                reason: RejectReason::Deadline,
+                queued_lanes: 0,
+                message: "deadline expired; work cancelled".into(),
+            }),
+            latency_s: 0.0,
+            steps_executed: 0,
+            cached: false,
+            degraded: None,
+        });
+        for rx in [rx1, rx2] {
+            let r = rx.recv().unwrap();
+            let deadline = matches!(
+                &r.body,
+                ResponseBody::Reject(rej) if rej.reason == RejectReason::Deadline
+            );
+            assert!(deadline, "want typed deadline timeout, got {:?}", r.body);
+        }
+        // the cancelled sample must not seed the cache for future hits
+        let m = f.metrics();
+        assert_eq!((m.entries, m.inflight, m.bytes), (0, 0, 0));
+        let (tx3, _rx3) = chan();
+        assert!(matches!(
+            f.admit(req(33, true, CacheMode::Use), tx3),
+            Admission::Execute { .. }
+        ));
     }
 
     #[test]

@@ -67,6 +67,7 @@ impl CachedSample {
             latency_s,
             steps_executed: self.steps_executed,
             cached,
+            degraded: None,
         }
     }
 }

@@ -27,8 +27,34 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// Admission queue capacity (requests) — beyond this, reject (backpressure).
     pub queue_capacity: usize,
+    /// Admission queue lane budget (`--queue-lane-cap`): max lanes of
+    /// backlog the queue may hold, enforced alongside the item cap (a
+    /// count=8 generate is 8 lanes of work, not 1 item — the item cap
+    /// alone is not a latency bound). 0 = auto:
+    /// `max(queue_capacity, max_lanes)`.
+    pub queue_lane_cap: usize,
     /// Max lanes (in-flight samples) resident in the engine at once.
     pub max_lanes: usize,
+    /// Default completion budget in ms (`--deadline-default-ms`) applied
+    /// to wire requests that omit `"deadline_ms"`. 0 = no default
+    /// deadline. Expired work is cancelled with a typed
+    /// `"reject":{"reason":"deadline"}`, never finished.
+    pub deadline_default_ms: u64,
+    /// Adaptive quality degradation (`--degrade on|off`): under
+    /// queued-lane pressure, *best-effort* requests have their step
+    /// budget S transparently rewritten down the ladder →20→10 (§4.3:
+    /// DDIM quality degrades gracefully with S), preferring the
+    /// pre-optimized `"tau":"opt"` schedule for the downgraded budget
+    /// when the artifact bundle has that cell. The response carries
+    /// `"degraded":{"from":S,"to":S'}`.
+    pub degrade_enabled: bool,
+    /// Lower degradation watermark (`--degrade-mid`), as a fraction of
+    /// pool lane capacity (shards × max_lanes). Pressure at or above it
+    /// degrades best-effort requests to S=20.
+    pub degrade_mid: f64,
+    /// Upper degradation watermark (`--degrade-high`), same unit.
+    /// Pressure at or above it degrades best-effort requests to S=10.
+    pub degrade_high: f64,
     /// TCP listen address for `serve`.
     pub listen: String,
     /// Default number of sampling steps when a request omits it.
@@ -104,7 +130,12 @@ impl Default for ServeConfig {
             dataset: "sprites".into(),
             max_batch: 16,
             queue_capacity: 256,
+            queue_lane_cap: 0, // auto: max(queue_capacity, max_lanes)
             max_lanes: 64,
+            deadline_default_ms: 0, // no default deadline
+            degrade_enabled: true,  // only touches "priority":"best_effort"
+            degrade_mid: 1.0,       // backlog ≥ 1× pool capacity → S=20
+            degrade_high: 3.0,      // backlog ≥ 3× pool capacity → S=10
             listen: "127.0.0.1:7878".into(),
             default_steps: 20,
             default_sampler: SamplerKind::Ddim,
@@ -144,6 +175,26 @@ impl ServeConfig {
         }
         if self.queue_capacity == 0 {
             return Err(Error::Coordinator("queue_capacity must be > 0".into()));
+        }
+        if self.queue_lane_cap != 0 && self.queue_lane_cap < self.max_lanes {
+            return Err(Error::Coordinator(format!(
+                "queue_lane_cap ({}) must be >= max_lanes ({}) so a full-size \
+                 request can queue at all (0 = auto)",
+                self.queue_lane_cap, self.max_lanes
+            )));
+        }
+        if !self.degrade_mid.is_finite() || self.degrade_mid <= 0.0 {
+            return Err(Error::Coordinator(format!(
+                "degrade_mid must be a positive pressure fraction, got {}",
+                self.degrade_mid
+            )));
+        }
+        if !self.degrade_high.is_finite() || self.degrade_high < self.degrade_mid {
+            return Err(Error::Coordinator(format!(
+                "degrade_high ({}) must be >= degrade_mid ({}) — the ladder \
+                 tightens as pressure grows",
+                self.degrade_high, self.degrade_mid
+            )));
         }
         if self.default_steps == 0 {
             return Err(Error::Coordinator("default_steps must be > 0".into()));
@@ -216,6 +267,19 @@ impl ServeConfig {
         RefOptions { threads: self.ref_threads, precision: self.ref_precision }
     }
 
+    /// Effective queue lane budget: the explicit `queue_lane_cap`, or the
+    /// auto policy `max(queue_capacity, max_lanes)` — all-single-lane
+    /// traffic is bounded by the item cap exactly as before, while heavy
+    /// requests can no longer stack `queue_capacity × max_lanes` lanes of
+    /// backlog behind a capacity-sized queue.
+    pub fn queue_lane_budget(&self) -> usize {
+        if self.queue_lane_cap == 0 {
+            self.queue_capacity.max(self.max_lanes)
+        } else {
+            self.queue_lane_cap
+        }
+    }
+
     /// How many shards serve `dataset`: the `placement` override if one
     /// exists, else the global `shards` default.
     pub fn shards_for(&self, dataset: &str) -> usize {
@@ -242,6 +306,12 @@ mod tests {
             ServeConfig { max_batch: 0, ..Default::default() },
             ServeConfig { max_lanes: 4, max_batch: 16, ..Default::default() },
             ServeConfig { queue_capacity: 0, ..Default::default() },
+            ServeConfig { queue_lane_cap: 8, max_lanes: 64, ..Default::default() },
+            ServeConfig { degrade_mid: 0.0, ..Default::default() },
+            ServeConfig { degrade_mid: -1.0, ..Default::default() },
+            ServeConfig { degrade_mid: f64::NAN, ..Default::default() },
+            ServeConfig { degrade_mid: 2.0, degrade_high: 1.0, ..Default::default() },
+            ServeConfig { degrade_high: f64::NAN, ..Default::default() },
             ServeConfig { shards: 0, ..Default::default() },
             ServeConfig { pipeline_depth: 0, ..Default::default() },
             ServeConfig { pipeline_depth: 9, ..Default::default() },
@@ -301,6 +371,25 @@ mod tests {
         assert!(default_reactors() <= 4);
         ServeConfig { reactors: 1, ..Default::default() }.validate().unwrap();
         ServeConfig { reactors: 256, ..Default::default() }.validate().unwrap();
+    }
+
+    #[test]
+    fn overload_knobs_validate_and_default() {
+        // auto lane budget: item cap dominates for single-lane traffic,
+        // max_lanes floors it for small queues
+        let c = ServeConfig::default();
+        assert_eq!(c.queue_lane_budget(), 256);
+        let c = ServeConfig { queue_capacity: 8, max_lanes: 64, ..Default::default() };
+        assert_eq!(c.queue_lane_budget(), 64);
+        let c = ServeConfig { queue_lane_cap: 100, ..Default::default() };
+        c.validate().unwrap();
+        assert_eq!(c.queue_lane_budget(), 100);
+        // degradation knobs
+        ServeConfig { degrade_enabled: false, ..Default::default() }.validate().unwrap();
+        ServeConfig { degrade_mid: 0.5, degrade_high: 0.5, ..Default::default() }
+            .validate()
+            .unwrap();
+        ServeConfig { deadline_default_ms: 5000, ..Default::default() }.validate().unwrap();
     }
 
     #[test]

@@ -129,11 +129,15 @@ impl ConnState {
     }
 
     /// Append one best-effort frame line. Returns `false` (and counts the
-    /// drop) when the unsent backlog is already past the soft cap — a
-    /// slow client loses previews, not answers, and the buffer stays
-    /// bounded by `soft_cap` + the frames/responses already accepted.
+    /// drop) when appending would take the unsent backlog past the soft
+    /// cap — the *projected* size is checked, not the current one, so a
+    /// frame can never itself push the buffer over the bound. (The old
+    /// post-hoc check admitted any frame while backlog ≤ cap, letting one
+    /// large preview overshoot by a full frame; a slow client still loses
+    /// previews, never answers, and frames now keep the backlog ≤
+    /// `soft_cap` exactly.)
     pub fn queue_frame(&mut self, line: &str) -> bool {
-        if self.write_backlog() > self.soft_cap {
+        if self.write_backlog() + line.len() + 1 > self.soft_cap {
             self.frames_dropped += 1;
             return false;
         }
@@ -266,6 +270,28 @@ mod tests {
         st.queue_line("final-2");
         let s = String::from_utf8(st.pending_write().to_vec()).unwrap();
         assert_eq!(s, "final-1\nframe-1\nfinal-2\n");
+    }
+
+    #[test]
+    fn frame_admission_is_projected_not_post_hoc() {
+        // cap 16: a frame is admitted iff backlog + frame + '\n' fits
+        let mut st = ConnState::new(64, 16);
+        assert!(st.queue_frame("0123456789abcde"), "15+1 == 16: exactly fills the cap");
+        assert_eq!(st.write_backlog(), 16);
+        // old behavior would admit this (backlog == cap, not > cap) and
+        // overshoot to 32 bytes; projected-size admission refuses it
+        assert!(!st.queue_frame("0123456789abcde"));
+        assert_eq!((st.frames_dropped, st.write_backlog()), (1, 16));
+        // one frame can never overshoot an empty buffer either
+        let mut st = ConnState::new(64, 8);
+        assert!(!st.queue_frame("123456789"), "9+1 > 8 even when empty");
+        assert_eq!(st.write_backlog(), 0);
+        // draining restores admission
+        let mut st = ConnState::new(64, 16);
+        st.queue_line("0123456789abcde");
+        assert!(!st.queue_frame("x"));
+        st.consume_written(16);
+        assert!(st.queue_frame("x"));
     }
 
     #[test]

@@ -30,7 +30,9 @@ use crate::config::ServeConfig;
 use crate::coordinator::executor::{PipelineExecutor, SubBatchDone};
 use crate::coordinator::metrics::{Histogram, MetricsSnapshot};
 use crate::coordinator::queue::BoundedQueue;
-use crate::coordinator::request::{Request, RequestBody, RequestId, Response, ResponseBody};
+use crate::coordinator::request::{
+    Reject, RejectReason, Request, RequestBody, RequestId, Response, ResponseBody,
+};
 use crate::error::{Error, Result};
 use crate::runtime::Runtime;
 use crate::sampler::planner::{plan_sub_batches, SubBatch};
@@ -59,7 +61,14 @@ struct Lane {
 }
 
 struct Inflight {
+    /// Latency-clock anchor: the transport arrival instant when the
+    /// request crossed a connection, engine-queue push time otherwise —
+    /// so histograms measure client-observed latency, not just
+    /// queue-to-completion.
     submitted: Instant,
+    /// Absolute completion deadline; resident work past it is cancelled
+    /// (tick boundary) or suppressed (pre-publish check), never finished.
+    deadline: Option<Instant>,
     remaining_lanes: usize,
     outputs: Vec<Option<Vec<f32>>>,
     return_images: bool,
@@ -70,7 +79,9 @@ struct Pending {
     id: RequestId,
     request: Request,
     plan: SamplePlan,
+    /// See [`Inflight::submitted`] — anchored on transport arrival.
     submitted: Instant,
+    deadline: Option<Instant>,
     progress: Option<Arc<ProgressSink>>,
 }
 
@@ -150,6 +161,9 @@ pub struct Engine {
     kernel_steps: [u64; 3],
     lanes_done: u64,
     requests_done: u64,
+    /// Requests cancelled by deadline expiry (admission, tick reaper, or
+    /// pre-publish check).
+    deadline_expired: u64,
     ticks: u64,
     /// reference-backend bytes allocated by the most recent working tick
     /// — exactly 0 once the engine reaches steady state
@@ -225,7 +239,7 @@ impl Engine {
             manifest,
             alphas,
             opt,
-            queue: BoundedQueue::new(cfg.queue_capacity),
+            queue: BoundedQueue::with_lane_budget(cfg.queue_capacity, cfg.queue_lane_budget()),
             lanes: Vec::new(),
             inflight: HashMap::new(),
             completed: Vec::new(),
@@ -241,6 +255,7 @@ impl Engine {
             kernel_steps: [0; 3],
             lanes_done: 0,
             requests_done: 0,
+            deadline_expired: 0,
             ticks: 0,
             ref_bytes_last_tick: 0,
             cfg,
@@ -339,12 +354,81 @@ impl Engine {
             RequestBody::Encode { images } => check_dims(images)?,
             RequestBody::Generate { .. } => {}
         }
+        // admission-time deadline check: a request that arrives already
+        // past its budget is cancelled here, typed, before it costs a
+        // queue slot
+        let now = Instant::now();
+        let submitted = request.qos.arrived.unwrap_or(now);
+        let deadline = request.qos.deadline(now);
+        if let Some(d) = deadline {
+            if now >= d {
+                self.deadline_expired += 1;
+                return Err(Error::DeadlineExpired {
+                    message: format!(
+                        "deadline_ms {} expired before admission",
+                        request.qos.deadline_ms.unwrap_or(0)
+                    ),
+                });
+            }
+        }
         let id = self.next_id;
         self.next_id += 1;
         let lanes = request.lane_count();
-        self.queue
-            .push(Pending { id, request, plan, submitted: Instant::now(), progress }, lanes)?;
+        let priority = request.qos.priority;
+        self.queue.push(
+            Pending { id, request, plan, submitted, deadline, progress },
+            lanes,
+            priority,
+        )?;
         Ok(id)
+    }
+
+    /// Tick-boundary deadline reaper: cancel queued *and* resident work
+    /// whose budget ran out. Expired requests are answered with a typed
+    /// deadline rejection — cancelled, not finished — and their lanes are
+    /// dropped so the capacity goes to work that can still meet its SLO.
+    fn expire_deadlines(&mut self, now: Instant) -> usize {
+        // queued work first (cheap: no lanes to unwind)
+        let mut expired_count = 0;
+        for p in self.queue.reap(|p| p.deadline.is_some_and(|d| now >= d)) {
+            self.deadline_expired += 1;
+            expired_count += 1;
+            self.completed.push(Self::deadline_response(p.id, p.submitted, now));
+        }
+        // resident work: drop the request's lanes and inflight record
+        let expired: Vec<RequestId> = self
+            .inflight
+            .iter()
+            .filter(|(_, inf)| inf.deadline.is_some_and(|d| now >= d))
+            .map(|(&id, _)| id)
+            .collect();
+        if expired.is_empty() {
+            return expired_count;
+        }
+        self.lanes.retain(|l| !expired.contains(&l.req));
+        for id in expired {
+            let inf = self.inflight.remove(&id).unwrap();
+            self.deadline_expired += 1;
+            expired_count += 1;
+            self.completed.push(Self::deadline_response(id, inf.submitted, now));
+        }
+        self.rr_cursor = if self.lanes.is_empty() { 0 } else { self.rr_cursor % self.lanes.len() };
+        expired_count
+    }
+
+    fn deadline_response(id: RequestId, submitted: Instant, now: Instant) -> Response {
+        Response {
+            id,
+            body: ResponseBody::Reject(Reject {
+                reason: RejectReason::Deadline,
+                queued_lanes: 0,
+                message: "deadline expired; work cancelled".into(),
+            }),
+            latency_s: now.duration_since(submitted).as_secs_f64(),
+            steps_executed: 0,
+            cached: false,
+            degraded: None,
+        }
     }
 
     /// Number of requests waiting for admission.
@@ -381,7 +465,7 @@ impl Engine {
                 break;
             }
             let p = self.queue.pop().unwrap();
-            let Pending { id, request, plan, submitted, progress } = p;
+            let Pending { id, request, plan, submitted, deadline, progress } = p;
             let steps_total = plan.len() * request.lane_count();
             let n = request.lane_count();
             let kernel = request.sampler;
@@ -448,6 +532,7 @@ impl Engine {
                 id,
                 Inflight {
                     submitted,
+                    deadline,
                     remaining_lanes: n,
                     outputs: (0..n).map(|_| None).collect(),
                     return_images: request.return_images,
@@ -535,9 +620,11 @@ impl Engine {
     /// them (serially or through the pipeline), retire finished
     /// lanes/requests. Returns `true` if any work was done.
     pub fn tick(&mut self) -> Result<bool> {
+        // reap expired work first so freed capacity is admittable this tick
+        let reaped = self.expire_deadlines(Instant::now());
         self.admit();
         if self.lanes.is_empty() {
-            return Ok(false);
+            return Ok(reaped > 0);
         }
         // --- select lanes round-robin (identical at every pipeline depth)
         let n_active = self.lanes.len();
@@ -693,7 +780,16 @@ impl Engine {
             inf.remaining_lanes -= 1;
             if inf.remaining_lanes == 0 {
                 let inf = self.inflight.remove(&lane.req).unwrap();
-                let latency = inf.submitted.elapsed().as_secs_f64();
+                // pre-publish deadline check: work that finished after its
+                // budget is cancelled, not delivered (and never reaches the
+                // cache — the publish path only stores Ok responses)
+                let now = Instant::now();
+                if inf.deadline.is_some_and(|d| now >= d) {
+                    self.deadline_expired += 1;
+                    self.completed.push(Self::deadline_response(lane.req, inf.submitted, now));
+                    continue;
+                }
+                let latency = now.duration_since(inf.submitted).as_secs_f64();
                 self.latency.record(latency);
                 self.requests_done += 1;
                 let outputs = if inf.return_images {
@@ -707,6 +803,7 @@ impl Engine {
                     latency_s: latency,
                     steps_executed: inf.steps_total,
                     cached: false,
+                    degraded: None,
                 });
             }
         }
@@ -763,6 +860,7 @@ impl Engine {
                 latency_s: p.submitted.elapsed().as_secs_f64(),
                 steps_executed: 0,
                 cached: false,
+                degraded: None,
             });
             aborted += 1;
         }
@@ -775,6 +873,7 @@ impl Engine {
                 latency_s: inf.submitted.elapsed().as_secs_f64(),
                 steps_executed: 0,
                 cached: false,
+                degraded: None,
             });
             aborted += 1;
         }
@@ -785,7 +884,7 @@ impl Engine {
     pub fn metrics(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             requests_completed: self.requests_done,
-            requests_rejected: self.queue.rejected,
+            requests_rejected: self.queue.rejected(),
             lanes_completed: self.lanes_done,
             executable_calls: self.ctr.calls,
             steps_executed: self.ctr.steps,
@@ -806,7 +905,14 @@ impl Engine {
             wall_s: self.started.elapsed().as_secs_f64(),
             queue_accepted: self.queue.accepted,
             queue_depth: self.queue.len(),
+            queued_lanes: self.queue.lanes(),
             active_lanes: self.lanes.len(),
+            queue_rejected_items: self.queue.rejected_items,
+            queue_rejected_lanes: self.queue.rejected_lanes,
+            deadline_expired: self.deadline_expired,
+            // degradation is decided at the router (it sees pool-wide
+            // pressure); per-engine snapshots report 0
+            requests_degraded: 0,
         }
     }
 

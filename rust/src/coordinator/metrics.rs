@@ -76,7 +76,11 @@ impl Histogram {
         }
     }
 
-    /// Quantile estimate (upper edge of the containing bucket).
+    /// Quantile estimate: upper edge of the containing bucket, clamped to
+    /// the recorded max. Without the clamp the top bucket's upper edge
+    /// leaks out — p99 could exceed every observed value and
+    /// `quantile(1.0) > max()`, which reads as an SLO breach that never
+    /// happened.
     pub fn quantile(&self, q: f64) -> f64 {
         if self.total == 0 {
             return 0.0;
@@ -86,7 +90,7 @@ impl Histogram {
         for (i, &c) in self.counts.iter().enumerate() {
             acc += c;
             if acc >= target.max(1) {
-                return MIN_S * GROWTH.powi(i as i32 + 1);
+                return (MIN_S * GROWTH.powi(i as i32 + 1)).min(self.max);
             }
         }
         self.max
@@ -142,8 +146,24 @@ pub struct MetricsSnapshot {
     pub queue_accepted: u64,
     /// Requests sitting in the admission queue right now.
     pub queue_depth: usize,
+    /// Lanes queued (not yet admitted) right now.
+    pub queued_lanes: usize,
     /// Lanes resident in the engine right now.
     pub active_lanes: usize,
+    /// Rejections where the queue's *item* cap was binding.
+    pub queue_rejected_items: u64,
+    /// Rejections where the queue's *lane budget* was binding — the cap
+    /// that actually bounds backlog latency (a count=8 request is 8 lanes
+    /// of work, not 1 item).
+    pub queue_rejected_lanes: u64,
+    /// Requests cancelled because their deadline expired (at admission, a
+    /// tick boundary, or the pre-publish check). Counted separately from
+    /// `requests_rejected`: the client asked for the cancellation.
+    pub deadline_expired: u64,
+    /// Best-effort requests whose step budget was rewritten by the
+    /// overload degradation ladder (router-level; per-engine snapshots
+    /// report 0 and the router fills it during aggregation).
+    pub requests_degraded: u64,
 }
 
 impl MetricsSnapshot {
@@ -209,9 +229,11 @@ impl MetricsSnapshot {
     /// One-line human summary for examples/benches.
     pub fn summary(&self) -> String {
         format!(
-            "req={} rej={} lanes={} calls={} steps={} (ddim/pf/ab2={}/{}/{}) occ={:.2} waste={:.2} sub/tick={:.2} ovl={:.2} refc={:.2} alloc/tick={} p50={:.1}ms p95={:.1}ms p99={:.1}ms thr={:.1} steps/s",
+            "req={} rej={} dl={} degr={} lanes={} calls={} steps={} (ddim/pf/ab2={}/{}/{}) occ={:.2} waste={:.2} sub/tick={:.2} ovl={:.2} refc={:.2} alloc/tick={} p50={:.1}ms p95={:.1}ms p99={:.1}ms thr={:.1} steps/s",
             self.requests_completed,
             self.requests_rejected,
+            self.deadline_expired,
+            self.requests_degraded,
             self.lanes_completed,
             self.executable_calls,
             self.steps_executed,
@@ -256,6 +278,32 @@ mod tests {
         assert!((0.9..1.1).contains(&p99), "p99 {p99}");
         assert!((h.mean() - 0.5005).abs() < 0.01);
         assert!(h.quantile(1.0) >= h.quantile(0.5));
+    }
+
+    #[test]
+    fn quantile_never_exceeds_recorded_max() {
+        // a single sample: every quantile IS that sample, not the upper
+        // edge of its ~4%-wide bucket
+        let mut h = Histogram::new();
+        h.record(1.0);
+        for q in [0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 1.0, "q={q}");
+        }
+        // many samples: p99 and p100 stay within the observed range
+        let mut h = Histogram::new();
+        let mut max = 0.0f64;
+        for i in 1..=257 {
+            let v = (i as f64) * 7.3e-3;
+            h.record(v);
+            max = max.max(v);
+        }
+        assert!(h.quantile(0.99) <= max, "p99 {} > max {max}", h.quantile(0.99));
+        assert_eq!(h.quantile(1.0), max);
+        // merged histograms inherit the clamp
+        let mut other = Histogram::new();
+        other.record(max * 2.0);
+        h.merge(&other);
+        assert_eq!(h.quantile(1.0), max * 2.0);
     }
 
     #[test]

@@ -42,7 +42,10 @@ pub use executor::PipelineExecutor;
 pub use metrics::{Histogram, MetricsSnapshot};
 pub use queue::BoundedQueue;
 pub use reactor::{raise_nofile_limit, PollEvent, Poller, ReactorStats};
-pub use request::{CacheMode, Request, RequestBody, RequestId, Response, ResponseBody};
+pub use request::{
+    CacheMode, Priority, Qos, Reject, RejectReason, Request, RequestBody, RequestId, Response,
+    ResponseBody,
+};
 pub use router::Router;
 pub use server::Server;
 pub use shard::{EngineShard, ShardStats};

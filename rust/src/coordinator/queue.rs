@@ -1,90 +1,171 @@
-//! Bounded FIFO admission queue. Full queue = immediate rejection — the
-//! backpressure signal a latency-SLO serving system wants (queueing deeper
-//! only converts rejects into timeouts).
+//! Bounded priority admission queue. Full queue = immediate typed
+//! rejection — the backpressure signal a latency-SLO serving system wants
+//! (queueing deeper only converts rejects into timeouts).
 //!
 //! Each item carries a *lane weight* (how many trajectories it will admit)
 //! and the queue maintains the running total, because the router's
 //! least-loaded dispatch polls the backlog in lanes on every worker-loop
 //! iteration — an O(queue) walk there was measurable under load.
+//!
+//! Admission enforces two caps: an item cap (queue depth) and a *lane
+//! budget*. The item cap alone is not a latency bound — a capacity-64
+//! queue would happily admit 64×max_lanes lanes of backlog — so the lane
+//! budget caps queued work in the unit the engine actually drains.
+//!
+//! Items are queued into strict priority bands (see
+//! [`crate::coordinator::Priority`]): every band-0 item pops before any
+//! band-1 item, FIFO within a band. A heavy high-priority head can
+//! therefore block lower bands (head-of-line by design — that is what
+//! "strict" means); deadline expiry reaps queued work that waits too long.
 
 use std::collections::VecDeque;
 
+use crate::coordinator::request::Priority;
 use crate::error::{Error, Result};
 
-/// FIFO with a hard capacity and O(1) lane-weight accounting.
+/// Strict-priority FIFO with hard item/lane caps and O(1) lane-weight
+/// accounting.
 #[derive(Debug)]
 pub struct BoundedQueue<T> {
-    items: VecDeque<(T, usize)>,
+    /// One FIFO per priority band; band 0 drains first.
+    bands: Vec<VecDeque<(T, usize)>>,
     capacity: usize,
+    lane_budget: usize,
     lanes: usize,
-    /// total accepted / rejected (metrics)
+    len: usize,
+    /// total accepted / rejected-by-cap (metrics)
     pub accepted: u64,
-    pub rejected: u64,
+    /// rejections where the *item* cap was the binding constraint
+    pub rejected_items: u64,
+    /// rejections where the *lane budget* was the binding constraint
+    pub rejected_lanes: u64,
 }
 
 impl<T> BoundedQueue<T> {
+    /// Item cap only (lane budget unbounded) — library/test convenience.
     pub fn new(capacity: usize) -> Self {
+        Self::with_lane_budget(capacity, usize::MAX)
+    }
+
+    /// Item cap plus a lane budget: the queue never holds more than
+    /// `capacity` items *or* more than `lane_budget` lanes of backlog.
+    pub fn with_lane_budget(capacity: usize, lane_budget: usize) -> Self {
         Self {
-            items: VecDeque::with_capacity(capacity),
+            bands: (0..Priority::COUNT).map(|_| VecDeque::new()).collect(),
             capacity,
+            lane_budget,
             lanes: 0,
+            len: 0,
             accepted: 0,
-            rejected: 0,
+            rejected_items: 0,
+            rejected_lanes: 0,
         }
     }
 
-    /// Admit or reject. `lanes` is the item's weight in the running lane
-    /// count (a count=8 generate is 8 lanes of backlog, not 1).
-    pub fn push(&mut self, item: T, lanes: usize) -> Result<()> {
-        if self.items.len() >= self.capacity {
-            self.rejected += 1;
-            return Err(Error::Coordinator(format!(
-                "queue full (capacity {})",
-                self.capacity
-            )));
+    /// Admit or reject into `priority`'s band. `lanes` is the item's
+    /// weight in the running lane count (a count=8 generate is 8 lanes of
+    /// backlog, not 1). Rejections are typed ([`Error::Overload`]) and
+    /// carry the queued-lane pressure observed at the decision.
+    pub fn push(&mut self, item: T, lanes: usize, priority: Priority) -> Result<()> {
+        if self.len >= self.capacity {
+            self.rejected_items += 1;
+            return Err(Error::Overload {
+                queued_lanes: self.lanes,
+                message: format!("queue full (capacity {})", self.capacity),
+            });
         }
-        self.items.push_back((item, lanes));
+        if self.lanes.saturating_add(lanes) > self.lane_budget {
+            self.rejected_lanes += 1;
+            return Err(Error::Overload {
+                queued_lanes: self.lanes,
+                message: format!(
+                    "queue lane budget exhausted ({} queued + {} > {})",
+                    self.lanes, lanes, self.lane_budget
+                ),
+            });
+        }
+        self.bands[priority.band()].push_back((item, lanes));
         self.lanes += lanes;
+        self.len += 1;
         self.accepted += 1;
         Ok(())
     }
 
+    /// Pop the front of the highest non-empty priority band.
     pub fn pop(&mut self) -> Option<T> {
-        let (item, lanes) = self.items.pop_front()?;
-        self.lanes -= lanes;
-        Some(item)
+        for band in &mut self.bands {
+            if let Some((item, lanes)) = band.pop_front() {
+                self.lanes -= lanes;
+                self.len -= 1;
+                return Some(item);
+            }
+        }
+        None
     }
 
+    /// The item `pop` would return next.
     pub fn peek(&self) -> Option<&T> {
-        self.items.front().map(|(item, _)| item)
+        self.bands
+            .iter()
+            .find_map(|band| band.front().map(|(item, _)| item))
     }
 
-    /// Iterate queued items front-to-back (metrics / load accounting).
+    /// Iterate queued items in pop order (metrics / load accounting).
     pub fn iter(&self) -> impl Iterator<Item = &T> {
-        self.items.iter().map(|(item, _)| item)
+        self.bands.iter().flatten().map(|(item, _)| item)
     }
 
-    /// Iterate queued `(item, lane weight)` entries front-to-back.
+    /// Iterate queued `(item, lane weight)` entries in pop order.
     pub fn iter_entries(&self) -> impl Iterator<Item = (&T, usize)> {
-        self.items.iter().map(|(item, lanes)| (item, *lanes))
+        self.bands.iter().flatten().map(|(item, lanes)| (item, *lanes))
+    }
+
+    /// Remove and return every queued item matching `pred`, maintaining
+    /// the lane count. Used by the deadline reaper at tick boundaries:
+    /// expired work leaves the queue as cancelled, not served.
+    pub fn reap<F: FnMut(&T) -> bool>(&mut self, mut pred: F) -> Vec<T> {
+        let mut reaped = Vec::new();
+        for band in &mut self.bands {
+            let mut keep = VecDeque::with_capacity(band.len());
+            for (item, lanes) in band.drain(..) {
+                if pred(&item) {
+                    self.lanes -= lanes;
+                    self.len -= 1;
+                    reaped.push(item);
+                } else {
+                    keep.push_back((item, lanes));
+                }
+            }
+            *band = keep;
+        }
+        reaped
     }
 
     /// Running total of queued lane weights — O(1), maintained on every
-    /// push/pop (and therefore across aborts, which drain through `pop`).
+    /// push/pop/reap (and therefore across aborts, which drain via `pop`).
     pub fn lanes(&self) -> usize {
         self.lanes
     }
 
+    /// Total rejections, both caps.
+    pub fn rejected(&self) -> u64 {
+        self.rejected_items + self.rejected_lanes
+    }
+
     pub fn len(&self) -> usize {
-        self.items.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.items.is_empty()
+        self.len == 0
     }
 
     pub fn capacity(&self) -> usize {
         self.capacity
+    }
+
+    pub fn lane_budget(&self) -> usize {
+        self.lane_budget
     }
 }
 
@@ -92,15 +173,17 @@ impl<T> BoundedQueue<T> {
 mod tests {
     use super::*;
 
+    const P: Priority = Priority::Batch;
+
     #[test]
-    fn fifo_order() {
+    fn fifo_order_within_a_band() {
         let mut q = BoundedQueue::new(3);
-        q.push(1, 1).unwrap();
-        q.push(2, 1).unwrap();
-        q.push(3, 1).unwrap();
+        q.push(1, 1, P).unwrap();
+        q.push(2, 1, P).unwrap();
+        q.push(3, 1, P).unwrap();
         assert_eq!(q.pop(), Some(1));
         assert_eq!(q.pop(), Some(2));
-        q.push(4, 1).unwrap();
+        q.push(4, 1, P).unwrap();
         assert_eq!(q.iter().copied().collect::<Vec<_>>(), vec![3, 4]);
         assert_eq!(q.pop(), Some(3));
         assert_eq!(q.pop(), Some(4));
@@ -108,26 +191,60 @@ mod tests {
     }
 
     #[test]
+    fn strict_priority_across_bands() {
+        let mut q = BoundedQueue::new(8);
+        q.push("be-1", 1, Priority::BestEffort).unwrap();
+        q.push("batch-1", 1, Priority::Batch).unwrap();
+        q.push("int-1", 1, Priority::Interactive).unwrap();
+        q.push("be-2", 1, Priority::BestEffort).unwrap();
+        q.push("int-2", 1, Priority::Interactive).unwrap();
+        // strict ordering: all interactive, then batch, then best-effort;
+        // FIFO within each band
+        assert_eq!(q.peek(), Some(&"int-1"));
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order, vec!["int-1", "int-2", "batch-1", "be-1", "be-2"]);
+    }
+
+    #[test]
     fn rejects_when_full_and_counts() {
         let mut q = BoundedQueue::new(2);
-        q.push(1, 1).unwrap();
-        q.push(2, 1).unwrap();
-        assert!(q.push(3, 1).is_err());
+        q.push(1, 1, P).unwrap();
+        q.push(2, 1, P).unwrap();
+        let err = q.push(3, 1, P).unwrap_err();
+        assert!(matches!(err, Error::Overload { queued_lanes: 2, .. }), "{err}");
         assert_eq!(q.accepted, 2);
-        assert_eq!(q.rejected, 1);
+        assert_eq!(q.rejected_items, 1);
+        assert_eq!(q.rejected(), 1);
         q.pop();
-        q.push(3, 1).unwrap();
+        q.push(3, 1, P).unwrap();
         assert_eq!(q.accepted, 3);
+    }
+
+    #[test]
+    fn lane_budget_caps_queued_work() {
+        // item cap alone would admit 64 items; the lane budget stops a
+        // heavy backlog long before that
+        let mut q = BoundedQueue::with_lane_budget(64, 10);
+        q.push("a", 8, P).unwrap();
+        q.push("b", 2, P).unwrap();
+        let err = q.push("c", 1, P).unwrap_err();
+        assert!(matches!(err, Error::Overload { queued_lanes: 10, .. }), "{err}");
+        assert_eq!(q.rejected_lanes, 1);
+        assert_eq!(q.rejected_items, 0);
+        // light items still fit once lanes drain
+        assert_eq!(q.pop(), Some("a"));
+        q.push("c", 1, P).unwrap();
+        assert_eq!(q.lanes(), 3);
     }
 
     #[test]
     fn lane_count_tracks_pushes_pops_and_rejects() {
         let mut q = BoundedQueue::new(2);
         assert_eq!(q.lanes(), 0);
-        q.push("a", 8).unwrap();
-        q.push("b", 1).unwrap();
+        q.push("a", 8, P).unwrap();
+        q.push("b", 1, P).unwrap();
         assert_eq!(q.lanes(), 9);
-        assert!(q.push("c", 4).is_err(), "reject must not count lanes");
+        assert!(q.push("c", 4, P).is_err(), "reject must not count lanes");
         assert_eq!(q.lanes(), 9);
         assert_eq!(q.pop(), Some("a"));
         assert_eq!(q.lanes(), 1);
@@ -138,26 +255,58 @@ mod tests {
     }
 
     #[test]
-    fn property_never_exceeds_capacity_and_lane_count_matches_contents() {
+    fn reap_removes_matching_and_keeps_lane_accounting() {
+        let mut q = BoundedQueue::new(8);
+        q.push(10, 2, Priority::Interactive).unwrap();
+        q.push(11, 3, Priority::Batch).unwrap();
+        q.push(12, 4, Priority::BestEffort).unwrap();
+        q.push(13, 1, Priority::Batch).unwrap();
+        let reaped = q.reap(|x| x % 2 == 1);
+        assert_eq!(reaped, vec![11, 13]);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.lanes(), 6);
+        assert_eq!(q.pop(), Some(10));
+        assert_eq!(q.pop(), Some(12));
+    }
+
+    #[test]
+    fn property_never_exceeds_caps_and_lane_count_matches_contents() {
         crate::testing::check("queue_capacity_and_lanes", 100, |g| {
             let cap = g.int_in(1, 16);
-            let mut q = BoundedQueue::new(cap);
+            let budget = g.int_in(1, 24);
+            let mut q = BoundedQueue::with_lane_budget(cap, budget);
             let ops = g.int_in(1, 200);
             for _ in 0..ops {
-                if g.bool() {
-                    let w = g.int_in(0, 9);
-                    let _ = q.push(0u8, w);
-                } else {
-                    q.pop();
+                match g.int_in(0, 3) {
+                    0 | 1 => {
+                        let w = g.int_in(0, 9);
+                        let band = [Priority::Interactive, Priority::Batch, Priority::BestEffort]
+                            [g.int_in(0, 2)];
+                        let _ = q.push(0u8, w, band);
+                    }
+                    2 => {
+                        q.pop();
+                    }
+                    _ => {
+                        let cutoff = g.int_in(0, 1) == 0;
+                        q.reap(|_| cutoff);
+                    }
                 }
                 if q.len() > cap {
                     return Err(format!("len {} > cap {cap}", q.len()));
+                }
+                if q.lanes() > budget {
+                    return Err(format!("lanes {} > budget {budget}", q.lanes()));
                 }
                 // the running count must equal a fresh walk over the
                 // queued entries' weights — the O(1) gauge never drifts
                 let walked: usize = q.iter_entries().map(|(_, w)| w).sum();
                 if q.lanes() != walked {
                     return Err(format!("lanes() {} != walked {walked}", q.lanes()));
+                }
+                let counted = q.iter().count();
+                if q.len() != counted {
+                    return Err(format!("len() {} != counted {counted}", q.len()));
                 }
             }
             Ok(())

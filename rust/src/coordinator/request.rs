@@ -6,6 +6,8 @@
 //! - `Decode`:   caller-supplied latents x_T -> x_0 (Fig. 6 interpolation)
 //! - `Encode`:   caller-supplied images x_0 -> x_T (Table 2 reconstruction)
 
+use std::time::{Duration, Instant};
+
 use crate::error::{Error, Result};
 use crate::jobj;
 use crate::json::{self, Value};
@@ -14,6 +16,75 @@ use crate::schedule::{NoiseMode, TauKind};
 
 /// Monotonically increasing request identifier (assigned by the engine).
 pub type RequestId = u64;
+
+/// Scheduling class for the overload-control queue (the wire's
+/// `"priority"` field). Ordering in the engine queue is *strict*: every
+/// queued interactive request is admitted before any batch request,
+/// which in turn precedes best-effort. Only best-effort requests are
+/// eligible for quality degradation under load.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Priority {
+    Interactive,
+    /// The default for requests that don't say (`"priority"` absent).
+    #[default]
+    Batch,
+    BestEffort,
+}
+
+impl Priority {
+    /// Number of priority bands (queue internals size their storage on it).
+    pub const COUNT: usize = 3;
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "interactive" => Ok(Priority::Interactive),
+            "batch" => Ok(Priority::Batch),
+            "best_effort" => Ok(Priority::BestEffort),
+            other => Err(Error::Request(format!(
+                "unknown priority '{other}' (want interactive | batch | best_effort)"
+            ))),
+        }
+    }
+
+    /// Queue band index: 0 is served first.
+    pub fn band(self) -> usize {
+        self as usize
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+            Priority::BestEffort => "best_effort",
+        }
+    }
+}
+
+/// Delivery-shaping metadata that rides with the request but never enters
+/// the cache key (like `return_images`): scheduling class, the instant the
+/// transport first saw the request, and the optional completion deadline.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Qos {
+    pub priority: Priority,
+    /// When the connection layer read the request line. The latency clock
+    /// and every deadline check run from here, so histograms measure
+    /// client-observed latency; `None` (direct library use) falls back to
+    /// engine-queue push time.
+    pub arrived: Option<Instant>,
+    /// Completion budget in milliseconds from `arrived`. Expired work is
+    /// cancelled with a typed `"reject":{"reason":"deadline"}` — at
+    /// admission, at tick boundaries, and before publish — never finished.
+    pub deadline_ms: Option<u64>,
+}
+
+impl Qos {
+    /// Absolute deadline, if one was requested. `fallback` anchors requests
+    /// that never crossed the transport (no arrival instant).
+    pub fn deadline(&self, fallback: Instant) -> Option<Instant> {
+        self.deadline_ms
+            .map(|ms| self.arrived.unwrap_or(fallback) + Duration::from_millis(ms))
+    }
+}
 
 /// Per-request cache directive (the wire's `"cache"` field).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -71,6 +142,10 @@ pub struct Request {
     /// sample cache and coalescing). Not part of the cache key — like
     /// `return_images`, it shapes delivery, not the sample.
     pub cache: CacheMode,
+    /// Overload-control metadata (priority, arrival instant, deadline).
+    /// Shapes scheduling and delivery, not the sample — excluded from the
+    /// cache key by construction.
+    pub qos: Qos,
 }
 
 impl Request {
@@ -130,6 +205,22 @@ impl Request {
             Some(c) => CacheMode::parse(c.as_str()?)?,
             None => CacheMode::Use,
         };
+        let priority = match v.get_opt("priority") {
+            Some(p) => Priority::parse(p.as_str()?)?,
+            None => Priority::default(),
+        };
+        let deadline_ms = match v.get_opt("deadline_ms") {
+            Some(d) => {
+                let ms = d
+                    .as_u64()
+                    .map_err(|e| Error::Request(format!("deadline_ms: {e}")))?;
+                if ms == 0 {
+                    return Err(Error::Request("deadline_ms must be positive".into()));
+                }
+                Some(ms)
+            }
+            None => None,
+        };
         let parse_matrix = |key: &str| -> Result<Vec<Vec<f32>>> {
             v.get(key)?
                 .as_arr()?
@@ -157,7 +248,17 @@ impl Request {
             "encode" => RequestBody::Encode { images: parse_matrix("images")? },
             other => return Err(Error::Request(format!("unknown op '{other}'"))),
         };
-        let req = Request { dataset, steps, mode, tau, sampler, body, return_images, cache };
+        let req = Request {
+            dataset,
+            steps,
+            mode,
+            tau,
+            sampler,
+            body,
+            return_images,
+            cache,
+            qos: Qos { priority, arrived: None, deadline_ms },
+        };
         if req.lane_count() == 0 {
             return Err(Error::Request("request has zero lanes".into()));
         }
@@ -190,6 +291,11 @@ pub struct Response {
     /// Coalesced waiters report `false`: their execution was shared, not
     /// replayed from the store.
     pub cached: bool,
+    /// Set when overload shedding rewrote this request's step budget:
+    /// `(requested S, executed S)`. Stamped per-request at the router, so
+    /// every delivery path (direct, cache hit, coalesced waiter) reports
+    /// the budget *this* client's sample was actually produced under.
+    pub degraded: Option<(usize, usize)>,
 }
 
 /// Result payload.
@@ -199,12 +305,46 @@ pub enum ResponseBody {
     /// `return_images` was false.
     Ok { outputs: Vec<Vec<f32>> },
     Error { message: String },
+    /// Typed overload/deadline rejection. On the wire this is structured
+    /// (`"reject":{"reason":...,"queued_lanes":N}`), never a bare error
+    /// string, so clients can back off or retry-with-budget mechanically.
+    Reject(Reject),
+}
+
+/// Why admission (or the deadline checker) refused to finish a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Queue pressure: the item cap or the lane budget was exhausted.
+    Overload,
+    /// The request's deadline expired (at admission, a tick boundary, or
+    /// the pre-publish check).
+    Deadline,
+}
+
+impl RejectReason {
+    pub fn label(self) -> &'static str {
+        match self {
+            RejectReason::Overload => "overload",
+            RejectReason::Deadline => "deadline",
+        }
+    }
+}
+
+/// Structured rejection record carried by [`ResponseBody::Reject`].
+#[derive(Debug, Clone)]
+pub struct Reject {
+    pub reason: RejectReason,
+    /// Queued-lane pressure observed at the decision point (0 when the
+    /// decision wasn't pressure-driven, e.g. a deadline expiry).
+    pub queued_lanes: usize,
+    /// Human-readable detail; supplements the typed fields.
+    pub message: String,
 }
 
 impl Response {
     /// JSON wire form.
     pub fn to_json(&self) -> Value {
-        match &self.body {
+        let mut obj = match &self.body {
             ResponseBody::Ok { outputs } => {
                 let imgs: Vec<Value> = outputs
                     .iter()
@@ -226,7 +366,23 @@ impl Response {
                 ("ok", false),
                 ("error", message.as_str()),
             ],
+            ResponseBody::Reject(r) => jobj![
+                ("id", self.id),
+                ("ok", false),
+                ("error", r.message.as_str()),
+                (
+                    "reject",
+                    jobj![
+                        ("reason", r.reason.label()),
+                        ("queued_lanes", r.queued_lanes),
+                    ]
+                ),
+            ],
+        };
+        if let (Some((from, to)), Value::Obj(m)) = (self.degraded, &mut obj) {
+            m.insert("degraded".into(), jobj![("from", from), ("to", to)]);
         }
+        obj
     }
 
     pub fn to_json_line(&self) -> String {
@@ -422,11 +578,13 @@ mod tests {
             latency_s: 0.125,
             steps_executed: 20,
             cached: true,
+            degraded: None,
         };
         let v = json::parse(&r.to_json_line()).unwrap();
         assert!(v.get("ok").unwrap().as_bool().unwrap());
         assert_eq!(v.get("id").unwrap().as_usize().unwrap(), 3);
         assert!(v.get("cached").unwrap().as_bool().unwrap());
+        assert!(v.get_opt("degraded").is_none());
         let outs = v.get("outputs").unwrap().as_arr().unwrap();
         assert_eq!(outs[0].as_f64_vec().unwrap(), vec![0.5, -0.25]);
         let e = Response {
@@ -435,8 +593,100 @@ mod tests {
             latency_s: 0.0,
             steps_executed: 0,
             cached: false,
+            degraded: None,
         };
         let v = json::parse(&e.to_json_line()).unwrap();
         assert!(!v.get("ok").unwrap().as_bool().unwrap());
+        assert!(v.get_opt("reject").is_none());
+    }
+
+    #[test]
+    fn parse_priority_and_deadline() {
+        let v = json::parse(
+            r#"{"op":"generate","dataset":"d","steps":5,"count":1,"seed":0,
+                "priority":"best_effort","deadline_ms":250}"#,
+        )
+        .unwrap();
+        let r = Request::from_json(&v).unwrap();
+        assert_eq!(r.qos.priority, Priority::BestEffort);
+        assert_eq!(r.qos.deadline_ms, Some(250));
+        assert!(r.qos.arrived.is_none());
+        // both default off
+        let v = json::parse(r#"{"op":"generate","dataset":"d","steps":5,"count":1,"seed":0}"#)
+            .unwrap();
+        let r = Request::from_json(&v).unwrap();
+        assert_eq!(r.qos.priority, Priority::Batch);
+        assert_eq!(r.qos.deadline_ms, None);
+        // malformed values are typed errors, not silent defaults
+        for s in [
+            r#"{"op":"generate","dataset":"d","steps":5,"count":1,"seed":0,"priority":"urgent"}"#,
+            r#"{"op":"generate","dataset":"d","steps":5,"count":1,"seed":0,"deadline_ms":0}"#,
+            r#"{"op":"generate","dataset":"d","steps":5,"count":1,"seed":0,"deadline_ms":-5}"#,
+            r#"{"op":"generate","dataset":"d","steps":5,"count":1,"seed":0,"deadline_ms":1.5}"#,
+        ] {
+            let v = json::parse(s).unwrap();
+            assert!(Request::from_json(&v).is_err(), "{s}");
+        }
+    }
+
+    #[test]
+    fn priority_bands_are_strictly_ordered() {
+        assert!(Priority::Interactive < Priority::Batch);
+        assert!(Priority::Batch < Priority::BestEffort);
+        assert_eq!(Priority::Interactive.band(), 0);
+        assert_eq!(Priority::BestEffort.band(), Priority::COUNT - 1);
+        for p in [Priority::Interactive, Priority::Batch, Priority::BestEffort] {
+            assert_eq!(Priority::parse(p.label()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn qos_deadline_anchors_on_arrival() {
+        let t0 = Instant::now();
+        let q = Qos { priority: Priority::Batch, arrived: Some(t0), deadline_ms: Some(40) };
+        assert_eq!(q.deadline(t0 + Duration::from_secs(9)), Some(t0 + Duration::from_millis(40)));
+        // no arrival instant: the fallback anchors the budget
+        let q = Qos { arrived: None, ..q };
+        assert_eq!(q.deadline(t0), Some(t0 + Duration::from_millis(40)));
+        assert_eq!(Qos::default().deadline(t0), None);
+    }
+
+    #[test]
+    fn reject_is_typed_on_the_wire() {
+        let r = Response {
+            id: 9,
+            body: ResponseBody::Reject(Reject {
+                reason: RejectReason::Overload,
+                queued_lanes: 17,
+                message: "queue full".into(),
+            }),
+            latency_s: 0.0,
+            steps_executed: 0,
+            cached: false,
+            degraded: None,
+        };
+        let v = json::parse(&r.to_json_line()).unwrap();
+        assert!(!v.get("ok").unwrap().as_bool().unwrap());
+        let rej = v.get("reject").unwrap();
+        assert_eq!(rej.get("reason").unwrap().as_str().unwrap(), "overload");
+        assert_eq!(rej.get("queued_lanes").unwrap().as_usize().unwrap(), 17);
+        // the bare string stays for old clients, but typed fields rule
+        assert!(v.get("error").unwrap().as_str().unwrap().contains("queue full"));
+    }
+
+    #[test]
+    fn degraded_record_rides_ok_responses() {
+        let r = Response {
+            id: 1,
+            body: ResponseBody::Ok { outputs: vec![] },
+            latency_s: 0.5,
+            steps_executed: 20,
+            cached: false,
+            degraded: Some((100, 20)),
+        };
+        let v = json::parse(&r.to_json_line()).unwrap();
+        let d = v.get("degraded").unwrap();
+        assert_eq!(d.get("from").unwrap().as_usize().unwrap(), 100);
+        assert_eq!(d.get("to").unwrap().as_usize().unwrap(), 20);
     }
 }

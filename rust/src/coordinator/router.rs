@@ -23,7 +23,7 @@
 //! over-weights a cold shard with three slow requests.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver};
 use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
@@ -32,11 +32,18 @@ use crate::cache::{Admission, CacheFront, DoneFn};
 use crate::config::ServeConfig;
 use crate::coordinator::engine::ProgressSink;
 use crate::coordinator::metrics::{Histogram, MetricsSnapshot};
-use crate::coordinator::request::{Request, Response, ResponseBody};
+use crate::coordinator::request::{Priority, Request, Response, ResponseBody};
 use crate::coordinator::shard::{EngineShard, ShardStats};
 use crate::error::{Error, Result};
 use crate::jobj;
 use crate::json::{self, Value};
+use crate::schedule::TauKind;
+
+/// Step budgets the degradation ladder sheds to, highest rung first. The
+/// mid watermark targets the first entry, the high watermark the second —
+/// mirroring the paper's S=100 → S=20 → S=10 quality/steps trade-off
+/// (DDIM degrades gracefully where DDPM collapses; Figure 3).
+const DEGRADE_RUNGS: [usize; 2] = [20, 10];
 
 /// Total budget a metrics poll spends waiting across *all* shards before
 /// skipping the stragglers (shared deadline, not per shard — a fleet of
@@ -71,6 +78,10 @@ pub struct Router {
     /// dispatch (see [`crate::cache`]). Always present; inert when both
     /// halves are disabled in config.
     cache: Arc<CacheFront>,
+    /// Requests whose step budget was shed by the degradation ladder.
+    /// Router-level on purpose: the rewrite happens *before* cache
+    /// admission, so engines never see the original budget and report 0.
+    degraded: AtomicU64,
 }
 
 /// Least-loaded pick with a rotating-cursor tie-break: scan indices in
@@ -103,6 +114,7 @@ impl Router {
             next_shard_id: AtomicUsize::new(0),
             stopping: AtomicBool::new(false),
             cache,
+            degraded: AtomicU64::new(0),
             cfg,
         };
         let default = router.cfg.dataset.clone();
@@ -215,6 +227,7 @@ impl Router {
             latency_s: 0.0,
             steps_executed: 0,
             cached: false,
+            degraded: None,
         };
         if self.stopping.load(Ordering::SeqCst) {
             done(error("shutting down".into()));
@@ -223,6 +236,22 @@ impl Router {
         if let Err(e) = self.bring_up(&req.dataset, false) {
             done(error(e.to_string()));
             return;
+        }
+        let mut req = req;
+        let mut done = done;
+        if let Some((from, to)) = self.maybe_degrade(&mut req) {
+            // stamp this caller's own from→to record onto whatever answer
+            // it eventually gets — direct execution, cache hit on the
+            // degraded cell, or a parked seat behind a degraded leader —
+            // so no degraded response ever masquerades as full-budget
+            self.degraded.fetch_add(1, Ordering::Relaxed);
+            let inner = done;
+            done = Box::new(move |mut resp: Response| {
+                if matches!(resp.body, ResponseBody::Ok { .. }) {
+                    resp.degraded = Some((from, to));
+                }
+                inner(resp);
+            });
         }
         match self.cache.admit(req, done) {
             // answered from the store / parked behind an identical
@@ -248,6 +277,56 @@ impl Router {
                 }
             }
         }
+    }
+
+    /// Adaptive quality degradation — the DDIM-specific shedding axis.
+    /// When queued-lane pressure on the request's pool crosses the
+    /// configured watermarks, best-effort requests are transparently
+    /// rewritten to a smaller step budget (§4.3's quality-vs-steps
+    /// trade-off) *before* cache admission, so the key is minted on the
+    /// schedule that actually executes and coalesced waiters park behind
+    /// the degraded flight. Interactive and batch traffic is never
+    /// rewritten. Returns `(from, to)` when a rewrite happened.
+    ///
+    /// Pressure = Σ shard load over the pool (active + queued +
+    /// dispatched lanes); capacity = shards × `max_lanes`. At
+    /// `degrade_mid`× capacity the budget drops to 20 steps, at
+    /// `degrade_high`× to 10 — and the DP-optimized schedule serves the
+    /// shed budget whenever its (dataset, S) cell exists, since the
+    /// optimized subsequence loses the least quality at small S.
+    fn maybe_degrade(&self, req: &mut Request) -> Option<(usize, usize)> {
+        if !self.cfg.degrade_enabled || req.qos.priority != Priority::BestEffort {
+            return None;
+        }
+        let (pressure, shards) = {
+            let pools = self.pools.read().unwrap();
+            let pool = pools.get(&req.dataset)?;
+            (pool.shards.iter().map(EngineShard::load).sum::<usize>(), pool.shards.len())
+        };
+        let capacity = (shards * self.cfg.max_lanes).max(1) as f64;
+        let rung = if pressure as f64 >= self.cfg.degrade_high * capacity {
+            DEGRADE_RUNGS[1]
+        } else if pressure as f64 >= self.cfg.degrade_mid * capacity {
+            DEGRADE_RUNGS[0]
+        } else {
+            return None;
+        };
+        if req.steps <= rung {
+            return None;
+        }
+        let from = req.steps;
+        req.steps = rung;
+        req.tau = if self.cache.has_opt_cell(&req.dataset, rung) {
+            TauKind::Opt
+        } else if req.tau == TauKind::Opt {
+            // the engine treats a missing (dataset, S) cell as a typed
+            // schedule error; a shed request must not start failing just
+            // because nobody optimized its new budget
+            TauKind::Linear
+        } else {
+            req.tau
+        };
+        Some((from, rung))
     }
 
     /// Submit and block for the response (examples / benches).
@@ -312,10 +391,17 @@ impl Router {
             agg.ref_bytes_last_tick += m.ref_bytes_last_tick;
             agg.queue_accepted += m.queue_accepted;
             agg.queue_depth += m.queue_depth;
+            agg.queued_lanes += m.queued_lanes;
+            agg.queue_rejected_items += m.queue_rejected_items;
+            agg.queue_rejected_lanes += m.queue_rejected_lanes;
+            agg.deadline_expired += m.deadline_expired;
             agg.active_lanes += m.active_lanes;
             agg.wall_s = agg.wall_s.max(m.wall_s);
             latency.merge(&s.latency);
         }
+        // shed budgets are counted where the rewrite happens (here), not
+        // in the engines — they only ever saw the degraded schedule
+        agg.requests_degraded = self.degraded.load(Ordering::Relaxed);
         agg.latency_p50_s = latency.quantile(0.5);
         agg.latency_p95_s = latency.quantile(0.95);
         agg.latency_p99_s = latency.quantile(0.99);
@@ -354,7 +440,11 @@ impl Router {
                     ("latency_p99_s", m.latency_p99_s),
                     ("active_lanes", m.active_lanes),
                     ("queued", m.queue_depth),
+                    ("queued_lanes", m.queued_lanes),
                     ("queue_accepted", m.queue_accepted),
+                    ("queue_rejected_items", m.queue_rejected_items),
+                    ("queue_rejected_lanes", m.queue_rejected_lanes),
+                    ("deadline_expired", m.deadline_expired),
                 ]
             })
             .collect();
@@ -384,7 +474,12 @@ impl Router {
             ("steps_per_second", agg.steps_per_second()),
             ("active_lanes", agg.active_lanes),
             ("queued", agg.queue_depth),
+            ("queued_lanes", agg.queued_lanes),
             ("queue_accepted", agg.queue_accepted),
+            ("queue_rejected_items", agg.queue_rejected_items),
+            ("queue_rejected_lanes", agg.queue_rejected_lanes),
+            ("deadline_expired", agg.deadline_expired),
+            ("requests_degraded", agg.requests_degraded),
             ("cache", self.cache.metrics().to_json()),
             ("shards", Value::Arr(shards)),
         ]

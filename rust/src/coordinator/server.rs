@@ -245,6 +245,10 @@ fn handle_line(
     all: &[Arc<ReactorShared>],
     stats: &TransportStats,
 ) {
+    // client-observed latency starts when the transport has the complete
+    // line, *before* parsing and queueing — not when an engine finally
+    // pops the request (which under load hides the whole queue wait)
+    let arrived = std::time::Instant::now();
     let v = match json::parse(line.trim()) {
         Ok(v) => v,
         Err(e) => return queue_err(state, None, format!("parse: {e}")),
@@ -278,7 +282,7 @@ fn handle_line(
             };
             // `"id"`/`"stream"` were peeled off above; the Request parser
             // ignores unknown fields, so neither can reach the cache key
-            let req = match Request::from_json_with_defaults(
+            let mut req = match Request::from_json_with_defaults(
                 &v,
                 router.config().default_sampler,
                 router.config().default_tau,
@@ -286,6 +290,12 @@ fn handle_line(
                 Ok(r) => r,
                 Err(e) => return queue_err(state, client_id.as_ref(), e.to_string()),
             };
+            req.qos.arrived = Some(arrived);
+            // server-side deadline floor: requests that name no budget get
+            // the configured default (0 = unlimited, the old behavior)
+            if req.qos.deadline_ms.is_none() && router.config().deadline_default_ms > 0 {
+                req.qos.deadline_ms = Some(router.config().deadline_default_ms);
+            }
             let progress = every.map(|every| {
                 let sh = own.clone();
                 let cid = client_id.clone();

@@ -24,7 +24,9 @@ use crate::cache::DoneFn;
 use crate::config::ServeConfig;
 use crate::coordinator::engine::{Engine, ProgressSink};
 use crate::coordinator::metrics::{Histogram, MetricsSnapshot};
-use crate::coordinator::request::{Request, RequestId, Response, ResponseBody};
+use crate::coordinator::request::{
+    Reject, RejectReason, Request, RequestId, Response, ResponseBody,
+};
 use crate::error::{Error, Result};
 
 /// Commands a shard worker understands. A submit carries its completion
@@ -195,7 +197,28 @@ fn shutdown_response() -> Response {
         latency_s: 0.0,
         steps_executed: 0,
         cached: false,
+        degraded: None,
     }
+}
+
+/// Map a submit failure onto the wire. Overload and deadline failures are
+/// *typed* — `"reject":{"reason":...,"queued_lanes":N}` — so clients can
+/// back off mechanically; everything else stays a plain error string.
+fn reject_response(e: Error) -> Response {
+    let body = match e {
+        Error::Overload { queued_lanes, message } => ResponseBody::Reject(Reject {
+            reason: RejectReason::Overload,
+            queued_lanes,
+            message,
+        }),
+        Error::DeadlineExpired { message } => ResponseBody::Reject(Reject {
+            reason: RejectReason::Deadline,
+            queued_lanes: 0,
+            message,
+        }),
+        other => ResponseBody::Error { message: other.to_string() },
+    };
+    Response { id: 0, body, latency_s: 0.0, steps_executed: 0, cached: false, degraded: None }
 }
 
 fn deliver(waiters: &mut HashMap<RequestId, DoneFn>, resp: Response) {
@@ -329,13 +352,7 @@ fn handle_cmd(
                 waiters.insert(req_id, done);
             }
             Err(e) => {
-                done(Response {
-                    id: 0,
-                    body: ResponseBody::Error { message: e.to_string() },
-                    latency_s: 0.0,
-                    steps_executed: 0,
-                    cached: false,
-                });
+                done(reject_response(e));
             }
         },
         ShardCmd::Stats(tx) => {

@@ -30,6 +30,15 @@ pub enum Error {
     /// Coordinator-level rejections (queue full, unknown dataset, ...).
     Coordinator(String),
 
+    /// Typed admission rejection: queue pressure exhausted the item cap
+    /// or the lane budget. Carries the queued-lane count observed at the
+    /// decision so the wire response can report it structurally.
+    Overload { queued_lanes: usize, message: String },
+
+    /// Typed deadline expiry: the request's completion budget ran out (at
+    /// admission, a tick boundary, or the pre-publish check).
+    DeadlineExpired { message: String },
+
     /// Linear-algebra failures (non-convergence, non-SPD input).
     Linalg(String),
 
@@ -47,6 +56,10 @@ impl fmt::Display for Error {
             Error::Shape(m) => write!(f, "shape: {m}"),
             Error::Schedule(m) => write!(f, "schedule: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator: {m}"),
+            Error::Overload { queued_lanes, message } => {
+                write!(f, "overload: {message} (queued_lanes {queued_lanes})")
+            }
+            Error::DeadlineExpired { message } => write!(f, "deadline: {message}"),
             Error::Linalg(m) => write!(f, "linalg: {m}"),
             Error::Request(m) => write!(f, "request: {m}"),
         }
@@ -85,6 +98,14 @@ mod tests {
     #[test]
     fn display_prefixes_layer() {
         assert_eq!(Error::Json("bad".into()).to_string(), "json: bad");
+        assert_eq!(
+            Error::Overload { queued_lanes: 12, message: "queue full".into() }.to_string(),
+            "overload: queue full (queued_lanes 12)"
+        );
+        assert_eq!(
+            Error::DeadlineExpired { message: "budget spent".into() }.to_string(),
+            "deadline: budget spent"
+        );
         assert_eq!(Error::Xla("pjrt".into()).to_string(), "xla: pjrt");
         let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
         assert!(io.to_string().starts_with("io: "));

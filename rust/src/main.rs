@@ -47,6 +47,17 @@ COMMANDS
                 min(4, cores))
               --tau linear|quadratic|opt (τ selection when a request omits
                 \"tau\"; opt serves the bundle's optimized schedules)
+              --queue-lane-cap N (bound on *queued lanes* per shard, on top
+                of the item cap; 0 = auto: max(queue-cap, max-lanes))
+              --deadline-default-ms MS (deadline applied to requests that
+                name none; 0 = unlimited. Expired work is cancelled with a
+                typed reject, never finished late)
+              --degrade on|off (default on: under queued-lane pressure,
+                best-effort requests are shed to smaller step budgets
+                S→20→10 — the DDIM quality/steps dial — and the response
+                carries a \"degraded\":{\"from\",\"to\"} record)
+              --degrade-mid F / --degrade-high F (pressure watermarks as
+                fractions of pool lane capacity; defaults 1.0 / 3.0)
   generate    --artifacts D --dataset NAME --steps S --eta E|hat
               --tau linear|quadratic|opt
               --sampler ddim|pf_ode|ab2 --count N --seed K --out FILE.pgm
@@ -131,6 +142,13 @@ fn config_from(args: &Args) -> Result<ServeConfig> {
         cfg.ref_precision = ddim_serve::runtime::RefPrecision::parse(p)?;
     }
     cfg.reactors = args.get_usize("reactors", cfg.reactors)?;
+    cfg.queue_lane_cap = args.get_usize("queue-lane-cap", cfg.queue_lane_cap)?;
+    cfg.deadline_default_ms = args.get_u64("deadline-default-ms", cfg.deadline_default_ms)?;
+    if let Some(v) = args.get("degrade") {
+        cfg.degrade_enabled = ddim_serve::cli::parse_on_off("degrade", v)?;
+    }
+    cfg.degrade_mid = args.get_f64("degrade-mid", cfg.degrade_mid)?;
+    cfg.degrade_high = args.get_f64("degrade-high", cfg.degrade_high)?;
     cfg.validate()?;
     Ok(cfg)
 }
@@ -177,6 +195,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         body: RequestBody::Generate { count, seed },
         return_images: true,
         cache: ddim_serve::coordinator::CacheMode::Use,
+        qos: Default::default(),
     })?;
     let t0 = std::time::Instant::now();
     let responses = engine.run_until_idle()?;
@@ -185,6 +204,9 @@ fn cmd_generate(args: &Args) -> Result<()> {
         ddim_serve::coordinator::ResponseBody::Ok { outputs } => outputs,
         ddim_serve::coordinator::ResponseBody::Error { message } => {
             return Err(ddim_serve::Error::Coordinator(message))
+        }
+        ddim_serve::coordinator::ResponseBody::Reject(r) => {
+            return Err(ddim_serve::Error::Coordinator(r.message))
         }
     };
     let img = engine.manifest().img;

@@ -193,6 +193,7 @@ impl Workload {
                     body,
                     return_images: false,
                     cache: CacheMode::Use,
+                    qos: Default::default(),
                 },
             ));
         }

@@ -51,13 +51,14 @@ fn gen_request(
         body: RequestBody::Generate { count, seed },
         return_images: true,
         cache,
+        qos: Default::default(),
     }
 }
 
 fn outputs_of(resp: &ddim_serve::coordinator::Response) -> &Vec<Vec<f32>> {
     match &resp.body {
         ResponseBody::Ok { outputs } => outputs,
-        ResponseBody::Error { message } => panic!("request failed: {message}"),
+        other => panic!("request failed: {other:?}"),
     }
 }
 
@@ -179,6 +180,7 @@ fn stochastic_requests_are_request_deterministic_and_cacheable() {
         body: RequestBody::Decode { latents: latents.clone() },
         return_images: true,
         cache,
+        qos: Default::default(),
     };
     let d1 = a.call(dec(CacheMode::Use)).unwrap();
     let d2 = a.call(dec(CacheMode::Use)).unwrap();

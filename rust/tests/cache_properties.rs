@@ -46,6 +46,7 @@ fn rand_request(g: &mut Gen) -> Request {
         body,
         return_images: g.bool(),
         cache: CacheMode::Use,
+        qos: Default::default(),
     }
 }
 

@@ -48,13 +48,14 @@ fn gen_request_with(
         body: RequestBody::Generate { count, seed },
         return_images: true,
         cache: CacheMode::Use,
+        qos: Default::default(),
     }
 }
 
 fn outputs(resp: &ddim_serve::coordinator::Response) -> Vec<Vec<f32>> {
     match &resp.body {
         ResponseBody::Ok { outputs } => outputs.clone(),
-        ResponseBody::Error { message } => panic!("request failed: {message}"),
+        other => panic!("request failed: {other:?}"),
     }
 }
 
@@ -188,6 +189,7 @@ fn encode_decode_round_trip_has_low_error() {
             body: RequestBody::Encode { images: vec![img.clone()] },
             return_images: true,
             cache: CacheMode::Use,
+            qos: Default::default(),
         })
         .unwrap();
     let resp = e.run_until_idle().unwrap();
@@ -207,6 +209,7 @@ fn encode_decode_round_trip_has_low_error() {
             body: RequestBody::Decode { latents: vec![latent] },
             return_images: true,
             cache: CacheMode::Use,
+            qos: Default::default(),
         })
         .unwrap();
     let resp = e.run_until_idle().unwrap();
@@ -253,6 +256,7 @@ fn submit_validates_requests() {
         body: RequestBody::Decode { latents: vec![vec![0.0; 7]] },
         return_images: false,
         cache: CacheMode::Use,
+        qos: Default::default(),
     };
     assert!(e.submit(bad).is_err());
     // host kernels on a stochastic plan are rejected at admission

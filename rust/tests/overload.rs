@@ -1,0 +1,224 @@
+//! Overload-control integration on fixture artifacts (hermetic reference
+//! backend): typed rejection, deadlines, priority classes, and adaptive
+//! quality degradation through the full router → cache → shard → engine
+//! path.
+//!
+//! - queue overflow surfaces as `Error::Overload` with the queued-lane
+//!   pressure attached, never a bare string;
+//! - a request whose deadline expired is cancelled with a typed
+//!   `"reject":{"reason":"deadline"}` — and the cancelled execution is
+//!   never published to the sample cache;
+//! - priority classes schedule strictly: interactive drains ahead of
+//!   batch ahead of best_effort regardless of submission order;
+//! - under queued-lane pressure a best-effort request is transparently
+//!   degraded (S=100 → S=20), the response says so in `"degraded"`, and a
+//!   coalesced waiter parked behind the degraded leader learns the same.
+
+use std::time::{Duration, Instant};
+
+use ddim_serve::config::ServeConfig;
+use ddim_serve::coordinator::request::{CacheMode, Priority, Request, RequestBody};
+use ddim_serve::coordinator::{Engine, ResponseBody, Router};
+use ddim_serve::sampler::SamplerKind;
+use ddim_serve::schedule::{NoiseMode, TauKind};
+use ddim_serve::testing::fixtures;
+use ddim_serve::Error;
+
+fn cfg() -> ServeConfig {
+    ServeConfig {
+        artifact_root: fixtures::root_string(),
+        dataset: "sprites".into(),
+        max_batch: 8,
+        max_lanes: 8,
+        queue_capacity: 64,
+        ..Default::default()
+    }
+}
+
+fn gen(steps: usize, count: usize, seed: u64) -> Request {
+    Request {
+        dataset: "sprites".into(),
+        steps,
+        mode: NoiseMode::Eta(0.0),
+        tau: TauKind::Linear,
+        sampler: SamplerKind::Ddim,
+        body: RequestBody::Generate { count, seed },
+        return_images: true,
+        cache: CacheMode::Use,
+        qos: Default::default(),
+    }
+}
+
+#[test]
+fn queue_overflow_is_typed_overload() {
+    let mut c = cfg();
+    c.queue_capacity = 2;
+    let mut e = Engine::new(c).unwrap();
+    e.submit(gen(3, 1, 1)).unwrap();
+    e.submit(gen(3, 1, 2)).unwrap();
+    match e.submit(gen(3, 1, 3)) {
+        Err(Error::Overload { queued_lanes, message }) => {
+            assert_eq!(queued_lanes, 2);
+            assert!(message.contains("queue full"), "{message}");
+        }
+        other => panic!("want typed overload, got {other:?}"),
+    }
+    // the lane budget rejects independently of the item cap: 2 queued
+    // items hold 2 lanes; an 8-lane request would need 10 > budget
+    let mut c = cfg();
+    c.queue_capacity = 64;
+    c.queue_lane_cap = 8;
+    let mut e2 = Engine::new(c).unwrap();
+    e2.submit(gen(3, 1, 1)).unwrap();
+    e2.submit(gen(3, 1, 2)).unwrap();
+    match e2.submit(gen(3, 8, 3)) {
+        Err(Error::Overload { queued_lanes, message }) => {
+            assert_eq!(queued_lanes, 2);
+            assert!(message.contains("lane budget"), "{message}");
+        }
+        other => panic!("want typed lane-budget overload, got {other:?}"),
+    }
+    let m = e2.metrics();
+    assert_eq!((m.queue_rejected_items, m.queue_rejected_lanes), (0, 1));
+    assert!(e2.run_until_idle().is_ok());
+}
+
+#[test]
+fn priority_classes_schedule_strictly() {
+    // one lane: completion order IS scheduling order. Submission order is
+    // deliberately worst-case (best_effort first, interactive last).
+    let mut c = cfg();
+    c.max_lanes = 1;
+    c.max_batch = 1;
+    let mut e = Engine::new(c).unwrap();
+    let mut be = gen(3, 1, 1);
+    be.qos.priority = Priority::BestEffort;
+    let mut ba = gen(3, 1, 2);
+    ba.qos.priority = Priority::Batch;
+    let mut it = gen(3, 1, 3);
+    it.qos.priority = Priority::Interactive;
+    let id_be = e.submit(be).unwrap();
+    let id_ba = e.submit(ba).unwrap();
+    let id_it = e.submit(it).unwrap();
+    let order: Vec<_> = e.run_until_idle().unwrap().iter().map(|r| r.id).collect();
+    assert_eq!(order, vec![id_it, id_ba, id_be], "strict band order, not FIFO");
+}
+
+#[test]
+fn queued_work_past_its_deadline_is_cancelled_not_finished() {
+    // one busy lane; the queued request's deadline expires while it waits
+    // and the tick-boundary reaper must cancel it with a typed timeout
+    let mut c = cfg();
+    c.max_lanes = 1;
+    c.max_batch = 1;
+    let mut e = Engine::new(c).unwrap();
+    let long = e.submit(gen(40, 1, 1)).unwrap();
+    let mut doomed = gen(5, 1, 2);
+    doomed.qos.arrived = Some(Instant::now());
+    doomed.qos.deadline_ms = Some(1);
+    let doomed_id = e.submit(doomed).unwrap();
+    std::thread::sleep(Duration::from_millis(5));
+    let resps = e.run_until_idle().unwrap();
+    let d = resps.iter().find(|r| r.id == doomed_id).unwrap();
+    match &d.body {
+        ResponseBody::Reject(r) => {
+            assert_eq!(r.reason.label(), "deadline");
+            assert_eq!(d.steps_executed, 0, "cancelled work must not have run");
+        }
+        other => panic!("want deadline reject, got {other:?}"),
+    }
+    let l = resps.iter().find(|r| r.id == long).unwrap();
+    assert!(matches!(l.body, ResponseBody::Ok { .. }), "unrelated work completes");
+    assert_eq!(e.metrics().deadline_expired, 1);
+}
+
+#[test]
+fn deadline_expired_is_a_typed_timeout_and_never_cached() {
+    let router = Router::start(cfg()).unwrap();
+    // arrival anchored in the past: expired before admission
+    let mut req = gen(5, 1, 77);
+    req.qos.arrived = Some(Instant::now() - Duration::from_millis(50));
+    req.qos.deadline_ms = Some(10);
+    let resp = router.call(req).unwrap();
+    let wire = resp.to_json_line();
+    match &resp.body {
+        ResponseBody::Reject(r) => {
+            assert_eq!(r.reason.label(), "deadline");
+            assert!(
+                wire.contains("\"reject\"") && wire.contains("\"reason\":\"deadline\""),
+                "typed on the wire: {wire}"
+            );
+        }
+        other => panic!("want typed deadline reject, got {other:?} ({wire})"),
+    }
+    // the cancelled identity was never published: the same request
+    // (without the deadline) executes fresh, and only THEN becomes a hit
+    let r1 = router.call(gen(5, 1, 77)).unwrap();
+    assert!(matches!(r1.body, ResponseBody::Ok { .. }));
+    assert!(!r1.cached, "a cancelled request must not seed the cache");
+    let r2 = router.call(gen(5, 1, 77)).unwrap();
+    assert!(r2.cached, "the completed execution is cacheable as usual");
+    router.shutdown();
+}
+
+#[test]
+fn coalesced_waiters_behind_a_degraded_leader_get_degraded_responses() {
+    // mid watermark at ~0 lanes of pressure: any in-flight work triggers
+    // the first rung (S -> 20) for best-effort arrivals
+    let mut c = cfg();
+    c.degrade_mid = 0.001;
+    c.degrade_high = 100.0;
+    let router = Router::start(c).unwrap();
+    // pressure source: a 4-lane batch-priority request that outlives the
+    // degraded pair's admission (batch traffic is never degraded itself)
+    let blocker = {
+        let mut r = gen(400, 4, 9);
+        r.qos.priority = Priority::Batch;
+        router.submit(r)
+    };
+    // leader + identical waiter, both best_effort S=100: the router
+    // rewrites both to the degraded budget *before* cache admission, so
+    // they coalesce on the executed schedule
+    let mk = || {
+        let mut r = gen(100, 1, 5);
+        r.qos.priority = Priority::BestEffort;
+        r
+    };
+    let rx_leader = router.submit(mk());
+    let rx_waiter = router.submit(mk());
+    let leader = rx_leader.recv().unwrap();
+    let waiter = rx_waiter.recv().unwrap();
+    for (who, resp) in [("leader", &leader), ("waiter", &waiter)] {
+        assert!(
+            matches!(resp.body, ResponseBody::Ok { .. }),
+            "{who} should succeed: {:?}",
+            resp.body
+        );
+        assert_eq!(
+            resp.degraded,
+            Some((100, 20)),
+            "{who} must carry the from->to degradation record"
+        );
+        let wire = resp.to_json_line();
+        assert!(
+            wire.contains("\"degraded\":{\"from\":100,\"to\":20}"),
+            "degradation is visible on the wire: {wire}"
+        );
+    }
+    // same executed schedule => bitwise-identical bodies
+    match (&leader.body, &waiter.body) {
+        (ResponseBody::Ok { outputs: a }, ResponseBody::Ok { outputs: b }) => {
+            assert_eq!(a, b, "waiter shares the degraded leader's bits")
+        }
+        _ => unreachable!(),
+    }
+    let cm = router.cache().metrics();
+    assert!(
+        cm.coalesced_waiters + cm.hits >= 1,
+        "the second request must not have executed independently: {cm:?}"
+    );
+    let (agg, _) = router.aggregate();
+    assert_eq!(agg.requests_degraded, 2, "both callers counted at the router");
+    blocker.recv().unwrap();
+    router.shutdown();
+}

@@ -237,13 +237,14 @@ fn gen_request(steps: usize, mode: NoiseMode, count: usize, seed: u64) -> Reques
         body: RequestBody::Generate { count, seed },
         return_images: true,
         cache: CacheMode::Bypass,
+        qos: Default::default(),
     }
 }
 
 fn outputs(resp: &ddim_serve::coordinator::Response) -> Vec<Vec<f32>> {
     match &resp.body {
         ResponseBody::Ok { outputs } => outputs.clone(),
-        ResponseBody::Error { message } => panic!("request failed: {message}"),
+        other => panic!("request failed: {other:?}"),
     }
 }
 

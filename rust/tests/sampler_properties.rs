@@ -158,12 +158,13 @@ fn runner_and_engine_agree() {
             body: RequestBody::Generate { count: 3, seed: 555 },
             return_images: true,
             cache: ddim_serve::coordinator::CacheMode::Use,
+            qos: Default::default(),
         })
         .unwrap();
     let resp = engine.run_until_idle().unwrap();
     let via_engine = match &resp.iter().find(|r| r.id == id).unwrap().body {
         ResponseBody::Ok { outputs } => outputs.clone(),
-        ResponseBody::Error { message } => panic!("{message}"),
+        other => panic!("{other:?}"),
     };
     assert_eq!(direct, via_engine, "two independent drivers disagree");
 }

@@ -45,6 +45,7 @@ fn opt_request(dataset: &str, steps: usize, seed: u64) -> Request {
         body: RequestBody::Generate { count: 2, seed },
         return_images: true,
         cache: CacheMode::Use,
+        qos: Default::default(),
     }
 }
 
