@@ -12,6 +12,9 @@
 //!        --seed-pool N (0 = every request unique / cache-cold)
 //!        --zipf S (popularity skew of the seed pool; default 1.1)
 //!        --cache on|off --coalesce on|off
+//!        --access-log PATH (structured access log + 1/8 span sampling;
+//!        the run tails the log and prints a Prometheus scrape excerpt
+//!        — see docs/observability.md)
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -91,6 +94,11 @@ fn main() -> ddim_serve::Result<()> {
     }
     if let Some(v) = args.get("coalesce") {
         cfg.coalesce_enabled = ddim_serve::cli::parse_on_off("coalesce", v)?;
+    }
+    let access_log = args.get("access-log").map(str::to_string);
+    if let Some(path) = &access_log {
+        cfg.access_log = path.clone();
+        cfg.trace_sample = 8; // every 8th request gets stage spans in the log
     }
     println!("starting server (compiling executables)...");
     let t_start = Instant::now();
@@ -217,8 +225,36 @@ fn main() -> ddim_serve::Result<()> {
             cget("bytes"),
         );
     }
+    if access_log.is_some() {
+        // the scrape the same port serves to Prometheus, excerpted
+        let p = c.roundtrip(&jobj![("op", "metrics"), ("format", "prometheus")])?;
+        if let Ok(text) = p.get("prometheus").and_then(|v| v.as_str()) {
+            println!("prometheus scrape ({} bytes), excerpt:", text.len());
+            for line in text
+                .lines()
+                .filter(|l| {
+                    l.starts_with("ddim_build_info")
+                        || l.starts_with("ddim_requests_completed_total")
+                        || l.starts_with("ddim_cache_hits_total")
+                        || l.starts_with("ddim_access_log_lines_total")
+                })
+                .take(4)
+            {
+                println!("  {line}");
+            }
+        }
+    }
     server.shutdown();
     println!("server shut down cleanly");
+    // after shutdown the writer thread has drained: tail the access log
+    if let Some(path) = &access_log {
+        let text = std::fs::read_to_string(path).unwrap_or_default();
+        let lines: Vec<&str> = text.lines().collect();
+        println!("access log: {} lines at {path}, last 3:", lines.len());
+        for line in lines.iter().rev().take(3).rev() {
+            println!("  {line}");
+        }
+    }
     if failures > 0 {
         return Err(ddim_serve::Error::Coordinator(format!("{failures} requests failed")));
     }

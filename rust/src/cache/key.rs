@@ -32,7 +32,7 @@ pub struct CacheKey(pub u128);
 /// processes can never agree on a digest by accident.
 /// v2: `"tau":"opt"` requests additionally hash the optimized schedule's
 /// *content* digest (`opt_digest`).
-const KEY_VERSION: u8 = 2;
+pub const KEY_VERSION: u8 = 2;
 
 impl CacheKey {
     /// Digest every sampling-relevant field of `req`. `return_images` and

@@ -40,7 +40,7 @@ use crate::runtime::BackendKind;
 use crate::schedule::{OptSchedules, TauKind};
 
 pub use coalesce::{Coalescer, ParkedWaiter, Role};
-pub use key::{manifest_digest, CacheKey};
+pub use key::{manifest_digest, CacheKey, KEY_VERSION};
 pub use store::{CacheStore, CachedSample, Probe};
 
 /// Completion callback a dispatched execution must be answered through
@@ -251,13 +251,18 @@ impl CacheFront {
                     if let Some(store) = &self.store {
                         if let Some(sample) = store.get(key) {
                             self.hits.fetch_add(1, Ordering::Relaxed);
-                            for w in co.complete(key) {
-                                (w.deliver)(sample.response_for(
+                            // complete() yields the leader first: followers
+                            // carry the coalesced marker their park already
+                            // counted, the leader stays a plain hit
+                            for (i, w) in co.complete(key).into_iter().enumerate() {
+                                let mut resp = sample.response_for(
                                     0,
                                     w.return_images,
                                     w.arrived.elapsed().as_secs_f64(),
                                     true,
-                                ));
+                                );
+                                resp.coalesced = i > 0;
+                                (w.deliver)(resp);
                             }
                             return Admission::Served;
                         }
@@ -293,6 +298,9 @@ impl CacheFront {
     /// were admitted (and executed) under the old manifest.
     fn finish(&self, key: CacheKey, minted: u64, leader: Option<ParkedWaiter>, resp: Response) {
         let id = resp.id;
+        // engine-recorded stage spans belong to the execution the leader
+        // paid for; followers shared the result without being traced
+        let spans = resp.spans;
         let (sample, failure) = match resp.body {
             ResponseBody::Ok { outputs } => (
                 Some(Arc::new(CachedSample { outputs, steps_executed: resp.steps_executed })),
@@ -325,9 +333,9 @@ impl CacheFront {
             (_, Some(w)) => vec![w],
             (None, None) => Vec::new(),
         };
-        for w in waiters {
+        for (i, w) in waiters.into_iter().enumerate() {
             let latency_s = w.arrived.elapsed().as_secs_f64();
-            let resp = match (&sample, &failure) {
+            let mut resp = match (&sample, &failure) {
                 (Some(s), _) => s.response_for(id, w.return_images, latency_s, false),
                 (None, Some(body)) => Response {
                     id,
@@ -336,9 +344,18 @@ impl CacheFront {
                     steps_executed: 0,
                     cached: false,
                     degraded: None,
+                    spans: None,
+                    coalesced: false,
                 },
                 (None, None) => unreachable!("response is Ok or a failure"),
             };
+            // coalesce::complete yields the leader's waiter first (arrival
+            // order), so everyone after it shared the leader's execution —
+            // the access log's "coalesced" disposition
+            resp.coalesced = i > 0;
+            if i == 0 {
+                resp.spans = spans;
+            }
             (w.deliver)(resp);
         }
     }
@@ -349,6 +366,13 @@ impl CacheFront {
     /// pre-optimized cell keeps the request's original τ kind instead.
     pub fn has_opt_cell(&self, dataset: &str, steps: usize) -> bool {
         self.opt.read().expect("opt registry lock").get(dataset, steps).is_some()
+    }
+
+    /// Manifest digest keys are currently minted against (0 when both
+    /// halves are disabled). Exported in `ddim_build_info` so dashboards
+    /// can correlate metric discontinuities with artifact rollouts.
+    pub fn current_digest(&self) -> u64 {
+        self.digest.load(Ordering::SeqCst)
     }
 
     pub fn metrics(&self) -> CacheMetrics {
@@ -422,6 +446,8 @@ mod tests {
             steps_executed: 5,
             cached: false,
             degraded: None,
+            spans: None,
+            coalesced: false,
         }
     }
 
@@ -475,6 +501,10 @@ mod tests {
             assert!(!r.cached);
             assert_eq!(r.steps_executed, 5);
         }
+        // disposition marker: the leader paid for the execution, the
+        // parked waiters shared it
+        assert!(!r1.coalesced);
+        assert!(r2.coalesced && r3.coalesced);
         match (&r1.body, &r2.body, &r3.body) {
             (
                 ResponseBody::Ok { outputs: a },
@@ -534,6 +564,8 @@ mod tests {
             steps_executed: 0,
             cached: false,
             degraded: None,
+            spans: None,
+            coalesced: false,
         });
         for rx in [rx1, rx2] {
             let r = rx.recv().unwrap();
@@ -575,6 +607,8 @@ mod tests {
             steps_executed: 0,
             cached: false,
             degraded: None,
+            spans: None,
+            coalesced: false,
         });
         // every waiter is answered exactly once, with the typed body intact
         for rx in [&rx1, &rx2, &rx3] {
@@ -623,6 +657,8 @@ mod tests {
             steps_executed: 0,
             cached: false,
             degraded: None,
+            spans: None,
+            coalesced: false,
         });
         for rx in [rx1, rx2] {
             let r = rx.recv().unwrap();

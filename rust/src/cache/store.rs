@@ -68,6 +68,8 @@ impl CachedSample {
             steps_executed: self.steps_executed,
             cached,
             degraded: None,
+            spans: None,
+            coalesced: false,
         }
     }
 }

@@ -115,6 +115,23 @@ pub struct ServeConfig {
     /// I/O-bound — a handful of reactors carries thousands of
     /// connections — so the default is min(4, cores), not cores.
     pub reactors: usize,
+    /// Structured access log path (`--access-log PATH`); one JSON line
+    /// per completed request, written by a dedicated thread behind a
+    /// bounded channel (drops are counted, reactors never block). Empty
+    /// = off.
+    pub access_log: String,
+    /// Rotate the access log when it reaches this size
+    /// (`--log-rotate-bytes`). Numbered shift: PATH → PATH.1 → … →
+    /// PATH.K, oldest deleted.
+    pub log_rotate_bytes: u64,
+    /// Also rotate every N seconds (`--log-rotate-secs`); 0 = size-only.
+    pub log_rotate_secs: u64,
+    /// Rotated files kept (`--log-keep K`), the live file excluded.
+    pub log_keep: usize,
+    /// Trace-span sampling rate (`--trace-sample N` = 1-in-N requests
+    /// get stage spans recorded into the access log); 0 = off. Explicit
+    /// `"trace":true` requests are always traced regardless.
+    pub trace_sample: u64,
 }
 
 /// Default reactor count: min(4, available cores).
@@ -157,6 +174,11 @@ impl Default for ServeConfig {
                 .expect("DDIM_REF_PRECISION must be f32|f16")
                 .precision,
             reactors: default_reactors(),
+            access_log: String::new(), // off
+            log_rotate_bytes: 64 << 20,
+            log_rotate_secs: 0, // size-only
+            log_keep: 4,
+            trace_sample: 0, // explicit "trace":true requests only
         }
     }
 }
@@ -242,6 +264,22 @@ impl ServeConfig {
                  and a handful multiplexes thousands of connections (max 256)",
                 self.reactors
             )));
+        }
+        if !self.access_log.is_empty() {
+            if self.log_keep == 0 {
+                return Err(Error::Coordinator(
+                    "log_keep must be >= 1: rotation shifts PATH to PATH.1 \
+                     before reopening, so at least one rotated file exists"
+                        .into(),
+                ));
+            }
+            if self.log_rotate_bytes == 0 && self.log_rotate_secs == 0 {
+                return Err(Error::Coordinator(
+                    "access log needs a rotation trigger: set log_rotate_bytes \
+                     and/or log_rotate_secs"
+                        .into(),
+                ));
+            }
         }
         for (i, (ds, n)) in self.placement.iter().enumerate() {
             if ds.is_empty() {
@@ -390,6 +428,26 @@ mod tests {
             .validate()
             .unwrap();
         ServeConfig { deadline_default_ms: 5000, ..Default::default() }.validate().unwrap();
+    }
+
+    #[test]
+    fn observability_knobs_validate() {
+        // off by default, and the rotation knobs are then unchecked
+        let c = ServeConfig::default();
+        assert!(c.access_log.is_empty());
+        assert_eq!(c.trace_sample, 0);
+        ServeConfig { log_keep: 0, ..Default::default() }.validate().unwrap();
+        // an enabled log demands a sane retention/trigger pair
+        let on = |f: fn(ServeConfig) -> ServeConfig| {
+            f(ServeConfig { access_log: "/tmp/a.log".into(), ..Default::default() })
+        };
+        on(|c| c).validate().unwrap();
+        assert!(on(|c| ServeConfig { log_keep: 0, ..c }).validate().is_err());
+        assert!(on(|c| ServeConfig { log_rotate_bytes: 0, ..c }).validate().is_err());
+        on(|c| ServeConfig { log_rotate_bytes: 0, log_rotate_secs: 60, ..c })
+            .validate()
+            .unwrap();
+        ServeConfig { trace_sample: 16, ..Default::default() }.validate().unwrap();
     }
 
     #[test]

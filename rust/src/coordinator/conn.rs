@@ -54,6 +54,9 @@ pub struct ConnState {
     pub frames_dropped: u64,
     /// Overlong lines rejected.
     pub lines_overlong: u64,
+    /// Close the connection once the write buffer drains (one-shot HTTP
+    /// responses like `GET /metrics`: queue the body, then hang up).
+    close_after_flush: bool,
 }
 
 impl ConnState {
@@ -67,7 +70,21 @@ impl ConnState {
             soft_cap,
             frames_dropped: 0,
             lines_overlong: 0,
+            close_after_flush: false,
         }
+    }
+
+    /// Arm the close-on-drain latch: the reactor closes this connection
+    /// as soon as [`ConnState::wants_write`] goes false. Sticky — there
+    /// is no disarm; anything queued before the drain still goes out.
+    pub fn mark_close_after_flush(&mut self) {
+        self.close_after_flush = true;
+    }
+
+    /// Whether the connection should be closed now that (or once) the
+    /// write buffer has drained.
+    pub fn close_after_flush(&self) -> bool {
+        self.close_after_flush
     }
 
     /// Feed raw bytes from the socket; extracted events append to `out`.
@@ -306,6 +323,20 @@ mod tests {
         st.consume_written(5);
         assert!(!st.wants_write());
         assert_eq!(st.write_backlog(), 0);
+    }
+
+    #[test]
+    fn close_after_flush_is_sticky_and_off_by_default() {
+        let mut st = ConnState::new(64, 1024);
+        assert!(!st.close_after_flush());
+        st.queue_line("HTTP/1.0 200 OK");
+        st.mark_close_after_flush();
+        assert!(st.close_after_flush());
+        // queued bytes still drain normally; the latch survives the drain
+        let n = st.pending_write().len();
+        st.consume_written(n);
+        assert!(!st.wants_write());
+        assert!(st.close_after_flush());
     }
 
     #[test]

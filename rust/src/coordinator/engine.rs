@@ -60,6 +60,24 @@ struct Lane {
     progress: Option<Arc<ProgressSink>>,
 }
 
+/// Stage-time accumulator, allocated (boxed, off the common path) only
+/// for traced requests ([`crate::coordinator::request::Qos::trace`]).
+/// A shared sub-batch's wall-clock is attributed *in full* to every
+/// unique traced request with a lane in it: the spans answer "where did
+/// my request spend its time", not "how much device time did it consume
+/// exclusively" — so queue + pack + device + advance ≈ the request's
+/// engine latency even when its lanes ride shared batches.
+struct SpanAccum {
+    /// Transport arrival → engine admission.
+    queue_s: f64,
+    /// Summed pack (+ pad) wall-clock of participating sub-batches.
+    pack_s: f64,
+    /// Summed device wall-clock of participating sub-batches.
+    device_s: f64,
+    /// Summed host update-kernel (advance) wall-clock.
+    advance_s: f64,
+}
+
 struct Inflight {
     /// Latency-clock anchor: the transport arrival instant when the
     /// request crossed a connection, engine-queue push time otherwise —
@@ -73,6 +91,9 @@ struct Inflight {
     outputs: Vec<Option<Vec<f32>>>,
     return_images: bool,
     steps_total: usize,
+    /// Span accumulator for traced requests; `None` (the common case)
+    /// costs the tick loop no extra clock reads.
+    trace: Option<Box<SpanAccum>>,
 }
 
 struct Pending {
@@ -428,6 +449,8 @@ impl Engine {
             steps_executed: 0,
             cached: false,
             degraded: None,
+            spans: None,
+            coalesced: false,
         }
     }
 
@@ -469,6 +492,16 @@ impl Engine {
             let steps_total = plan.len() * request.lane_count();
             let n = request.lane_count();
             let kernel = request.sampler;
+            // queue span closes at admission; only traced requests read
+            // the clock here
+            let trace = request.qos.trace.then(|| {
+                Box::new(SpanAccum {
+                    queue_s: Instant::now().duration_since(submitted).as_secs_f64(),
+                    pack_s: 0.0,
+                    device_s: 0.0,
+                    advance_s: 0.0,
+                })
+            });
             match request.body {
                 RequestBody::Generate { count, seed } => {
                     for i in 0..count {
@@ -537,6 +570,7 @@ impl Engine {
                     outputs: (0..n).map(|_| None).collect(),
                     return_images: request.return_images,
                     steps_total,
+                    trace,
                 },
             );
             admitted += 1;
@@ -580,6 +614,36 @@ impl Engine {
         Ok(())
     }
 
+    /// Add one sub-batch's stage wall-clock to every unique traced
+    /// request with a lane in `sub`. No-op (and never called) when no
+    /// traced request is resident.
+    fn attribute_spans(
+        lanes: &[Lane],
+        inflight: &mut HashMap<RequestId, Inflight>,
+        sub: &[usize],
+        pack_s: f64,
+        device_s: f64,
+        advance_s: f64,
+    ) {
+        // sub-batches hold at most max_batch lanes: a linear dedup scan
+        // beats hashing at that size
+        let mut seen: Vec<RequestId> = Vec::new();
+        for &li in sub {
+            let req = lanes[li].req;
+            if seen.contains(&req) {
+                continue;
+            }
+            seen.push(req);
+            if let Some(acc) =
+                inflight.get_mut(&req).and_then(|inf| inf.trace.as_deref_mut())
+            {
+                acc.pack_s += pack_s;
+                acc.device_s += device_s;
+                acc.advance_s += advance_s;
+            }
+        }
+    }
+
     /// Receive one completion from the executor, record and advance it,
     /// and return its buffers to the pool. Work counters move only on
     /// success, exactly like the inline path.
@@ -589,6 +653,8 @@ impl Engine {
         kernel_steps: &mut [u64; 3],
         finished: &mut Vec<usize>,
         ctr: &mut ExecCounters,
+        inflight: &mut HashMap<RequestId, Inflight>,
+        tracing: bool,
     ) -> Result<()> {
         let t0 = Instant::now();
         let done = pipe.recv_done()?;
@@ -596,18 +662,34 @@ impl Engine {
         ctr.busy_s += done.busy_s;
         ctr.ref_compute_s += done.ref_compute_s;
         ctr.ref_bytes += done.ref_bytes;
+        let busy_s = done.busy_s;
         let SubBatchDone { job, result, .. } = done;
         let advanced = match &result {
             Ok(()) => {
                 ctr.record_call(job.lanes, job.bucket);
-                Self::advance_sub(
+                let adv_t0 = if tracing { Some(Instant::now()) } else { None };
+                let advanced = Self::advance_sub(
                     lanes,
                     kernel_steps,
                     ctr,
                     &job.batch,
                     &job.sel[..job.lanes],
                     finished,
-                )
+                );
+                if tracing {
+                    let adv_s = adv_t0.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+                    // pack time was attributed at the pack site (the tick
+                    // loop), before this sub-batch was submitted
+                    Self::attribute_spans(
+                        lanes,
+                        inflight,
+                        &job.sel[..job.lanes],
+                        0.0,
+                        busy_s,
+                        adv_s,
+                    );
+                }
+                advanced
             }
             Err(_) => Ok(()),
         };
@@ -626,6 +708,9 @@ impl Engine {
         if self.lanes.is_empty() {
             return Ok(reaped > 0);
         }
+        // span recording is tick-scoped: with no traced request resident
+        // the execution paths below take zero extra clock reads
+        let tracing = self.inflight.values().any(|i| i.trace.is_some());
         // --- select lanes round-robin (identical at every pipeline depth)
         let n_active = self.lanes.len();
         let n_sel = n_active.min(self.cfg.max_batch);
@@ -655,6 +740,7 @@ impl Engine {
             ExecBackend::Inline { rt, batch } => {
                 'subs: for sb in &plan {
                     let sub = &self.sel[sb.start..sb.start + sb.lanes];
+                    let pack_t0 = if tracing { Some(Instant::now()) } else { None };
                     for (slot, &li) in sub.iter().enumerate() {
                         if let Err(e) = batch.pack(slot, &mut self.lanes[li].traj) {
                             first_err = Some(e);
@@ -662,6 +748,7 @@ impl Engine {
                         }
                     }
                     batch.pad(sb.lanes, sb.bucket);
+                    let pack_s = pack_t0.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
                     let t0 = Instant::now();
                     let ran = rt.executable(&self.cfg.dataset, sb.bucket).and_then(|exe| {
                         batch.run(exe, sb.bucket)?;
@@ -685,6 +772,7 @@ impl Engine {
                         }
                     }
                     self.ctr.record_call(sb.lanes, sb.bucket);
+                    let adv_t0 = if tracing { Some(Instant::now()) } else { None };
                     if let Err(e) = Self::advance_sub(
                         &mut self.lanes,
                         &mut self.kernel_steps,
@@ -695,6 +783,17 @@ impl Engine {
                     ) {
                         first_err = Some(e);
                         break 'subs;
+                    }
+                    if tracing {
+                        let adv_s = adv_t0.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+                        Self::attribute_spans(
+                            &self.lanes,
+                            &mut self.inflight,
+                            sub,
+                            pack_s,
+                            dt,
+                            adv_s,
+                        );
                     }
                 }
             }
@@ -713,6 +812,8 @@ impl Engine {
                             &mut self.kernel_steps,
                             &mut finished,
                             &mut self.ctr,
+                            &mut self.inflight,
+                            tracing,
                         ) {
                             first_err = Some(e);
                             break 'subs;
@@ -722,6 +823,7 @@ impl Engine {
                     job.sel.extend_from_slice(&self.sel[sb.start..sb.start + sb.lanes]);
                     job.lanes = sb.lanes;
                     job.bucket = sb.bucket;
+                    let pack_t0 = if tracing { Some(Instant::now()) } else { None };
                     let mut packed = true;
                     for slot in 0..job.lanes {
                         let li = job.sel[slot];
@@ -736,6 +838,20 @@ impl Engine {
                         break 'subs;
                     }
                     job.batch.pad(job.lanes, job.bucket);
+                    if tracing {
+                        // pack is attributed here, at the pack site; device
+                        // + advance land in complete_one when this
+                        // sub-batch's completion drains
+                        let pack_s = pack_t0.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+                        Self::attribute_spans(
+                            &self.lanes,
+                            &mut self.inflight,
+                            &job.sel[..job.lanes],
+                            pack_s,
+                            0.0,
+                            0.0,
+                        );
+                    }
                     // work is counted at *completion* (complete_one), so a
                     // sub-batch that fails on the executor never inflates
                     // steps_executed
@@ -754,6 +870,8 @@ impl Engine {
                         &mut self.kernel_steps,
                         &mut finished,
                         &mut self.ctr,
+                        &mut self.inflight,
+                        tracing,
                     ) {
                         if first_err.is_none() {
                             first_err = Some(e);
@@ -797,6 +915,16 @@ impl Engine {
                 } else {
                     Vec::new()
                 };
+                // publish_s/total_s are the transport's to fill: the engine
+                // cannot see serialization or socket time from here
+                let spans = inf.trace.map(|b| crate::obs::Spans {
+                    queue_s: b.queue_s,
+                    pack_s: b.pack_s,
+                    device_s: b.device_s,
+                    advance_s: b.advance_s,
+                    publish_s: 0.0,
+                    total_s: latency,
+                });
                 self.completed.push(Response {
                     id: lane.req,
                     body: ResponseBody::Ok { outputs },
@@ -804,6 +932,8 @@ impl Engine {
                     steps_executed: inf.steps_total,
                     cached: false,
                     degraded: None,
+                    spans,
+                    coalesced: false,
                 });
             }
         }
@@ -861,6 +991,8 @@ impl Engine {
                 steps_executed: 0,
                 cached: false,
                 degraded: None,
+                spans: None,
+                coalesced: false,
             });
             aborted += 1;
         }
@@ -874,6 +1006,8 @@ impl Engine {
                 steps_executed: 0,
                 cached: false,
                 degraded: None,
+                spans: None,
+                coalesced: false,
             });
             aborted += 1;
         }

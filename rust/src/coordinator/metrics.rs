@@ -60,6 +60,35 @@ impl Histogram {
         self.max
     }
 
+    /// Sum of all recorded values — the Prometheus `_sum` series.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Cumulative `(upper_bound, count_at_or_below)` pairs over every
+    /// `stride`-th bucket edge — the Prometheus `_bucket{le=...}`
+    /// series. Counts are monotone non-decreasing by construction and
+    /// the tail is trimmed once the cumulative count reaches the total
+    /// (the `+Inf` bucket the encoder appends covers the rest), keeping
+    /// a quiet histogram's exposition short.
+    pub fn cumulative(&self, stride: usize) -> Vec<(f64, u64)> {
+        let stride = stride.max(1);
+        let mut out = Vec::with_capacity(NBUCKETS / stride + 1);
+        let mut acc = 0u64;
+        let mut i = 0;
+        while i < NBUCKETS {
+            let end = (i + stride).min(NBUCKETS);
+            acc += self.counts[i..end].iter().sum::<u64>();
+            // upper edge of the last native bucket in this stride group
+            out.push((MIN_S * GROWTH.powi(end as i32), acc));
+            if acc == self.total {
+                break;
+            }
+            i = end;
+        }
+        out
+    }
+
     /// Bucket-wise merge: after `a.merge(&b)`, `a`'s quantiles are exactly
     /// those of a histogram that recorded every sample `a` and `b` saw.
     /// This is the correct way to aggregate latency across shards — taking
@@ -226,6 +255,39 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Every counter-semantic field of this snapshot, keyed by its
+    /// exported Prometheus family (plus `kernel` label where present).
+    /// This is the documented gauge/counter audit: fields listed here
+    /// are monotone over the life of an engine; everything else in the
+    /// snapshot (`queue_depth`, `queued_lanes`, `active_lanes`,
+    /// `ref_bytes_last_tick`, the derived occupancy/waste fractions) is
+    /// a gauge and may decrease. `obs_spec.rs` asserts scrape-over-
+    /// scrape monotonicity over exactly this list.
+    pub fn counter_values(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("ddim_requests_completed_total", self.requests_completed as f64),
+            ("ddim_requests_rejected_total", self.requests_rejected as f64),
+            ("ddim_deadline_expired_total", self.deadline_expired as f64),
+            ("ddim_requests_degraded_total", self.requests_degraded as f64),
+            ("ddim_lanes_completed_total", self.lanes_completed as f64),
+            ("ddim_executable_calls_total", self.executable_calls as f64),
+            ("ddim_steps_executed_total", self.steps_executed as f64),
+            ("ddim_steps_kernel_total{kernel=ddim}", self.kernel_steps[0] as f64),
+            ("ddim_steps_kernel_total{kernel=pf_ode}", self.kernel_steps[1] as f64),
+            ("ddim_steps_kernel_total{kernel=ab2}", self.kernel_steps[2] as f64),
+            ("ddim_ticks_total", self.ticks as f64),
+            ("ddim_sub_batches_total", self.sub_batches as f64),
+            ("ddim_padded_lanes_total", self.padded_lanes as f64),
+            ("ddim_queue_accepted_total", self.queue_accepted as f64),
+            ("ddim_queue_rejected_items_total", self.queue_rejected_items as f64),
+            ("ddim_queue_rejected_lanes_total", self.queue_rejected_lanes as f64),
+            ("ddim_pipeline_wait_seconds_total", self.pipeline_wait_s),
+            ("ddim_device_busy_seconds_total", self.device_busy_s),
+            ("ddim_ref_compute_seconds_total", self.ref_compute_s),
+            ("ddim_ref_bytes_allocated_total", self.ref_bytes_allocated as f64),
+        ]
+    }
+
     /// One-line human summary for examples/benches.
     pub fn summary(&self) -> String {
         format!(
@@ -359,6 +421,60 @@ mod tests {
         empty.merge(&h);
         assert_eq!(empty.quantile(0.95), h.quantile(0.95));
         assert_eq!(empty.count(), 2);
+    }
+
+    #[test]
+    fn cumulative_buckets_are_monotone_trimmed_and_complete() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-3);
+        }
+        let cum = h.cumulative(8);
+        assert!(!cum.is_empty());
+        let mut prev_bound = 0.0;
+        let mut prev_count = 0;
+        for &(bound, count) in &cum {
+            assert!(bound > prev_bound, "le bounds must increase");
+            assert!(count >= prev_count, "bucket counts must be cumulative");
+            prev_bound = bound;
+            prev_count = count;
+        }
+        // trimmed: the last pair already covers every sample, so the tail
+        // of empty high buckets is gone
+        assert_eq!(cum.last().unwrap().1, h.count());
+        assert!(cum.len() < NBUCKETS / 8 + 1, "tail not trimmed: {} pairs", cum.len());
+        // bucket semantics: count at `le` == number of samples <= le
+        for &(bound, count) in &cum {
+            let expect = (1..=1000).filter(|&i| i as f64 * 1e-3 <= bound).count() as u64;
+            // log-bucket edges shift samples by at most one bucket's worth
+            assert!(
+                count >= expect.saturating_sub(50) && count <= expect + 50,
+                "le={bound}: {count} vs {expect}"
+            );
+        }
+        // an empty histogram still exposes a well-formed (single) pair
+        let empty = Histogram::new().cumulative(8);
+        assert_eq!(empty.len(), 1);
+        assert_eq!(empty[0].1, 0);
+    }
+
+    #[test]
+    fn counter_values_lists_only_monotone_fields() {
+        let names: Vec<&str> =
+            MetricsSnapshot::default().counter_values().iter().map(|(n, _)| *n).collect();
+        // the gauge side of the audit: point-in-time fields must be absent
+        for gauge in ["queue_depth", "queued_lanes", "active_lanes", "ref_bytes_last_tick"] {
+            assert!(
+                !names.iter().any(|n| n.contains(gauge)),
+                "gauge {gauge} leaked into the counter list"
+            );
+        }
+        // simulate engine progress: every listed counter is non-decreasing
+        let before = MetricsSnapshot { steps_executed: 10, ticks: 2, ..Default::default() };
+        let after = MetricsSnapshot { steps_executed: 25, ticks: 5, ..Default::default() };
+        for ((name, a), (_, b)) in before.counter_values().iter().zip(after.counter_values()) {
+            assert!(b >= *a, "counter {name} decreased: {a} -> {b}");
+        }
     }
 
     #[test]

@@ -188,7 +188,10 @@ impl Reactor {
                     for le in line_events.drain(..) {
                         match le {
                             ConnEvent::Line(l) => {
-                                if !l.trim().is_empty() {
+                                // a one-shot HTTP exchange ends at its
+                                // request line; trailing header lines are
+                                // not requests
+                                if !l.trim().is_empty() && !slot.state.close_after_flush() {
                                     handler(ev.token, &l, &mut slot.state);
                                 }
                             }
@@ -207,7 +210,11 @@ impl Reactor {
                         dead = !flush(slot);
                     }
                 }
-                if dead {
+                let flushed_close = !dead && {
+                    let slot = conns.get_mut(&ev.token).expect("live slot");
+                    slot.state.close_after_flush() && !slot.state.wants_write()
+                };
+                if dead || flushed_close {
                     self.close(&mut conns, ev.token, &open_gauge);
                 } else {
                     self.update_interest(conns.get_mut(&ev.token).expect("live slot"), ev.token);
@@ -281,10 +288,11 @@ impl Reactor {
                 let Some(slot) = conns.get_mut(&token) else {
                     continue; // closed while queueing an earlier completion
                 };
-                if flush(slot) {
-                    self.update_interest(slot, token);
-                } else {
+                let dead = !flush(slot);
+                if dead || (slot.state.close_after_flush() && !slot.state.wants_write()) {
                     self.close(&mut conns, token, &open_gauge);
+                } else {
+                    self.update_interest(slot, token);
                 }
             }
         }

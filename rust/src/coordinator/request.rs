@@ -75,6 +75,12 @@ pub struct Qos {
     /// cancelled with a typed `"reject":{"reason":"deadline"}` — at
     /// admission, at tick boundaries, and before publish — never finished.
     pub deadline_ms: Option<u64>,
+    /// Record wall-clock stage spans for this request (set by the
+    /// transport for explicit `"trace":true` requests and for requests
+    /// picked by `--trace-sample 1/N`). Like the rest of [`Qos`] this
+    /// shapes delivery only — it never enters the cache key, so a traced
+    /// and an untraced request still coalesce onto one execution.
+    pub trace: bool,
 }
 
 impl Qos {
@@ -257,7 +263,7 @@ impl Request {
             body,
             return_images,
             cache,
-            qos: Qos { priority, arrived: None, deadline_ms },
+            qos: Qos { priority, arrived: None, deadline_ms, trace: false },
         };
         if req.lane_count() == 0 {
             return Err(Error::Request("request has zero lanes".into()));
@@ -296,6 +302,16 @@ pub struct Response {
     /// every delivery path (direct, cache hit, coalesced waiter) reports
     /// the budget *this* client's sample was actually produced under.
     pub degraded: Option<(usize, usize)>,
+    /// Stage spans recorded by the engine for traced requests
+    /// ([`Qos::trace`]); `None` otherwise. Deliberately NOT serialized by
+    /// [`Response::to_json`]: the transport injects a `"spans"` object
+    /// only when the client explicitly asked (`"trace":true`), so
+    /// sampling-traced responses stay byte-identical to untraced ones.
+    pub spans: Option<crate::obs::Spans>,
+    /// Answered by sharing an identical in-flight execution (parked
+    /// waiter)? Reported as the `"coalesced"` access-log disposition;
+    /// like [`Response::spans`], not part of the wire body.
+    pub coalesced: bool,
 }
 
 /// Result payload.
@@ -579,6 +595,8 @@ mod tests {
             steps_executed: 20,
             cached: true,
             degraded: None,
+            spans: None,
+            coalesced: false,
         };
         let v = json::parse(&r.to_json_line()).unwrap();
         assert!(v.get("ok").unwrap().as_bool().unwrap());
@@ -594,6 +612,8 @@ mod tests {
             steps_executed: 0,
             cached: false,
             degraded: None,
+            spans: None,
+            coalesced: false,
         };
         let v = json::parse(&e.to_json_line()).unwrap();
         assert!(!v.get("ok").unwrap().as_bool().unwrap());
@@ -643,7 +663,8 @@ mod tests {
     #[test]
     fn qos_deadline_anchors_on_arrival() {
         let t0 = Instant::now();
-        let q = Qos { priority: Priority::Batch, arrived: Some(t0), deadline_ms: Some(40) };
+        let q =
+            Qos { priority: Priority::Batch, arrived: Some(t0), deadline_ms: Some(40), trace: false };
         assert_eq!(q.deadline(t0 + Duration::from_secs(9)), Some(t0 + Duration::from_millis(40)));
         // no arrival instant: the fallback anchors the budget
         let q = Qos { arrived: None, ..q };
@@ -664,6 +685,8 @@ mod tests {
             steps_executed: 0,
             cached: false,
             degraded: None,
+            spans: None,
+            coalesced: false,
         };
         let v = json::parse(&r.to_json_line()).unwrap();
         assert!(!v.get("ok").unwrap().as_bool().unwrap());
@@ -675,6 +698,26 @@ mod tests {
     }
 
     #[test]
+    fn spans_and_coalesced_never_leak_into_the_wire_body() {
+        // transport v2 pins response payloads bitwise; trace spans reach
+        // the wire only when the transport injects them for an explicit
+        // "trace":true request, and the coalesced marker is log-only
+        let r = Response {
+            id: 3,
+            body: ResponseBody::Ok { outputs: vec![] },
+            latency_s: 0.1,
+            steps_executed: 5,
+            cached: false,
+            degraded: None,
+            spans: Some(crate::obs::Spans { total_s: 0.1, ..Default::default() }),
+            coalesced: true,
+        };
+        let v = json::parse(&r.to_json_line()).unwrap();
+        assert!(v.get_opt("spans").is_none());
+        assert!(v.get_opt("coalesced").is_none());
+    }
+
+    #[test]
     fn degraded_record_rides_ok_responses() {
         let r = Response {
             id: 1,
@@ -683,6 +726,8 @@ mod tests {
             steps_executed: 20,
             cached: false,
             degraded: Some((100, 20)),
+            spans: None,
+            coalesced: false,
         };
         let v = json::parse(&r.to_json_line()).unwrap();
         let d = v.get("degraded").unwrap();

@@ -228,6 +228,8 @@ impl Router {
             steps_executed: 0,
             cached: false,
             degraded: None,
+            spans: None,
+            coalesced: false,
         };
         if self.stopping.load(Ordering::SeqCst) {
             done(error("shutting down".into()));

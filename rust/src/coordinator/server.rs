@@ -34,18 +34,23 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use crate::cache::DoneFn;
+use crate::cache::{DoneFn, KEY_VERSION};
 use crate::config::ServeConfig;
 use crate::coordinator::conn::ConnState;
 use crate::coordinator::engine::ProgressSink;
+use crate::coordinator::metrics::Histogram;
 use crate::coordinator::reactor::{Completion, LineHandler, Reactor, ReactorShared};
-use crate::coordinator::request::Request;
+use crate::coordinator::request::{CacheMode, Request, RequestBody, ResponseBody};
 use crate::coordinator::router::Router;
 use crate::error::{Error, Result};
 use crate::jobj;
 use crate::json::{self, Value};
+use crate::obs::{
+    prom, AccessLogger, AccessRecord, BuildInfo, ObsSelf, RotationPolicy, TransportCounters,
+};
+use crate::schedule::TauKind;
 
 /// Acceptor-side counters plus the open-connection gauge the reactors
 /// keep honest (decremented on every close path, including drops during
@@ -55,6 +60,66 @@ struct TransportStats {
     accepted: AtomicU64,
     accept_errors: AtomicU64,
     open: Arc<AtomicU64>,
+}
+
+/// Observability state shared by every reactor's protocol handler: the
+/// access-log writer, the trace sampler, and the process start instant
+/// behind `uptime_s` / `ddim_build_info`.
+struct Obs {
+    logger: Option<AccessLogger>,
+    /// `--trace-sample N`: every Nth request op gets stage spans (0 = off).
+    trace_sample: u64,
+    /// Request ops seen by the sampler (the `% trace_sample` clock).
+    trace_counter: AtomicU64,
+    /// Requests the sampler picked (exported; explicit `"trace":true`
+    /// requests are not counted — they didn't consume the sample budget).
+    traces_sampled: AtomicU64,
+    started: Instant,
+}
+
+impl Obs {
+    /// Open the access log (failing at startup, not on the first
+    /// request) and arm the trace sampler.
+    fn from_config(cfg: &ServeConfig) -> Result<Obs> {
+        let logger = if cfg.access_log.is_empty() {
+            None
+        } else {
+            let policy = RotationPolicy {
+                max_bytes: cfg.log_rotate_bytes,
+                max_secs: cfg.log_rotate_secs,
+                keep: cfg.log_keep,
+            };
+            Some(AccessLogger::start(&cfg.access_log, policy).map_err(Error::Io)?)
+        };
+        Ok(Obs {
+            logger,
+            trace_sample: cfg.trace_sample,
+            trace_counter: AtomicU64::new(0),
+            traces_sampled: AtomicU64::new(0),
+            started: Instant::now(),
+        })
+    }
+
+    /// Sampler decision for one request op; counts picks.
+    fn sample_trace(&self) -> bool {
+        if self.trace_sample == 0 {
+            return false;
+        }
+        if self.trace_counter.fetch_add(1, Ordering::Relaxed) % self.trace_sample == 0 {
+            self.traces_sampled.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
+
+    fn self_metrics(&self) -> ObsSelf {
+        ObsSelf {
+            access_log_enabled: self.logger.is_some(),
+            lines_written: self.logger.as_ref().map_or(0, AccessLogger::lines_written),
+            lines_dropped: self.logger.as_ref().map_or(0, AccessLogger::lines_dropped),
+            traces_sampled: self.traces_sampled.load(Ordering::Relaxed),
+        }
+    }
 }
 
 /// A running server: acceptor thread + N reactor threads + router-owned
@@ -67,6 +132,7 @@ pub struct Server {
     reactor_handles: Vec<JoinHandle<()>>,
     reactors: Vec<Arc<ReactorShared>>,
     router: Option<Arc<Router>>,
+    obs: Arc<Obs>,
 }
 
 impl Server {
@@ -80,6 +146,7 @@ impl Server {
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
 
+        let obs = Arc::new(Obs::from_config(&cfg)?);
         let router = Arc::new(Router::start(cfg)?);
         let stats = Arc::new(TransportStats::default());
 
@@ -92,7 +159,8 @@ impl Server {
         let all = Arc::new(shareds.clone());
         let mut reactor_handles = Vec::with_capacity(n_reactors);
         for (reactor, shared) in pairs {
-            let handler = make_handler(router.clone(), shared, all.clone(), stats.clone());
+            let handler =
+                make_handler(router.clone(), shared, all.clone(), stats.clone(), obs.clone());
             reactor_handles.push(
                 reactor
                     .start(handler, reactor_stop.clone(), stats.open.clone())
@@ -119,6 +187,7 @@ impl Server {
             reactor_handles,
             reactors: shareds,
             router: Some(router),
+            obs,
         })
     }
 
@@ -159,6 +228,11 @@ impl Server {
         }
         for h in self.reactor_handles.drain(..) {
             let _ = h.join();
+        }
+        // last: the reactors are joined, so no completion path can race
+        // new lines into the channel — everything queued gets written
+        if let Some(logger) = &self.obs.logger {
+            logger.shutdown();
         }
     }
 }
@@ -230,12 +304,14 @@ fn make_handler(
     own: Arc<ReactorShared>,
     all: Arc<Vec<Arc<ReactorShared>>>,
     stats: Arc<TransportStats>,
+    obs: Arc<Obs>,
 ) -> LineHandler {
     Arc::new(move |token, line, state| {
-        handle_line(token, line, state, &router, &own, &all, &stats)
+        handle_line(token, line, state, &router, &own, &all, &stats, &obs)
     })
 }
 
+#[allow(clippy::too_many_arguments)]
 fn handle_line(
     token: u64,
     line: &str,
@@ -244,11 +320,34 @@ fn handle_line(
     own: &Arc<ReactorShared>,
     all: &[Arc<ReactorShared>],
     stats: &TransportStats,
+    obs: &Arc<Obs>,
 ) {
     // client-observed latency starts when the transport has the complete
     // line, *before* parsing and queueing — not when an engine finally
     // pops the request (which under load hides the whole queue wait)
-    let arrived = std::time::Instant::now();
+    let arrived = Instant::now();
+    // minimal HTTP/1.0 surface on the same port: a scraper's
+    // `GET /metrics` request line is unmistakably not JSON, so route it
+    // before the parser and hang up once the response has flushed (the
+    // close-after-flush latch also swallows the trailing header lines)
+    if line.starts_with("GET ") {
+        let path = line.split_whitespace().nth(1).unwrap_or("");
+        if path == "/metrics" || path.starts_with("/metrics?") {
+            let body = prometheus_text(router, all, stats, obs);
+            state.queue_line("HTTP/1.0 200 OK\r");
+            state.queue_line("Content-Type: text/plain; version=0.0.4; charset=utf-8\r");
+            state.queue_line("Connection: close\r");
+            state.queue_line("\r");
+            // no Content-Length: HTTP/1.0 + close delimits the body
+            state.queue_line(body.trim_end_matches('\n'));
+        } else {
+            state.queue_line("HTTP/1.0 404 Not Found\r");
+            state.queue_line("Connection: close\r");
+            state.queue_line("\r");
+        }
+        state.mark_close_after_flush();
+        return;
+    }
     let v = match json::parse(line.trim()) {
         Ok(v) => v,
         Err(e) => return queue_err(state, None, format!("parse: {e}")),
@@ -268,8 +367,39 @@ fn handle_line(
             state.queue_line(&json::to_string(&r));
         }
         "metrics" => {
+            // `{"op":"metrics","format":"prometheus"}` returns the same
+            // scrape the HTTP responder serves, as a JSON string field
+            let prom_fmt =
+                v.get_opt("format").and_then(|f| f.as_str().ok()) == Some("prometheus");
+            if prom_fmt {
+                let mut r =
+                    jobj![("ok", true), ("prometheus", prometheus_text(router, all, stats, obs))];
+                if let Some(id) = &client_id {
+                    let _ = r.set("id", id.clone());
+                }
+                state.queue_line(&json::to_string(&r));
+                return;
+            }
             let mut m = router.metrics_value();
             let _ = m.set("transport", transport_value(stats, all));
+            let _ = m.set("uptime_s", Value::from(obs.started.elapsed().as_secs_f64()));
+            let _ = m.set("version", Value::from(env!("CARGO_PKG_VERSION")));
+            let _ = m.set("key_version", Value::from(KEY_VERSION as u64));
+            let _ = m.set(
+                "manifest_digest",
+                Value::from(format!("{:016x}", router.cache().current_digest())),
+            );
+            let o = obs.self_metrics();
+            let _ = m.set(
+                "obs",
+                jobj![
+                    ("access_log_enabled", o.access_log_enabled),
+                    ("access_log_lines", o.lines_written),
+                    ("access_log_dropped", o.lines_dropped),
+                    ("traces_sampled", o.traces_sampled),
+                    ("trace_sample", obs.trace_sample),
+                ],
+            );
             if let Some(id) = &client_id {
                 let _ = m.set("id", id.clone());
             }
@@ -296,6 +426,31 @@ fn handle_line(
             if req.qos.deadline_ms.is_none() && router.config().deadline_default_ms > 0 {
                 req.qos.deadline_ms = Some(router.config().deadline_default_ms);
             }
+            // trace decision: explicit `"trace":true` always records
+            // spans (and is the only thing that puts them on the wire);
+            // the `--trace-sample` clock covers everything else. Like
+            // `"id"`/`"stream"`, `"trace"` is peeled at the transport and
+            // never enters the cache key.
+            let explicit_trace = matches!(v.get_opt("trace"), Some(Value::Bool(true)));
+            req.qos.trace = explicit_trace || obs.sample_trace();
+            // clone what the access-log line will need before submission
+            // consumes the request (steps here are pre-degradation)
+            let log_ctx = obs.logger.as_ref().map(|_| LogCtx {
+                id: client_id.clone().unwrap_or(Value::Null),
+                op: match &req.body {
+                    RequestBody::Generate { .. } => "generate",
+                    RequestBody::Decode { .. } => "decode",
+                    RequestBody::Encode { .. } => "encode",
+                },
+                dataset: req.dataset.clone(),
+                lanes: req.lane_count(),
+                steps_requested: req.steps,
+                sampler: req.sampler.label(),
+                tau: tau_label(req.tau),
+                priority: req.qos.priority.label(),
+                deadline_ms: req.qos.deadline_ms,
+                bypass: req.cache == CacheMode::Bypass,
+            });
             let progress = every.map(|every| {
                 let sh = own.clone();
                 let cid = client_id.clone();
@@ -326,16 +481,66 @@ fn handle_line(
                 })
             });
             let sh = own.clone();
-            let done: DoneFn = Box::new(move |resp| {
+            let obs = obs.clone();
+            let done: DoneFn = Box::new(move |mut resp| {
+                // publish span: everything after engine completion —
+                // router/cache fan-out, serialization, queueing. total_s
+                // shares the clock with the latency histograms.
+                let total_s = arrived.elapsed().as_secs_f64();
+                if let Some(sp) = resp.spans.as_mut() {
+                    sp.total_s = total_s;
+                    sp.publish_s = (total_s - resp.latency_s).max(0.0);
+                }
                 let mut r = resp.to_json();
+                if explicit_trace {
+                    if let Some(sp) = &resp.spans {
+                        let _ = r.set("spans", sp.to_json());
+                    }
+                }
                 if let Some(id) = client_id {
                     let _ = r.set("id", id);
                 }
-                sh.push_completion(Completion {
-                    token,
-                    line: json::to_string(&r),
-                    frame: false,
-                });
+                let line = json::to_string(&r);
+                if let (Some(logger), Some(ctx)) = (&obs.logger, log_ctx) {
+                    let (outcome, reject_reason) = match &resp.body {
+                        ResponseBody::Ok { .. } => ("ok", None),
+                        ResponseBody::Error { .. } => ("error", None),
+                        ResponseBody::Reject(rej) => ("reject", Some(rej.reason.label())),
+                    };
+                    let cache = if ctx.bypass {
+                        "bypass"
+                    } else if resp.coalesced {
+                        // before `cached`: a leader-reprobe follower
+                        // carries both flags, and shared-execution is the
+                        // disposition that explains its latency
+                        "coalesced"
+                    } else if resp.cached {
+                        "hit"
+                    } else {
+                        "miss"
+                    };
+                    logger.log(&AccessRecord {
+                        id: ctx.id,
+                        op: ctx.op,
+                        dataset: ctx.dataset,
+                        lanes: ctx.lanes,
+                        steps_requested: ctx.steps_requested,
+                        steps_executed: resp.steps_executed,
+                        sampler: ctx.sampler,
+                        tau: ctx.tau,
+                        priority: ctx.priority,
+                        deadline_ms: ctx.deadline_ms,
+                        outcome,
+                        reject_reason,
+                        cache,
+                        degraded: resp.degraded,
+                        latency_s: resp.latency_s,
+                        total_s,
+                        bytes_out: line.len() + 1,
+                        spans: resp.spans,
+                    });
+                }
+                sh.push_completion(Completion { token, line, frame: false });
             });
             // may complete synchronously (cache hit) — the completion
             // lands in our own inbox and is drained this same loop pass
@@ -364,31 +569,99 @@ fn queue_err(state: &mut ConnState, id: Option<&Value>, msg: String) {
     state.queue_line(&json::to_string(&e));
 }
 
+/// One snapshot of every transport-layer counter — the single source both
+/// the JSON `"transport"` section and the Prometheus encoder read from.
+fn gather_transport(stats: &TransportStats, reactors: &[Arc<ReactorShared>]) -> TransportCounters {
+    let mut t = TransportCounters {
+        reactors: reactors.len(),
+        connections_total: stats.accepted.load(Ordering::Relaxed),
+        connections_open: stats.open.load(Ordering::Relaxed),
+        accept_errors: stats.accept_errors.load(Ordering::Relaxed),
+        ..TransportCounters::default()
+    };
+    for r in reactors {
+        t.wakeups += r.stats.wakeups.load(Ordering::Relaxed);
+        t.frames_streamed += r.stats.frames_streamed.load(Ordering::Relaxed);
+        t.frames_dropped += r.stats.frames_dropped.load(Ordering::Relaxed);
+        t.lines_overlong += r.stats.lines_overlong.load(Ordering::Relaxed);
+        t.writes_coalesced += r.stats.writes_coalesced.load(Ordering::Relaxed);
+    }
+    t
+}
+
 /// The `"transport"` section of the metrics response.
 fn transport_value(stats: &TransportStats, reactors: &[Arc<ReactorShared>]) -> Value {
-    let mut wakeups = 0u64;
-    let mut frames_streamed = 0u64;
-    let mut frames_dropped = 0u64;
-    let mut lines_overlong = 0u64;
-    let mut writes_coalesced = 0u64;
-    for r in reactors {
-        wakeups += r.stats.wakeups.load(Ordering::Relaxed);
-        frames_streamed += r.stats.frames_streamed.load(Ordering::Relaxed);
-        frames_dropped += r.stats.frames_dropped.load(Ordering::Relaxed);
-        lines_overlong += r.stats.lines_overlong.load(Ordering::Relaxed);
-        writes_coalesced += r.stats.writes_coalesced.load(Ordering::Relaxed);
-    }
+    let t = gather_transport(stats, reactors);
     jobj![
-        ("reactors", reactors.len()),
-        ("connections_total", stats.accepted.load(Ordering::Relaxed)),
-        ("connections_open", stats.open.load(Ordering::Relaxed)),
-        ("accept_errors", stats.accept_errors.load(Ordering::Relaxed)),
-        ("wakeups", wakeups),
-        ("frames_streamed", frames_streamed),
-        ("frames_dropped", frames_dropped),
-        ("lines_overlong", lines_overlong),
-        ("writes_coalesced", writes_coalesced),
+        ("reactors", t.reactors),
+        ("connections_total", t.connections_total),
+        ("connections_open", t.connections_open),
+        ("accept_errors", t.accept_errors),
+        ("wakeups", t.wakeups),
+        ("frames_streamed", t.frames_streamed),
+        ("frames_dropped", t.frames_dropped),
+        ("lines_overlong", t.lines_overlong),
+        ("writes_coalesced", t.writes_coalesced),
     ]
+}
+
+/// The full Prometheus exposition for this process: coordinator counters
+/// (merged + per-shard), cache, transport, build identity, and the
+/// observability plane's own health.
+fn prometheus_text(
+    router: &Arc<Router>,
+    reactors: &[Arc<ReactorShared>],
+    stats: &TransportStats,
+    obs: &Obs,
+) -> String {
+    let (agg, shards) = router.aggregate();
+    // aggregate() collapses the merged histogram into quantiles; the
+    // exposition wants the buckets themselves, so re-merge here
+    let mut latency = Histogram::new();
+    for s in &shards {
+        latency.merge(&s.latency);
+    }
+    let build = BuildInfo {
+        version: env!("CARGO_PKG_VERSION"),
+        key_version: KEY_VERSION,
+        manifest_digest: router.cache().current_digest(),
+        uptime_s: obs.started.elapsed().as_secs_f64(),
+    };
+    prom::render(
+        &build,
+        &agg,
+        &latency,
+        &shards,
+        &router.cache().metrics(),
+        &gather_transport(stats, reactors),
+        &obs.self_metrics(),
+    )
+}
+
+/// Request fields captured at admission for the access-log line the
+/// completion path writes. Everything here is a copy: the [`Request`]
+/// itself is consumed by submission (and `steps` may be rewritten by
+/// degradation before it reaches an engine — the log reports both the
+/// requested and the executed count).
+struct LogCtx {
+    id: Value,
+    op: &'static str,
+    dataset: String,
+    lanes: usize,
+    steps_requested: usize,
+    sampler: &'static str,
+    tau: &'static str,
+    priority: &'static str,
+    deadline_ms: Option<u64>,
+    bypass: bool,
+}
+
+fn tau_label(t: TauKind) -> &'static str {
+    match t {
+        TauKind::Linear => "linear",
+        TauKind::Quadratic => "quadratic",
+        TauKind::Opt => "opt",
+    }
 }
 
 /// Minimal blocking client for examples, benches and tests, over a

@@ -198,6 +198,8 @@ fn shutdown_response() -> Response {
         steps_executed: 0,
         cached: false,
         degraded: None,
+        spans: None,
+        coalesced: false,
     }
 }
 
@@ -218,7 +220,16 @@ fn reject_response(e: Error) -> Response {
         }),
         other => ResponseBody::Error { message: other.to_string() },
     };
-    Response { id: 0, body, latency_s: 0.0, steps_executed: 0, cached: false, degraded: None }
+    Response {
+        id: 0,
+        body,
+        latency_s: 0.0,
+        steps_executed: 0,
+        cached: false,
+        degraded: None,
+        spans: None,
+        coalesced: false,
+    }
 }
 
 fn deliver(waiters: &mut HashMap<RequestId, DoneFn>, resp: Response) {

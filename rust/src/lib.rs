@@ -23,6 +23,8 @@
 //!   (deterministic sample cache + single-flight request coalescing)
 //! - evaluation: [`eval`] (proxy-FID, consistency, reconstruction),
 //!   [`workload`] (request generators for benches/examples)
+//! - operations: [`obs`] (Prometheus exposition, rotating access logs,
+//!   per-request trace spans)
 
 pub mod artifacts;
 pub mod cache;
@@ -34,6 +36,7 @@ pub mod error;
 pub mod eval;
 pub mod json;
 pub mod linalg;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod sampler;

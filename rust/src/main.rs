@@ -58,6 +58,18 @@ COMMANDS
                 carries a \"degraded\":{\"from\",\"to\"} record)
               --degrade-mid F / --degrade-high F (pressure watermarks as
                 fractions of pool lane capacity; defaults 1.0 / 3.0)
+              --access-log PATH (structured access log: one JSON line per
+                completed request, written off the hot path; empty = off)
+              --log-rotate-bytes N / --log-rotate-secs N (rotate the access
+                log when it exceeds N bytes or N seconds of age; defaults
+                67108864 / 0)
+              --log-keep K (rotated generations to retain, PATH.1..PATH.K;
+                default 4)
+              --trace-sample N (record stage spans — queue/pack/device/
+                advance/publish — for every Nth request; 0 = only requests
+                that ask with \"trace\":true. Also GET /metrics and
+                {\"op\":\"metrics\",\"format\":\"prometheus\"} serve a
+                Prometheus scrape; see docs/observability.md)
   generate    --artifacts D --dataset NAME --steps S --eta E|hat
               --tau linear|quadratic|opt
               --sampler ddim|pf_ode|ab2 --count N --seed K --out FILE.pgm
@@ -149,6 +161,13 @@ fn config_from(args: &Args) -> Result<ServeConfig> {
     }
     cfg.degrade_mid = args.get_f64("degrade-mid", cfg.degrade_mid)?;
     cfg.degrade_high = args.get_f64("degrade-high", cfg.degrade_high)?;
+    if let Some(p) = args.get("access-log") {
+        cfg.access_log = p.to_string();
+    }
+    cfg.log_rotate_bytes = args.get_u64("log-rotate-bytes", cfg.log_rotate_bytes)?;
+    cfg.log_rotate_secs = args.get_u64("log-rotate-secs", cfg.log_rotate_secs)?;
+    cfg.log_keep = args.get_usize("log-keep", cfg.log_keep)?;
+    cfg.trace_sample = args.get_u64("trace-sample", cfg.trace_sample)?;
     cfg.validate()?;
     Ok(cfg)
 }

@@ -1,0 +1,280 @@
+//! Structured access logs: one JSON line per completed request, written
+//! through a dedicated writer thread behind a bounded channel.
+//!
+//! The transport's completion path calls [`AccessLogger::log`] — a
+//! `try_send` that **never blocks a reactor**: when the writer falls
+//! behind (slow disk, rotation storm) lines are dropped and counted
+//! instead of back-pressuring the event loop. Durability is best-effort
+//! by design; the drop counter is exported so the gap is observable.
+//!
+//! Rotation policy and file shifting live in [`super::rotation`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::jobj;
+use crate::json::{self, Value};
+
+use super::rotation::{RotatingFile, RotationPolicy};
+use super::Spans;
+
+/// Bounded writer-channel depth: at ~300 bytes a line this is ~1.2 MiB
+/// of backlog before drops start — enough to ride out a rotation shift
+/// without ever blocking the transport.
+pub const CHANNEL_CAPACITY: usize = 4096;
+
+enum Msg {
+    Line(String),
+    Shutdown,
+}
+
+/// Everything one access-log line records about a completed request.
+/// The transport fills it from the wire request (pre-submit clones) and
+/// the [`crate::coordinator::request::Response`] that answered it.
+#[derive(Debug, Clone)]
+pub struct AccessRecord {
+    /// Wire id (client-supplied, any JSON value) or the engine id.
+    pub id: Value,
+    pub op: &'static str,
+    pub dataset: String,
+    pub lanes: usize,
+    /// Step budget the client asked for (pre-degradation).
+    pub steps_requested: usize,
+    /// Steps the answering execution actually ran (0 on reject/error).
+    pub steps_executed: usize,
+    pub sampler: &'static str,
+    pub tau: &'static str,
+    pub priority: &'static str,
+    pub deadline_ms: Option<u64>,
+    /// `"ok"`, `"reject"`, or `"error"`.
+    pub outcome: &'static str,
+    /// `"overload"` / `"deadline"` when outcome is `"reject"`.
+    pub reject_reason: Option<&'static str>,
+    /// Cache disposition: `"hit"`, `"miss"`, `"coalesced"`, `"bypass"`.
+    pub cache: &'static str,
+    /// Degradation record `(from, to)` when the step budget was shed.
+    pub degraded: Option<(usize, usize)>,
+    /// Engine-observed latency (arrival → completion), seconds.
+    pub latency_s: f64,
+    /// Arrival → response-bytes-queued at the transport, seconds.
+    pub total_s: f64,
+    /// Serialized response-line bytes queued to the socket.
+    pub bytes_out: usize,
+    /// Stage spans, present for traced (sampled or explicit) requests.
+    pub spans: Option<Spans>,
+}
+
+impl AccessRecord {
+    pub fn to_json(&self) -> Value {
+        let mut v = jobj![
+            ("id", self.id.clone()),
+            ("op", self.op),
+            ("dataset", self.dataset.as_str()),
+            ("lanes", self.lanes),
+            ("steps_requested", self.steps_requested),
+            ("steps_executed", self.steps_executed),
+            ("sampler", self.sampler),
+            ("tau", self.tau),
+            ("priority", self.priority),
+            ("outcome", self.outcome),
+            ("cache", self.cache),
+            ("latency_s", self.latency_s),
+            ("total_s", self.total_s),
+            ("bytes_out", self.bytes_out),
+        ];
+        if let Some(ms) = self.deadline_ms {
+            let _ = v.set("deadline_ms", Value::from(ms));
+        }
+        if let Some(r) = self.reject_reason {
+            let _ = v.set("reject_reason", Value::from(r));
+        }
+        if let Some((from, to)) = self.degraded {
+            let _ = v.set("degraded", jobj![("from", from), ("to", to)]);
+        }
+        if let Some(s) = &self.spans {
+            let _ = v.set("spans", s.to_json());
+        }
+        v
+    }
+
+    /// The line that lands in the log (no trailing newline).
+    pub fn to_json_line(&self) -> String {
+        json::to_string(&self.to_json())
+    }
+}
+
+/// Handle to the writer thread. Cheap to share (`Arc`); `log` is
+/// lock-free on the hot path (`SyncSender::try_send` + relaxed
+/// counters).
+pub struct AccessLogger {
+    tx: SyncSender<Msg>,
+    written: Arc<AtomicU64>,
+    dropped: AtomicU64,
+    handle: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl AccessLogger {
+    /// Open the log file (erroring loudly at startup, not on the first
+    /// request) and spawn the writer thread.
+    pub fn start(path: &str, policy: RotationPolicy) -> std::io::Result<Self> {
+        let sink = RotatingFile::open(path, policy)?;
+        let (tx, rx) = sync_channel(CHANNEL_CAPACITY);
+        let written = Arc::new(AtomicU64::new(0));
+        let w = Arc::clone(&written);
+        let handle = std::thread::Builder::new()
+            .name("access-log".into())
+            .spawn(move || writer_loop(rx, sink, w))
+            .map_err(|e| std::io::Error::other(format!("spawn access-log writer: {e}")))?;
+        Ok(Self {
+            tx,
+            written,
+            dropped: AtomicU64::new(0),
+            handle: Mutex::new(Some(handle)),
+        })
+    }
+
+    /// Enqueue one record. Never blocks: a full channel (or a logger
+    /// already shut down) drops the line and bumps the drop counter.
+    pub fn log(&self, record: &AccessRecord) {
+        self.log_line(record.to_json_line());
+    }
+
+    /// Enqueue one pre-serialized line (no trailing newline).
+    pub fn log_line(&self, line: String) {
+        match self.tx.try_send(Msg::Line(line)) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Lines durably written by the writer thread.
+    pub fn lines_written(&self) -> u64 {
+        self.written.load(Ordering::Relaxed)
+    }
+
+    /// Lines dropped because the channel was full.
+    pub fn lines_dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Drain everything queued so far, flush, and join the writer.
+    /// Idempotent; called by `Server::shutdown` after the reactors have
+    /// joined (so nothing can race new lines in).
+    pub fn shutdown(&self) {
+        // a full channel here means the writer is alive and draining —
+        // block until the sentinel fits so queued lines are not lost
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for AccessLogger {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn writer_loop(rx: Receiver<Msg>, mut sink: RotatingFile, written: Arc<AtomicU64>) {
+    loop {
+        match rx.recv() {
+            Ok(Msg::Line(line)) => {
+                if sink.write_line(&line).is_ok() {
+                    written.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Ok(Msg::Shutdown) | Err(_) => break,
+        }
+    }
+    let _ = sink.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record() -> AccessRecord {
+        AccessRecord {
+            id: Value::from(7u64),
+            op: "generate",
+            dataset: "sprites".into(),
+            lanes: 2,
+            steps_requested: 100,
+            steps_executed: 20,
+            sampler: "ddim",
+            tau: "opt",
+            priority: "best_effort",
+            deadline_ms: Some(250),
+            outcome: "ok",
+            reject_reason: None,
+            cache: "miss",
+            degraded: Some((100, 20)),
+            latency_s: 0.125,
+            total_s: 0.126,
+            bytes_out: 64,
+            spans: Some(Spans { queue_s: 0.01, total_s: 0.126, ..Default::default() }),
+        }
+    }
+
+    #[test]
+    fn record_round_trips_through_the_json_parser() {
+        let line = record().to_json_line();
+        let v = json::parse(&line).expect("access-log line must be valid JSON");
+        assert_eq!(v.get("op").unwrap().as_str().unwrap(), "generate");
+        assert_eq!(v.get("dataset").unwrap().as_str().unwrap(), "sprites");
+        assert_eq!(v.get("steps_requested").unwrap().as_usize().unwrap(), 100);
+        assert_eq!(v.get("steps_executed").unwrap().as_usize().unwrap(), 20);
+        assert_eq!(v.get("cache").unwrap().as_str().unwrap(), "miss");
+        assert_eq!(v.get("deadline_ms").unwrap().as_u64().unwrap(), 250);
+        let d = v.get("degraded").unwrap();
+        assert_eq!(d.get("from").unwrap().as_usize().unwrap(), 100);
+        assert_eq!(d.get("to").unwrap().as_usize().unwrap(), 20);
+        assert!(v.get("spans").unwrap().get("queue_s").is_ok());
+        assert!(v.get_opt("reject_reason").is_none());
+    }
+
+    #[test]
+    fn reject_record_omits_success_only_fields() {
+        let mut r = record();
+        r.outcome = "reject";
+        r.reject_reason = Some("deadline");
+        r.degraded = None;
+        r.spans = None;
+        let v = json::parse(&r.to_json_line()).unwrap();
+        assert_eq!(v.get("outcome").unwrap().as_str().unwrap(), "reject");
+        assert_eq!(v.get("reject_reason").unwrap().as_str().unwrap(), "deadline");
+        assert!(v.get_opt("degraded").is_none());
+        assert!(v.get_opt("spans").is_none());
+    }
+
+    #[test]
+    fn logger_writes_drains_and_counts() {
+        let dir = std::env::temp_dir()
+            .join(format!("ddim_access_log_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("access.log");
+        let logger =
+            AccessLogger::start(path.to_str().unwrap(), RotationPolicy::none()).unwrap();
+        for _ in 0..50 {
+            logger.log(&record());
+        }
+        logger.shutdown();
+        assert_eq!(logger.lines_written(), 50);
+        assert_eq!(logger.lines_dropped(), 0);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 50);
+        for l in lines {
+            json::parse(l).expect("every line parses");
+        }
+        // post-shutdown logs are counted as drops, never lost silently
+        logger.log_line("late".into());
+        assert_eq!(logger.lines_dropped(), 1);
+    }
+}

@@ -1,0 +1,74 @@
+//! Production observability: Prometheus text-format exposition
+//! ([`prom`]), rotating structured access logs ([`access_log`] over
+//! [`rotation`]), and per-request trace spans ([`Spans`]).
+//!
+//! The module sits beside the coordinator, not above it: the transport
+//! ([`crate::coordinator::server`]) samples traces, emits access-log
+//! lines from its completion path, and serves the Prometheus scrape
+//! both as `{"op":"metrics","format":"prometheus"}` on the JSON-line
+//! wire and as a minimal `GET /metrics` HTTP/1.0 responder on the same
+//! port. The engine ([`crate::coordinator::engine`]) fills span
+//! accumulators only for traced requests, so an untraced workload pays
+//! no extra clock reads (bench section (k) gates the overhead).
+
+pub mod access_log;
+pub mod prom;
+pub mod rotation;
+
+pub use access_log::{AccessLogger, AccessRecord};
+pub use prom::{BuildInfo, ObsSelf, PromText, TransportCounters};
+pub use rotation::{RotatingFile, RotationPolicy};
+
+use crate::jobj;
+use crate::json::Value;
+
+/// Wall-clock stage timings for one traced request, following the
+/// request through queue → plan/pack → device → advance → publish.
+///
+/// `queue_s` is admission wait (transport arrival → engine admit).
+/// `pack_s`/`device_s`/`advance_s` are the summed wall-clock of every
+/// sub-batch the request's lanes participated in — a shared sub-batch
+/// is attributed in full to each participating traced request (the
+/// span answers "where did my request spend its time", not "how much
+/// device time did it consume exclusively"). `publish_s` is
+/// completion → response-bytes-queued at the transport, and `total_s`
+/// is arrival → publish on the same clock as the latency histograms.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Spans {
+    pub queue_s: f64,
+    pub pack_s: f64,
+    pub device_s: f64,
+    pub advance_s: f64,
+    pub publish_s: f64,
+    pub total_s: f64,
+}
+
+impl Spans {
+    /// Wire/log form: `{"queue_s":...,"pack_s":...,...}`.
+    pub fn to_json(&self) -> Value {
+        jobj![
+            ("queue_s", self.queue_s),
+            ("pack_s", self.pack_s),
+            ("device_s", self.device_s),
+            ("advance_s", self.advance_s),
+            ("publish_s", self.publish_s),
+            ("total_s", self.total_s),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_json_has_every_stage() {
+        let s = Spans { queue_s: 0.5, total_s: 1.0, ..Default::default() };
+        let v = s.to_json();
+        for k in ["queue_s", "pack_s", "device_s", "advance_s", "publish_s", "total_s"] {
+            assert!(v.get(k).is_ok(), "missing span stage {k}");
+        }
+        assert_eq!(v.get("queue_s").unwrap().as_f64().unwrap(), 0.5);
+        assert_eq!(v.get("total_s").unwrap().as_f64().unwrap(), 1.0);
+    }
+}

@@ -1,0 +1,947 @@
+//! Prometheus text-exposition (format 0.0.4) encoder over the serving
+//! stack's existing counters, gauges, and histograms.
+//!
+//! Rendering rules, pinned by `rust/tests/obs_spec.rs`:
+//! - every family is declared exactly once (`# HELP` + `# TYPE`) and all
+//!   of its samples follow contiguously;
+//! - counters are monotonic and named `*_total` (the gauge/counter split
+//!   is audited in [`render`]: `connections_open` is a gauge because
+//!   disconnects decrement it, `connections_total` is a counter because
+//!   nothing ever does; cache `bytes`/`entries` are gauges — eviction
+//!   shrinks them — while `hits`/`evictions` only grow);
+//! - [`Histogram`](crate::coordinator::metrics::Histogram) exports as
+//!   cumulative `_bucket{le="..."}` lines over its log buckets plus
+//!   `_sum`/`_count`, with `le="+Inf"` equal to `_count`;
+//! - label values escape `\`, `"`, and newline; HELP text escapes `\`
+//!   and newline.
+//!
+//! [`validate_exposition`] is a strict parser for the same dialect —
+//! the proxy for "a stock Prometheus scraper accepts this" used by the
+//! spec tests and the gated bench.
+
+use std::collections::BTreeMap;
+
+use crate::cache::CacheMetrics;
+use crate::coordinator::metrics::{Histogram, MetricsSnapshot};
+use crate::coordinator::shard::ShardStats;
+
+/// Every metric this stack exports carries this prefix.
+pub const PREFIX: &str = "ddim";
+
+/// Stride over the histogram's ~530 log buckets when exporting: one
+/// `le` bound per 8 native buckets ≈ 67 bounds at ~37% spacing — dense
+/// enough for quantile math, small enough to scrape every second.
+pub const BUCKET_STRIDE: usize = 8;
+
+/// Identity of this server process, exported as the classic
+/// `ddim_build_info{...} 1` gauge so dashboards can correlate restarts
+/// and artifact rollouts with metric discontinuities.
+#[derive(Debug, Clone)]
+pub struct BuildInfo {
+    /// Crate version (`CARGO_PKG_VERSION`).
+    pub version: &'static str,
+    /// Cache key schema version ([`crate::cache::key`]).
+    pub key_version: u8,
+    /// Digest of the artifact manifest requests are being keyed against
+    /// (0 when the cache front is inert).
+    pub manifest_digest: u64,
+    /// Seconds since the server started.
+    pub uptime_s: f64,
+}
+
+/// Transport-layer counters/gauges as the server publishes them.
+/// Defined here (rather than borrowing the server's internal stats
+/// struct) so the encoder states which of these are monotonic: all of
+/// them except `reactors` and `connections_open`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TransportCounters {
+    /// Gauge: configured reactor threads.
+    pub reactors: u64,
+    /// Counter: connections ever accepted.
+    pub connections_total: u64,
+    /// Gauge: connections open right now.
+    pub connections_open: u64,
+    /// Counter: accept() failures.
+    pub accept_errors: u64,
+    /// Counter: reactor wakeup pipe signals.
+    pub wakeups: u64,
+    /// Counter: streamed preview frames queued.
+    pub frames_streamed: u64,
+    /// Counter: preview frames dropped at the write buffer cap.
+    pub frames_dropped: u64,
+    /// Counter: request lines rejected for exceeding the length bound.
+    pub lines_overlong: u64,
+    /// Counter: socket writes that flushed more than one queued line.
+    pub writes_coalesced: u64,
+}
+
+/// The observability layer's own health counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ObsSelf {
+    pub access_log_enabled: bool,
+    /// Counter: access-log lines durably written.
+    pub lines_written: u64,
+    /// Counter: access-log lines dropped at the bounded channel.
+    pub lines_dropped: u64,
+    /// Counter: requests picked by `--trace-sample` (explicit
+    /// `"trace":true` requests are not counted here).
+    pub traces_sampled: u64,
+}
+
+/// Incremental exposition builder: declare a family, then emit its
+/// samples. Keeps families contiguous by construction; a debug assert
+/// catches double declaration.
+pub struct PromText {
+    out: String,
+    declared: Vec<String>,
+}
+
+impl Default for PromText {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PromText {
+    pub fn new() -> Self {
+        PromText { out: String::with_capacity(8 << 10), declared: Vec::new() }
+    }
+
+    /// Declare a family: `# HELP` + `# TYPE`. `kind` is `counter`,
+    /// `gauge`, or `histogram`. All of the family's samples must be
+    /// emitted before the next `family` call.
+    pub fn family(&mut self, name: &str, kind: &str, help: &str) {
+        debug_assert!(
+            !self.declared.iter().any(|d| d == name),
+            "family {name} declared twice"
+        );
+        self.declared.push(name.to_string());
+        self.out.push_str("# HELP ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(&escape_help(help));
+        self.out.push('\n');
+        self.out.push_str("# TYPE ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(kind);
+        self.out.push('\n');
+    }
+
+    /// One sample line: `name{labels} value`.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(k);
+                self.out.push_str("=\"");
+                self.out.push_str(&escape_label_value(v));
+                self.out.push('"');
+            }
+            self.out.push('}');
+        }
+        self.out.push(' ');
+        self.out.push_str(&fmt_value(value));
+        self.out.push('\n');
+    }
+
+    /// Declare + emit a full histogram family from cumulative
+    /// `(upper_bound, cumulative_count)` pairs: `_bucket` lines (with a
+    /// final `le="+Inf"` equal to `count`), `_sum`, `_count`. `labels`
+    /// are attached to every line (the `le` label is appended last).
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        cumulative: &[(f64, u64)],
+        sum: f64,
+        count: u64,
+    ) {
+        self.family(name, "histogram", help);
+        let bucket = format!("{name}_bucket");
+        let mut with_le: Vec<(&str, &str)> = labels.to_vec();
+        for &(ub, cum) in cumulative {
+            let le = fmt_value(ub);
+            with_le.push(("le", &le));
+            self.sample(&bucket, &with_le, cum as f64);
+            with_le.pop();
+        }
+        with_le.push(("le", "+Inf"));
+        self.sample(&bucket, &with_le, count as f64);
+        self.sample(&format!("{name}_sum"), labels, sum);
+        self.sample(&format!("{name}_count"), labels, count as f64);
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Escape a label value per the exposition format: `\` → `\\`,
+/// `"` → `\"`, newline → `\n`.
+pub fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+fn escape_help(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Exposition-format float: integral values (counters) print without a
+/// decimal point; everything else uses Rust's shortest round-trip form.
+fn fmt_value(v: f64) -> String {
+    if v.is_infinite() {
+        return if v > 0.0 { "+Inf".into() } else { "-Inf".into() };
+    }
+    if v.is_nan() {
+        return "NaN".into();
+    }
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Update-kernel label values, indexed like
+/// [`MetricsSnapshot::kernel_steps`] (i.e. `SamplerKind::index`).
+pub const KERNEL_NAMES: [&str; 3] = ["ddim", "pf_ode", "ab2"];
+
+/// Render the complete scrape: build info, merged engine families,
+/// the latency histogram, per-shard families (`shard`/`dataset`
+/// labels), cache, transport, and the observability layer's own
+/// counters.
+pub fn render(
+    build: &BuildInfo,
+    agg: &MetricsSnapshot,
+    latency: &Histogram,
+    shards: &[ShardStats],
+    cache: &CacheMetrics,
+    transport: &TransportCounters,
+    obs: &ObsSelf,
+) -> String {
+    let mut p = PromText::new();
+
+    // --- identity -------------------------------------------------------
+    let digest = format!("{:016x}", build.manifest_digest);
+    p.family(
+        "ddim_build_info",
+        "gauge",
+        "Constant 1, labeled with crate version, cache key schema version, and manifest digest.",
+    );
+    let kv = format!("{}", build.key_version);
+    p.sample(
+        "ddim_build_info",
+        &[("version", build.version), ("key_version", &kv), ("manifest_digest", &digest)],
+        1.0,
+    );
+    p.family("ddim_uptime_seconds", "gauge", "Seconds since the server started.");
+    p.sample("ddim_uptime_seconds", &[], build.uptime_s);
+
+    // --- merged engine counters ----------------------------------------
+    let c: &[(&str, &str, f64)] = &[
+        (
+            "ddim_requests_completed_total",
+            "Requests answered with a successful sample.",
+            agg.requests_completed as f64,
+        ),
+        (
+            "ddim_requests_rejected_total",
+            "Requests answered with an error or typed rejection.",
+            agg.requests_rejected as f64,
+        ),
+        (
+            "ddim_deadline_expired_total",
+            "Requests cancelled because their deadline expired.",
+            agg.deadline_expired as f64,
+        ),
+        (
+            "ddim_requests_degraded_total",
+            "Best-effort requests whose step budget was shed by the degradation ladder.",
+            agg.requests_degraded as f64,
+        ),
+        ("ddim_lanes_completed_total", "Sample lanes completed.", agg.lanes_completed as f64),
+        (
+            "ddim_executable_calls_total",
+            "Device executable invocations.",
+            agg.executable_calls as f64,
+        ),
+        ("ddim_steps_executed_total", "Denoising steps executed.", agg.steps_executed as f64),
+        ("ddim_ticks_total", "Engine ticks that executed at least one sub-batch.", agg.ticks as f64),
+        (
+            "ddim_sub_batches_total",
+            "Sub-batch device calls issued by the tick planner.",
+            agg.sub_batches as f64,
+        ),
+        (
+            "ddim_padded_lanes_total",
+            "Dead padding lane-slots executed.",
+            agg.padded_lanes as f64,
+        ),
+        (
+            "ddim_queue_accepted_total",
+            "Requests the admission queue accepted.",
+            agg.queue_accepted as f64,
+        ),
+        (
+            "ddim_queue_rejected_items_total",
+            "Admissions rejected at the queue item cap.",
+            agg.queue_rejected_items as f64,
+        ),
+        (
+            "ddim_queue_rejected_lanes_total",
+            "Admissions rejected at the queue lane budget.",
+            agg.queue_rejected_lanes as f64,
+        ),
+        (
+            "ddim_pipeline_wait_seconds_total",
+            "Engine-thread seconds blocked on device completions.",
+            agg.pipeline_wait_s,
+        ),
+        (
+            "ddim_device_busy_seconds_total",
+            "Seconds the execution path spent running sub-batches.",
+            agg.device_busy_s,
+        ),
+        (
+            "ddim_ref_compute_seconds_total",
+            "Seconds inside the reference step kernel proper.",
+            agg.ref_compute_s,
+        ),
+        (
+            "ddim_ref_bytes_allocated_total",
+            "Reference-backend bytes freshly allocated by step execution.",
+            agg.ref_bytes_allocated as f64,
+        ),
+    ];
+    for &(name, help, v) in c {
+        p.family(name, "counter", help);
+        p.sample(name, &[], v);
+    }
+
+    p.family(
+        "ddim_steps_kernel_total",
+        "counter",
+        "Denoising steps executed, by update kernel.",
+    );
+    for (i, &k) in KERNEL_NAMES.iter().enumerate() {
+        p.sample("ddim_steps_kernel_total", &[("kernel", k)], agg.kernel_steps[i] as f64);
+    }
+
+    // --- merged engine gauges ------------------------------------------
+    let g: &[(&str, &str, f64)] = &[
+        (
+            "ddim_queue_depth",
+            "Requests sitting in the admission queue right now.",
+            agg.queue_depth as f64,
+        ),
+        ("ddim_queued_lanes", "Lanes queued but not yet admitted.", agg.queued_lanes as f64),
+        ("ddim_active_lanes", "Lanes resident in the engines.", agg.active_lanes as f64),
+        ("ddim_occupancy", "Mean occupied-lane fraction per executable call.", agg.occupancy()),
+        (
+            "ddim_padding_waste",
+            "Fraction of executed lane-slots that were inert padding.",
+            agg.padding_waste(),
+        ),
+        (
+            "ddim_ref_bytes_last_tick",
+            "Reference-backend bytes allocated by the most recent working tick.",
+            agg.ref_bytes_last_tick as f64,
+        ),
+    ];
+    for &(name, help, v) in g {
+        p.family(name, "gauge", help);
+        p.sample(name, &[], v);
+    }
+
+    // --- merged latency histogram --------------------------------------
+    p.histogram(
+        "ddim_request_latency_seconds",
+        "Request latency, transport arrival to completion (log-bucketed).",
+        &[],
+        &latency.cumulative(BUCKET_STRIDE),
+        latency.sum(),
+        latency.count(),
+    );
+
+    // --- per-shard families --------------------------------------------
+    let shard_counters: &[(&str, &str, fn(&MetricsSnapshot) -> f64)] = &[
+        ("ddim_shard_requests_completed_total", "Per-shard requests completed.", |s| {
+            s.requests_completed as f64
+        }),
+        ("ddim_shard_requests_rejected_total", "Per-shard requests rejected.", |s| {
+            s.requests_rejected as f64
+        }),
+        ("ddim_shard_deadline_expired_total", "Per-shard deadline cancellations.", |s| {
+            s.deadline_expired as f64
+        }),
+        ("ddim_shard_steps_executed_total", "Per-shard denoising steps executed.", |s| {
+            s.steps_executed as f64
+        }),
+        ("ddim_shard_executable_calls_total", "Per-shard executable invocations.", |s| {
+            s.executable_calls as f64
+        }),
+    ];
+    let shard_gauges: &[(&str, &str, fn(&MetricsSnapshot) -> f64)] = &[
+        ("ddim_shard_active_lanes", "Per-shard lanes resident in the engine.", |s| {
+            s.active_lanes as f64
+        }),
+        ("ddim_shard_queued_lanes", "Per-shard lanes queued for admission.", |s| {
+            s.queued_lanes as f64
+        }),
+        ("ddim_shard_queue_depth", "Per-shard admission queue depth.", |s| {
+            s.queue_depth as f64
+        }),
+        ("ddim_shard_occupancy", "Per-shard mean occupied-lane fraction.", |s| s.occupancy()),
+    ];
+    for &(name, help, get) in shard_counters {
+        p.family(name, "counter", help);
+        for sh in shards {
+            let id = format!("{}", sh.shard_id);
+            p.sample(name, &[("shard", &id), ("dataset", &sh.dataset)], get(&sh.snapshot));
+        }
+    }
+    for &(name, help, get) in shard_gauges {
+        p.family(name, "gauge", help);
+        for sh in shards {
+            let id = format!("{}", sh.shard_id);
+            p.sample(name, &[("shard", &id), ("dataset", &sh.dataset)], get(&sh.snapshot));
+        }
+    }
+
+    // --- cache ----------------------------------------------------------
+    // counter/gauge audit: hits/misses/coalesced/bypassed/evictions only
+    // ever grow; bytes/entries/inflight shrink on eviction and flight
+    // completion, so they are gauges.
+    let cc: &[(&str, &str, u64)] = &[
+        ("ddim_cache_hits_total", "Completed-sample cache hits.", cache.hits),
+        ("ddim_cache_misses_total", "Cache misses that dispatched an execution.", cache.misses),
+        (
+            "ddim_cache_coalesced_waiters_total",
+            "Requests parked behind an identical in-flight execution.",
+            cache.coalesced_waiters,
+        ),
+        ("ddim_cache_bypassed_total", "Requests that bypassed the cache.", cache.bypassed),
+        ("ddim_cache_evictions_total", "Entries evicted by the byte budget.", cache.evictions),
+    ];
+    for &(name, help, v) in cc {
+        p.family(name, "counter", help);
+        p.sample(name, &[], v as f64);
+    }
+    let cg: &[(&str, &str, f64)] = &[
+        ("ddim_cache_enabled", "1 when the completed-sample store is on.", cache.enabled as u64 as f64),
+        (
+            "ddim_cache_coalesce_enabled",
+            "1 when single-flight coalescing is on.",
+            cache.coalesce_enabled as u64 as f64,
+        ),
+        ("ddim_cache_bytes", "Bytes held by the completed-sample store.", cache.bytes as f64),
+        ("ddim_cache_capacity_bytes", "Store byte budget.", cache.capacity_bytes as f64),
+        ("ddim_cache_entries", "Completed samples resident.", cache.entries as f64),
+        ("ddim_cache_inflight", "In-flight placeholders pinned.", cache.inflight as f64),
+    ];
+    for &(name, help, v) in cg {
+        p.family(name, "gauge", help);
+        p.sample(name, &[], v);
+    }
+
+    // --- transport ------------------------------------------------------
+    let tc: &[(&str, &str, u64)] = &[
+        ("ddim_connections_total", "Connections ever accepted.", transport.connections_total),
+        ("ddim_accept_errors_total", "accept() failures.", transport.accept_errors),
+        ("ddim_wakeups_total", "Reactor wakeup signals.", transport.wakeups),
+        ("ddim_frames_streamed_total", "Preview frames queued.", transport.frames_streamed),
+        (
+            "ddim_frames_dropped_total",
+            "Preview frames dropped at the write buffer cap.",
+            transport.frames_dropped,
+        ),
+        (
+            "ddim_lines_overlong_total",
+            "Request lines rejected for exceeding the length bound.",
+            transport.lines_overlong,
+        ),
+        (
+            "ddim_writes_coalesced_total",
+            "Socket writes that flushed more than one queued line.",
+            transport.writes_coalesced,
+        ),
+    ];
+    for &(name, help, v) in tc {
+        p.family(name, "counter", help);
+        p.sample(name, &[], v as f64);
+    }
+    p.family("ddim_reactors", "gauge", "Configured reactor event-loop threads.");
+    p.sample("ddim_reactors", &[], transport.reactors as f64);
+    p.family("ddim_connections_open", "gauge", "Connections open right now.");
+    p.sample("ddim_connections_open", &[], transport.connections_open as f64);
+
+    // --- observability self-counters -----------------------------------
+    p.family("ddim_access_log_enabled", "gauge", "1 when the access log is writing.");
+    p.sample("ddim_access_log_enabled", &[], obs.access_log_enabled as u64 as f64);
+    p.family(
+        "ddim_access_log_lines_total",
+        "counter",
+        "Access-log lines durably written.",
+    );
+    p.sample("ddim_access_log_lines_total", &[], obs.lines_written as f64);
+    p.family(
+        "ddim_access_log_dropped_total",
+        "counter",
+        "Access-log lines dropped at the bounded writer channel.",
+    );
+    p.sample("ddim_access_log_dropped_total", &[], obs.lines_dropped as f64);
+    p.family(
+        "ddim_traces_sampled_total",
+        "counter",
+        "Requests picked for span tracing by --trace-sample.",
+    );
+    p.sample("ddim_traces_sampled_total", &[], obs.traces_sampled as f64);
+
+    p.finish()
+}
+
+// ---------------------------------------------------------------------------
+// strict exposition parser — the spec tests' stand-in for a stock scraper
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct FamilyState {
+    kind: String,
+    help_seen: bool,
+    type_seen: bool,
+    /// histogram accumulation keyed by the non-`le` label set
+    buckets: BTreeMap<String, Vec<(String, f64)>>,
+    sums: BTreeMap<String, f64>,
+    counts: BTreeMap<String, f64>,
+}
+
+/// Validate a complete scrape body against the text exposition format:
+/// metric/label name syntax, label escaping, HELP/TYPE exactly once per
+/// family with all samples contiguous, histogram buckets cumulative
+/// with `le="+Inf"` == `_count`. Returns the first violation.
+pub fn validate_exposition(text: &str) -> Result<(), String> {
+    let mut current: Option<(String, FamilyState)> = None;
+    let mut sealed: Vec<String> = Vec::new();
+
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: String| Err(format!("line {}: {msg} [{line}]", ln + 1));
+        if let Some(rest) = line.strip_prefix("# ") {
+            let (what, rest) = match rest.split_once(' ') {
+                Some(p) => p,
+                None => return err("malformed comment".into()),
+            };
+            if what != "HELP" && what != "TYPE" {
+                continue; // arbitrary comments are legal
+            }
+            let (name, payload) = match rest.split_once(' ') {
+                Some(p) => p,
+                None => return err(format!("{what} without payload")),
+            };
+            if !valid_metric_name(name) {
+                return err(format!("bad family name {name:?}"));
+            }
+            let switching = current.as_ref().map(|(n, _)| n != name).unwrap_or(true);
+            if switching {
+                if let Some((prev, st)) = current.take() {
+                    finish_family(&prev, &st)?;
+                    sealed.push(prev);
+                }
+                if sealed.iter().any(|s| s == name) {
+                    return err(format!("family {name} re-opened (samples not contiguous)"));
+                }
+                current = Some((name.to_string(), FamilyState::default()));
+            }
+            let (_, st) = current.as_mut().unwrap();
+            match what {
+                "HELP" => {
+                    if st.help_seen {
+                        return err(format!("duplicate HELP for {name}"));
+                    }
+                    st.help_seen = true;
+                }
+                _ => {
+                    if st.type_seen {
+                        return err(format!("duplicate TYPE for {name}"));
+                    }
+                    st.type_seen = true;
+                    if !["counter", "gauge", "histogram", "summary", "untyped"]
+                        .contains(&payload)
+                    {
+                        return err(format!("unknown TYPE {payload:?}"));
+                    }
+                    st.kind = payload.to_string();
+                }
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        // sample line: name[{labels}] value
+        let (name, labels, value) = parse_sample(line).map_err(|e| {
+            format!("line {}: {e} [{line}]", ln + 1)
+        })?;
+        let Some((fam, st)) = current.as_mut() else {
+            return err(format!("sample {name} before any family declaration"));
+        };
+        let base = if st.kind == "histogram" {
+            name.strip_suffix("_bucket")
+                .or_else(|| name.strip_suffix("_sum"))
+                .or_else(|| name.strip_suffix("_count"))
+                .unwrap_or(&name)
+        } else {
+            &name
+        };
+        if base != fam {
+            return err(format!("sample {name} inside family {fam}"));
+        }
+        if st.kind == "histogram" {
+            let mut le = None;
+            let mut rest = Vec::new();
+            for (k, v) in &labels {
+                if k == "le" {
+                    le = Some(v.clone());
+                } else {
+                    rest.push(format!("{k}={v}"));
+                }
+            }
+            let group = rest.join(",");
+            if name.ends_with("_bucket") {
+                let le = le.ok_or_else(|| {
+                    format!("line {}: bucket without le label [{line}]", ln + 1)
+                })?;
+                st.buckets.entry(group).or_default().push((le, value));
+            } else if name.ends_with("_sum") {
+                st.sums.insert(group, value);
+            } else if name.ends_with("_count") {
+                st.counts.insert(group, value);
+            } else {
+                return err(format!("bare sample {name} in histogram family"));
+            }
+        }
+    }
+    if let Some((prev, st)) = current.take() {
+        finish_family(&prev, &st)?;
+    }
+    Ok(())
+}
+
+fn finish_family(name: &str, st: &FamilyState) -> Result<(), String> {
+    if !st.help_seen || !st.type_seen {
+        return Err(format!("family {name}: missing HELP or TYPE"));
+    }
+    if st.kind != "histogram" {
+        return Ok(());
+    }
+    for (group, buckets) in &st.buckets {
+        let mut prev = f64::NEG_INFINITY;
+        let mut prev_cum = 0.0;
+        let mut inf = None;
+        for (le, cum) in buckets {
+            let bound: f64 = le
+                .parse()
+                .map_err(|_| format!("{name}{{{group}}}: unparseable le {le:?}"))?;
+            if bound <= prev {
+                return Err(format!("{name}{{{group}}}: le bounds not increasing at {le}"));
+            }
+            if *cum < prev_cum {
+                return Err(format!(
+                    "{name}{{{group}}}: buckets not cumulative at le={le} ({cum} < {prev_cum})"
+                ));
+            }
+            prev = bound;
+            prev_cum = *cum;
+            if bound.is_infinite() {
+                inf = Some(*cum);
+            }
+        }
+        let inf = inf.ok_or_else(|| format!("{name}{{{group}}}: no le=\"+Inf\" bucket"))?;
+        let count = st
+            .counts
+            .get(group)
+            .ok_or_else(|| format!("{name}{{{group}}}: missing _count"))?;
+        if (inf - count).abs() > 0.0 {
+            return Err(format!("{name}{{{group}}}: +Inf bucket {inf} != _count {count}"));
+        }
+        if !st.sums.contains_key(group) {
+            return Err(format!("{name}{{{group}}}: missing _sum"));
+        }
+    }
+    Ok(())
+}
+
+fn valid_metric_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn valid_label_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+type Sample = (String, Vec<(String, String)>, f64);
+
+fn parse_sample(line: &str) -> Result<Sample, String> {
+    let bytes = line.as_bytes();
+    let name_end = bytes
+        .iter()
+        .position(|&b| b == b'{' || b == b' ')
+        .ok_or("sample with no value")?;
+    let name = &line[..name_end];
+    if !valid_metric_name(name) {
+        return Err(format!("bad metric name {name:?}"));
+    }
+    let mut labels = Vec::new();
+    let mut i = name_end;
+    if bytes[i] == b'{' {
+        i += 1;
+        loop {
+            if i >= bytes.len() {
+                return Err("unterminated label set".into());
+            }
+            if bytes[i] == b'}' {
+                i += 1;
+                break;
+            }
+            let eq = line[i..]
+                .find('=')
+                .ok_or("label without =")?
+                + i;
+            let lname = &line[i..eq];
+            if !valid_label_name(lname) {
+                return Err(format!("bad label name {lname:?}"));
+            }
+            if bytes.get(eq + 1) != Some(&b'"') {
+                return Err("label value not quoted".into());
+            }
+            let mut j = eq + 2;
+            let mut val = String::new();
+            loop {
+                match bytes.get(j) {
+                    None => return Err("unterminated label value".into()),
+                    Some(b'\\') => {
+                        match bytes.get(j + 1) {
+                            Some(b'\\') => val.push('\\'),
+                            Some(b'"') => val.push('"'),
+                            Some(b'n') => val.push('\n'),
+                            other => return Err(format!("bad escape {other:?}")),
+                        }
+                        j += 2;
+                    }
+                    Some(b'"') => {
+                        j += 1;
+                        break;
+                    }
+                    Some(&b) => {
+                        val.push(b as char);
+                        j += 1;
+                    }
+                }
+            }
+            labels.push((lname.to_string(), val));
+            i = j;
+            if bytes.get(i) == Some(&b',') {
+                i += 1;
+            }
+        }
+    }
+    if bytes.get(i) != Some(&b' ') {
+        return Err("no space before value".into());
+    }
+    let value_str = line[i + 1..].trim();
+    let value: f64 = match value_str {
+        "+Inf" => f64::INFINITY,
+        "-Inf" => f64::NEG_INFINITY,
+        "NaN" => f64::NAN,
+        s => s.parse().map_err(|_| format!("unparseable value {s:?}"))?,
+    };
+    Ok((name.to_string(), labels, value))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(escape_label_value(r#"a\b"c"#), r#"a\\b\"c"#);
+        assert_eq!(escape_label_value("two\nlines"), "two\\nlines");
+        assert_eq!(escape_label_value("plain"), "plain");
+    }
+
+    #[test]
+    fn value_formatting() {
+        assert_eq!(fmt_value(42.0), "42");
+        assert_eq!(fmt_value(0.0), "0");
+        assert_eq!(fmt_value(0.125), "0.125");
+        assert_eq!(fmt_value(f64::INFINITY), "+Inf");
+        assert_eq!(fmt_value(f64::NEG_INFINITY), "-Inf");
+        assert_eq!(fmt_value(f64::NAN), "NaN");
+        // a parser must round-trip what we print
+        assert_eq!("0.30000000000000004".parse::<f64>().unwrap(), 0.1 + 0.2);
+        assert_eq!(fmt_value(0.1 + 0.2), "0.30000000000000004");
+    }
+
+    #[test]
+    fn families_and_samples_render_contiguously() {
+        let mut p = PromText::new();
+        p.family("ddim_x_total", "counter", "An x.");
+        p.sample("ddim_x_total", &[], 3.0);
+        p.family("ddim_y", "gauge", "A y with\nnewline help.");
+        p.sample("ddim_y", &[("shard", "0"), ("dataset", "spri\"tes")], 0.5);
+        let text = p.finish();
+        assert!(text.contains("# HELP ddim_x_total An x.\n"));
+        assert!(text.contains("# TYPE ddim_x_total counter\n"));
+        assert!(text.contains("ddim_x_total 3\n"));
+        assert!(text.contains("A y with\\nnewline help."));
+        assert!(text.contains(r#"ddim_y{shard="0",dataset="spri\"tes"} 0.5"#));
+        validate_exposition(&text).unwrap();
+    }
+
+    #[test]
+    fn histogram_renders_cumulative_with_inf() {
+        let mut p = PromText::new();
+        p.histogram(
+            "ddim_lat_seconds",
+            "latency",
+            &[],
+            &[(0.001, 2), (0.01, 5), (0.1, 9)],
+            1.234,
+            9,
+        );
+        let text = p.finish();
+        assert!(text.contains(r#"ddim_lat_seconds_bucket{le="0.001"} 2"#));
+        assert!(text.contains(r#"ddim_lat_seconds_bucket{le="+Inf"} 9"#));
+        assert!(text.contains("ddim_lat_seconds_sum 1.234\n"));
+        assert!(text.contains("ddim_lat_seconds_count 9\n"));
+        validate_exposition(&text).unwrap();
+    }
+
+    #[test]
+    fn validator_rejects_malformed_expositions() {
+        // duplicate TYPE
+        let dup = "# HELP a_total h\n# TYPE a_total counter\n# TYPE a_total counter\na_total 1\n";
+        assert!(validate_exposition(dup).unwrap_err().contains("duplicate TYPE"));
+        // family re-opened after another began
+        let split = "# HELP a h\n# TYPE a gauge\na 1\n# HELP b h\n# TYPE b gauge\nb 1\n# HELP a h\n# TYPE a gauge\na 2\n";
+        assert!(validate_exposition(split).unwrap_err().contains("re-opened"));
+        // non-cumulative histogram buckets
+        let noncum = "# HELP h_s x\n# TYPE h_s histogram\nh_s_bucket{le=\"0.1\"} 5\nh_s_bucket{le=\"1\"} 3\nh_s_bucket{le=\"+Inf\"} 5\nh_s_sum 1\nh_s_count 5\n";
+        assert!(validate_exposition(noncum).unwrap_err().contains("not cumulative"));
+        // +Inf != count
+        let inf = "# HELP h_s x\n# TYPE h_s histogram\nh_s_bucket{le=\"+Inf\"} 4\nh_s_sum 1\nh_s_count 5\n";
+        assert!(validate_exposition(inf).unwrap_err().contains("+Inf"));
+        // sample from a foreign family
+        let foreign = "# HELP a h\n# TYPE a gauge\nother 1\n";
+        assert!(validate_exposition(foreign).unwrap_err().contains("inside family"));
+        // bad metric name
+        assert!(validate_exposition("# HELP 9bad h\n# TYPE 9bad gauge\n").is_err());
+        // missing TYPE
+        let nohelp = "# HELP a h\na 1\n";
+        assert!(validate_exposition(nohelp).unwrap_err().contains("missing HELP or TYPE"));
+    }
+
+    #[test]
+    fn full_render_validates_and_covers_every_family_kind() {
+        let mut latency = Histogram::new();
+        for i in 1..=100 {
+            latency.record(i as f64 * 1e-3);
+        }
+        let mut snap = MetricsSnapshot::default();
+        snap.requests_completed = 100;
+        snap.steps_executed = 2000;
+        snap.kernel_steps = [1500, 400, 100];
+        snap.executable_calls = 40;
+        snap.occupancy_sum = 30.0;
+        let shards = vec![
+            ShardStats {
+                shard_id: 0,
+                dataset: "sprites".into(),
+                snapshot: snap.clone(),
+                latency: latency.clone(),
+            },
+            ShardStats {
+                shard_id: 1,
+                dataset: "checkerboard".into(),
+                snapshot: snap.clone(),
+                latency: latency.clone(),
+            },
+        ];
+        let build = BuildInfo {
+            version: "0.4.0",
+            key_version: 3,
+            manifest_digest: 0xdead_beef,
+            uptime_s: 12.5,
+        };
+        let cache = CacheMetrics { hits: 5, misses: 7, bytes: 1024, ..Default::default() };
+        let transport =
+            TransportCounters { reactors: 2, connections_total: 9, ..Default::default() };
+        let obs = ObsSelf {
+            access_log_enabled: true,
+            lines_written: 99,
+            lines_dropped: 1,
+            traces_sampled: 6,
+        };
+        let text = render(&build, &snap, &latency, &shards, &cache, &transport, &obs);
+        validate_exposition(&text).unwrap();
+        for needle in [
+            "ddim_build_info{version=\"0.4.0\",key_version=\"3\",manifest_digest=\"00000000deadbeef\"} 1",
+            "ddim_requests_completed_total 100",
+            "ddim_steps_kernel_total{kernel=\"pf_ode\"} 400",
+            "ddim_request_latency_seconds_count 100",
+            "ddim_shard_requests_completed_total{shard=\"1\",dataset=\"checkerboard\"} 100",
+            "ddim_cache_hits_total 5",
+            "ddim_cache_bytes 1024",
+            "ddim_connections_total 9",
+            "ddim_access_log_dropped_total 1",
+            "ddim_traces_sampled_total 6",
+        ] {
+            assert!(text.contains(needle), "scrape missing: {needle}\n---\n{text}");
+        }
+        // counters all end in _total (the monotonicity audit's naming half)
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let (name, kind) = rest.split_once(' ').unwrap();
+                if kind == "counter" {
+                    assert!(name.ends_with("_total"), "counter {name} not *_total");
+                }
+            }
+        }
+    }
+}

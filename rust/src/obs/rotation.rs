@@ -1,0 +1,241 @@
+//! Size- and interval-based log rotation with a bounded retention
+//! window, logrotate-style: on rotation `PATH` is renamed to `PATH.1`,
+//! `PATH.1` to `PATH.2`, …, and `PATH.keep` is deleted — so at most
+//! `keep` rotated files (plus the live one) ever exist.
+//!
+//! Rotation is checked at write time, before the line lands, so a file
+//! never exceeds `max_bytes` by more than one line and an idle log is
+//! never rotated (age only applies once something was written).
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// When and how much to rotate. Either trigger may be disabled with 0;
+/// with both disabled the file grows forever (keep is then unused).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RotationPolicy {
+    /// Rotate when the live file would exceed this many bytes (0 = no
+    /// size-based rotation).
+    pub max_bytes: u64,
+    /// Rotate when the live file has been open at least this many
+    /// seconds and holds at least one line (0 = no interval rotation).
+    pub max_secs: u64,
+    /// Rotated files retained (`PATH.1` … `PATH.keep`); older ones are
+    /// deleted. Clamped to at least 1 when rotation can trigger.
+    pub keep: usize,
+}
+
+impl RotationPolicy {
+    /// No rotation at all: a plain append-forever file.
+    pub fn none() -> Self {
+        Self { max_bytes: 0, max_secs: 0, keep: 1 }
+    }
+
+    fn enabled(&self) -> bool {
+        self.max_bytes > 0 || self.max_secs > 0
+    }
+}
+
+/// An append-mode line file that rotates itself per [`RotationPolicy`].
+/// Not thread-safe by design — the access logger owns exactly one on
+/// its dedicated writer thread.
+pub struct RotatingFile {
+    path: PathBuf,
+    policy: RotationPolicy,
+    file: BufWriter<File>,
+    /// bytes written to the live file (including pre-existing content
+    /// when opened in append mode)
+    written: u64,
+    opened_at: Instant,
+    rotations: u64,
+}
+
+impl RotatingFile {
+    /// Open (append, create) the live file; parent directories are
+    /// created as needed. Pre-existing bytes count toward the size
+    /// trigger, so restarting over a full file rotates on first write.
+    pub fn open(path: impl Into<PathBuf>, policy: RotationPolicy) -> std::io::Result<Self> {
+        let path = path.into();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                fs::create_dir_all(parent)?;
+            }
+        }
+        let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        let written = file.metadata()?.len();
+        Ok(Self {
+            path,
+            policy,
+            file: BufWriter::new(file),
+            written,
+            opened_at: Instant::now(),
+            rotations: 0,
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Bytes in the live file.
+    pub fn current_bytes(&self) -> u64 {
+        self.written
+    }
+
+    /// How many times this handle has rotated.
+    pub fn rotations(&self) -> u64 {
+        self.rotations
+    }
+
+    fn should_rotate(&self, next_line_bytes: u64) -> bool {
+        if !self.policy.enabled() || self.written == 0 {
+            // never rotate an empty file: an oversized single line must
+            // still land somewhere, and an idle log must not churn names
+            return false;
+        }
+        if self.policy.max_bytes > 0 && self.written + next_line_bytes > self.policy.max_bytes {
+            return true;
+        }
+        self.policy.max_secs > 0 && self.opened_at.elapsed().as_secs() >= self.policy.max_secs
+    }
+
+    /// Append one line (a trailing `\n` is added), rotating first if
+    /// the policy says so.
+    pub fn write_line(&mut self, line: &str) -> std::io::Result<()> {
+        let n = line.len() as u64 + 1;
+        if self.should_rotate(n) {
+            self.rotate()?;
+        }
+        self.file.write_all(line.as_bytes())?;
+        self.file.write_all(b"\n")?;
+        self.written += n;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.file.flush()
+    }
+
+    fn numbered(&self, i: usize) -> PathBuf {
+        PathBuf::from(format!("{}.{i}", self.path.display()))
+    }
+
+    /// The logrotate shift: drop `.keep`, slide `.i` → `.i+1`, move the
+    /// live file to `.1`, reopen a fresh live file.
+    fn rotate(&mut self) -> std::io::Result<()> {
+        self.file.flush()?;
+        let keep = self.policy.keep.max(1);
+        let _ = fs::remove_file(self.numbered(keep));
+        for i in (1..keep).rev() {
+            let from = self.numbered(i);
+            if from.exists() {
+                fs::rename(&from, self.numbered(i + 1))?;
+            }
+        }
+        fs::rename(&self.path, self.numbered(1))?;
+        self.file =
+            BufWriter::new(OpenOptions::new().create(true).append(true).open(&self.path)?);
+        self.written = 0;
+        self.opened_at = Instant::now();
+        self.rotations += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_path(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("ddim_rotation_test_{}_{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir.join("access.log")
+    }
+
+    fn read_lines(p: &Path) -> Vec<String> {
+        fs::read_to_string(p)
+            .unwrap_or_default()
+            .lines()
+            .map(str::to_string)
+            .collect()
+    }
+
+    #[test]
+    fn no_policy_never_rotates() {
+        let path = temp_path("none");
+        let mut f = RotatingFile::open(&path, RotationPolicy::none()).unwrap();
+        for i in 0..100 {
+            f.write_line(&format!("line {i}")).unwrap();
+        }
+        f.flush().unwrap();
+        assert_eq!(f.rotations(), 0);
+        assert_eq!(read_lines(&path).len(), 100);
+        assert!(!path.with_extension("log.1").exists());
+    }
+
+    #[test]
+    fn size_rotation_keeps_exactly_k_files() {
+        let path = temp_path("keep_k");
+        let policy = RotationPolicy { max_bytes: 32, max_secs: 0, keep: 3 };
+        let mut f = RotatingFile::open(&path, policy).unwrap();
+        // each line is 24 bytes + newline; two fit in 32 bytes never, so
+        // every second write rotates — plenty of shifts to overflow keep
+        for i in 0..20 {
+            f.write_line(&format!("payload-{i:04}-xxxxxxxxxx")).unwrap();
+        }
+        f.flush().unwrap();
+        assert!(f.rotations() >= 4, "expected many rotations, got {}", f.rotations());
+        assert!(path.exists());
+        for i in 1..=3usize {
+            assert!(
+                PathBuf::from(format!("{}.{i}", path.display())).exists(),
+                "missing rotated file .{i}"
+            );
+        }
+        assert!(
+            !PathBuf::from(format!("{}.4", path.display())).exists(),
+            "keep=3 must delete .4"
+        );
+        // newest rotated file holds newer lines than the older one
+        let n1 = read_lines(&PathBuf::from(format!("{}.1", path.display())));
+        let n2 = read_lines(&PathBuf::from(format!("{}.2", path.display())));
+        assert!(n1.last().unwrap() > n2.last().unwrap(), "{n1:?} vs {n2:?}");
+    }
+
+    #[test]
+    fn oversized_single_line_still_lands() {
+        let path = temp_path("oversize");
+        let policy = RotationPolicy { max_bytes: 8, max_secs: 0, keep: 2 };
+        let mut f = RotatingFile::open(&path, policy).unwrap();
+        f.write_line("a line far larger than the whole budget").unwrap();
+        f.flush().unwrap();
+        assert_eq!(f.rotations(), 0, "an empty live file must never rotate");
+        assert_eq!(read_lines(&path).len(), 1);
+        // the next write rotates the oversized file out
+        f.write_line("next").unwrap();
+        f.flush().unwrap();
+        assert_eq!(f.rotations(), 1);
+        assert_eq!(read_lines(&path), vec!["next".to_string()]);
+    }
+
+    #[test]
+    fn append_reopen_counts_existing_bytes() {
+        let path = temp_path("reopen");
+        let policy = RotationPolicy { max_bytes: 16, max_secs: 0, keep: 2 };
+        {
+            let mut f = RotatingFile::open(&path, policy).unwrap();
+            f.write_line("0123456789abcd").unwrap(); // fills the budget
+            f.flush().unwrap();
+        }
+        let mut f = RotatingFile::open(&path, policy).unwrap();
+        assert_eq!(f.current_bytes(), 15);
+        f.write_line("after restart").unwrap(); // must rotate first
+        f.flush().unwrap();
+        assert_eq!(f.rotations(), 1);
+        assert_eq!(read_lines(&path), vec!["after restart".to_string()]);
+    }
+}

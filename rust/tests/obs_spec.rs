@@ -1,0 +1,331 @@
+//! Observability end-to-end: the Prometheus scrape (JSON op and raw
+//! HTTP), the structured access log (one line per completed request,
+//! spans under `--trace-sample`), rotation keep-K, counter monotonicity
+//! across scrapes, and spans-on-the-wire opt-in. Real TCP against the
+//! epoll reactors, fixture artifacts on the hermetic reference backend.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use ddim_serve::config::ServeConfig;
+use ddim_serve::coordinator::server::Client;
+use ddim_serve::coordinator::Server;
+use ddim_serve::jobj;
+use ddim_serve::json::{self, Value};
+use ddim_serve::obs::prom::validate_exposition;
+use ddim_serve::testing::fixtures;
+
+fn cfg() -> ServeConfig {
+    ServeConfig {
+        artifact_root: fixtures::root_string(),
+        dataset: "sprites".into(),
+        listen: "127.0.0.1:0".into(),
+        max_batch: 8,
+        ..Default::default()
+    }
+}
+
+/// Fresh per-test scratch dir (tests run in one process; tag by name).
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("ddim_obs_spec_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn gen(steps: f64, seed: f64, cache: &str) -> Value {
+    jobj![
+        ("op", "generate"),
+        ("dataset", "sprites"),
+        ("steps", steps),
+        ("eta", 0.0),
+        ("count", 1.0),
+        ("seed", seed),
+        ("cache", cache),
+    ]
+}
+
+/// First sample value of a family (labeled or not), skipping comments.
+fn sample_value(text: &str, name: &str) -> f64 {
+    let bare = format!("{name} ");
+    let labeled = format!("{name}{{");
+    text.lines()
+        .find(|l| !l.starts_with('#') && (l.starts_with(&bare) || l.starts_with(&labeled)))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("family {name} missing from exposition"))
+}
+
+/// One raw HTTP/1.0 exchange against the JSON-line port; returns
+/// (status line, body) — the server closes after flushing, so
+/// read-to-EOF delimits the body (no Content-Length in HTTP/1.0).
+fn http_get(addr: std::net::SocketAddr, path: &str) -> (String, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(stream, "GET {path} HTTP/1.0\r\nHost: t\r\n\r\n").unwrap();
+    stream.flush().unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap();
+    let (head, body) = raw.split_once("\r\n\r\n").expect("header/body split");
+    (head.lines().next().unwrap_or("").to_string(), body.to_string())
+}
+
+/// The scrape is well formed under a stock parser, identical in shape
+/// whether served as `{"op":"metrics","format":"prometheus"}` or as
+/// `GET /metrics`, carries the build-identity gauge, and every counter
+/// is monotone across scrapes with traffic in between.
+#[test]
+fn prometheus_scrape_is_well_formed_on_both_transports() {
+    let server = Server::start(cfg()).unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+
+    // mixed burst before the first scrape: execution, a cache miss+hit
+    for seed in 0..3 {
+        let r = c.roundtrip(&gen(4.0, seed as f64, "bypass")).unwrap();
+        assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
+    }
+    c.roundtrip(&gen(6.0, 50.0, "use")).unwrap();
+    let hit = c.roundtrip(&gen(6.0, 50.0, "use")).unwrap();
+    assert!(hit.get("cached").unwrap().as_bool().unwrap());
+
+    let r = c.roundtrip(&jobj![("op", "metrics"), ("format", "prometheus")]).unwrap();
+    assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
+    let scrape1 = r.get("prometheus").unwrap().as_str().unwrap().to_string();
+    validate_exposition(&scrape1).expect("JSON-op scrape must parse under a stock parser");
+
+    // build identity: constant-1 gauge labeled with the crate version,
+    // cache key schema version, and the live manifest digest
+    let info = scrape1
+        .lines()
+        .find(|l| l.starts_with("ddim_build_info{"))
+        .expect("ddim_build_info sample");
+    assert!(
+        info.contains(&format!("version=\"{}\"", env!("CARGO_PKG_VERSION"))),
+        "{info}"
+    );
+    assert!(info.contains("key_version="), "{info}");
+    assert!(info.contains("manifest_digest="), "{info}");
+    assert!(info.trim_end().ends_with(" 1"), "{info}");
+    // the latency histogram ships cumulative buckets with +Inf == count
+    assert!(scrape1.contains("ddim_request_latency_seconds_bucket{le=\"+Inf\"}"));
+    assert!(scrape1.contains("ddim_request_latency_seconds_count"));
+    // per-shard and cache families carry their labels
+    assert!(scrape1.contains("ddim_shard_requests_completed_total{"));
+    assert!(scrape1.contains("ddim_cache_hits_total"));
+
+    // more traffic, then the second scrape over raw HTTP on the same port
+    for seed in 10..13 {
+        c.roundtrip(&gen(4.0, seed as f64, "bypass")).unwrap();
+    }
+    let (status, scrape2) = http_get(server.addr(), "/metrics");
+    assert_eq!(status, "HTTP/1.0 200 OK");
+    validate_exposition(&scrape2).expect("HTTP scrape must parse under a stock parser");
+
+    // counter semantics: every counter family is monotone non-decreasing
+    for name in [
+        "ddim_requests_completed_total",
+        "ddim_steps_executed_total",
+        "ddim_executable_calls_total",
+        "ddim_cache_hits_total",
+        "ddim_cache_misses_total",
+        "ddim_connections_total",
+        "ddim_wakeups_total",
+        "ddim_access_log_lines_total",
+    ] {
+        let (a, b) = (sample_value(&scrape1, name), sample_value(&scrape2, name));
+        assert!(b >= a, "counter {name} decreased across scrapes: {a} -> {b}");
+    }
+    assert!(
+        sample_value(&scrape2, "ddim_requests_completed_total")
+            > sample_value(&scrape1, "ddim_requests_completed_total"),
+        "traffic between scrapes must move the completion counter"
+    );
+    assert!(
+        sample_value(&scrape2, "ddim_uptime_seconds")
+            >= sample_value(&scrape1, "ddim_uptime_seconds")
+    );
+
+    // unknown paths 404 without wedging the port for JSON traffic
+    let (status, _) = http_get(server.addr(), "/nope");
+    assert_eq!(status, "HTTP/1.0 404 Not Found");
+    let pong = c.roundtrip(&jobj![("op", "ping")]).unwrap();
+    assert!(pong.get("ok").unwrap().as_bool().unwrap());
+    server.shutdown();
+}
+
+/// The JSON `{"op":"metrics"}` body carries the same build identity
+/// (uptime, crate version, key schema version, manifest digest) plus
+/// the observability plane's own health.
+#[test]
+fn json_metrics_carry_build_identity_and_obs_health() {
+    let server = Server::start(cfg()).unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+    let m = c.roundtrip(&jobj![("op", "metrics")]).unwrap();
+    assert!(m.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+    assert_eq!(m.get("version").unwrap().as_str().unwrap(), env!("CARGO_PKG_VERSION"));
+    assert_eq!(
+        m.get("key_version").unwrap().as_u64().unwrap(),
+        ddim_serve::cache::KEY_VERSION as u64
+    );
+    let digest = m.get("manifest_digest").unwrap().as_str().unwrap();
+    assert_eq!(digest.len(), 16, "zero-padded hex digest: {digest}");
+    assert!(digest.chars().all(|c| c.is_ascii_hexdigit()));
+    let o = m.get("obs").unwrap();
+    assert!(!o.get("access_log_enabled").unwrap().as_bool().unwrap());
+    assert_eq!(o.get("trace_sample").unwrap().as_u64().unwrap(), 0);
+    assert_eq!(o.get("access_log_dropped").unwrap().as_u64().unwrap(), 0);
+    server.shutdown();
+}
+
+/// One access-log line per completed request — ok, cache hit, and
+/// error outcomes — with spans on every executed request when
+/// `--trace-sample 1`, and correct cache dispositions throughout.
+#[test]
+fn access_log_writes_one_line_per_completed_request() {
+    let dir = tmp_dir("burst");
+    let path = dir.join("access.log");
+    let mut config = cfg();
+    config.access_log = path.to_str().unwrap().to_string();
+    config.trace_sample = 1;
+    let server = Server::start(config).unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+
+    // 5 request ops -> 5 lines; ping/metrics are not requests
+    let r = c.roundtrip(&gen(3.0, 1.0, "bypass")).unwrap();
+    assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
+    // sampled traces never leak onto the wire
+    assert!(r.get_opt("spans").is_none(), "sampled trace leaked: {r:?}");
+    c.roundtrip(&gen(4.0, 2.0, "bypass")).unwrap();
+    c.roundtrip(&gen(6.0, 3.0, "use")).unwrap();
+    let hit = c.roundtrip(&gen(6.0, 3.0, "use")).unwrap();
+    assert!(hit.get("cached").unwrap().as_bool().unwrap());
+    let err = c
+        .roundtrip(&jobj![
+            ("op", "generate"),
+            ("dataset", "no_such_dataset"),
+            ("steps", 5.0),
+            ("eta", 0.0),
+            ("count", 1.0),
+            ("seed", 4.0),
+        ])
+        .unwrap();
+    assert!(!err.get("ok").unwrap().as_bool().unwrap());
+    c.roundtrip(&jobj![("op", "ping")]).unwrap();
+    c.roundtrip(&jobj![("op", "metrics")]).unwrap();
+
+    // shutdown drains the writer thread; the file is complete after it
+    server.shutdown();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<Value> =
+        text.lines().map(|l| json::parse(l).expect("log line parses")).collect();
+    assert_eq!(lines.len(), 5, "one line per request op:\n{text}");
+
+    let by_steps = |s: usize| -> Vec<&Value> {
+        lines
+            .iter()
+            .filter(|v| v.get("steps_requested").unwrap().as_usize().unwrap() == s)
+            .collect()
+    };
+    for v in &lines {
+        assert_eq!(v.get("op").unwrap().as_str().unwrap(), "generate");
+        assert!(v.get("bytes_out").unwrap().as_usize().unwrap() > 0);
+        assert!(v.get("total_s").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(v.get("sampler").is_ok() && v.get("tau").is_ok() && v.get("priority").is_ok());
+    }
+    for s in [3usize, 4] {
+        let v = by_steps(s)[0];
+        assert_eq!(v.get("outcome").unwrap().as_str().unwrap(), "ok");
+        assert_eq!(v.get("cache").unwrap().as_str().unwrap(), "bypass");
+        assert_eq!(v.get("steps_executed").unwrap().as_usize().unwrap(), s);
+        // trace_sample=1: every executed request carries stage spans
+        let sp = v.get("spans").unwrap_or_else(|_| panic!("S={s} line missing spans"));
+        for stage in ["queue_s", "pack_s", "device_s", "advance_s", "publish_s", "total_s"] {
+            assert!(sp.get(stage).unwrap().as_f64().unwrap() >= 0.0);
+        }
+        assert!(sp.get("total_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+    let pair = by_steps(6);
+    assert_eq!(pair.len(), 2);
+    let dispositions: Vec<&str> =
+        pair.iter().map(|v| v.get("cache").unwrap().as_str().unwrap()).collect();
+    assert!(dispositions.contains(&"miss") && dispositions.contains(&"hit"), "{dispositions:?}");
+    // a hit never touched an engine, so there are no stage spans to log
+    let hit_line = pair
+        .iter()
+        .find(|v| v.get("cache").unwrap().as_str().unwrap() == "hit")
+        .unwrap();
+    assert!(hit_line.get_opt("spans").is_none());
+    let err_line = by_steps(5)[0];
+    assert_eq!(err_line.get("outcome").unwrap().as_str().unwrap(), "error");
+    assert_eq!(err_line.get("dataset").unwrap().as_str().unwrap(), "no_such_dataset");
+    assert!(err_line.get_opt("reject_reason").is_none());
+}
+
+/// Size-triggered rotation retains exactly `keep` shifted generations
+/// (PATH.1 .. PATH.keep) and every retained line is intact JSON.
+#[test]
+fn rotation_retains_exactly_keep_generations() {
+    let dir = tmp_dir("rotate");
+    let path = dir.join("access.log");
+    let mut config = cfg();
+    config.access_log = path.to_str().unwrap().to_string();
+    config.log_rotate_bytes = 256; // a couple of lines per generation
+    config.log_keep = 2;
+    let server = Server::start(config).unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+    for seed in 0..30 {
+        let r = c.roundtrip(&gen(2.0, seed as f64, "bypass")).unwrap();
+        assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
+    }
+    server.shutdown();
+
+    assert!(path.exists(), "live file present");
+    assert!(path.with_extension("log.1").exists(), "first rotated generation");
+    assert!(path.with_extension("log.2").exists(), "second rotated generation");
+    assert!(!path.with_extension("log.3").exists(), "keep=2 prunes older generations");
+    let mut total = 0usize;
+    for p in [path.clone(), path.with_extension("log.1"), path.with_extension("log.2")] {
+        for line in std::fs::read_to_string(&p).unwrap().lines() {
+            json::parse(line).unwrap_or_else(|e| panic!("{p:?} corrupt line: {e}"));
+            total += 1;
+        }
+    }
+    assert!(total >= 2, "retained generations hold the newest lines");
+    assert!(total < 30, "old generations beyond keep were pruned");
+}
+
+/// Spans ride the wire only for requests that ask with `"trace":true`;
+/// the response then carries every stage on the engine-shared clock.
+#[test]
+fn spans_on_the_wire_are_explicit_opt_in() {
+    let mut config = cfg();
+    config.trace_sample = 1; // sampling alone must not leak to the wire
+    let server = Server::start(config).unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+
+    let plain = c.roundtrip(&gen(4.0, 70.0, "bypass")).unwrap();
+    assert!(plain.get("ok").unwrap().as_bool().unwrap());
+    assert!(plain.get_opt("spans").is_none(), "{plain:?}");
+
+    let mut traced_req = gen(4.0, 71.0, "bypass");
+    traced_req.set("trace", Value::Bool(true)).unwrap();
+    let traced = c.roundtrip(&traced_req).unwrap();
+    assert!(traced.get("ok").unwrap().as_bool().unwrap(), "{traced:?}");
+    let sp = traced.get("spans").expect("explicit trace returns spans");
+    for stage in ["queue_s", "pack_s", "device_s", "advance_s", "publish_s", "total_s"] {
+        assert!(sp.get(stage).unwrap().as_f64().unwrap() >= 0.0, "{stage}");
+    }
+    let total = sp.get("total_s").unwrap().as_f64().unwrap();
+    let latency = traced.get("latency_s").unwrap().as_f64().unwrap();
+    assert!(total >= latency, "transport total includes the engine latency");
+    assert!(sp.get("device_s").unwrap().as_f64().unwrap() > 0.0, "execution was timed");
+
+    // an explicit trace on a cache hit has no execution to time: the
+    // response stays span-free rather than inventing zeros
+    c.roundtrip(&gen(6.0, 72.0, "use")).unwrap();
+    let mut hit_req = gen(6.0, 72.0, "use");
+    hit_req.set("trace", Value::Bool(true)).unwrap();
+    let hit = c.roundtrip(&hit_req).unwrap();
+    assert!(hit.get("cached").unwrap().as_bool().unwrap());
+    assert!(hit.get_opt("spans").is_none(), "{hit:?}");
+    server.shutdown();
+}

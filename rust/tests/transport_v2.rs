@@ -213,8 +213,8 @@ fn cache_key_excludes_id_and_stream() {
     let a = Request::from_json(&plain).unwrap();
     let b = Request::from_json(&tagged).unwrap();
     assert_eq!(
-        CacheKey::of(&a, 0xD1D5, BackendKind::Reference),
-        CacheKey::of(&b, 0xD1D5, BackendKind::Reference),
+        CacheKey::of(&a, 0xD1D5, BackendKind::Reference, 0),
+        CacheKey::of(&b, 0xD1D5, BackendKind::Reference, 0),
         "id/stream must not shape the cache key"
     );
 }
